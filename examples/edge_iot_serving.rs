@@ -1,0 +1,230 @@
+//! END-TO-END DRIVER: a live KiSS edge node serving *real* model
+//! inference through the full three-layer stack.
+//!
+//!   Layer 1  Pallas fused_linear / row_softmax kernels (python)
+//!   Layer 2  iot_mlp + analytics_transformer JAX payloads (python)
+//!   —— AOT:  `make artifacts` lowers both to HLO text ——
+//!   Layer 3  this binary: KiSS balancer + PJRT runtime + batcher
+//!
+//! The driver deploys a fleet of small (IoT-MLP) and large (transformer)
+//! functions on a memory-constrained node, replays a synthesized edge
+//! request schedule against it, batches compatible requests, and reports
+//! *measured* latency percentiles and throughput per outcome class,
+//! plus the KiSS pool statistics. Compare with `--baseline`.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example edge_iot_serving            # KiSS 80-20
+//! cargo run --release --example edge_iot_serving -- --baseline
+//! cargo run --release --example edge_iot_serving -- --requests 400
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use kiss_faas::config::{Mode, SimConfig};
+use kiss_faas::metrics::RecordKind;
+use kiss_faas::serve::node::EdgeNode;
+use kiss_faas::serve::Batcher;
+use kiss_faas::trace::{FunctionId, FunctionProfile, SizeClass};
+use kiss_faas::util::rng::Pcg64;
+use kiss_faas::util::stats::percentile;
+
+const SMALL_FNS: usize = 24;
+const LARGE_FNS: usize = 3;
+
+fn profile(mem_mb: u32, class: SizeClass) -> FunctionProfile {
+    FunctionProfile {
+        id: FunctionId(0), // assigned by deploy()
+        app_id: 0,
+        mem_mb,
+        app_mem_mb: mem_mb,
+        cold_start_us: 0,
+        warm_start_us: 0,
+        exec_us_mean: 0,
+        class,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let baseline = args.iter().any(|a| a == "--baseline");
+    let requests: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(240);
+    let mem_gb: u64 = args
+        .iter()
+        .position(|a| a == "--mem-gb")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+
+    let mut cfg = SimConfig::edge_default(mem_gb * 1024);
+    if baseline {
+        cfg.mode = Mode::Baseline;
+    }
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut node = EdgeNode::new(&cfg, &artifacts)?;
+
+    // Deploy the fleet: 24 small IoT classifiers (30-60 MB) and 3 large
+    // analytics transformers (300-400 MB), the paper's two classes.
+    let mut rng = Pcg64::new(7);
+    let mut small_ids = Vec::new();
+    let mut large_ids = Vec::new();
+    for _ in 0..SMALL_FNS {
+        let mem = rng.range_u64(30, 60) as u32;
+        small_ids.push(node.deploy(profile(mem, SizeClass::Small), "iot_mlp_b1")?);
+    }
+    for _ in 0..LARGE_FNS {
+        let mem = rng.range_u64(300, 400) as u32;
+        large_ids.push(node.deploy(
+            profile(mem, SizeClass::Large),
+            "analytics_transformer_b1",
+        )?);
+    }
+    println!(
+        "node: {} | {} partitions | {} small + {} large functions | {requests} requests",
+        cfg.describe(),
+        node.occupancy().len(),
+        SMALL_FNS,
+        LARGE_FNS
+    );
+
+    // Request schedule: Zipf-skewed over small functions (5x the large
+    // volume), round-robin over large.
+    let zipf = kiss_faas::util::rng::ZipfTable::new(SMALL_FNS, 1.1);
+    #[derive(Clone, Copy, PartialEq, Eq, Hash)]
+    enum Kind {
+        Small,
+        Large,
+    }
+    let mut schedule: Vec<(Kind, FunctionId)> = Vec::with_capacity(requests);
+    for i in 0..requests {
+        if i % 6 == 5 {
+            schedule.push((Kind::Large, large_ids[i % LARGE_FNS]));
+        } else {
+            let rank = zipf.sample(&mut rng) as usize - 1;
+            schedule.push((Kind::Small, small_ids[rank]));
+        }
+    }
+
+    // Serve: batch small requests per function through the b1/b8
+    // variants; large requests go straight through.
+    let mlp_input = |rng: &mut Pcg64| -> Vec<f32> {
+        (0..64).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    };
+    let tfm_input = |rng: &mut Pcg64| -> Vec<f32> {
+        (0..128 * 256).map(|_| rng.normal(0.0, 0.5) as f32).collect()
+    };
+
+    let mut lat_by_kind: HashMap<(Kind, RecordKind), Vec<f64>> = HashMap::new();
+    let mut batchers: HashMap<u32, Batcher> = HashMap::new();
+    let t0 = Instant::now();
+    let mut served_samples = 0usize;
+
+    for (kind, fid) in &schedule {
+        match kind {
+            Kind::Large => {
+                let x = tfm_input(&mut rng);
+                let res = node.invoke(*fid, &x)?;
+                lat_by_kind
+                    .entry((Kind::Large, res.outcome_kind))
+                    .or_default()
+                    .push(res.latency.as_secs_f64() * 1e3);
+                served_samples += 1;
+            }
+            Kind::Small => {
+                let batcher = batchers
+                    .entry(fid.0)
+                    .or_insert_with(|| Batcher::new(node.batch_sizes(*fid)));
+                batcher.push(mlp_input(&mut rng));
+                if batcher.should_drain() {
+                    for (bsz, packed) in batcher.drain() {
+                        let res = node.invoke_batch(*fid, &packed, bsz)?;
+                        let per = res.latency.as_secs_f64() * 1e3 / bsz as f64;
+                        for _ in 0..bsz {
+                            lat_by_kind
+                                .entry((Kind::Small, res.outcome_kind))
+                                .or_default()
+                                .push(per);
+                        }
+                        served_samples += bsz;
+                    }
+                }
+            }
+        }
+    }
+    // Flush remaining batched requests.
+    for (fid, batcher) in batchers.iter_mut() {
+        for (bsz, packed) in batcher.drain() {
+            let res = node.invoke_batch(FunctionId(*fid), &packed, bsz)?;
+            let per = res.latency.as_secs_f64() * 1e3 / bsz as f64;
+            for _ in 0..bsz {
+                lat_by_kind
+                    .entry((Kind::Small, res.outcome_kind))
+                    .or_default()
+                    .push(per);
+            }
+            served_samples += bsz;
+        }
+    }
+    let wall = t0.elapsed();
+
+    // ----- report ----------------------------------------------------- //
+    println!(
+        "\nserved {served_samples} requests in {:.2} s -> {:.1} req/s (measured, real inference)",
+        wall.as_secs_f64(),
+        served_samples as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "\n{:<26} {:>8} {:>12} {:>12} {:>12}",
+        "class/outcome", "count", "p50 (ms)", "p95 (ms)", "max (ms)"
+    );
+    let mut keys: Vec<_> = lat_by_kind.keys().copied().collect();
+    keys.sort_by_key(|(k, o)| {
+        (matches!(k, Kind::Large) as u8, format!("{o:?}"))
+    });
+    for key in keys {
+        let lats = &lat_by_kind[&key];
+        let (kind, outcome) = key;
+        let label = format!(
+            "{}/{}",
+            if kind == Kind::Small { "small(iot_mlp)" } else { "large(transformer)" },
+            match outcome {
+                RecordKind::Hit => "warm",
+                RecordKind::Miss => "cold",
+                RecordKind::Drop => "drop",
+            }
+        );
+        if lats.is_empty() {
+            continue;
+        }
+        println!(
+            "{:<26} {:>8} {:>12.2} {:>12.2} {:>12.2}",
+            label,
+            lats.len(),
+            percentile(lats, 50.0),
+            percentile(lats, 95.0),
+            lats.iter().cloned().fold(0.0, f64::max),
+        );
+    }
+
+    let r = &node.report;
+    println!(
+        "\ncoordinator: hits {} | cold {} | drops {} | cold-start {:.1}% | hit-rate {:.1}%",
+        r.overall.hits,
+        r.overall.misses,
+        r.overall.drops,
+        r.overall.cold_start_pct(),
+        r.overall.hit_rate_pct()
+    );
+    for (i, (used, cap)) in node.occupancy().iter().enumerate() {
+        println!("  pool {i}: {used}/{cap} MB resident");
+    }
+    println!("\n(run with --baseline to compare the unified pool on the same schedule)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: simulate a KiSS edge node vs the unified baseline on a
+//! synthesized edge workload and print the paper's core metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use kiss_faas::config::SimConfig;
+use kiss_faas::experiments::{paper_workload, run_on};
+use kiss_faas::trace::synth::synthesize;
+
+fn main() {
+    // A 6 GB edge node — squarely in the paper's constrained band.
+    let mut synth = paper_workload();
+    synth.duration_us = 1_800_000_000; // 30 min keeps this interactive
+    let trace = synthesize(&synth);
+    println!(
+        "workload: {} invocations over {} s ({} small fns, {} large fns)\n",
+        trace.events.len(),
+        trace.duration_us() / 1_000_000,
+        synth.n_small,
+        synth.n_large
+    );
+
+    let mut kiss = SimConfig::edge_default(6 * 1024);
+    kiss.synth = synth.clone();
+    let mut base = SimConfig::baseline_default(6 * 1024);
+    base.synth = synth.clone();
+
+    let rk = run_on(&trace, &kiss);
+    let rb = run_on(&trace, &base);
+
+    println!("{:<22} {:>12} {:>12}", "metric", "kiss-80-20", "baseline");
+    println!(
+        "{:<22} {:>11.2}% {:>11.2}%",
+        "cold-start overall",
+        rk.overall.cold_start_pct(),
+        rb.overall.cold_start_pct()
+    );
+    println!(
+        "{:<22} {:>11.2}% {:>11.2}%",
+        "cold-start small",
+        rk.small.cold_start_pct(),
+        rb.small.cold_start_pct()
+    );
+    println!(
+        "{:<22} {:>11.2}% {:>11.2}%",
+        "cold-start large",
+        rk.large.cold_start_pct(),
+        rb.large.cold_start_pct()
+    );
+    println!(
+        "{:<22} {:>11.2}% {:>11.2}%",
+        "drops overall",
+        rk.overall.drop_pct(),
+        rb.overall.drop_pct()
+    );
+    println!(
+        "{:<22} {:>11.2}% {:>11.2}%",
+        "warm hit rate",
+        rk.overall.hit_rate_pct(),
+        rb.overall.hit_rate_pct()
+    );
+
+    let reduction = (rb.overall.cold_start_pct() - rk.overall.cold_start_pct())
+        / rb.overall.cold_start_pct().max(1e-9)
+        * 100.0;
+    println!("\nKiSS reduces overall cold starts by {reduction:.1}% on this node.");
+}

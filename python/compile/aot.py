@@ -1,0 +1,117 @@
+"""AOT compile path: lower the Layer-2 payloads to HLO *text* artifacts.
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per payload/batch-size in model.payload_specs():
+
+  artifacts/<name>.hlo.txt   — HLO text of the jitted fn (Pallas kernels
+                               inlined as plain HLO ops via interpret=True)
+  artifacts/manifest.json    — input/output shapes + golden values so the
+                               rust runtime can self-verify numerics at load
+
+HLO **text** is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowering goes stablehlo -> (legacy)
+XlaComputation -> as_hlo_text with return_tuple=True; the rust side unwraps
+with to_tuple1(). See /opt/xla-example/gen_hlo.py.
+
+Python runs ONCE at build time (make artifacts); it is never on the rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def golden_input(shape, seed: int) -> np.ndarray:
+    """Deterministic input the rust runtime replays to self-verify a load."""
+    return np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    )
+
+
+def build_artifacts(out_dir: str, *, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text/return-tuple-1", "payloads": []}
+    for idx, (name, fn, spec) in enumerate(model.payload_specs()):
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        x = golden_input(spec.shape, seed=100 + idx)
+        y = np.asarray(jax.jit(fn)(x))
+        # Full golden I/O as raw little-endian f32 so the rust runtime can
+        # self-verify numerics after compiling the HLO (runtime/mod.rs).
+        with open(os.path.join(out_dir, f"{name}.golden_input.bin"), "wb") as f:
+            f.write(np.ascontiguousarray(x, dtype="<f4").tobytes())
+        with open(os.path.join(out_dir, f"{name}.golden_output.bin"), "wb") as f:
+            f.write(np.ascontiguousarray(y, dtype="<f4").tobytes())
+        entry = {
+            "name": name,
+            "hlo_file": f"{name}.hlo.txt",
+            "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "input_shape": list(spec.shape),
+            "input_dtype": "f32",
+            "output_shape": list(y.shape),
+            "output_dtype": "f32",
+            "golden_seed": 100 + idx,
+            "golden_input_file": f"{name}.golden_input.bin",
+            "golden_output_file": f"{name}.golden_output.bin",
+            # Self-check values: the rust runtime runs the golden input and
+            # compares these (first 8 outputs + global stats).
+            "golden_input_prefix": [float(v) for v in x.ravel()[:8]],
+            "golden_output_prefix": [float(v) for v in y.ravel()[:8]],
+            "golden_output_mean": float(y.mean()),
+            "golden_output_abssum": float(np.abs(y).sum()),
+        }
+        manifest["payloads"].append(entry)
+        if verbose:
+            print(
+                f"[aot] {name}: in={entry['input_shape']} out={entry['output_shape']} "
+                f"hlo={len(text) / 1e6:.2f} MB -> {path}"
+            )
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"[aot] manifest -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored if --out-dir set")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out and not args.out_dir:
+        out_dir = os.path.dirname(args.out)
+    build_artifacts(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Pallas kernels (Layer 1) + pure-jnp reference oracles.
+
+All kernels lower with interpret=True so the emitted HLO contains plain XLA
+ops executable by the rust PJRT CPU client (Mosaic custom-calls are
+TPU-plugin-only). See fused_linear.py for the VMEM/MXU scheduling notes.
+"""
+
+from . import ref  # noqa: F401
+from .fused_linear import fused_linear, vmem_bytes, mxu_utilization_estimate  # noqa: F401
+from .layer_norm import layer_norm  # noqa: F401
+from .row_softmax import row_softmax  # noqa: F401

@@ -1,0 +1,185 @@
+"""Layer-1 Pallas kernel: tiled fused linear layer  act(x @ w + b).
+
+This is the compute hot spot of both function payloads in this repo (the
+IoT-MLP "small container" function and the analytics-transformer "large
+container" function — see ../model.py). It is written as a block-tiled
+Pallas kernel so the HBM<->VMEM schedule is explicit:
+
+  grid = (M/bm, N/bn, K/bk)          (k innermost)
+  x block:   (bm, bk)  streamed along k
+  w block:   (bk, bn)  streamed along k
+  out block: (bm, bn)  resident in VMEM across the k loop, f32 accumulation
+
+The k-innermost grid order keeps the output block in VMEM while the x/w
+operand blocks stream through — the classic systolic-friendly schedule (on
+a real TPU each (bm, bk) x (bk, bn) product feeds the MXU; bf16 operands
+with f32 accumulation). Bias add + activation are fused into the final k
+step so the result never round-trips to HBM between matmul and activation.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and this repo's runtime is the rust PJRT CPU client.
+Correctness is asserted against ref.fused_linear_ref in python/tests/.
+
+VMEM footprint per grid step: see vmem_bytes() below; the default
+128x128x128 f32 blocks need ~256 KiB single-buffered — comfortably inside a
+TPU core's ~16 MiB VMEM with room for double buffering. DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block sizes: MXU-aligned (128 lanes) on real hardware.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation, k_steps):
+    """One (m, n, k) grid step: o (f32) += x_block @ w_block; finalize at k end.
+
+    The output block's index map ignores k, so Pallas keeps it resident in
+    VMEM for the whole k loop — it doubles as the f32 accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = ref.apply_activation(out, activation)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _clamp_block(block: int, dim: int, lane: int = 8) -> int:
+    """Clamp a block size to the lane-rounded problem dim (avoids over-padding
+    tiny shapes to a full 128 block)."""
+    rounded = max(lane, dim + (-dim) % lane)
+    return min(block, rounded)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k"),
+)
+def fused_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    activation: str = "none",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """act(x @ w + b) as a tiled Pallas kernel.
+
+    Args:
+      x: (M, K) input activations, float32 or bfloat16.
+      w: (K, N) weights, same dtype family as x.
+      b: (N,) bias.
+      activation: "none" | "relu" | "gelu", fused into the kernel epilogue.
+      block_*: tile sizes; shapes are zero-padded up to block multiples and
+        the result sliced back, so any M, K, N works.
+
+    Returns: (M, N) in x.dtype.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation must be one of {ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bm = _clamp_block(block_m, m)
+    bn = _clamp_block(block_n, n)
+    bk = _clamp_block(block_k, k)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn).reshape(1, -1)  # 2-D for a lane-friendly block
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    kernel = functools.partial(
+        _fused_linear_kernel, activation=activation, k_steps=grid[2]
+    )
+    out_f32 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp, bp)
+    return out_f32[:m, :n].astype(x.dtype)
+
+
+def vmem_bytes(
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    dtype_bytes: int = 4,
+) -> int:
+    """Analytic VMEM footprint of one grid step (operands + f32 out/acc block).
+
+    Used by DESIGN.md §Perf and test_kernel_structure: the schedule must keep
+    (bm*bk + bk*bn) * dtype_bytes + bm*bn * 4 + bn * dtype_bytes inside a
+    double-buffered VMEM budget (~16 MiB / 2 on current TPU cores).
+    """
+    operands = (block_m * block_k + block_k * block_n) * dtype_bytes
+    acc_out = block_m * block_n * 4
+    bias = block_n * dtype_bytes
+    return operands + acc_out + bias
+
+
+def mxu_utilization_estimate(
+    m: int, k: int, n: int, block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N, block_k: int = DEFAULT_BLOCK_K,
+) -> float:
+    """Fraction of issued MXU work that is useful (non-padding) FLOPs.
+
+    The kernel pads every dim up to its (clamped) block multiple; utilization
+    is real_flops / padded_flops. 1.0 when all dims divide their blocks.
+    """
+    bm = _clamp_block(block_m, m)
+    bn = _clamp_block(block_n, n)
+    bk = _clamp_block(block_k, k)
+    pad = lambda d, b: d + (-d) % b
+    real = m * k * n
+    padded = pad(m, bm) * pad(k, bk) * pad(n, bn)
+    return real / padded

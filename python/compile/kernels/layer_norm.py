@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: fused LayerNorm  (x - mu) / sqrt(var + eps) * g + b.
+
+Used by the analytics-transformer payload's pre-LN blocks (../model.py).
+Row-strip tiled like row_softmax: each grid step loads a (block_rows, D)
+strip into VMEM, computes the row mean/variance locally (one pass, f32),
+and writes the normalized+affine result back — a single HBM read and
+write per element with all reduction traffic in VMEM. The feature dim D
+must be strip-resident (D ≤ 256 here, ~128 KiB per strip: trivial).
+
+interpret=True ALWAYS (CPU PJRT; see fused_linear.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _layer_norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def layer_norm(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """LayerNorm over the last axis of a 2-D array as a row-tiled Pallas
+    kernel, with fused affine (gain `g`, bias `b`, both shape (D,)).
+
+    Rows pad to a block multiple; padding rows are garbage-in/garbage-out
+    and sliced away (row-local computation cannot contaminate real rows).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"layer_norm expects 2-D, got {x.shape}")
+    rows, d = x.shape
+    if g.shape != (d,) or b.shape != (d,):
+        raise ValueError(f"affine shape mismatch: x{x.shape} g{g.shape} b{b.shape}")
+    br = min(block_rows, max(8, rows + (-rows) % 8))
+    pad = (-rows) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    g2 = g.reshape(1, d)
+    b2 = b.reshape(1, d)
+    out = pl.pallas_call(
+        functools.partial(_layer_norm_kernel, eps=eps),
+        grid=(xp.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, g2, b2)
+    return out[:rows]

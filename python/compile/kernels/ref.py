@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its reference here to float tolerance (pytest + hypothesis sweep
+shapes and dtypes in python/tests/test_kernel.py). The references are kept
+deliberately naive — no tiling, no padding tricks — so they are easy to audit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """Tanh-approximation GELU (matches the kernel's in-VMEM activation)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def apply_activation(x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        return gelu(x)
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+def fused_linear_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    activation: str = "none",
+) -> jnp.ndarray:
+    """Reference for kernels.fused_linear.fused_linear: act(x @ w + b).
+
+    Accumulates in float32 regardless of input dtype, then casts back,
+    mirroring the kernel's MXU-style f32 accumulation.
+    """
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)
+    acc = apply_activation(acc, activation)
+    return acc.astype(x.dtype)
+
+
+def row_softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.row_softmax.row_softmax: numerically-stable
+    softmax over the last axis, f32 internal precision."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - m)
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    return out.astype(x.dtype)
+
+
+def layer_norm_ref(
+    x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """Reference for kernels.layer_norm.layer_norm: row LayerNorm with
+    fused affine, f32 internal precision."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps)
+    y = y * g.astype(jnp.float32) + b.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: numerically-stable row softmax.
+
+Used by the analytics-transformer payload's attention block (../model.py).
+Tiled over rows only: each grid step loads a (block_rows, N) strip into
+VMEM, reduces max/sum locally, and writes the normalized strip back — one
+HBM read + one HBM write per element, with all reduction traffic in VMEM.
+
+The full row must fit in a block (softmax is a row-global reduction). For
+the attention shapes in this repo (N = sequence length <= 256) a strip is
+at most block_rows * 256 * 4 B = 128 KiB — trivially VMEM-resident. A
+flash-style two-pass online softmax is unnecessary at these sizes; see
+DESIGN.md §Perf.
+
+interpret=True ALWAYS (CPU PJRT; see fused_linear.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _row_softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def row_softmax(
+    x: jnp.ndarray, *, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jnp.ndarray:
+    """Softmax over the last axis of a 2-D array as a row-tiled Pallas kernel.
+
+    Rows are padded to a block multiple; padding rows are garbage-in,
+    garbage-out and sliced away (they cannot contaminate real rows because
+    softmax is row-local).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"row_softmax expects 2-D, got {x.shape}")
+    rows, n = x.shape
+    br = min(block_rows, max(8, rows + (-rows) % 8))
+    pad = (-rows) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        _row_softmax_kernel,
+        grid=(xp.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:rows]

@@ -1,0 +1,206 @@
+"""Layer-2 JAX models: the function payloads served by the rust coordinator.
+
+Two payloads matching the paper's workload taxonomy (§2.5):
+
+  * iot_mlp — the *small container* payload: a 3-layer MLP classifier over
+    64-d IoT sensor feature vectors ("IoT event stream" functions — small
+    memory footprint, high invocation frequency).
+
+  * analytics_transformer — the *large container* payload: one transformer
+    encoder block (MHA + FFN, pre-LN) over (seq, d_model) = (128, 256)
+    sequences ("video/batch analytics" functions — large footprint, low
+    frequency, long runtimes).
+
+Every dense contraction goes through the Layer-1 Pallas fused_linear kernel
+and attention probabilities through the row_softmax kernel, so the paper's
+hot spots lower into the same HLO module that rust executes.
+
+Weights are generated from a fixed PRNG seed and *baked into the jitted
+function as constants*: the AOT artifact is self-contained and the rust
+request path only ships activations. Python never runs at request time —
+aot.py lowers these functions once to artifacts/*.hlo.txt.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, layer_norm as ln_kernel, row_softmax
+
+# ---------------------------------------------------------------------------
+# iot_mlp — small-container payload
+# ---------------------------------------------------------------------------
+
+IOT_IN = 64
+IOT_HIDDEN = 128
+IOT_CLASSES = 16
+IOT_SEED = 0
+
+
+class MlpParams(NamedTuple):
+    w1: jnp.ndarray
+    b1: jnp.ndarray
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+    w3: jnp.ndarray
+    b3: jnp.ndarray
+
+
+def init_mlp_params(seed: int = IOT_SEED) -> MlpParams:
+    """He-initialized MLP weights, deterministic in `seed`."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    he = lambda key, fan_in, shape: jax.random.normal(key, shape) * jnp.sqrt(
+        2.0 / fan_in
+    )
+    return MlpParams(
+        w1=he(ks[0], IOT_IN, (IOT_IN, IOT_HIDDEN)),
+        b1=jnp.zeros((IOT_HIDDEN,)),
+        w2=he(ks[1], IOT_HIDDEN, (IOT_HIDDEN, IOT_HIDDEN)),
+        b2=jnp.zeros((IOT_HIDDEN,)),
+        w3=he(ks[2], IOT_HIDDEN, (IOT_HIDDEN, IOT_CLASSES)),
+        b3=jnp.zeros((IOT_CLASSES,)),
+    )
+
+
+def iot_mlp_apply(params: MlpParams, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, 64) sensor features -> (B, 16) class logits."""
+    h = fused_linear(x, params.w1, params.b1, activation="relu")
+    h = fused_linear(h, params.w2, params.b2, activation="relu")
+    return fused_linear(h, params.w3, params.b3, activation="none")
+
+
+def iot_mlp(x: jnp.ndarray) -> jnp.ndarray:
+    """Payload entrypoint with weights baked in (see module docstring)."""
+    return iot_mlp_apply(init_mlp_params(), x)
+
+
+# ---------------------------------------------------------------------------
+# analytics_transformer — large-container payload
+# ---------------------------------------------------------------------------
+
+TFM_SEQ = 128
+TFM_DMODEL = 256
+TFM_HEADS = 4
+TFM_DHEAD = TFM_DMODEL // TFM_HEADS
+TFM_DFF = 512
+TFM_SEED = 1
+
+
+class TransformerParams(NamedTuple):
+    wq: jnp.ndarray
+    bq: jnp.ndarray
+    wk: jnp.ndarray
+    bk: jnp.ndarray
+    wv: jnp.ndarray
+    bv: jnp.ndarray
+    wo: jnp.ndarray
+    bo: jnp.ndarray
+    w_ff1: jnp.ndarray
+    b_ff1: jnp.ndarray
+    w_ff2: jnp.ndarray
+    b_ff2: jnp.ndarray
+    ln1_g: jnp.ndarray
+    ln1_b: jnp.ndarray
+    ln2_g: jnp.ndarray
+    ln2_b: jnp.ndarray
+
+
+def init_transformer_params(seed: int = TFM_SEED) -> TransformerParams:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    d = TFM_DMODEL
+    xavier = lambda key, fi, fo: jax.random.normal(key, (fi, fo)) * jnp.sqrt(
+        2.0 / (fi + fo)
+    )
+    return TransformerParams(
+        wq=xavier(ks[0], d, d), bq=jnp.zeros((d,)),
+        wk=xavier(ks[1], d, d), bk=jnp.zeros((d,)),
+        wv=xavier(ks[2], d, d), bv=jnp.zeros((d,)),
+        wo=xavier(ks[3], d, d), bo=jnp.zeros((d,)),
+        w_ff1=xavier(ks[4], d, TFM_DFF), b_ff1=jnp.zeros((TFM_DFF,)),
+        w_ff2=xavier(ks[5], TFM_DFF, d), b_ff2=jnp.zeros((d,)),
+        ln1_g=jnp.ones((d,)), ln1_b=jnp.zeros((d,)),
+        ln2_g=jnp.ones((d,)), ln2_b=jnp.zeros((d,)),
+    )
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps=1e-5):
+    """LayerNorm over the last axis via the L1 Pallas kernel (any rank)."""
+    shape = x.shape
+    y = ln_kernel(x.reshape(-1, shape[-1]), g, b, eps=eps)
+    return y.reshape(shape)
+
+
+def _proj(x2d: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """All projections route through the Pallas fused_linear kernel."""
+    return fused_linear(x2d, w, b, activation="none")
+
+
+def attention(p: TransformerParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head self-attention over (B, S, D); kernels do the matmuls."""
+    bsz, s, d = x.shape
+    x2 = x.reshape(bsz * s, d)
+    q = _proj(x2, p.wq, p.bq).reshape(bsz, s, TFM_HEADS, TFM_DHEAD)
+    k = _proj(x2, p.wk, p.bk).reshape(bsz, s, TFM_HEADS, TFM_DHEAD)
+    v = _proj(x2, p.wv, p.bv).reshape(bsz, s, TFM_HEADS, TFM_DHEAD)
+    # (B, H, S, Dh)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(float(TFM_DHEAD))
+    # Row softmax through the Pallas kernel (flattened to 2-D rows).
+    probs = row_softmax(scores.reshape(bsz * TFM_HEADS * s, s)).reshape(
+        bsz, TFM_HEADS, s, s
+    )
+    ctx = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+    return _proj(ctx, p.wo, p.bo).reshape(bsz, s, d)
+
+
+def transformer_block_apply(p: TransformerParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Pre-LN transformer encoder block: x + MHA(LN(x)); x + FFN(LN(x))."""
+    bsz, s, d = x.shape
+    h = x + attention(p, layer_norm(x, p.ln1_g, p.ln1_b))
+    h2 = layer_norm(h, p.ln2_g, p.ln2_b).reshape(bsz * s, d)
+    ff = fused_linear(h2, p.w_ff1, p.b_ff1, activation="gelu")
+    ff = fused_linear(ff, p.w_ff2, p.b_ff2, activation="none")
+    return h + ff.reshape(bsz, s, d)
+
+
+def analytics_transformer(x: jnp.ndarray) -> jnp.ndarray:
+    """Payload entrypoint, weights baked in. (B, 128, 256) -> (B, 128, 256)."""
+    return transformer_block_apply(init_transformer_params(), x)
+
+
+# ---------------------------------------------------------------------------
+# Payload registry used by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+# name -> (callable, example input shape per batch size template)
+def payload_specs(batch_sizes_mlp=(1, 8), batch_sizes_tfm=(1, 2)):
+    """The exact set of (artifact name, fn, input spec) tuples aot.py lowers.
+
+    One compiled executable per (payload, batch size) — the rust batcher
+    picks the artifact matching its formed batch (see rust/src/serve/).
+    """
+    specs = []
+    for b in batch_sizes_mlp:
+        specs.append(
+            (
+                f"iot_mlp_b{b}",
+                iot_mlp,
+                jax.ShapeDtypeStruct((b, IOT_IN), jnp.float32),
+            )
+        )
+    for b in batch_sizes_tfm:
+        specs.append(
+            (
+                f"analytics_transformer_b{b}",
+                analytics_transformer,
+                jax.ShapeDtypeStruct((b, TFM_SEQ, TFM_DMODEL), jnp.float32),
+            )
+        )
+    return specs

@@ -1,0 +1,81 @@
+"""AOT pipeline tests: HLO text artifacts are well-formed, self-consistent
+with the manifest, and free of Mosaic custom-calls (CPU-PJRT executable)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Build (or reuse) the artifact directory once for the module."""
+    manifest_path = os.path.join(ARTIFACT_DIR, "manifest.json")
+    if not os.path.exists(manifest_path):
+        aot.build_artifacts(ARTIFACT_DIR, verbose=False)
+    with open(manifest_path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_payloads(artifacts):
+    names = {p["name"] for p in artifacts["payloads"]}
+    expected = {s[0] for s in model.payload_specs()}
+    assert names == expected
+
+
+def test_hlo_files_exist_and_nonempty(artifacts):
+    for p in artifacts["payloads"]:
+        path = os.path.join(ARTIFACT_DIR, p["hlo_file"])
+        assert os.path.exists(path), path
+        assert os.path.getsize(path) > 1000
+
+
+def test_hlo_text_is_parseable_module(artifacts):
+    for p in artifacts["payloads"]:
+        with open(os.path.join(ARTIFACT_DIR, p["hlo_file"])) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), p["name"]
+        assert "ENTRY" in text
+
+
+def test_hlo_has_no_mosaic_custom_calls(artifacts):
+    """interpret=True must have erased all Mosaic/TPU custom-calls; the rust
+    CPU client can only run plain HLO ops."""
+    for p in artifacts["payloads"]:
+        with open(os.path.join(ARTIFACT_DIR, p["hlo_file"])) as f:
+            text = f.read()
+        assert "tpu_custom_call" not in text, p["name"]
+        assert "mosaic" not in text.lower(), p["name"]
+
+
+def test_golden_values_reproducible(artifacts):
+    """Re-running the payload on the golden input reproduces the manifest's
+    golden outputs — what the rust runtime checks at load time."""
+    import jax
+
+    fns = {name: fn for name, fn, _ in model.payload_specs()}
+    for p in artifacts["payloads"]:
+        x = aot.golden_input(tuple(p["input_shape"]), p["golden_seed"])
+        np.testing.assert_allclose(
+            np.asarray(x).ravel()[:8], p["golden_input_prefix"], rtol=1e-6
+        )
+        y = np.asarray(jax.jit(fns[p["name"]])(x))
+        np.testing.assert_allclose(
+            y.ravel()[:8], p["golden_output_prefix"], rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(y.mean(), p["golden_output_mean"], rtol=1e-4, atol=1e-6)
+
+
+def test_entry_signature_matches_manifest(artifacts):
+    """The ENTRY computation's parameter/result shapes must match the manifest
+    (the rust side builds Literals from these shapes)."""
+    for p in artifacts["payloads"]:
+        with open(os.path.join(ARTIFACT_DIR, p["hlo_file"])) as f:
+            text = f.read()
+        in_shape = ",".join(str(d) for d in p["input_shape"])
+        assert f"f32[{in_shape}]" in text, (p["name"], in_shape)

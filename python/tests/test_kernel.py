@@ -1,0 +1,243 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (THE core signal).
+
+Hypothesis sweeps shapes, dtypes, activations and block sizes; every case
+asserts allclose against ref.py. Deadlines are disabled because interpret
+mode re-traces per distinct shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fused_linear,
+    mxu_utilization_estimate,
+    ref,
+    row_softmax,
+    vmem_bytes,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * 2.0
+    return x.astype(dtype)
+
+
+def tolerances(dtype):
+    if dtype == jnp.bfloat16:
+        return dict(rtol=3e-2, atol=3e-2)
+    return dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+)
+def test_fused_linear_matches_ref_f32(m, k, n, act):
+    x = rand(1, (m, k), jnp.float32)
+    w = rand(2, (k, n), jnp.float32)
+    b = rand(3, (n,), jnp.float32)
+    got = fused_linear(x, w, b, activation=act)
+    want = ref.fused_linear_ref(x, w, b, act)
+    assert got.shape == (m, n) and got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, **tolerances(jnp.float32))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 7, 64, 128]),
+    k=st.sampled_from([16, 64, 200]),
+    n=st.sampled_from([16, 128, 130]),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+)
+def test_fused_linear_matches_ref_bf16(m, k, n, act):
+    x = rand(4, (m, k), jnp.bfloat16)
+    w = rand(5, (k, n), jnp.bfloat16)
+    b = rand(6, (n,), jnp.bfloat16)
+    got = fused_linear(x, w, b, activation=act)
+    want = ref.fused_linear_ref(x, w, b, act)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), **tolerances(jnp.bfloat16)
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_fused_linear_block_size_invariance(bm, bn, bk):
+    """The result must not depend on the tiling schedule."""
+    x = rand(7, (96, 80), jnp.float32)
+    w = rand(8, (80, 72), jnp.float32)
+    b = rand(9, (72,), jnp.float32)
+    got = fused_linear(x, w, b, activation="gelu", block_m=bm, block_n=bn, block_k=bk)
+    want = ref.fused_linear_ref(x, w, b, "gelu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_zero_and_identity():
+    """Analytic cases: zero weights -> bias only; identity -> x + b."""
+    x = rand(10, (32, 32), jnp.float32)
+    wz = jnp.zeros((32, 16))
+    b = jnp.arange(16, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        fused_linear(x, wz, b), jnp.broadcast_to(b, (32, 16)), rtol=1e-6
+    )
+    wi = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        fused_linear(x, wi, jnp.zeros((32,))), x, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_fused_linear_relu_clamps_negatives():
+    x = -jnp.ones((8, 8), jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)
+    out = fused_linear(x, w, jnp.zeros((8,)), activation="relu")
+    assert (np.asarray(out) == 0).all()
+
+
+def test_fused_linear_rejects_bad_shapes():
+    x = jnp.zeros((4, 8))
+    w = jnp.zeros((9, 3))  # K mismatch
+    with pytest.raises(ValueError):
+        fused_linear(x, w, jnp.zeros((3,)))
+    with pytest.raises(ValueError):
+        fused_linear(x, jnp.zeros((8, 3)), jnp.zeros((4,)))  # bias mismatch
+    with pytest.raises(ValueError):
+        fused_linear(x, w, jnp.zeros((3,)), activation="tanh")
+
+
+def test_fused_linear_jit_cache_stable():
+    """Same shape twice -> same compiled fn, same numbers (determinism)."""
+    x = rand(11, (64, 64), jnp.float32)
+    w = rand(12, (64, 64), jnp.float32)
+    b = rand(13, (64,), jnp.float32)
+    a = np.asarray(fused_linear(x, w, b, activation="gelu"))
+    bb = np.asarray(fused_linear(x, w, b, activation="gelu"))
+    np.testing.assert_array_equal(a, bb)
+
+
+# ---------------------------------------------------------------------------
+# row_softmax
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    n=st.sampled_from([8, 64, 128, 256]),
+    scale=st.sampled_from([1.0, 30.0]),  # large scale stresses stability
+)
+def test_row_softmax_matches_ref(rows, n, scale):
+    x = rand(20, (rows, n), jnp.float32) * scale
+    got = row_softmax(x)
+    want = ref.row_softmax_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 64), n=st.sampled_from([16, 128]))
+def test_row_softmax_rows_sum_to_one(rows, n):
+    x = rand(21, (rows, n), jnp.float32) * 10.0
+    s = np.asarray(row_softmax(x)).sum(axis=-1)
+    np.testing.assert_allclose(s, np.ones(rows), rtol=1e-5)
+
+
+def test_row_softmax_extreme_values_stable():
+    """Stability: +-1e4 logits must not produce nan/inf."""
+    x = jnp.array([[1e4, 0.0, -1e4, 5.0] * 4], jnp.float32)
+    out = np.asarray(row_softmax(x))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, np.asarray(ref.row_softmax_ref(x)), atol=1e-7)
+
+
+def test_row_softmax_rejects_non_2d():
+    with pytest.raises(ValueError):
+        row_softmax(jnp.zeros((2, 3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Kernel structure (the §Perf invariants from DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_budget_default_blocks():
+    """Default 128^3 f32 schedule must fit double-buffered in 16 MiB VMEM."""
+    per_step = vmem_bytes(128, 128, 128, dtype_bytes=4)
+    assert per_step * 2 < 16 * 1024 * 1024
+    # and the documented value: 2*64KiB operands + 64KiB acc + bias
+    assert per_step == (128 * 128 + 128 * 128) * 4 + 128 * 128 * 4 + 128 * 4
+
+
+def test_mxu_utilization_aligned_is_one():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(256, 512, 384) == 1.0
+
+
+def test_mxu_utilization_padding_penalty():
+    u = mxu_utilization_estimate(130, 128, 128)
+    assert 0.4 < u < 1.0  # 130 pads to 136 at lane=8 after clamping
+
+
+# ---------------------------------------------------------------------------
+# layer_norm
+# ---------------------------------------------------------------------------
+
+from compile.kernels import layer_norm  # noqa: E402
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([8, 64, 256]),
+    scale=st.sampled_from([1.0, 10.0]),
+)
+def test_layer_norm_matches_ref(rows, d, scale):
+    x = rand(30, (rows, d), jnp.float32) * scale + 2.0
+    g = rand(31, (d,), jnp.float32)
+    b = rand(32, (d,), jnp.float32)
+    got = layer_norm(x, g, b)
+    want = ref.layer_norm_ref(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 64), d=st.sampled_from([32, 128]))
+def test_layer_norm_unit_affine_normalizes(rows, d):
+    x = rand(33, (rows, d), jnp.float32) * 7.0 - 3.0
+    out = np.asarray(layer_norm(x, jnp.ones((d,)), jnp.zeros((d,))))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=2e-2)
+
+
+def test_layer_norm_constant_rows_are_bias():
+    # Zero variance: output = b (the eps keeps it finite).
+    x = jnp.full((4, 16), 5.0)
+    g = jnp.ones((16,))
+    b = jnp.arange(16, dtype=jnp.float32)
+    out = np.asarray(layer_norm(x, g, b))
+    np.testing.assert_allclose(out, np.broadcast_to(np.arange(16, dtype=np.float32), (4, 16)), atol=1e-3)
+
+
+def test_layer_norm_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        layer_norm(jnp.zeros((2, 3, 4)), jnp.ones((4,)), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        layer_norm(jnp.zeros((2, 4)), jnp.ones((5,)), jnp.zeros((4,)))

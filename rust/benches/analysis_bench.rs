@@ -1,0 +1,81 @@
+//! Workload-analysis benchmarks: throughput of the Fig 2-5 computations
+//! over a ~1M-event trace (they must stay interactive for `repro analyze`)
+//! and the trace synthesizer itself.
+
+use kiss_faas::analysis;
+use kiss_faas::bench::{group, Bencher};
+use kiss_faas::experiments::paper_workload;
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use std::time::Duration;
+
+fn main() {
+    group("trace synthesis");
+    let big = SynthConfig {
+        seed: 23,
+        duration_us: 3_600_000_000,
+        rate_per_sec: 280.0, // ~1M events
+        ..paper_workload()
+    };
+    let mut trace = None;
+    let r = Bencher::new("synth/1M-events/1h")
+        .warmup(Duration::from_millis(1))
+        .target(Duration::from_secs(2))
+        .max_iters(3)
+        .run(|| {
+            trace = Some(synthesize(&big));
+        });
+    println!("{r}");
+    let trace = trace.unwrap();
+    let n = trace.events.len() as f64;
+    println!("  trace: {} events", trace.events.len());
+
+    group("analysis over the 1M-event trace");
+    let r = Bencher::new("analysis/fig2-footprint")
+        .items_per_iter(n)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(analysis::footprint_percentiles(&trace, 225.0));
+        });
+    println!("{r}");
+
+    let r = Bencher::new("analysis/fig3-trends")
+        .items_per_iter(n)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(analysis::invocation_trends(&trace));
+        });
+    println!("{r}");
+
+    let r = Bencher::new("analysis/fig4-iat-sliding-window")
+        .items_per_iter(n)
+        .warmup(Duration::from_millis(1))
+        .target(Duration::from_secs(2))
+        .max_iters(5)
+        .run(|| {
+            std::hint::black_box(analysis::iat_percentiles(
+                &trace,
+                3_600_000_000,
+                1_800_000_000,
+                3.0,
+            ));
+        });
+    println!("{r}");
+
+    let r = Bencher::new("analysis/fig5-coldstart")
+        .target(Duration::from_millis(500))
+        .run(|| {
+            std::hint::black_box(analysis::coldstart_percentiles(&trace));
+        });
+    println!("{r}");
+
+    group("stress-scale synthesis (§6.5: 4.5M events)");
+    let stress = SynthConfig { seed: 1, ..SynthConfig::stress() };
+    let r = Bencher::new("synth/stress-4.5M")
+        .warmup(Duration::from_millis(1))
+        .target(Duration::from_secs(1))
+        .max_iters(1)
+        .run(|| {
+            std::hint::black_box(synthesize(&stress));
+        });
+    println!("{r}");
+}

@@ -1,0 +1,180 @@
+//! One bench per paper table/figure family: times the regeneration of
+//! each experiment (reduced workload so the whole suite stays minutes,
+//! same code paths as `repro experiment ...`), plus the ablations
+//! DESIGN.md calls out (threshold sensitivity, init-occupancy model,
+//! adaptive vs static threshold).
+
+use kiss_faas::bench::{group, Bencher};
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::Balancer;
+use kiss_faas::experiments::{fairness, paper_workload, policy_independence, stress, sweeps, workload};
+use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use kiss_faas::trace::SizeClass;
+use std::time::Duration;
+
+fn bench_workload() -> SynthConfig {
+    SynthConfig {
+        seed: 7,
+        n_small: 60,
+        n_large: 8,
+        duration_us: 600_000_000, // 10 min
+        rate_per_sec: 25.0,
+        ..paper_workload()
+    }
+}
+
+fn main() {
+    let w = bench_workload();
+    let one = |name: &str, f: &dyn Fn() -> String| {
+        let r = Bencher::new(name)
+            .warmup(Duration::from_millis(1))
+            .target(Duration::from_millis(1))
+            .max_iters(1)
+            .run(|| {
+                std::hint::black_box(f());
+            });
+        println!("{r}");
+    };
+
+    group("figures: workload analysis (figs 2-5)");
+    one("exp/fig2", &|| workload::fig2(&w));
+    one("exp/fig3", &|| workload::fig3(&w));
+    one("exp/fig4", &|| workload::fig4(&w));
+    one("exp/fig5", &|| workload::fig5(&w));
+
+    group("figures: cold-start / drop sweeps (figs 7-9)");
+    one("exp/fig7 (6 configs x 11 mem points)", &|| sweeps::fig7(&w).render());
+    one("exp/fig8", &|| sweeps::fig8(&w).render());
+    one("exp/fig9", &|| sweeps::fig9(&w).render());
+
+    group("figures: fairness (figs 10-13)");
+    one("exp/fig10", &|| fairness::fig10(&w).render());
+    one("exp/fig11", &|| fairness::fig11(&w).render());
+    one("exp/fig12", &|| fairness::fig12(&w).render());
+    one("exp/fig13", &|| fairness::fig13(&w).render());
+
+    group("figures: policy independence (figs 14-16)");
+    one("exp/fig14", &|| policy_independence::fig14(&w).render());
+    one("exp/fig15", &|| policy_independence::fig15(&w).render());
+    one("exp/fig16", &|| policy_independence::fig16(&w).render());
+
+    group("stress test (§6.5, 2% scale)");
+    one("exp/stress", &|| {
+        let (k, b) = stress::stress(10, 0.02, 2025);
+        stress::render(&k, &b)
+    });
+
+    // ----------------------------------------------------------------- //
+    group("ablation: size threshold sensitivity (KiSS 80-20, 4GB)");
+    let trace = synthesize(&w);
+    for threshold in [100u32, 150, 200, 250, 299] {
+        let mut b =
+            Balancer::kiss(4 * 1024, 0.8, threshold, PolicyKind::Lru, PolicyKind::Lru);
+        let r = run_trace_with(&trace, &mut b, InitOccupancy::HoldsMemory);
+        println!(
+            "  threshold {threshold:>3} MB -> cold {:>6.2}%  drops {:>6.2}%",
+            r.overall.cold_start_pct(),
+            r.overall.drop_pct()
+        );
+    }
+
+    group("ablation: init-occupancy model (baseline, 4GB)");
+    for (label, occ) in [
+        ("latency-only", InitOccupancy::LatencyOnly),
+        ("holds-memory", InitOccupancy::HoldsMemory),
+    ] {
+        let mut b = Balancer::baseline(4 * 1024, PolicyKind::Lru);
+        let r = run_trace_with(&trace, &mut b, occ);
+        println!(
+            "  {label:>13} -> cold {:>6.2}%  drops {:>6.2}%",
+            r.overall.cold_start_pct(),
+            r.overall.drop_pct()
+        );
+    }
+
+    group("ablation: adaptive (analyzer-suggested) vs static threshold, 4GB");
+    {
+        // Learn the threshold online from the first 10% of the trace.
+        let mut probe = Balancer::kiss(4 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let tenth = trace.events.len() / 10;
+        let probe_trace = kiss_faas::trace::Trace {
+            functions: trace.functions.clone(),
+            events: trace.events[..tenth].to_vec(),
+        };
+        run_trace_with(&probe_trace, &mut probe, InitOccupancy::HoldsMemory);
+        let suggested = probe.analyzer.suggest_threshold_mb(3).unwrap_or(200);
+        for (label, th) in [("static-200", 200u32), ("adaptive", suggested)] {
+            let mut b = Balancer::kiss(4 * 1024, 0.8, th, PolicyKind::Lru, PolicyKind::Lru);
+            let r = run_trace_with(&trace, &mut b, InitOccupancy::HoldsMemory);
+            println!(
+                "  {label:>10} ({th:>3} MB) -> cold {:>6.2}%  drops {:>6.2}%",
+                r.overall.cold_start_pct(),
+                r.overall.drop_pct()
+            );
+        }
+    }
+
+    group("ablation: adaptive partitioning (§7.3 future work) vs static at 2-3GB");
+    for gb in [2u64, 3] {
+        let mut stat = Balancer::kiss(gb * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let rs = run_trace_with(&trace, &mut stat, InitOccupancy::HoldsMemory);
+        let mut adap = kiss_faas::coordinator::AdaptiveBalancer::new(
+            gb * 1024,
+            kiss_faas::coordinator::AdaptiveConfig::default(),
+            PolicyKind::Lru,
+            PolicyKind::Lru,
+        );
+        let ra = run_trace_with(&trace, &mut adap, InitOccupancy::HoldsMemory);
+        println!(
+            "  {gb}GB static-80-20 -> cold {:>6.2}%  drops {:>6.2}%",
+            rs.overall.cold_start_pct(),
+            rs.overall.drop_pct()
+        );
+        println!(
+            "  {gb}GB adaptive     -> cold {:>6.2}%  drops {:>6.2}%  ({} rebalances, final {:.0}-{:.0})",
+            ra.overall.cold_start_pct(),
+            ra.overall.drop_pct(),
+            adap.rebalances,
+            adap.small_frac * 100.0,
+            (1.0 - adap.small_frac) * 100.0
+        );
+    }
+
+    group("ablation: function chaining (§1.1) — chained vs plain, 4GB");
+    {
+        let chained_cfg = SynthConfig {
+            chains: Some(kiss_faas::trace::synth::ChainConfig::default()),
+            ..bench_workload()
+        };
+        let chained = synthesize(&chained_cfg);
+        for (label, trace) in [("plain", &trace), ("chained", &chained)] {
+            let mut kiss = Balancer::kiss(4 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+            let rk = run_trace_with(trace, &mut kiss, InitOccupancy::HoldsMemory);
+            let mut base = Balancer::baseline(4 * 1024, PolicyKind::Lru);
+            let rb = run_trace_with(trace, &mut base, InitOccupancy::HoldsMemory);
+            println!(
+                "  {label:>8} ({} events) -> kiss cold {:>6.2}% vs baseline {:>6.2}% (gap {:+.1} pts)",
+                trace.events.len(),
+                rk.overall.cold_start_pct(),
+                rb.overall.cold_start_pct(),
+                rb.overall.cold_start_pct() - rk.overall.cold_start_pct(),
+            );
+        }
+    }
+
+    group("ablation: per-class split sensitivity at 4GB (fig7 cross-section)");
+    for split in [0.5, 0.6, 0.7, 0.8, 0.9] {
+        let mut b = Balancer::kiss(4 * 1024, split, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let r = run_trace_with(&trace, &mut b, InitOccupancy::HoldsMemory);
+        println!(
+            "  split {:>2.0}-{:<2.0} -> cold small {:>6.2}% large {:>6.2}% | drops small {:>6.2}% large {:>6.2}%",
+            split * 100.0,
+            (1.0 - split) * 100.0,
+            r.class(SizeClass::Small).cold_start_pct(),
+            r.class(SizeClass::Large).cold_start_pct(),
+            r.class(SizeClass::Small).drop_pct(),
+            r.class(SizeClass::Large).drop_pct(),
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Warm-pool micro-benchmarks: the per-invocation hot path (route +
+//! acquire + release) and eviction throughput, per policy. DESIGN.md §6
+//! target: route+pool decision < 1 µs p50, no allocation in steady state.
+
+use kiss_faas::bench::{group, Bencher};
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::pool::{Acquire, WarmPool};
+use kiss_faas::coordinator::{Balancer, Dispatcher};
+use kiss_faas::trace::{FunctionId, FunctionProfile, SizeClass};
+
+fn profile(id: u32, mem: u32) -> FunctionProfile {
+    FunctionProfile {
+        id: FunctionId(id),
+        app_id: id,
+        mem_mb: mem,
+        app_mem_mb: mem,
+        cold_start_us: 1_000_000,
+        warm_start_us: 1_000,
+        exec_us_mean: 100_000,
+        class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+    }
+}
+
+fn main() {
+    group("pool: steady-state hit path (acquire+release)");
+    for kind in PolicyKind::ALL {
+        let mut pool = WarmPool::new(64 * 1024, kind.build());
+        let p = profile(0, 40);
+        // Pre-warm one container.
+        let Acquire::Cold(id) = pool.try_acquire(&p, 0) else { unreachable!() };
+        pool.release(id, 1);
+        let mut t = 2u64;
+        let r = Bencher::new(&format!("pool/hit-path/{}", kind.label())).run(|| {
+            t += 10;
+            let Acquire::Hit(id) = pool.try_acquire(&p, t) else { unreachable!() };
+            pool.release(id, t + 5);
+        });
+        println!("{r}");
+        assert!(r.p50_ns < 1_000.0, "hit path p50 {} ns exceeds 1 µs target", r.p50_ns);
+    }
+
+    group("pool: cold admission with eviction (churn)");
+    for kind in PolicyKind::ALL {
+        // Pool fits 100 idle containers; every admission evicts one.
+        let mut pool = WarmPool::new(100 * 40, kind.build());
+        let profiles: Vec<FunctionProfile> = (0..1000).map(|i| profile(i, 40)).collect();
+        let mut t = 0u64;
+        // Fill.
+        for p in profiles.iter().take(100) {
+            t += 1;
+            if let Acquire::Cold(id) = pool.try_acquire(p, t) {
+                pool.release(id, t);
+            }
+        }
+        let mut i = 100usize;
+        let r = Bencher::new(&format!("pool/evict-churn/{}", kind.label())).run(|| {
+            t += 1;
+            i = (i + 1) % 1000;
+            if let Acquire::Cold(id) = pool.try_acquire(&profiles[i], t) {
+                pool.release(id, t);
+            }
+        });
+        println!("{r}");
+    }
+
+    group("balancer: full dispatch decision (route + analyzer + pool)");
+    let mut b = Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+    let profiles: Vec<FunctionProfile> =
+        (0..64).map(|i| profile(i, if i % 6 == 5 { 350 } else { 40 })).collect();
+    let mut t = 0u64;
+    let mut pending: Vec<(usize, kiss_faas::coordinator::ContainerId)> = Vec::new();
+    let mut i = 0usize;
+    let r = Bencher::new("balancer/dispatch/64fns").run(|| {
+        t += 50;
+        i = (i + 1) % 64;
+        match b.dispatch(&profiles[i], t) {
+            kiss_faas::coordinator::Outcome::Hit { pool, container }
+            | kiss_faas::coordinator::Outcome::Cold { pool, container } => {
+                pending.push((pool, container));
+            }
+            kiss_faas::coordinator::Outcome::Drop => {}
+        }
+        if pending.len() > 32 {
+            let (pool, c) = pending.remove(0);
+            b.release(pool, c, t);
+        }
+    });
+    println!("{r}");
+
+    group("pool: scaling with container count (LRU victim selection)");
+    for n in [100usize, 1_000, 10_000] {
+        let mut pool = WarmPool::new((n as u64 + 10) * 40, PolicyKind::Lru.build());
+        let profiles: Vec<FunctionProfile> = (0..n as u32 + 10).map(|i| profile(i, 40)).collect();
+        let mut t = 0u64;
+        for p in profiles.iter().take(n) {
+            t += 1;
+            if let Acquire::Cold(id) = pool.try_acquire(p, t) {
+                pool.release(id, t);
+            }
+        }
+        let mut i = n;
+        let r = Bencher::new(&format!("pool/admit-evict/{n}-resident")).run(|| {
+            t += 1;
+            i = (i + 1) % profiles.len();
+            if let Acquire::Cold(id) = pool.try_acquire(&profiles[i], t) {
+                pool.release(id, t);
+            }
+        });
+        println!("{r}");
+    }
+}

@@ -1,0 +1,76 @@
+//! PJRT runtime benchmarks: payload compile (cold-start) cost and
+//! execute latency/throughput per batch variant — the real numbers behind
+//! the live-serving example. Skips if artifacts are missing.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use kiss_faas::bench::{group, Bencher};
+use kiss_faas::runtime::{load_manifest, read_f32_bin, Engine};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        println!("SKIP runtime_bench: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let specs = load_manifest(&artifacts_dir()).unwrap();
+
+    group("payload compile (container cold-start cost on this host)");
+    for spec in &specs {
+        let r = Bencher::new(&format!("runtime/compile/{}", spec.name))
+            .warmup(Duration::from_millis(1))
+            .target(Duration::from_secs(1))
+            .max_iters(20)
+            .run(|| {
+                std::hint::black_box(engine.compile_fresh(spec).unwrap());
+            });
+        println!("{r}");
+    }
+
+    group("payload execute (warm path)");
+    for spec in &specs {
+        engine.load(spec).unwrap();
+        let x = read_f32_bin(&spec.golden_input_file).unwrap();
+        let batch = spec.batch() as f64;
+        let name = spec.name.clone();
+        let payload = engine.get(&name).unwrap();
+        let r = Bencher::new(&format!("runtime/execute/{name}"))
+            .items_per_iter(batch) // per-sample throughput
+            .target(Duration::from_secs(1))
+            .run(|| {
+                std::hint::black_box(payload.run(&x).unwrap());
+            });
+        println!("{r}  (samples/s)");
+    }
+
+    group("batch amortization (iot_mlp b1 vs b8, per-sample)");
+    {
+        let b1 = engine.get("iot_mlp_b1").unwrap();
+        let x1 = read_f32_bin(&b1.spec.golden_input_file).unwrap();
+        let r1 = Bencher::new("runtime/per-sample/b1")
+            .items_per_iter(1.0)
+            .target(Duration::from_secs(1))
+            .run(|| {
+                std::hint::black_box(b1.run(&x1).unwrap());
+            });
+        println!("{r1}");
+        let b8 = engine.get("iot_mlp_b8").unwrap();
+        let x8 = read_f32_bin(&b8.spec.golden_input_file).unwrap();
+        let r8 = Bencher::new("runtime/per-sample/b8")
+            .items_per_iter(8.0)
+            .target(Duration::from_secs(1))
+            .run(|| {
+                std::hint::black_box(b8.run(&x8).unwrap());
+            });
+        println!("{r8}");
+        println!(
+            "  batching speedup (per-sample): {:.2}x",
+            r8.item_rate() / r1.item_rate()
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Simulator hot-path benchmarks: end-to-end event throughput for the
+//! baseline and KiSS dispatchers (the number that bounds how fast the
+//! full fig7 sweep regenerates), plus the §Perf target check
+//! (≥ 10 M simulated invocations/min single-thread — see DESIGN.md §6).
+
+use kiss_faas::bench::{group, Bencher};
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::Balancer;
+use kiss_faas::experiments::paper_workload;
+use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+
+fn main() {
+    group("sim: event throughput (15-min edge workload)");
+    let synth = SynthConfig {
+        seed: 17,
+        n_small: 120,
+        n_large: 16,
+        duration_us: 900_000_000,
+        rate_per_sec: 60.0,
+        ..paper_workload()
+    };
+    let trace = synthesize(&synth);
+    let n = trace.events.len() as f64;
+    println!("trace: {} events, {} functions", trace.events.len(), trace.functions.len());
+
+    let r = Bencher::new("sim/baseline-lru/4GB")
+        .items_per_iter(n)
+        .run(|| {
+            let mut b = Balancer::baseline(4 * 1024, PolicyKind::Lru);
+            std::hint::black_box(run_trace_with(&trace, &mut b, InitOccupancy::HoldsMemory));
+        });
+    println!("{r}");
+    let events_per_min = r.item_rate() * 60.0;
+    println!(
+        "  -> {:.1} M simulated invocations/min (target >= 10 M/min): {}",
+        events_per_min / 1e6,
+        if events_per_min >= 10e6 { "PASS" } else { "MISS" }
+    );
+
+    for kind in PolicyKind::ALL {
+        let r = Bencher::new(&format!("sim/kiss-80-20-{}/4GB", kind.label()))
+            .items_per_iter(n)
+            .run(|| {
+                let mut b = Balancer::kiss(4 * 1024, 0.8, 200, kind, kind);
+                std::hint::black_box(run_trace_with(&trace, &mut b, InitOccupancy::HoldsMemory));
+            });
+        println!("{r}");
+    }
+
+    group("sim: init-occupancy ablation (same trace)");
+    for (label, occ) in [
+        ("latency-only", InitOccupancy::LatencyOnly),
+        ("holds-memory", InitOccupancy::HoldsMemory),
+    ] {
+        let r = Bencher::new(&format!("sim/kiss/8GB/{label}"))
+            .items_per_iter(n)
+            .run(|| {
+                let mut b =
+                    Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+                std::hint::black_box(run_trace_with(&trace, &mut b, occ));
+            });
+        println!("{r}");
+    }
+
+    group("sim: memory-pressure scaling (events/s vs node size)");
+    for gb in [1u64, 4, 16] {
+        let r = Bencher::new(&format!("sim/kiss/{gb}GB"))
+            .items_per_iter(n)
+            .run(|| {
+                let mut b =
+                    Balancer::kiss(gb * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+                std::hint::black_box(run_trace_with(&trace, &mut b, InitOccupancy::HoldsMemory));
+            });
+        println!("{r}");
+    }
+}

@@ -1,0 +1,297 @@
+//! Offline workload analysis — reproduces the paper's §2.5 study
+//! (Figures 2–5) over any [`Trace`]:
+//!
+//! * [`footprint_percentiles`] — Fig. 2: percentile distribution of
+//!   application memory and Eq.-1-estimated function memory.
+//! * [`invocation_trends`] — Fig. 3: minute-binned, normalized invocation
+//!   counts for small vs large functions over the trace.
+//! * [`iat_percentiles`] — Fig. 4: sliding-window inter-arrival-time
+//!   percentiles (60-min windows, 30-min overlap, z-score outlier filter).
+//! * [`coldstart_percentiles`] — Fig. 5: percentile distribution of
+//!   cold-start latency for small vs large functions.
+
+use std::collections::HashMap;
+
+use crate::trace::{SizeClass, Trace};
+use crate::util::stats::{percentile_curve, zscore_filter, PCTL_GRID};
+
+/// A percentile curve: (percentile, value) points.
+pub type Curve = Vec<(f64, f64)>;
+
+/// Fig. 2 output: application-level and function-level (Eq. 1) footprints.
+#[derive(Clone, Debug)]
+pub struct FootprintDist {
+    pub app_mb: Curve,
+    pub func_mb: Curve,
+    /// Share of functions at or below `small_cutoff_mb` (the paper reports
+    /// ">98% of small functions below 225 MB" for the cloud trace).
+    pub frac_below_cutoff: f64,
+    pub small_cutoff_mb: f64,
+}
+
+/// Eq. 1 of the paper: estimate function memory from application memory,
+/// weighted by the function's share of the application's execution time.
+///
+/// `Function Memory = App Memory × Function Duration / App Duration`
+pub fn eq1_function_memory(app_mem_mb: f64, func_duration_us: f64, app_duration_us: f64) -> f64 {
+    if app_duration_us <= 0.0 {
+        return app_mem_mb;
+    }
+    app_mem_mb * func_duration_us / app_duration_us
+}
+
+/// Fig. 2: percentile distribution of memory footprints.
+pub fn footprint_percentiles(trace: &Trace, small_cutoff_mb: f64) -> FootprintDist {
+    // Total exec time per app and per function, to apply Eq. 1 exactly as
+    // the paper does (durations weight the app's memory across functions).
+    let mut app_exec: HashMap<u32, f64> = HashMap::new();
+    let mut func_exec: HashMap<u32, f64> = HashMap::new();
+    for e in &trace.events {
+        let p = trace.profile(e.func);
+        *app_exec.entry(p.app_id).or_default() += e.exec_us as f64;
+        *func_exec.entry(p.id.0).or_default() += e.exec_us as f64;
+    }
+
+    let mut app_samples: Vec<f64> = Vec::new();
+    let mut func_samples: Vec<f64> = Vec::new();
+    let mut seen_apps: HashMap<u32, ()> = HashMap::new();
+    for f in &trace.functions {
+        if seen_apps.insert(f.app_id, ()).is_none() {
+            app_samples.push(f.app_mem_mb as f64);
+        }
+        let fd = func_exec.get(&f.id.0).copied().unwrap_or(0.0);
+        let ad = app_exec.get(&f.app_id).copied().unwrap_or(0.0);
+        func_samples.push(eq1_function_memory(f.app_mem_mb as f64, fd, ad));
+    }
+
+    let below = func_samples.iter().filter(|&&x| x <= small_cutoff_mb).count();
+    FootprintDist {
+        app_mb: percentile_curve(&app_samples, &PCTL_GRID),
+        func_mb: percentile_curve(&func_samples, &PCTL_GRID),
+        frac_below_cutoff: below as f64 / func_samples.len().max(1) as f64,
+        small_cutoff_mb,
+    }
+}
+
+/// Fig. 3 output: per-minute normalized invocation counts per class.
+#[derive(Clone, Debug)]
+pub struct InvocationTrends {
+    /// Minute index → normalized count (peak = 1.0) per class.
+    pub small: Vec<f64>,
+    pub large: Vec<f64>,
+    /// Mean small:large ratio across minutes with traffic (paper: 4–6.5×).
+    pub mean_ratio: f64,
+}
+
+/// Fig. 3: minute-binned invocation trends, normalized to each class's
+/// peak (the paper plots normalized trends).
+pub fn invocation_trends(trace: &Trace) -> InvocationTrends {
+    let minutes = (trace.duration_us() / 60_000_000 + 1) as usize;
+    let mut small = vec![0u64; minutes];
+    let mut large = vec![0u64; minutes];
+    for e in &trace.events {
+        let m = (e.t_us / 60_000_000) as usize;
+        match trace.profile(e.func).class {
+            SizeClass::Small => small[m] += 1,
+            SizeClass::Large => large[m] += 1,
+        }
+    }
+    let ratios: Vec<f64> = small
+        .iter()
+        .zip(&large)
+        .filter(|&(_, &l)| l > 0)
+        .map(|(&s, &l)| s as f64 / l as f64)
+        .collect();
+    let mean_ratio = if ratios.is_empty() {
+        f64::NAN
+    } else {
+        ratios.iter().sum::<f64>() / ratios.len() as f64
+    };
+    let norm = |xs: Vec<u64>| -> Vec<f64> {
+        let peak = xs.iter().copied().max().unwrap_or(0).max(1) as f64;
+        xs.into_iter().map(|x| x as f64 / peak).collect()
+    };
+    InvocationTrends { small: norm(small), large: norm(large), mean_ratio }
+}
+
+/// Fig. 4 output: IAT percentile curves per class (seconds).
+#[derive(Clone, Debug)]
+pub struct IatDist {
+    pub small_s: Curve,
+    pub large_s: Curve,
+    /// Windows analyzed / samples retained after the z-score filter.
+    pub windows: usize,
+    pub samples_kept: usize,
+}
+
+/// Fig. 4: sliding-window IATs with z-score filtering, exactly the
+/// paper's method (§2.5.3): default 60-minute windows advancing by 30
+/// minutes; per-function IATs are computed within each window, outliers
+/// beyond `z_threshold` removed, then pooled per class.
+pub fn iat_percentiles(
+    trace: &Trace,
+    window_us: u64,
+    step_us: u64,
+    z_threshold: f64,
+) -> IatDist {
+    assert!(window_us > 0 && step_us > 0);
+    // arrival times per function
+    let mut arrivals: HashMap<u32, Vec<u64>> = HashMap::new();
+    for e in &trace.events {
+        arrivals.entry(e.func.0).or_default().push(e.t_us);
+    }
+
+    let horizon = trace.duration_us();
+    let mut small: Vec<f64> = Vec::new();
+    let mut large: Vec<f64> = Vec::new();
+    let mut windows = 0;
+    let mut start = 0u64;
+    loop {
+        let end = start + window_us;
+        windows += 1;
+        for (fid, ts) in &arrivals {
+            let class = trace.functions[*fid as usize].class;
+            // IATs of arrivals inside [start, end)
+            let lo = ts.partition_point(|&t| t < start);
+            let hi = ts.partition_point(|&t| t < end);
+            if hi - lo < 2 {
+                continue;
+            }
+            let iats: Vec<f64> = ts[lo..hi]
+                .windows(2)
+                .map(|w| (w[1] - w[0]) as f64 / 1e6)
+                .collect();
+            let kept = zscore_filter(&iats, z_threshold);
+            match class {
+                SizeClass::Small => small.extend(kept),
+                SizeClass::Large => large.extend(kept),
+            }
+        }
+        if end >= horizon {
+            break;
+        }
+        start += step_us;
+    }
+
+    let samples_kept = small.len() + large.len();
+    IatDist {
+        small_s: if small.is_empty() { Vec::new() } else { percentile_curve(&small, &PCTL_GRID) },
+        large_s: if large.is_empty() { Vec::new() } else { percentile_curve(&large, &PCTL_GRID) },
+        windows,
+        samples_kept,
+    }
+}
+
+/// Fig. 5 output: cold-start latency percentile curves per class (s).
+#[derive(Clone, Debug)]
+pub struct ColdStartDist {
+    pub small_s: Curve,
+    pub large_s: Curve,
+}
+
+/// Fig. 5: percentile distribution of cold-start latency per class, over
+/// the function population (each function's initialization cost).
+pub fn coldstart_percentiles(trace: &Trace) -> ColdStartDist {
+    let mut small: Vec<f64> = Vec::new();
+    let mut large: Vec<f64> = Vec::new();
+    for f in &trace.functions {
+        let s = f.cold_start_us as f64 / 1e6;
+        match f.class {
+            SizeClass::Small => small.push(s),
+            SizeClass::Large => large.push(s),
+        }
+    }
+    ColdStartDist {
+        small_s: percentile_curve(&small, &PCTL_GRID),
+        large_s: percentile_curve(&large, &PCTL_GRID),
+    }
+}
+
+/// Look up a percentile value from a curve produced above.
+pub fn curve_at(curve: &Curve, p: f64) -> Option<f64> {
+    curve.iter().find(|&&(q, _)| (q - p).abs() < 1e-9).map(|&(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{synthesize, SynthConfig};
+
+    fn test_trace() -> Trace {
+        synthesize(&SynthConfig {
+            n_small: 120,
+            n_large: 30,
+            duration_us: 2 * 3_600_000_000, // 2 h
+            rate_per_sec: 40.0,
+            ..SynthConfig::default()
+        })
+    }
+
+    #[test]
+    fn eq1_matches_paper_formula() {
+        assert_eq!(eq1_function_memory(100.0, 50.0, 100.0), 50.0);
+        assert_eq!(eq1_function_memory(100.0, 100.0, 100.0), 100.0);
+        // degenerate app duration falls back to app memory
+        assert_eq!(eq1_function_memory(100.0, 10.0, 0.0), 100.0);
+    }
+
+    #[test]
+    fn fig2_small_functions_below_cutoff() {
+        let d = footprint_percentiles(&test_trace(), 225.0);
+        // Edge-adapted trace: most Eq.-1 function footprints are small.
+        assert!(d.frac_below_cutoff > 0.7, "{}", d.frac_below_cutoff);
+        // Curves are monotone in percentile.
+        for w in d.func_mb.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+        // App memory stochastically dominates Eq.-1 function memory.
+        let app85 = curve_at(&d.app_mb, 85.0).unwrap();
+        let func85 = curve_at(&d.func_mb, 85.0).unwrap();
+        assert!(app85 >= func85);
+    }
+
+    #[test]
+    fn fig3_ratio_in_paper_band() {
+        let t = test_trace();
+        let trends = invocation_trends(&t);
+        assert!(
+            (3.0..=8.0).contains(&trends.mean_ratio),
+            "ratio {}",
+            trends.mean_ratio
+        );
+        // Normalization: peaks are exactly 1.
+        assert!((trends.small.iter().cloned().fold(0.0, f64::max) - 1.0).abs() < 1e-12);
+        assert!((trends.large.iter().cloned().fold(0.0, f64::max) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig4_windows_and_percentiles() {
+        let t = test_trace();
+        let d = iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 3.0);
+        assert!(d.windows >= 2, "expected overlapping windows, got {}", d.windows);
+        assert!(d.samples_kept > 100);
+        assert!(!d.small_s.is_empty() && !d.large_s.is_empty());
+        // IAT curves are monotone.
+        for w in d.small_s.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn fig5_large_latency_dominates_small() {
+        let d = coldstart_percentiles(&test_trace());
+        let s85 = curve_at(&d.small_s, 85.0).unwrap();
+        let l85 = curve_at(&d.large_s, 85.0).unwrap();
+        assert!(l85 > 3.0 * s85, "large p85 {l85} vs small p85 {s85}");
+        assert!(s85 < 20.0 + 1e-9);
+        assert!(l85 <= 150.0 + 1e-9);
+    }
+
+    #[test]
+    fn iat_zscore_filter_reduces_or_keeps_samples() {
+        let t = test_trace();
+        let strict = iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 1.0);
+        let loose = iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 100.0);
+        assert!(strict.samples_kept <= loose.samples_kept);
+    }
+}

@@ -1,0 +1,209 @@
+//! Micro-benchmark harness — an offline substitute for `criterion`
+//! (see the crate docs). Auto-calibrates iteration counts, reports
+//! mean / p50 / p99 and throughput, and renders criterion-style lines.
+//!
+//! ```no_run
+//! use kiss_faas::bench::Bencher;
+//! let mut b = Bencher::new("pool/acquire");
+//! let r = b.run(|| { /* hot path */ });
+//! println!("{r}");
+//! ```
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile_sorted;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub total: Duration,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Iterations per second.
+    pub throughput: f64,
+    /// Optional items-per-iteration multiplier (events, requests, ...).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Items processed per second (`throughput * items_per_iter`).
+    pub fn item_rate(&self) -> f64 {
+        self.throughput * self.items_per_iter
+    }
+}
+
+impl fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  {:>14}/s",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_rate(self.item_rate()),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.1}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Benchmark driver. Warms up, calibrates the iteration count to hit the
+/// target measurement time, then samples per-iteration latencies.
+pub struct Bencher {
+    name: String,
+    warmup: Duration,
+    target: Duration,
+    max_iters: u64,
+    items_per_iter: f64,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            target: Duration::from_secs(1),
+            max_iters: 10_000_000,
+            items_per_iter: 1.0,
+        }
+    }
+
+    /// Declare that each iteration processes `n` items (events, requests),
+    /// so the report shows item throughput.
+    pub fn items_per_iter(mut self, n: f64) -> Self {
+        self.items_per_iter = n;
+        self
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn target(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: u64) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Run the benchmark.
+    pub fn run<F: FnMut()>(&mut self, mut f: F) -> BenchResult {
+        // Warmup + calibration: how many iterations fit in the warmup
+        // window tells us the rough per-iteration cost.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .max(10)
+            .min(self.max_iters)
+            .max(1);
+
+        // Measured phase: per-iteration samples (batched timing when the
+        // op is too fast for the clock: < ~50 ns).
+        let batch = if per_iter < 50e-9 { 64 } else { 1 };
+        let samples = (iters / batch).max(1);
+        let mut lat_ns: Vec<f64> = Vec::with_capacity(samples as usize);
+        let t0 = Instant::now();
+        for _ in 0..samples {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            lat_ns.push(s.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        let total = t0.elapsed();
+        lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let done = samples * batch;
+        BenchResult {
+            name: self.name.clone(),
+            iters: done,
+            total,
+            mean_ns: total.as_nanos() as f64 / done as f64,
+            p50_ns: percentile_sorted(&lat_ns, 50.0),
+            p99_ns: percentile_sorted(&lat_ns, 99.0),
+            throughput: done as f64 / total.as_secs_f64(),
+            items_per_iter: self.items_per_iter,
+        }
+    }
+}
+
+/// Print a bench group header (criterion-style sectioning).
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut x = 0u64;
+        let r = Bencher::new("noop")
+            .warmup(Duration::from_millis(10))
+            .target(Duration::from_millis(50))
+            .run(|| {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.throughput > 0.0);
+    }
+
+    #[test]
+    fn items_multiplier_scales_rate() {
+        let r = Bencher::new("items")
+            .warmup(Duration::from_millis(5))
+            .target(Duration::from_millis(20))
+            .items_per_iter(100.0)
+            .run(|| {
+                std::hint::black_box(12u64);
+            });
+        assert!((r.item_rate() - r.throughput * 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn display_formats_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_rate(2_500_000.0), "2.50M");
+        assert_eq!(fmt_rate(1_500.0), "1.5k");
+    }
+}

@@ -1,0 +1,277 @@
+//! Minimal TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supported grammar — everything the repo's config files use:
+//!
+//! * `[section]` / `[section.sub]` headers
+//! * `key = "string" | 123 | 1.5 | true | false | [scalar, ...]`
+//! * `#` comments, blank lines
+//!
+//! Not supported (rejected with an error, never silently misparsed):
+//! inline tables, arrays of tables, multiline strings, dotted keys,
+//! datetimes.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().filter(|x| *x >= 0).map(|x| x as u64)
+    }
+
+    /// Floats accept integer literals too (`rate = 50` ≡ `50.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`. Keys outside any section
+/// live under `""`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, Value>> {
+        self.sections.get(name)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(text: &str) -> Result<Document, TomlError> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+
+    for (i, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        let err = |msg: &str| TomlError { line: i + 1, msg: msg.to_string() };
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(err("arrays of tables are not supported"));
+            }
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| err("expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() || key.contains('.') {
+            return Err(err("bad key (dotted keys unsupported)"));
+        }
+        let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+        doc.sections
+            .get_mut(&current)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // trailing comma
+            }
+            let v = parse_value(part)?;
+            if matches!(v, Value::Arr(_)) {
+                return Err("nested arrays unsupported".into());
+            }
+            items.push(v);
+        }
+        return Ok(Value::Arr(items));
+    }
+    // numbers: underscores allowed as separators
+    let cleaned = s.replace('_', "");
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("bad float {s:?}"))
+    } else {
+        cleaned
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| format!("bad value {s:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            top = 1
+            [node]
+            mem_mb = 8192          # 8 GiB
+            name = "edge-1"
+            frac = 0.8
+            enabled = true
+            [trace]
+            rate = 50
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.get("node", "mem_mb").unwrap().as_u64(), Some(8192));
+        assert_eq!(doc.get("node", "name").unwrap().as_str(), Some("edge-1"));
+        assert_eq!(doc.get("node", "frac").unwrap().as_f64(), Some(0.8));
+        assert_eq!(doc.get("node", "enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("trace", "rate").unwrap().as_f64(), Some(50.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("splits = [0.9, 0.8, 0.7]\nnames = [\"a\", \"b\"]").unwrap();
+        let splits: Vec<f64> = doc
+            .get("", "splits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(splits, vec![0.9, 0.8, 0.7]);
+        assert_eq!(
+            doc.get("", "names").unwrap().as_arr().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = parse("big = 8_192").unwrap();
+        assert_eq!(doc.get("", "big").unwrap().as_i64(), Some(8192));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("x = \"open").is_err());
+        assert!(parse("[[tables]]").is_err());
+        assert!(parse("a.b = 1").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = parse("a = -5\nb = -0.25\nc = 1e3").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(-0.25));
+        assert_eq!(doc.get("", "c").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(doc.get("", "a").unwrap().as_u64(), None);
+    }
+}

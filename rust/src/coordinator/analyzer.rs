@@ -1,0 +1,201 @@
+//! Online workload analyzer — the "workload analyser" box in the paper's
+//! Figure 6. Maintains O(1) per-function profiles (EWMA invocation rate,
+//! footprint, observed durations) that the load balancer and the
+//! GreedyDual policy can consult, and can *suggest* a size threshold from
+//! the footprint distribution it has seen (the paper's offline analysis
+//! found the 225 MB valley; this is its online counterpart, used by the
+//! adaptive-threshold ablation).
+
+use crate::trace::{FunctionId, FunctionProfile};
+use crate::util::stats::{Ewma, Histogram};
+
+/// Per-function online profile.
+#[derive(Clone, Debug)]
+pub struct FuncStats {
+    /// EWMA of the inter-arrival time (µs) — inverse of invocation rate.
+    pub iat_us: Ewma,
+    pub last_arrival_us: Option<u64>,
+    pub invocations: u64,
+    pub mem_mb: u32,
+}
+
+/// Online profiler. All updates are O(1); `suggest_threshold_mb` is O(bins).
+pub struct WorkloadAnalyzer {
+    /// Dense per-function profiles, indexed by FunctionId (ids are dense
+    /// by construction). Vec indexing beats hashing on the per-event hot
+    /// path — see EXPERIMENTS.md §Perf.
+    funcs: Vec<Option<FuncStats>>,
+    seen: usize,
+    /// Footprint histogram over observed functions (MB), for threshold
+    /// suggestion. 0–1024 MB in 8 MB bins.
+    footprint: Histogram,
+    alpha: f64,
+}
+
+impl Default for WorkloadAnalyzer {
+    fn default() -> Self {
+        Self::new(0.2)
+    }
+}
+
+impl WorkloadAnalyzer {
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            funcs: Vec::new(),
+            seen: 0,
+            footprint: Histogram::new(0.0, 1024.0, 128),
+            alpha,
+        }
+    }
+
+    /// Record an arrival (called by the request handler for every
+    /// invocation, before routing).
+    pub fn observe(&mut self, profile: &FunctionProfile, now_us: u64) {
+        let idx = profile.id.0 as usize;
+        if idx >= self.funcs.len() {
+            self.funcs.resize_with(idx + 1, || None);
+        }
+        let entry = self.funcs[idx].get_or_insert_with(|| {
+            // First sighting: account the footprint once per function.
+            self.seen += 1;
+            FuncStats {
+                iat_us: Ewma::new(self.alpha),
+                last_arrival_us: None,
+                invocations: 0,
+                mem_mb: profile.mem_mb,
+            }
+        });
+        if entry.invocations == 0 {
+            self.footprint.push(profile.mem_mb as f64);
+        }
+        entry.invocations += 1;
+        if let Some(prev) = entry.last_arrival_us {
+            entry.iat_us.push((now_us - prev) as f64);
+        }
+        entry.last_arrival_us = Some(now_us);
+    }
+
+    pub fn stats(&self, f: FunctionId) -> Option<&FuncStats> {
+        self.funcs.get(f.0 as usize)?.as_ref()
+    }
+
+    /// EWMA invocation rate (per second), if two+ arrivals were seen.
+    pub fn rate_per_sec(&self, f: FunctionId) -> Option<f64> {
+        let iat = self.stats(f)?.iat_us.get()?;
+        if iat <= 0.0 {
+            return None;
+        }
+        Some(1e6 / iat)
+    }
+
+    pub fn functions_seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Suggest a small/large threshold (MB) as the widest empty valley in
+    /// the footprint histogram between the two occupied extremes — the
+    /// online analogue of the paper's Fig. 2 "spike at ~225 MB" analysis.
+    /// Returns `None` until the distribution is clearly bimodal (an empty
+    /// gap of at least `min_gap_bins` bins).
+    pub fn suggest_threshold_mb(&self, min_gap_bins: usize) -> Option<u32> {
+        let bins = self.footprint.bins();
+        let width = 1024.0 / bins.len() as f64;
+        let first = bins.iter().position(|&c| c > 0)?;
+        let last = bins.iter().rposition(|&c| c > 0)?;
+        if first == last {
+            return None;
+        }
+        // Widest run of empty bins strictly inside [first, last].
+        let mut best: Option<(usize, usize)> = None; // (len, start)
+        let mut run_start = None;
+        for i in first..=last {
+            if bins[i] == 0 {
+                run_start.get_or_insert(i);
+            } else if let Some(s) = run_start.take() {
+                let len = i - s;
+                if best.map(|(l, _)| len > l).unwrap_or(true) {
+                    best = Some((len, s));
+                }
+            }
+        }
+        let (len, start) = best?;
+        if len < min_gap_bins {
+            return None;
+        }
+        // Midpoint of the gap.
+        Some(((start as f64 + len as f64 / 2.0) * width) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SizeClass;
+
+    fn profile(id: u32, mem: u32) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(id),
+            app_id: 0,
+            mem_mb: mem,
+            app_mem_mb: mem,
+            cold_start_us: 0,
+            warm_start_us: 0,
+            exec_us_mean: 0,
+            class: SizeClass::Small,
+        }
+    }
+
+    #[test]
+    fn rate_estimation_from_regular_arrivals() {
+        let mut a = WorkloadAnalyzer::default();
+        let f = profile(0, 40);
+        for i in 0..20 {
+            a.observe(&f, i * 100_000); // every 100 ms -> 10/s
+        }
+        let r = a.rate_per_sec(FunctionId(0)).unwrap();
+        assert!((r - 10.0).abs() < 0.5, "rate {r}");
+    }
+
+    #[test]
+    fn no_rate_before_second_arrival() {
+        let mut a = WorkloadAnalyzer::default();
+        a.observe(&profile(0, 40), 0);
+        assert!(a.rate_per_sec(FunctionId(0)).is_none());
+    }
+
+    #[test]
+    fn footprint_counted_once_per_function() {
+        let mut a = WorkloadAnalyzer::default();
+        let f = profile(0, 40);
+        for i in 0..5 {
+            a.observe(&f, i);
+        }
+        assert_eq!(a.footprint.count(), 1);
+        assert_eq!(a.functions_seen(), 1);
+    }
+
+    #[test]
+    fn threshold_found_between_bimodal_classes() {
+        let mut a = WorkloadAnalyzer::default();
+        for i in 0..30 {
+            a.observe(&profile(i, 30 + i % 30), 0); // 30-59 MB
+        }
+        for i in 0..10 {
+            a.observe(&profile(100 + i, 300 + (i % 10) * 10), 0); // 300-390 MB
+        }
+        let th = a.suggest_threshold_mb(3).unwrap();
+        assert!(
+            (80..=290).contains(&th),
+            "threshold {th} should fall in the 60..300 valley"
+        );
+    }
+
+    #[test]
+    fn no_threshold_for_unimodal_distribution() {
+        let mut a = WorkloadAnalyzer::default();
+        for i in 0..20 {
+            a.observe(&profile(i, 40 + i), 0);
+        }
+        assert_eq!(a.suggest_threshold_mb(3), None);
+    }
+}

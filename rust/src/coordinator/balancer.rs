@@ -1,0 +1,335 @@
+//! The load balancer: KiSS's size-aware partitioning logic, plus the
+//! unified-pool baseline — both behind [`Dispatcher`], so experiments
+//! isolate exactly the policy difference (paper §4.5).
+//!
+//! KiSS (paper §3.2): node memory is split into independent warm pools
+//! (default 80% small / 20% large, threshold between the small and large
+//! container size modes); the request handler consults the workload
+//! analyzer, and the balancer routes each function to its partition's
+//! pool. Each pool runs its own replacement policy ("Policy
+//! Independence", §6.4). The implementation generalizes to N partitions
+//! ("the ability to add more pools as workload patterns evolve", §3.3).
+
+use super::analyzer::WorkloadAnalyzer;
+use super::container::ContainerId;
+use super::policy::PolicyKind;
+use super::pool::{Acquire, WarmPool};
+use super::{Dispatcher, Outcome};
+use crate::trace::FunctionProfile;
+
+/// One memory partition: functions with `mem_mb < max_mb` (and not claimed
+/// by an earlier partition) route here.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    pub name: &'static str,
+    /// Fraction of node memory given to this partition (Σ ≈ 1.0).
+    pub frac: f64,
+    /// Exclusive upper size bound routed to this partition; the last
+    /// partition must use `u32::MAX` to be a catch-all.
+    pub max_mb: u32,
+    pub policy: PolicyKind,
+}
+
+/// KiSS / baseline coordinator over one edge node.
+pub struct Balancer {
+    specs: Vec<PartitionSpec>,
+    pools: Vec<WarmPool>,
+    pub analyzer: WorkloadAnalyzer,
+    total_mb: u64,
+}
+
+impl Balancer {
+    /// Build from explicit partitions. Panics on an invalid spec (fractions
+    /// not ≈1, unsorted bounds, or a non-catch-all final partition).
+    pub fn new(total_mb: u64, specs: Vec<PartitionSpec>) -> Self {
+        assert!(!specs.is_empty());
+        let frac_sum: f64 = specs.iter().map(|s| s.frac).sum();
+        assert!(
+            (frac_sum - 1.0).abs() < 1e-6,
+            "partition fractions must sum to 1, got {frac_sum}"
+        );
+        assert!(
+            specs.windows(2).all(|w| w[0].max_mb < w[1].max_mb),
+            "partition bounds must be strictly increasing"
+        );
+        assert_eq!(
+            specs.last().unwrap().max_mb,
+            u32::MAX,
+            "last partition must be a catch-all"
+        );
+        let pools = specs
+            .iter()
+            .map(|s| WarmPool::new((total_mb as f64 * s.frac).round() as u64, s.policy.build()))
+            .collect();
+        Self { specs, pools, analyzer: WorkloadAnalyzer::default(), total_mb }
+    }
+
+    /// The paper's baseline: one unified pool, LRU by default.
+    pub fn baseline(total_mb: u64, policy: PolicyKind) -> Self {
+        Self::new(
+            total_mb,
+            vec![PartitionSpec { name: "unified", frac: 1.0, max_mb: u32::MAX, policy }],
+        )
+    }
+
+    /// KiSS with a small/large split. `small_frac` is the small pool's
+    /// share (the paper's "80-20" = 0.8); `threshold_mb` separates the
+    /// classes (paper: between the 30–60 MB and 300–400 MB modes; the
+    /// cloud analysis found ~225 MB).
+    pub fn kiss(
+        total_mb: u64,
+        small_frac: f64,
+        threshold_mb: u32,
+        small_policy: PolicyKind,
+        large_policy: PolicyKind,
+    ) -> Self {
+        assert!((0.0..1.0).contains(&small_frac) && small_frac > 0.0);
+        Self::new(
+            total_mb,
+            vec![
+                PartitionSpec {
+                    name: "small",
+                    frac: small_frac,
+                    max_mb: threshold_mb,
+                    policy: small_policy,
+                },
+                PartitionSpec {
+                    name: "large",
+                    frac: 1.0 - small_frac,
+                    max_mb: u32::MAX,
+                    policy: large_policy,
+                },
+            ],
+        )
+    }
+
+    pub fn pool(&self, idx: usize) -> &WarmPool {
+        &self.pools[idx]
+    }
+
+    pub fn pools(&self) -> &[WarmPool] {
+        &self.pools
+    }
+
+    pub fn total_mb(&self) -> u64 {
+        self.total_mb
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Total evictions across pools (bench metric).
+    pub fn evictions(&self) -> u64 {
+        self.pools.iter().map(|p| p.evictions).sum()
+    }
+
+    /// Extension: reap idle containers last used before `cutoff_us` in
+    /// every pool (fixed keep-alive TTL). Returns the number reaped.
+    pub fn expire_idle_before(&mut self, cutoff_us: u64) -> usize {
+        self.pools.iter_mut().map(|p| p.expire_idle_before(cutoff_us)).sum()
+    }
+
+    /// Live-resize a two-pool (KiSS) split to `small_frac`, preserving all
+    /// warm state that still fits (adaptive partitioning, paper §7.3).
+    /// Shrinking a pool evicts per policy; growing is free.
+    pub fn set_split(&mut self, small_frac: f64) {
+        assert_eq!(self.pools.len(), 2, "set_split requires a two-pool KiSS balancer");
+        assert!(small_frac > 0.0 && small_frac < 1.0);
+        let small_cap = (self.total_mb as f64 * small_frac).round() as u64;
+        let large_cap = self.total_mb - small_cap;
+        self.specs[0].frac = small_frac;
+        self.specs[1].frac = 1.0 - small_frac;
+        self.pools[0].set_capacity_mb(small_cap);
+        self.pools[1].set_capacity_mb(large_cap);
+    }
+
+    /// Pool-level invariants (property suite).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, p) in self.pools.iter().enumerate() {
+            p.check_invariants().map_err(|e| format!("pool {i}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Dispatcher for Balancer {
+    fn dispatch(&mut self, profile: &FunctionProfile, now_us: u64) -> Outcome {
+        self.analyzer.observe(profile, now_us);
+        let pool_idx = self.route(profile);
+        match self.pools[pool_idx].try_acquire(profile, now_us) {
+            Acquire::Hit(c) => Outcome::Hit { pool: pool_idx, container: c },
+            Acquire::Cold(c) => Outcome::Cold { pool: pool_idx, container: c },
+            Acquire::Drop => Outcome::Drop,
+        }
+    }
+
+    fn release(&mut self, pool: usize, container: ContainerId, now_us: u64) {
+        self.pools[pool].release(container, now_us);
+    }
+
+    fn occupancy(&self) -> Vec<(u64, u64)> {
+        self.pools.iter().map(|p| (p.used_mb(), p.capacity_mb())).collect()
+    }
+
+    fn used_mb(&self) -> u64 {
+        // Hot path: no allocation (cf. the default occupancy()-based impl).
+        self.pools.iter().map(|p| p.used_mb()).sum()
+    }
+
+    fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .specs
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}<{}MB:{:.0}%:{}",
+                    s.name,
+                    if s.max_mb == u32::MAX { "inf".into() } else { s.max_mb.to_string() },
+                    s.frac * 100.0,
+                    s.policy.label()
+                )
+            })
+            .collect();
+        parts.join(" | ")
+    }
+
+    fn route(&self, profile: &FunctionProfile) -> usize {
+        self.specs
+            .iter()
+            .position(|s| profile.mem_mb < s.max_mb)
+            .expect("catch-all partition guarantees a route")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{FunctionId, SizeClass};
+
+    fn profile(id: u32, mem: u32) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(id),
+            app_id: 0,
+            mem_mb: mem,
+            app_mem_mb: mem,
+            cold_start_us: 1_000_000,
+            warm_start_us: 1_000,
+            exec_us_mean: 10_000,
+            class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+        }
+    }
+
+    #[test]
+    fn kiss_routes_by_size_threshold() {
+        let b = Balancer::kiss(1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        assert_eq!(b.route(&profile(0, 40)), 0);
+        assert_eq!(b.route(&profile(1, 199)), 0);
+        assert_eq!(b.route(&profile(2, 200)), 1);
+        assert_eq!(b.route(&profile(3, 400)), 1);
+    }
+
+    #[test]
+    fn kiss_splits_capacity_80_20() {
+        let b = Balancer::kiss(10_240, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        assert_eq!(b.pool(0).capacity_mb(), 8_192);
+        assert_eq!(b.pool(1).capacity_mb(), 2_048);
+    }
+
+    #[test]
+    fn baseline_is_single_catch_all() {
+        let b = Balancer::baseline(4096, PolicyKind::Lru);
+        assert_eq!(b.partition_count(), 1);
+        assert_eq!(b.route(&profile(0, 40)), 0);
+        assert_eq!(b.route(&profile(1, 4000)), 0);
+        assert_eq!(b.pool(0).capacity_mb(), 4096);
+    }
+
+    #[test]
+    fn kiss_isolates_partitions() {
+        // Large container cannot displace small-pool contents: fill the
+        // small pool, then admit a large function — small pool untouched.
+        let mut b = Balancer::kiss(1000, 0.5, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let s = profile(0, 100);
+        let Outcome::Cold { pool: 0, container: c } = b.dispatch(&s, 0) else {
+            panic!()
+        };
+        b.release(0, c, 1);
+        let l = profile(1, 400);
+        let Outcome::Cold { pool: 1, .. } = b.dispatch(&l, 2) else { panic!() };
+        // Small pool still holds its idle container.
+        assert_eq!(b.pool(0).idle_count(), 1);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn baseline_allows_cross_class_displacement() {
+        // The Figure-1 pathology: in a unified pool the large container
+        // evicts the small one.
+        let mut b = Balancer::baseline(500, PolicyKind::Lru);
+        let s = profile(0, 100);
+        let Outcome::Cold { pool, container } = b.dispatch(&s, 0) else { panic!() };
+        b.release(pool, container, 1);
+        let l = profile(1, 450);
+        let Outcome::Cold { .. } = b.dispatch(&l, 2) else { panic!() };
+        assert_eq!(b.pool(0).idle_count(), 0, "small container was displaced");
+        assert_eq!(b.evictions(), 1);
+    }
+
+    #[test]
+    fn kiss_large_pool_too_small_drops_large_fn() {
+        // 90-10 split on a 1 GB node: the large pool has 102 MB — no 300 MB
+        // function can ever run. This is the over-prioritization failure
+        // mode the paper observes for 90-10 at low memory.
+        let mut b = Balancer::kiss(1024, 0.9, 200, PolicyKind::Lru, PolicyKind::Lru);
+        assert!(b.dispatch(&profile(0, 300), 0).is_drop());
+    }
+
+    #[test]
+    fn three_way_partition_supported() {
+        let b = Balancer::new(
+            3000,
+            vec![
+                PartitionSpec { name: "s", frac: 0.5, max_mb: 100, policy: PolicyKind::Lru },
+                PartitionSpec { name: "m", frac: 0.3, max_mb: 300, policy: PolicyKind::Freq },
+                PartitionSpec {
+                    name: "l",
+                    frac: 0.2,
+                    max_mb: u32::MAX,
+                    policy: PolicyKind::GreedyDual,
+                },
+            ],
+        );
+        assert_eq!(b.route(&profile(0, 50)), 0);
+        assert_eq!(b.route(&profile(1, 150)), 1);
+        assert_eq!(b.route(&profile(2, 350)), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "fractions must sum to 1")]
+    fn bad_fractions_rejected() {
+        Balancer::new(
+            1000,
+            vec![PartitionSpec { name: "x", frac: 0.5, max_mb: u32::MAX, policy: PolicyKind::Lru }],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "catch-all")]
+    fn missing_catch_all_rejected() {
+        Balancer::new(
+            1000,
+            vec![PartitionSpec { name: "x", frac: 1.0, max_mb: 100, policy: PolicyKind::Lru }],
+        );
+    }
+
+    #[test]
+    fn describe_mentions_partitions() {
+        let b = Balancer::kiss(1024, 0.8, 225, PolicyKind::Lru, PolicyKind::GreedyDual);
+        let d = b.describe();
+        assert!(d.contains("small"), "{d}");
+        assert!(d.contains("large"), "{d}");
+        assert!(d.contains("80%"), "{d}");
+        assert!(d.contains("gd"), "{d}");
+    }
+}

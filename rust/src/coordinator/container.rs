@@ -1,0 +1,76 @@
+//! Container model: one provisioned function instance in a warm pool.
+
+use crate::trace::FunctionId;
+
+/// Pool-global container identifier (never reused within a pool's lifetime
+/// — monotonically allocated, so stale handles are detectable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContainerId(pub u64);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContainerState {
+    /// Warm and idle: reusable by the next invocation of its function,
+    /// evictable by the replacement policy.
+    Idle,
+    /// Executing an invocation until the recorded completion time; holds
+    /// memory and is NOT evictable (drops happen when too much of the pool
+    /// is busy — the paper's extended drop metric).
+    Busy,
+}
+
+/// One container instance.
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub id: ContainerId,
+    pub func: FunctionId,
+    pub mem_mb: u32,
+    pub state: ContainerState,
+    /// Last time (µs) this container started serving an invocation.
+    pub last_used_us: u64,
+    /// Number of invocations served by this container.
+    pub uses: u64,
+    /// Cold-start cost of the function (µs) — the GreedyDual policy's
+    /// "cost" term, cached here to keep evictions O(log n).
+    pub cold_cost_us: u64,
+    /// GreedyDual priority at last touch (see policy::greedy_dual).
+    pub gd_priority: f64,
+}
+
+impl Container {
+    pub fn new(
+        id: ContainerId,
+        func: FunctionId,
+        mem_mb: u32,
+        cold_cost_us: u64,
+        now_us: u64,
+    ) -> Self {
+        Self {
+            id,
+            func,
+            mem_mb,
+            state: ContainerState::Busy, // born serving its first invocation
+            last_used_us: now_us,
+            uses: 1,
+            cold_cost_us,
+            gd_priority: 0.0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == ContainerState::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_container_is_busy_with_one_use() {
+        let c = Container::new(ContainerId(1), FunctionId(3), 40, 1_000_000, 17);
+        assert_eq!(c.state, ContainerState::Busy);
+        assert_eq!(c.uses, 1);
+        assert_eq!(c.last_used_us, 17);
+        assert!(!c.is_idle());
+    }
+}

@@ -1,0 +1,105 @@
+//! Frequency-based replacement (paper §4.5): evict the least-frequently
+//! used idle container, irrespective of size or cost. Ties break on
+//! recency (older last-use evicted first), then id.
+
+use std::collections::BTreeSet;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::super::container::{Container, ContainerId};
+use super::ReplacementPolicy;
+
+type Key = (u64, u64); // (uses, last_used_us)
+
+#[derive(Debug, Default)]
+pub struct Freq {
+    order: BTreeSet<(Key, ContainerId)>,
+    key_of: FxHashMap<ContainerId, Key>,
+}
+
+impl Freq {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ReplacementPolicy for Freq {
+    fn on_idle(&mut self, c: &mut Container, _now_us: u64) {
+        let key = (c.uses, c.last_used_us);
+        let prev = self.key_of.insert(c.id, key);
+        debug_assert!(prev.is_none());
+        self.order.insert((key, c.id));
+    }
+
+    fn on_leave(&mut self, id: ContainerId) {
+        if let Some(key) = self.key_of.remove(&id) {
+            let removed = self.order.remove(&(key, id));
+            debug_assert!(removed);
+        }
+    }
+
+    fn pop_victim(&mut self) -> Option<ContainerId> {
+        let &(key, id) = self.order.iter().next()?;
+        self.order.remove(&(key, id));
+        self.key_of.remove(&id);
+        Some(id)
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "freq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::mk;
+    use super::*;
+
+    #[test]
+    fn evicts_least_frequent_first() {
+        let mut p = Freq::new();
+        let mut hot = mk(1, 0, 40, 1000);
+        hot.uses = 100;
+        let mut warm = mk(2, 1, 40, 1000);
+        warm.uses = 10;
+        let mut cold = mk(3, 2, 40, 1000);
+        cold.uses = 1;
+        p.on_idle(&mut hot, 0);
+        p.on_idle(&mut warm, 0);
+        p.on_idle(&mut cold, 0);
+        assert_eq!(p.pop_victim(), Some(ContainerId(3)));
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+        assert_eq!(p.pop_victim(), Some(ContainerId(1)));
+    }
+
+    #[test]
+    fn equal_frequency_ties_break_on_recency() {
+        let mut p = Freq::new();
+        let mut a = mk(1, 0, 40, 1000);
+        a.uses = 5;
+        a.last_used_us = 200; // newer
+        let mut b = mk(2, 1, 40, 1000);
+        b.uses = 5;
+        b.last_used_us = 100; // older -> evicted first
+        p.on_idle(&mut a, 200);
+        p.on_idle(&mut b, 200);
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+    }
+
+    #[test]
+    fn size_is_ignored() {
+        let mut p = Freq::new();
+        let mut big_hot = mk(1, 0, 400, 1000);
+        big_hot.uses = 9;
+        let mut small_cold = mk(2, 1, 30, 1000);
+        small_cold.uses = 2;
+        p.on_idle(&mut big_hot, 0);
+        p.on_idle(&mut small_cold, 0);
+        // Freq keeps the frequent container even though it is 13x bigger.
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+    }
+}

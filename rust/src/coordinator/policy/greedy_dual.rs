@@ -1,0 +1,154 @@
+//! Greedy-Dual replacement, FaaSCache's GDSF variant (Fuerst & Sharma,
+//! ASPLOS'21) — the paper's "GD" policy (§4.5).
+//!
+//! Each idle container gets a priority
+//!
+//! ```text
+//!   priority = clock + freq * cost / size
+//! ```
+//!
+//! where `freq` is the container's use count, `cost` the function's
+//! cold-start latency (what a miss would pay), and `size` its memory
+//! footprint. The victim is the minimum-priority container; on eviction
+//! the pool-global `clock` inflates to the victim's priority, aging out
+//! stale high-priority entries.
+
+use std::collections::BTreeSet;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::super::container::{Container, ContainerId};
+use super::ReplacementPolicy;
+
+/// Total order over f64 priorities: positive finite floats compare by bit
+/// pattern, which lets us keep a BTreeSet index without OrderedFloat.
+fn key_bits(p: f64) -> u64 {
+    debug_assert!(p.is_finite() && p >= 0.0, "GD priority must be >= 0, got {p}");
+    p.to_bits()
+}
+
+#[derive(Debug, Default)]
+pub struct GreedyDual {
+    clock: f64,
+    order: BTreeSet<(u64, ContainerId)>,
+    key_of: FxHashMap<ContainerId, u64>,
+}
+
+impl GreedyDual {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current clock (inflation) value — exposed for tests/metrics.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    fn priority(&self, c: &Container) -> f64 {
+        // cost in milliseconds keeps magnitudes comparable to FaaSCache's
+        // formulation; size in MB.
+        let cost_ms = c.cold_cost_us as f64 / 1e3;
+        self.clock + (c.uses as f64) * cost_ms / (c.mem_mb.max(1) as f64)
+    }
+}
+
+impl ReplacementPolicy for GreedyDual {
+    fn on_idle(&mut self, c: &mut Container, _now_us: u64) {
+        let p = self.priority(c);
+        c.gd_priority = p;
+        let bits = key_bits(p);
+        let prev = self.key_of.insert(c.id, bits);
+        debug_assert!(prev.is_none());
+        self.order.insert((bits, c.id));
+    }
+
+    fn on_leave(&mut self, id: ContainerId) {
+        if let Some(bits) = self.key_of.remove(&id) {
+            let removed = self.order.remove(&(bits, id));
+            debug_assert!(removed);
+        }
+    }
+
+    fn pop_victim(&mut self) -> Option<ContainerId> {
+        let &(bits, id) = self.order.iter().next()?;
+        self.order.remove(&(bits, id));
+        self.key_of.remove(&id);
+        // Clock inflation: future priorities start from the evicted one.
+        self.clock = f64::from_bits(bits);
+        Some(id)
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::mk;
+    use super::*;
+
+    #[test]
+    fn prefers_evicting_cheap_large_containers() {
+        let mut p = GreedyDual::new();
+        // a: small+expensive cold start -> high priority (keep)
+        let mut a = mk(1, 0, 40, 10_000_000);
+        // b: large+cheap cold start -> low priority (evict)
+        let mut b = mk(2, 1, 400, 1_000_000);
+        p.on_idle(&mut a, 0);
+        p.on_idle(&mut b, 0);
+        assert!(a.gd_priority > b.gd_priority);
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+    }
+
+    #[test]
+    fn frequency_raises_priority() {
+        let mut p = GreedyDual::new();
+        let mut hot = mk(1, 0, 40, 1_000_000);
+        hot.uses = 50;
+        let mut cold = mk(2, 1, 40, 1_000_000);
+        cold.uses = 1;
+        p.on_idle(&mut hot, 0);
+        p.on_idle(&mut cold, 0);
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+    }
+
+    #[test]
+    fn clock_inflates_on_eviction() {
+        let mut p = GreedyDual::new();
+        let mut a = mk(1, 0, 100, 2_000_000);
+        p.on_idle(&mut a, 0);
+        assert_eq!(p.clock(), 0.0);
+        p.pop_victim();
+        assert!(p.clock() > 0.0, "clock should inflate to victim priority");
+        // A new identical container now gets a higher priority than the
+        // first one had (aging).
+        let mut b = mk(2, 0, 100, 2_000_000);
+        p.on_idle(&mut b, 0);
+        assert!(b.gd_priority > a.gd_priority);
+    }
+
+    #[test]
+    fn leave_then_victim_skips_left_container() {
+        let mut p = GreedyDual::new();
+        let mut a = mk(1, 0, 400, 1_000_000); // lowest priority
+        let mut b = mk(2, 1, 40, 5_000_000);
+        p.on_idle(&mut a, 0);
+        p.on_idle(&mut b, 0);
+        p.on_leave(ContainerId(1));
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+        assert_eq!(p.pop_victim(), None);
+    }
+
+    #[test]
+    fn key_bits_monotonic_for_positive_floats() {
+        let xs = [0.0, 0.5, 1.0, 1.5, 10.0, 1e9];
+        for w in xs.windows(2) {
+            assert!(key_bits(w[0]) < key_bits(w[1]));
+        }
+    }
+}

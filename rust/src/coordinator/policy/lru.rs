@@ -1,0 +1,132 @@
+//! Least-Recently-Used replacement — the paper's default policy for both
+//! the baseline and the partitioned pools.
+
+use std::collections::BTreeSet;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::super::container::{Container, ContainerId};
+use super::ReplacementPolicy;
+
+/// LRU over idle containers: victim = smallest `last_used_us`.
+///
+/// Index: `BTreeSet<(last_used_us, id)>` + reverse map for O(log n)
+/// removal. Ties break on container id, which is allocation order —
+/// deterministic.
+#[derive(Debug, Default)]
+pub struct Lru {
+    order: BTreeSet<(u64, ContainerId)>,
+    key_of: FxHashMap<ContainerId, u64>,
+}
+
+impl Lru {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ReplacementPolicy for Lru {
+    fn on_idle(&mut self, c: &mut Container, _now_us: u64) {
+        // last_used_us was stamped by the pool when the container started
+        // its most recent invocation.
+        let prev = self.key_of.insert(c.id, c.last_used_us);
+        debug_assert!(prev.is_none(), "container {c:?} already idle");
+        self.order.insert((c.last_used_us, c.id));
+    }
+
+    fn on_leave(&mut self, id: ContainerId) {
+        if let Some(key) = self.key_of.remove(&id) {
+            let removed = self.order.remove(&(key, id));
+            debug_assert!(removed);
+        }
+    }
+
+    fn pop_victim(&mut self) -> Option<ContainerId> {
+        let &(key, id) = self.order.iter().next()?;
+        self.order.remove(&(key, id));
+        self.key_of.remove(&id);
+        Some(id)
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::mk;
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut p = Lru::new();
+        let mut a = mk(1, 0, 40, 1000);
+        let mut b = mk(2, 1, 40, 1000);
+        let mut c = mk(3, 2, 40, 1000);
+        a.last_used_us = 300;
+        b.last_used_us = 100;
+        c.last_used_us = 200;
+        p.on_idle(&mut a, 300);
+        p.on_idle(&mut b, 300);
+        p.on_idle(&mut c, 300);
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+        assert_eq!(p.pop_victim(), Some(ContainerId(3)));
+        assert_eq!(p.pop_victim(), Some(ContainerId(1)));
+        assert_eq!(p.pop_victim(), None);
+    }
+
+    #[test]
+    fn leave_removes_from_order() {
+        let mut p = Lru::new();
+        let mut a = mk(1, 0, 40, 1000);
+        let mut b = mk(2, 1, 40, 1000);
+        a.last_used_us = 1;
+        b.last_used_us = 2;
+        p.on_idle(&mut a, 2);
+        p.on_idle(&mut b, 2);
+        p.on_leave(ContainerId(1)); // reused -> not evictable
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+    }
+
+    #[test]
+    fn reinsertion_after_reuse_updates_recency() {
+        let mut p = Lru::new();
+        let mut a = mk(1, 0, 40, 1000);
+        let mut b = mk(2, 1, 40, 1000);
+        a.last_used_us = 10;
+        b.last_used_us = 20;
+        p.on_idle(&mut a, 20);
+        p.on_idle(&mut b, 20);
+        // a is reused at t=50, becomes idle again later
+        p.on_leave(ContainerId(1));
+        a.last_used_us = 50;
+        p.on_idle(&mut a, 60);
+        // now b is the LRU victim
+        assert_eq!(p.pop_victim(), Some(ContainerId(2)));
+    }
+
+    #[test]
+    fn tie_breaks_deterministically_by_id() {
+        let mut p = Lru::new();
+        let mut a = mk(7, 0, 40, 1000);
+        let mut b = mk(3, 1, 40, 1000);
+        a.last_used_us = 100;
+        b.last_used_us = 100;
+        p.on_idle(&mut a, 100);
+        p.on_idle(&mut b, 100);
+        assert_eq!(p.pop_victim(), Some(ContainerId(3)));
+    }
+
+    #[test]
+    fn leave_unknown_id_is_noop() {
+        let mut p = Lru::new();
+        p.on_leave(ContainerId(99));
+        assert_eq!(p.len(), 0);
+    }
+}

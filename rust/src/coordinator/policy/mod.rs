@@ -1,0 +1,123 @@
+//! Warm-pool replacement policies (paper §4.5): LRU, GreedyDual
+//! (FaaSCache's GDSF variant), and Frequency-based.
+//!
+//! A policy maintains an ordered index over the pool's *idle* containers
+//! and answers "who should be evicted next" in O(log n). The pool keeps
+//! the policy in sync: `on_idle` when a container becomes evictable,
+//! `on_leave` when it stops being evictable (reused or evicted), and
+//! `pop_victim` to select + remove the best candidate.
+//!
+//! Policies are deliberately oblivious to which pool they serve — the
+//! KiSS result (paper §6.4 "Policy Independence") is that the *partition*,
+//! not the policy, carries the benefit; the experiment suite swaps these
+//! implementations freely to reproduce Figures 14–16.
+
+mod freq;
+mod greedy_dual;
+mod lru;
+
+pub use freq::Freq;
+pub use greedy_dual::GreedyDual;
+pub use lru::Lru;
+
+use super::container::{Container, ContainerId};
+
+/// Replacement policy over idle containers. See module docs for the
+/// synchronization contract.
+pub trait ReplacementPolicy: Send {
+    /// `c` became idle (warm, evictable). The policy may mutate
+    /// policy-owned fields on the container (e.g. its GD priority).
+    fn on_idle(&mut self, c: &mut Container, now_us: u64);
+
+    /// `c` left the idle set without being evicted (it was reused).
+    fn on_leave(&mut self, id: ContainerId);
+
+    /// Select and remove the best eviction victim, if any.
+    fn pop_victim(&mut self) -> Option<ContainerId>;
+
+    /// Number of idle containers currently indexed (for invariants).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Policy selector used by configs / CLI flags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    GreedyDual,
+    Freq,
+}
+
+impl PolicyKind {
+    pub fn build(self) -> Box<dyn ReplacementPolicy> {
+        match self {
+            PolicyKind::Lru => Box::new(Lru::new()),
+            PolicyKind::GreedyDual => Box::new(GreedyDual::new()),
+            PolicyKind::Freq => Box::new(Freq::new()),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "lru",
+            PolicyKind::GreedyDual => "gd",
+            PolicyKind::Freq => "freq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(PolicyKind::Lru),
+            "gd" | "greedydual" | "greedy-dual" => Some(PolicyKind::GreedyDual),
+            "freq" | "frequency" => Some(PolicyKind::Freq),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::Lru, PolicyKind::GreedyDual, PolicyKind::Freq];
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::trace::FunctionId;
+
+    pub fn mk(id: u64, func: u32, mem: u32, cold_us: u64) -> Container {
+        let mut c = Container::new(
+            ContainerId(id),
+            FunctionId(func),
+            mem,
+            cold_us,
+            0,
+        );
+        c.state = super::super::container::ContainerState::Idle;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_and_label_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("GreedyDual"), Some(PolicyKind::GreedyDual));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_produces_named_policies() {
+        assert_eq!(PolicyKind::Lru.build().name(), "lru");
+        assert_eq!(PolicyKind::GreedyDual.build().name(), "gd");
+        assert_eq!(PolicyKind::Freq.build().name(), "freq");
+    }
+}

@@ -1,0 +1,423 @@
+//! A memory-bounded warm container pool with a pluggable replacement
+//! policy — the unit KiSS partitions and the baseline uses monolithically.
+//!
+//! Semantics (modified-FaaSCache, paper §4.1/§5.2):
+//!
+//! * **Hit** — an idle container of the function exists: reuse the most
+//!   recently used one (best temporal locality).
+//! * **Cold start (miss)** — no idle container: admit a new one, evicting
+//!   idle containers per policy while capacity is exceeded.
+//! * **Drop** — the invocation cannot be placed even after evicting every
+//!   idle container (the rest of the pool is busy): punt to the cloud.
+//!   Feasibility is checked *before* evicting, so an eventual drop never
+//!   pointlessly destroys warm state.
+//! * Busy containers hold memory and are never evictable.
+//! * Idle (warm) containers hold memory until evicted — keep-alive is
+//!   memory-pressure-driven as in FaaSCache; an optional TTL reaper
+//!   ([`WarmPool::expire_idle_before`]) is provided as an extension.
+
+use std::collections::BTreeSet;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::container::{Container, ContainerId, ContainerState};
+use super::policy::ReplacementPolicy;
+use crate::trace::{FunctionId, FunctionProfile};
+
+/// Result of [`WarmPool::try_acquire`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acquire {
+    Hit(ContainerId),
+    Cold(ContainerId),
+    Drop,
+}
+
+pub struct WarmPool {
+    capacity_mb: u64,
+    used_mb: u64,
+    idle_mb: u64,
+    policy: Box<dyn ReplacementPolicy>,
+    containers: FxHashMap<ContainerId, Container>,
+    /// Idle containers per function, ordered by (last_used_us, id) so a
+    /// hit takes the most recently used instance in O(log n).
+    idle_by_func: FxHashMap<FunctionId, BTreeSet<(u64, ContainerId)>>,
+    next_id: u64,
+    /// Lifetime eviction count (reported by benches/metrics).
+    pub evictions: u64,
+}
+
+impl WarmPool {
+    pub fn new(capacity_mb: u64, policy: Box<dyn ReplacementPolicy>) -> Self {
+        Self {
+            capacity_mb,
+            used_mb: 0,
+            idle_mb: 0,
+            policy,
+            containers: FxHashMap::default(),
+            idle_by_func: FxHashMap::default(),
+            next_id: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity_mb(&self) -> u64 {
+        self.capacity_mb
+    }
+
+    pub fn used_mb(&self) -> u64 {
+        self.used_mb
+    }
+
+    pub fn idle_mb(&self) -> u64 {
+        self.idle_mb
+    }
+
+    pub fn free_mb(&self) -> u64 {
+        // Saturating: a live resize (set_capacity_mb) may leave the pool
+        // transiently over-committed by busy containers.
+        self.capacity_mb.saturating_sub(self.used_mb)
+    }
+
+    /// Live-resize the pool (adaptive partitioning). Shrinking evicts idle
+    /// containers per policy until the pool fits; busy containers cannot
+    /// be reclaimed, so the pool may stay over-committed until they
+    /// finish (drained on release / next acquire). Returns evictions.
+    pub fn set_capacity_mb(&mut self, new_capacity_mb: u64) -> usize {
+        self.capacity_mb = new_capacity_mb;
+        self.shrink_to_fit()
+    }
+
+    /// Evict idle containers (policy order) while over capacity.
+    fn shrink_to_fit(&mut self) -> usize {
+        let mut evicted = 0;
+        while self.used_mb > self.capacity_mb {
+            let Some(victim) = self.policy.pop_victim() else { break };
+            self.remove_idle(victim);
+            self.evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    pub fn container_count(&self) -> usize {
+        self.containers.len()
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.policy.len()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn container(&self, id: ContainerId) -> Option<&Container> {
+        self.containers.get(&id)
+    }
+
+    /// Dispatch one invocation of `profile` arriving at `now_us`.
+    pub fn try_acquire(&mut self, profile: &FunctionProfile, now_us: u64) -> Acquire {
+        // 1. Warm hit: take the most recently used idle instance.
+        if let Some(set) = self.idle_by_func.get_mut(&profile.id) {
+            if let Some(&(key, id)) = set.iter().next_back() {
+                set.remove(&(key, id));
+                if set.is_empty() {
+                    self.idle_by_func.remove(&profile.id);
+                }
+                self.policy.on_leave(id);
+                let c = self.containers.get_mut(&id).expect("idle index desync");
+                debug_assert_eq!(c.state, ContainerState::Idle);
+                c.state = ContainerState::Busy;
+                c.last_used_us = now_us;
+                c.uses += 1;
+                self.idle_mb -= c.mem_mb as u64;
+                return Acquire::Hit(id);
+            }
+        }
+
+        // 2. Cold path: is admission feasible at all? Busy memory is not
+        //    reclaimable; the headroom is capacity minus busy memory
+        //    (robust to transient over-commit after a live shrink).
+        let needed = profile.mem_mb as u64;
+        let busy_mb = self.used_mb - self.idle_mb;
+        let headroom = self.capacity_mb.saturating_sub(busy_mb);
+        if needed > headroom {
+            return Acquire::Drop;
+        }
+
+        // 3. Evict per policy until the new container fits.
+        while self.free_mb() < needed {
+            let victim = self
+                .policy
+                .pop_victim()
+                .expect("feasibility check guaranteed a victim");
+            self.remove_idle(victim);
+            self.evictions += 1;
+        }
+
+        // 4. Admit, born busy.
+        let id = ContainerId(self.next_id);
+        self.next_id += 1;
+        let c = Container::new(id, profile.id, profile.mem_mb, profile.cold_start_us, now_us);
+        self.used_mb += needed;
+        self.containers.insert(id, c);
+        Acquire::Cold(id)
+    }
+
+    /// An invocation finished; its container becomes idle (warm).
+    pub fn release(&mut self, id: ContainerId, now_us: u64) {
+        let c = self.containers.get_mut(&id).expect("release of unknown container");
+        assert_eq!(c.state, ContainerState::Busy, "double release of {id:?}");
+        c.state = ContainerState::Idle;
+        self.idle_mb += c.mem_mb as u64;
+        self.idle_by_func
+            .entry(c.func)
+            .or_default()
+            .insert((c.last_used_us, id));
+        self.policy.on_idle(c, now_us);
+        // A live shrink may have left the pool over-committed on busy
+        // containers; reclaim as they come back.
+        if self.used_mb > self.capacity_mb {
+            self.shrink_to_fit();
+        }
+    }
+
+    /// Remove an idle container entirely (policy victim or TTL expiry).
+    /// The policy's index entry must already be gone.
+    fn remove_idle(&mut self, id: ContainerId) {
+        let c = self.containers.remove(&id).expect("evicting unknown container");
+        debug_assert_eq!(c.state, ContainerState::Idle, "evicted a busy container");
+        self.used_mb -= c.mem_mb as u64;
+        self.idle_mb -= c.mem_mb as u64;
+        if let Some(set) = self.idle_by_func.get_mut(&c.func) {
+            set.remove(&(c.last_used_us, id));
+            if set.is_empty() {
+                self.idle_by_func.remove(&c.func);
+            }
+        }
+    }
+
+    /// Extension: reap idle containers whose last use is older than
+    /// `cutoff_us` (fixed keep-alive TTL, as in OpenWhisk). Returns the
+    /// number reaped.
+    pub fn expire_idle_before(&mut self, cutoff_us: u64) -> usize {
+        let stale: Vec<ContainerId> = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle() && c.last_used_us < cutoff_us)
+            .map(|c| c.id)
+            .collect();
+        for id in &stale {
+            self.policy.on_leave(*id);
+            self.remove_idle(*id);
+        }
+        stale.len()
+    }
+
+    /// Structural invariants, used by the property suite:
+    /// * used = Σ container mem; idle = Σ idle container mem
+    /// * used ≤ capacity
+    /// * policy index size == idle container count == per-func index size
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let used: u64 = self.containers.values().map(|c| c.mem_mb as u64).sum();
+        if used != self.used_mb {
+            return Err(format!("used_mb {} != Σmem {used}", self.used_mb));
+        }
+        let idle: u64 = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle())
+            .map(|c| c.mem_mb as u64)
+            .sum();
+        if idle != self.idle_mb {
+            return Err(format!("idle_mb {} != Σidle {idle}", self.idle_mb));
+        }
+        // Over-capacity is only legal transiently after a live shrink, and
+        // then only by busy (unreclaimable) memory.
+        if self.used_mb > self.capacity_mb && self.idle_mb > 0 {
+            return Err(format!(
+                "over capacity with idle memory: used {} cap {} idle {}",
+                self.used_mb, self.capacity_mb, self.idle_mb
+            ));
+        }
+        let idle_count = self.containers.values().filter(|c| c.is_idle()).count();
+        if idle_count != self.policy.len() {
+            return Err(format!(
+                "policy index {} != idle containers {idle_count}",
+                self.policy.len()
+            ));
+        }
+        let func_index: usize = self.idle_by_func.values().map(|s| s.len()).sum();
+        if func_index != idle_count {
+            return Err(format!(
+                "per-func index {func_index} != idle containers {idle_count}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy::PolicyKind;
+    use super::*;
+    use crate::trace::SizeClass;
+
+    fn profile(id: u32, mem_mb: u32) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(id),
+            app_id: id,
+            mem_mb,
+            app_mem_mb: mem_mb,
+            cold_start_us: 1_000_000,
+            warm_start_us: 1_000,
+            exec_us_mean: 10_000,
+            class: if mem_mb >= 200 { SizeClass::Large } else { SizeClass::Small },
+        }
+    }
+
+    fn pool(cap: u64) -> WarmPool {
+        WarmPool::new(cap, PolicyKind::Lru.build())
+    }
+
+    #[test]
+    fn cold_then_hit_lifecycle() {
+        let mut p = pool(100);
+        let f = profile(0, 40);
+        let Acquire::Cold(id) = p.try_acquire(&f, 0) else { panic!() };
+        assert_eq!(p.used_mb(), 40);
+        assert_eq!(p.idle_count(), 0);
+        p.release(id, 10);
+        assert_eq!(p.idle_count(), 1);
+        let Acquire::Hit(id2) = p.try_acquire(&f, 20) else { panic!() };
+        assert_eq!(id, id2);
+        assert_eq!(p.container(id).unwrap().uses, 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_frees_memory_for_new_function() {
+        let mut p = pool(100);
+        let a = profile(0, 60);
+        let b = profile(1, 60);
+        let Acquire::Cold(ca) = p.try_acquire(&a, 0) else { panic!() };
+        p.release(ca, 5);
+        // b needs 60, free is 40 -> must evict a's idle container.
+        let Acquire::Cold(_) = p.try_acquire(&b, 10) else { panic!() };
+        assert_eq!(p.evictions, 1);
+        assert_eq!(p.used_mb(), 60);
+        assert_eq!(p.container_count(), 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drop_when_pool_all_busy() {
+        let mut p = pool(100);
+        let a = profile(0, 60);
+        let b = profile(1, 60);
+        let Acquire::Cold(_) = p.try_acquire(&a, 0) else { panic!() };
+        // a is still busy: 60 used, 40 free, 0 idle -> b (60) cannot fit.
+        assert_eq!(p.try_acquire(&b, 1), Acquire::Drop);
+        // Drops must not have evicted or admitted anything.
+        assert_eq!(p.used_mb(), 60);
+        assert_eq!(p.evictions, 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_function_always_drops() {
+        let mut p = pool(100);
+        let f = profile(0, 200);
+        assert_eq!(p.try_acquire(&f, 0), Acquire::Drop);
+    }
+
+    #[test]
+    fn feasibility_check_avoids_wasted_evictions() {
+        let mut p = pool(100);
+        let a = profile(0, 30);
+        let busy = profile(1, 60);
+        let Acquire::Cold(ca) = p.try_acquire(&a, 0) else { panic!() };
+        p.release(ca, 1);
+        let Acquire::Cold(_) = p.try_acquire(&busy, 2) else { panic!() };
+        // 90 used (30 idle + 60 busy), 10 free. A 50 MB function needs
+        // 50 > free(10) + idle(30) = 40 -> Drop, and the idle container
+        // of `a` must survive.
+        let c = profile(2, 50);
+        assert_eq!(p.try_acquire(&c, 3), Acquire::Drop);
+        assert_eq!(p.idle_count(), 1);
+        assert_eq!(p.evictions, 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hit_takes_most_recently_used_instance() {
+        let mut p = pool(200);
+        let f = profile(0, 40);
+        let Acquire::Cold(c1) = p.try_acquire(&f, 0) else { panic!() };
+        let Acquire::Cold(c2) = p.try_acquire(&f, 1) else { panic!() };
+        p.release(c1, 10);
+        p.release(c2, 20);
+        // c2 started later (t=1) -> its last_used is larger -> preferred.
+        let Acquire::Hit(h) = p.try_acquire(&f, 30) else { panic!() };
+        assert_eq!(h, c2);
+    }
+
+    #[test]
+    fn multiple_evictions_until_fit() {
+        let mut p = pool(100);
+        for i in 0..3 {
+            let f = profile(i, 30);
+            let Acquire::Cold(c) = p.try_acquire(&f, i as u64) else { panic!() };
+            p.release(c, i as u64 + 1);
+        }
+        // 90 idle; a 100MB function needs all three evicted.
+        let big = profile(9, 100);
+        let Acquire::Cold(_) = p.try_acquire(&big, 10) else { panic!() };
+        assert_eq!(p.evictions, 3);
+        assert_eq!(p.container_count(), 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut p = pool(100);
+        let f = profile(0, 40);
+        let Acquire::Cold(c) = p.try_acquire(&f, 0) else { panic!() };
+        p.release(c, 1);
+        p.release(c, 2);
+    }
+
+    #[test]
+    fn ttl_reaper_removes_stale_idle() {
+        let mut p = pool(200);
+        let f = profile(0, 40);
+        let g = profile(1, 40);
+        let Acquire::Cold(cf) = p.try_acquire(&f, 0) else { panic!() };
+        let Acquire::Cold(cg) = p.try_acquire(&g, 1_000) else { panic!() };
+        p.release(cf, 10);
+        p.release(cg, 1_010);
+        // Reap containers last used before t=500: only f's.
+        assert_eq!(p.expire_idle_before(500), 1);
+        assert_eq!(p.container_count(), 1);
+        assert!(p.container(cg).is_some());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn works_with_all_policies() {
+        for kind in PolicyKind::ALL {
+            let mut p = WarmPool::new(120, kind.build());
+            let a = profile(0, 40);
+            let b = profile(1, 40);
+            let c = profile(2, 60);
+            let Acquire::Cold(ca) = p.try_acquire(&a, 0) else { panic!() };
+            let Acquire::Cold(cb) = p.try_acquire(&b, 1) else { panic!() };
+            p.release(ca, 10);
+            p.release(cb, 20);
+            let Acquire::Cold(_) = p.try_acquire(&c, 30) else { panic!() };
+            assert!(p.evictions >= 1, "{}", kind.label());
+            p.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Shared experiment infrastructure: the memory grid, sweep tables, and
+//! the single-run harness.
+
+use crate::config::{Mode, SimConfig};
+use crate::coordinator::policy::PolicyKind;
+use crate::metrics::Report;
+use crate::sim::InitOccupancy;
+use crate::trace::synth::{synthesize, SynthConfig};
+use crate::trace::Trace;
+
+/// The paper's edge memory grid (GB): results focus on 1–24 GB (§4.1).
+pub const MEM_GRID_GB: [u64; 11] = [1, 2, 3, 4, 6, 8, 10, 12, 16, 20, 24];
+
+/// The partition splits evaluated in Fig. 7 (small-pool share).
+pub const SPLITS: [f64; 5] = [0.9, 0.8, 0.7, 0.6, 0.5];
+
+/// Default workload for the §6 experiments. Distinct from
+/// `SynthConfig::default()` so experiment calibration doesn't disturb
+/// unit tests; calibrated so memory pressure falls in the paper's
+/// interesting 2–16 GB band (see DESIGN.md §2 and EXPERIMENTS.md).
+pub fn paper_workload() -> SynthConfig {
+    SynthConfig {
+        seed: 2025,
+        n_small: 200,
+        n_large: 16,
+        duration_us: 2 * 3_600_000_000, // 2 h
+        rate_per_sec: 40.0,
+        small_large_ratio: 5.25,
+        zipf_s: 1.4,
+        diurnal_amplitude: 0.3,
+        // large payloads ~0.35 s median service time (edge video-analytics
+        // inference); keeps the large-class busy demand inside a 20% pool
+        large_exec_lognorm: (-1.05, 0.6),
+        // Edge-realistic initialization times (the cloud-calibrated Fig-5
+        // distribution stays in SynthConfig::default() for the analysis
+        // figures): small ≈1 s median capped at 5 s, large ≈2 s capped at
+        // 8 s. With HoldsMemory occupancy these produce the paper's drop
+        // dynamics in the 2–8 GB band. Per-function IATs are then similar
+        // across classes, matching Fig 4.
+        small_cold_lognorm: (0.0, 0.6),
+        large_cold_lognorm: (0.7, 0.5),
+        small_cold_cap_s: 5.0,
+        large_cold_cap_s: 8.0,
+        ..SynthConfig::default()
+    }
+}
+
+/// One labeled series over the memory grid.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub values: Vec<f64>,
+}
+
+/// A figure: x axis + labeled series, printable as an aligned table (the
+/// textual equivalent of the paper's plot).
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub xs: Vec<f64>,
+    pub series: Vec<Series>,
+}
+
+impl Sweep {
+    pub fn series_named(&self, label: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.label == label)
+    }
+
+    pub fn value_at(&self, label: &str, x: f64) -> Option<f64> {
+        let idx = self.xs.iter().position(|&v| (v - x).abs() < 1e-9)?;
+        self.series_named(label)?.values.get(idx).copied()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let _ = writeln!(out, "   ({} vs {})", self.y_label, self.x_label);
+        let _ = write!(out, "{:>10}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, "{:>14}", s.label);
+        }
+        let _ = writeln!(out);
+        for (i, x) in self.xs.iter().enumerate() {
+            let _ = write!(out, "{x:>10.0}");
+            for s in &self.series {
+                match s.values.get(i) {
+                    Some(v) if v.is_finite() => {
+                        let _ = write!(out, "{v:>14.2}");
+                    }
+                    _ => {
+                        let _ = write!(out, "{:>14}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// Run one config against a pre-synthesized trace.
+///
+/// The init-occupancy model defaults to [`InitOccupancy::HoldsMemory`]
+/// (a cold-starting container reserves its memory for the whole init —
+/// what produces the paper's drop dynamics at low memory); set
+/// `KISS_INIT_LATENCY_ONLY=1` to A/B the latency-only model (ablation).
+pub fn run_on(trace: &Trace, cfg: &SimConfig) -> Report {
+    let mut balancer = cfg.build_balancer();
+    let occ = if std::env::var_os("KISS_INIT_LATENCY_ONLY").is_some() {
+        InitOccupancy::LatencyOnly
+    } else {
+        InitOccupancy::HoldsMemory
+    };
+    crate::sim::run_trace_with(trace, &mut balancer, occ)
+}
+
+/// Run one config, synthesizing its trace (the library-level entry used
+/// by the quickstart example and doc tests).
+pub fn run_single(cfg: &SimConfig) -> Report {
+    let trace = synthesize(&cfg.synth);
+    run_on(&trace, cfg)
+}
+
+/// Config for a KiSS run at `mem_gb` with the given split (both pools
+/// LRU, the paper's default).
+pub fn kiss_cfg(synth: &SynthConfig, mem_gb: u64, small_frac: f64) -> SimConfig {
+    SimConfig {
+        node_mem_mb: mem_gb * 1024,
+        mode: Mode::Kiss {
+            small_frac,
+            threshold_mb: crate::config::DEFAULT_THRESHOLD_MB,
+        },
+        small_policy: PolicyKind::Lru,
+        large_policy: PolicyKind::Lru,
+        synth: synth.clone(),
+    }
+}
+
+/// Config for a baseline run at `mem_gb` (unified LRU pool).
+pub fn baseline_cfg(synth: &SynthConfig, mem_gb: u64) -> SimConfig {
+    SimConfig {
+        node_mem_mb: mem_gb * 1024,
+        mode: Mode::Baseline,
+        small_policy: PolicyKind::Lru,
+        large_policy: PolicyKind::Lru,
+        synth: synth.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_lookup_and_render() {
+        let s = Sweep {
+            title: "t".into(),
+            x_label: "GB".into(),
+            y_label: "%".into(),
+            xs: vec![1.0, 2.0],
+            series: vec![
+                Series { label: "a".into(), values: vec![10.0, 5.0] },
+                Series { label: "b".into(), values: vec![20.0, f64::NAN] },
+            ],
+        };
+        assert_eq!(s.value_at("a", 2.0), Some(5.0));
+        assert_eq!(s.value_at("c", 2.0), None);
+        let r = s.render();
+        assert!(r.contains("10.00"), "{r}");
+        assert!(r.contains('-'), "NaN renders as dash: {r}");
+    }
+
+    #[test]
+    fn run_single_smoke() {
+        let mut cfg = SimConfig::edge_default(4 * 1024);
+        cfg.synth.duration_us = 120_000_000; // 2 min
+        cfg.synth.rate_per_sec = 30.0;
+        cfg.synth.n_small = 30;
+        cfg.synth.n_large = 8;
+        let r = run_single(&cfg);
+        assert!(r.overall.total_accesses() > 100);
+        assert!(r.is_consistent());
+    }
+}

@@ -1,0 +1,120 @@
+//! Figures 10–13 (fairness analysis, §4.4/§6.3): cold-start % and drop %
+//! broken out per size class, KiSS 80-20 vs baseline.
+
+use super::common::{baseline_cfg, kiss_cfg, paper_workload, run_on, Series, Sweep, MEM_GRID_GB};
+use crate::trace::synth::{synthesize, SynthConfig};
+use crate::trace::SizeClass;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Metric {
+    ColdStartPct,
+    DropPct,
+}
+
+/// Generic fairness sweep: `metric` for `class`, KiSS 80-20 vs baseline.
+pub fn fairness_sweep(synth: &SynthConfig, class: SizeClass, metric: Metric) -> Sweep {
+    let trace = synthesize(synth);
+    let eval = |report: &crate::metrics::Report| -> f64 {
+        let c = report.class(class);
+        match metric {
+            Metric::ColdStartPct => c.cold_start_pct(),
+            Metric::DropPct => c.drop_pct(),
+        }
+    };
+    let kiss = MEM_GRID_GB
+        .iter()
+        .map(|&gb| eval(&run_on(&trace, &kiss_cfg(synth, gb, 0.8))))
+        .collect();
+    let base = MEM_GRID_GB
+        .iter()
+        .map(|&gb| eval(&run_on(&trace, &baseline_cfg(synth, gb))))
+        .collect();
+    let (mname, fig) = match (class, metric) {
+        (SizeClass::Small, Metric::ColdStartPct) => ("cold-start %", "Fig 10: small containers"),
+        (SizeClass::Large, Metric::ColdStartPct) => ("cold-start %", "Fig 11: large containers"),
+        (SizeClass::Small, Metric::DropPct) => ("drop %", "Fig 12: small containers"),
+        (SizeClass::Large, Metric::DropPct) => ("drop %", "Fig 13: large containers"),
+    };
+    Sweep {
+        title: format!("{fig} ({mname}, KiSS 80-20 vs baseline)"),
+        x_label: "mem_GB".into(),
+        y_label: mname.into(),
+        xs: MEM_GRID_GB.iter().map(|&g| g as f64).collect(),
+        series: vec![
+            Series { label: "kiss-80-20".into(), values: kiss },
+            Series { label: "baseline".into(), values: base },
+        ],
+    }
+}
+
+pub fn fig10(synth: &SynthConfig) -> Sweep {
+    fairness_sweep(synth, SizeClass::Small, Metric::ColdStartPct)
+}
+pub fn fig11(synth: &SynthConfig) -> Sweep {
+    fairness_sweep(synth, SizeClass::Large, Metric::ColdStartPct)
+}
+pub fn fig12(synth: &SynthConfig) -> Sweep {
+    fairness_sweep(synth, SizeClass::Small, Metric::DropPct)
+}
+pub fn fig13(synth: &SynthConfig) -> Sweep {
+    fairness_sweep(synth, SizeClass::Large, Metric::DropPct)
+}
+
+pub fn fig10_default() -> Sweep {
+    fig10(&paper_workload())
+}
+pub fn fig11_default() -> Sweep {
+    fig11(&paper_workload())
+}
+pub fn fig12_default() -> Sweep {
+    fig12(&paper_workload())
+}
+pub fn fig13_default() -> Sweep {
+    fig13(&paper_workload())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_workload() -> SynthConfig {
+        SynthConfig {
+            seed: 7,
+            n_small: 60,
+            n_large: 8,
+            duration_us: 900_000_000,
+            rate_per_sec: 25.0,
+            ..super::super::common::paper_workload()
+        }
+    }
+
+    #[test]
+    fn fairness_improves_both_classes_somewhere_in_edge_band() {
+        // The fairness claim: KiSS helps BOTH classes (not small at the
+        // expense of large) in at least part of the edge band.
+        let w = fast_workload();
+        let small = fig10(&w);
+        let large = fig11(&w);
+        let band = [1.0, 2.0, 3.0, 4.0];
+        let small_better = band.iter().any(|&gb| {
+            small.value_at("kiss-80-20", gb).unwrap()
+                < small.value_at("baseline", gb).unwrap()
+        });
+        let large_not_ruined = band.iter().any(|&gb| {
+            large.value_at("kiss-80-20", gb).unwrap()
+                <= large.value_at("baseline", gb).unwrap() + 5.0
+        });
+        assert!(small_better, "\n{}", small.render());
+        assert!(large_not_ruined, "\n{}", large.render());
+    }
+
+    #[test]
+    fn per_class_sweeps_have_both_series() {
+        let w = fast_workload();
+        for s in [fig12(&w), fig13(&w)] {
+            assert!(s.series_named("kiss-80-20").is_some());
+            assert!(s.series_named("baseline").is_some());
+            assert_eq!(s.xs.len(), MEM_GRID_GB.len());
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Every table and figure of the paper's evaluation as a runnable
+//! experiment (see DESIGN.md §4 for the full index):
+//!
+//! | id        | paper artifact                              | module |
+//! |-----------|---------------------------------------------|--------|
+//! | fig2–fig5 | workload analysis (§2.5)                    | [`workload`] |
+//! | fig7–fig9 | cold-start % / drop % sweeps (§6.1–6.2)     | [`sweeps`] |
+//! | fig10–13  | fairness per class (§6.3)                   | [`fairness`] |
+//! | fig14–16  | policy independence (§6.4)                  | [`policy_independence`] |
+//! | stress    | 2 h, 4–5 M invocation stress test (§6.5)    | [`stress`] |
+//!
+//! `run_by_name` is the CLI entry: it renders the experiment's table(s)
+//! as text, which EXPERIMENTS.md records against the paper's numbers.
+
+pub mod common;
+pub mod fairness;
+pub mod policy_independence;
+pub mod stress;
+pub mod sweeps;
+pub mod workload;
+
+pub use common::{paper_workload, run_on, run_single, Series, Sweep, MEM_GRID_GB, SPLITS};
+
+/// All experiment names accepted by [`run_by_name`].
+pub const ALL_EXPERIMENTS: [&str; 14] = [
+    "fig2", "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "fig14", "fig15", "fig16",
+];
+
+/// Run one experiment by its paper-figure name and render its output.
+/// `stress` takes a scale factor (1.0 = the paper's full 4–5 M volume).
+pub fn run_by_name(name: &str, stress_scale: f64) -> Option<String> {
+    Some(match name {
+        "fig2" => workload::fig2_default(),
+        "fig3" => workload::fig3_default(),
+        "fig4" => workload::fig4_default(),
+        "fig5" => workload::fig5_default(),
+        "fig7" => sweeps::fig7_default().render(),
+        "fig8" => sweeps::fig8_default().render(),
+        "fig9" => sweeps::fig9_default().render(),
+        "fig10" => fairness::fig10_default().render(),
+        "fig11" => fairness::fig11_default().render(),
+        "fig12" => fairness::fig12_default().render(),
+        "fig13" => fairness::fig13_default().render(),
+        "fig14" => policy_independence::fig14_default().render(),
+        "fig15" => policy_independence::fig15_default().render(),
+        "fig16" => policy_independence::fig16_default().render(),
+        "stress" => {
+            let (k, b) = stress::stress(10, stress_scale, 2025);
+            stress::render(&k, &b)
+        }
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_is_none() {
+        assert!(run_by_name("fig99", 1.0).is_none());
+    }
+
+    #[test]
+    fn registry_names_match_figures() {
+        assert!(ALL_EXPERIMENTS.contains(&"fig7"));
+        assert!(ALL_EXPERIMENTS.contains(&"fig16"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Figures 14–16 (§6.4 "Policy Independence"): KiSS 80-20 cold-start %
+//! under LRU / GreedyDual / Freq replacement, for small containers,
+//! overall, and large containers. The paper's finding: the curves
+//! overlap — the partition, not the policy, carries the benefit.
+
+use super::common::{paper_workload, run_on, Series, Sweep, MEM_GRID_GB};
+use crate::config::{Mode, SimConfig};
+use crate::coordinator::policy::PolicyKind;
+use crate::trace::synth::{synthesize, SynthConfig};
+use crate::trace::SizeClass;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Slice {
+    Small,
+    Overall,
+    Large,
+}
+
+/// Cold-start % sweep for KiSS 80-20 with each replacement policy applied
+/// to BOTH pools (as in the paper's §4.5 evaluation).
+pub fn policy_sweep(synth: &SynthConfig, slice: Slice) -> Sweep {
+    let trace = synthesize(synth);
+    let mut series = Vec::new();
+    for kind in PolicyKind::ALL {
+        let values = MEM_GRID_GB
+            .iter()
+            .map(|&gb| {
+                let cfg = SimConfig {
+                    node_mem_mb: gb * 1024,
+                    mode: Mode::Kiss {
+                        small_frac: 0.8,
+                        threshold_mb: crate::config::DEFAULT_THRESHOLD_MB,
+                    },
+                    small_policy: kind,
+                    large_policy: kind,
+                    synth: synth.clone(),
+                };
+                let r = run_on(&trace, &cfg);
+                match slice {
+                    Slice::Small => r.class(SizeClass::Small).cold_start_pct(),
+                    Slice::Overall => r.overall.cold_start_pct(),
+                    Slice::Large => r.class(SizeClass::Large).cold_start_pct(),
+                }
+            })
+            .collect();
+        series.push(Series { label: kind.label().to_uppercase(), values });
+    }
+    let (fig, what) = match slice {
+        Slice::Small => ("Fig 14", "small containers"),
+        Slice::Overall => ("Fig 15", "overall"),
+        Slice::Large => ("Fig 16", "large containers"),
+    };
+    Sweep {
+        title: format!("{fig}: cold-start % {what} across LRU/GD/FREQ (KiSS 80-20)"),
+        x_label: "mem_GB".into(),
+        y_label: "cold-start %".into(),
+        xs: MEM_GRID_GB.iter().map(|&g| g as f64).collect(),
+        series,
+    }
+}
+
+pub fn fig14(synth: &SynthConfig) -> Sweep {
+    policy_sweep(synth, Slice::Small)
+}
+pub fn fig15(synth: &SynthConfig) -> Sweep {
+    policy_sweep(synth, Slice::Overall)
+}
+pub fn fig16(synth: &SynthConfig) -> Sweep {
+    policy_sweep(synth, Slice::Large)
+}
+
+pub fn fig14_default() -> Sweep {
+    fig14(&paper_workload())
+}
+pub fn fig15_default() -> Sweep {
+    fig15(&paper_workload())
+}
+pub fn fig16_default() -> Sweep {
+    fig16(&paper_workload())
+}
+
+/// Quantify "independence": max over the grid of the spread (max-min)
+/// between policies, in percentage points. The paper reports the curves
+/// as overlapping; we assert the spread stays small relative to the
+/// KiSS-vs-baseline gap.
+pub fn policy_spread(sweep: &Sweep) -> f64 {
+    let mut worst: f64 = 0.0;
+    for i in 0..sweep.xs.len() {
+        let vals: Vec<f64> = sweep.series.iter().filter_map(|s| s.values.get(i)).copied().collect();
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        worst = worst.max(max - min);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_workload() -> SynthConfig {
+        SynthConfig {
+            seed: 7,
+            n_small: 60,
+            n_large: 8,
+            duration_us: 900_000_000,
+            rate_per_sec: 25.0,
+            ..super::super::common::paper_workload()
+        }
+    }
+
+    #[test]
+    fn three_policies_per_figure() {
+        let s = fig15(&fast_workload());
+        for label in ["LRU", "GD", "FREQ"] {
+            assert!(s.series_named(label).is_some(), "{label}");
+        }
+    }
+
+    #[test]
+    fn policies_roughly_overlap() {
+        // §6.4: differences between policies are marginal. Allow a
+        // generous bound (the paper's plots show a few points of spread
+        // in the 4–6 GB range).
+        let s = fig15(&fast_workload());
+        let spread = policy_spread(&s);
+        assert!(spread < 15.0, "policy spread {spread} too large\n{}", s.render());
+    }
+
+    #[test]
+    fn curves_decay_with_memory() {
+        let s = fig14(&fast_workload());
+        for series in &s.series {
+            let first = series.values.first().unwrap();
+            let last = series.values.last().unwrap();
+            assert!(last <= first, "{}: {first} -> {last}", series.label);
+        }
+    }
+}

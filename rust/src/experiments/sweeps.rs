@@ -1,0 +1,157 @@
+//! Figures 7–9: cold-start % and drop % across memory configurations.
+//!
+//! * Fig. 7 — cold-start % for splits {90-10, 80-20, 70-30, 60-40, 50-50}
+//!   vs the unified baseline, over the memory grid.
+//! * Fig. 8 — the 80-20 split vs baseline (the headline comparison).
+//! * Fig. 9 — drop % for KiSS 80-20 vs baseline.
+
+use super::common::{
+    baseline_cfg, kiss_cfg, paper_workload, run_on, Series, Sweep, MEM_GRID_GB, SPLITS,
+};
+use crate::trace::synth::{synthesize, SynthConfig};
+
+fn split_label(frac: f64) -> String {
+    format!("{:.0}-{:.0}", frac * 100.0, (1.0 - frac) * 100.0)
+}
+
+/// Fig. 7: cold-start percentages across split configurations.
+pub fn fig7(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let mut series: Vec<Series> = Vec::new();
+    for &split in &SPLITS {
+        let values = MEM_GRID_GB
+            .iter()
+            .map(|&gb| run_on(&trace, &kiss_cfg(synth, gb, split)).overall.cold_start_pct())
+            .collect();
+        series.push(Series { label: split_label(split), values });
+    }
+    let values = MEM_GRID_GB
+        .iter()
+        .map(|&gb| run_on(&trace, &baseline_cfg(synth, gb)).overall.cold_start_pct())
+        .collect();
+    series.push(Series { label: "baseline".into(), values });
+    Sweep {
+        title: "Fig 7: Cold start percentages across configurations".into(),
+        x_label: "mem_GB".into(),
+        y_label: "cold-start %".into(),
+        xs: MEM_GRID_GB.iter().map(|&g| g as f64).collect(),
+        series,
+    }
+}
+
+/// Fig. 8: the 80-20 split vs the baseline.
+pub fn fig8(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let kiss = MEM_GRID_GB
+        .iter()
+        .map(|&gb| run_on(&trace, &kiss_cfg(synth, gb, 0.8)).overall.cold_start_pct())
+        .collect();
+    let base = MEM_GRID_GB
+        .iter()
+        .map(|&gb| run_on(&trace, &baseline_cfg(synth, gb)).overall.cold_start_pct())
+        .collect();
+    Sweep {
+        title: "Fig 8: 80-20 split vs baseline (cold-start %)".into(),
+        x_label: "mem_GB".into(),
+        y_label: "cold-start %".into(),
+        xs: MEM_GRID_GB.iter().map(|&g| g as f64).collect(),
+        series: vec![
+            Series { label: "kiss-80-20".into(), values: kiss },
+            Series { label: "baseline".into(), values: base },
+        ],
+    }
+}
+
+/// Fig. 9: drop percentage across memory configurations.
+pub fn fig9(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let kiss = MEM_GRID_GB
+        .iter()
+        .map(|&gb| run_on(&trace, &kiss_cfg(synth, gb, 0.8)).overall.drop_pct())
+        .collect();
+    let base = MEM_GRID_GB
+        .iter()
+        .map(|&gb| run_on(&trace, &baseline_cfg(synth, gb)).overall.drop_pct())
+        .collect();
+    Sweep {
+        title: "Fig 9: Drop percentage across memory configurations".into(),
+        x_label: "mem_GB".into(),
+        y_label: "drop %".into(),
+        xs: MEM_GRID_GB.iter().map(|&g| g as f64).collect(),
+        series: vec![
+            Series { label: "kiss-80-20".into(), values: kiss },
+            Series { label: "baseline".into(), values: base },
+        ],
+    }
+}
+
+/// Default-workload entry points used by the CLI.
+pub fn fig7_default() -> Sweep {
+    fig7(&paper_workload())
+}
+pub fn fig8_default() -> Sweep {
+    fig8(&paper_workload())
+}
+pub fn fig9_default() -> Sweep {
+    fig9(&paper_workload())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fast workload for CI: small but still memory-pressured.
+    pub(crate) fn fast_workload() -> SynthConfig {
+        SynthConfig {
+            seed: 7,
+            n_small: 60,
+            n_large: 8,
+            duration_us: 900_000_000, // 15 min
+            rate_per_sec: 25.0,
+            ..super::super::common::paper_workload()
+        }
+    }
+
+    #[test]
+    fn fig8_kiss_beats_baseline_in_edge_band() {
+        let s = fig8(&fast_workload());
+        // The paper's core claim: in the 4–10 GB band KiSS cold-start %
+        // is materially below baseline.
+        let mut kiss_wins = 0;
+        for gb in [2.0, 3.0, 4.0, 6.0] {
+            let k = s.value_at("kiss-80-20", gb).unwrap();
+            let b = s.value_at("baseline", gb).unwrap();
+            if k < b {
+                kiss_wins += 1;
+            }
+        }
+        assert!(kiss_wins >= 3, "KiSS should win most edge points\n{}", s.render());
+    }
+
+    #[test]
+    fn fig8_both_converge_when_memory_abundant() {
+        let s = fig8(&fast_workload());
+        let k = s.value_at("kiss-80-20", 24.0).unwrap();
+        let b = s.value_at("baseline", 24.0).unwrap();
+        assert!(k < 10.0 && b < 10.0, "k={k} b={b}\n{}", s.render());
+    }
+
+    #[test]
+    fn fig7_has_all_six_series() {
+        let s = fig7(&fast_workload());
+        for label in ["90-10", "80-20", "70-30", "60-40", "50-50", "baseline"] {
+            assert!(s.series_named(label).is_some(), "{label}");
+        }
+        assert_eq!(s.xs.len(), MEM_GRID_GB.len());
+    }
+
+    #[test]
+    fn fig9_drops_monotone_down_in_memory() {
+        let s = fig9(&fast_workload());
+        for label in ["kiss-80-20", "baseline"] {
+            let lo = s.value_at(label, 1.0).unwrap();
+            let hi = s.value_at(label, 24.0).unwrap();
+            assert!(lo >= hi, "{label}: drops should shrink with memory\n{}", s.render());
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Figures 2–5: the workload-analysis study (§2.5), rendered as tables.
+//! Thin wrappers over [`crate::analysis`] against the experiment workload.
+
+use super::common::paper_workload;
+use crate::analysis::{
+    coldstart_percentiles, footprint_percentiles, iat_percentiles, invocation_trends, Curve,
+};
+use crate::trace::synth::{synthesize, SynthConfig};
+
+/// Workload for the §2.5 analysis figures: same traffic shape as the
+/// simulation workload, but with the *cloud-calibrated* cold-start
+/// distributions of `SynthConfig::default()` — Figures 2–5 analyze the
+/// Azure cloud trace (small ≈15 s, large ≈100 s at p85), while the
+/// simulation uses edge-realistic inits (see common::paper_workload).
+pub fn analysis_workload() -> SynthConfig {
+    let cloud = SynthConfig::default();
+    SynthConfig {
+        small_cold_lognorm: cloud.small_cold_lognorm,
+        large_cold_lognorm: cloud.large_cold_lognorm,
+        small_cold_cap_s: cloud.small_cold_cap_s,
+        large_cold_cap_s: cloud.large_cold_cap_s,
+        ..paper_workload()
+    }
+}
+
+fn render_curves(title: &str, unit: &str, named: &[(&str, &Curve)]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "## {title}");
+    let _ = write!(out, "{:>6}", "pctl");
+    for (name, _) in named {
+        let _ = write!(out, "{:>16}", format!("{name} ({unit})"));
+    }
+    let _ = writeln!(out);
+    let n = named.first().map(|(_, c)| c.len()).unwrap_or(0);
+    for i in 0..n {
+        let _ = write!(out, "{:>6.0}", named[0].1[i].0);
+        for (_, c) in named {
+            let _ = write!(out, "{:>16.2}", c[i].1);
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Fig. 2: memory footprint percentiles (app + Eq. 1 function estimate).
+pub fn fig2(synth: &SynthConfig) -> String {
+    let t = synthesize(synth);
+    let d = footprint_percentiles(&t, 225.0);
+    let mut out = render_curves(
+        "Fig 2: Percentile distribution of memory footprints",
+        "MB",
+        &[("app", &d.app_mb), ("function(Eq.1)", &d.func_mb)],
+    );
+    out.push_str(&format!(
+        "functions at or below {} MB: {:.1}%\n",
+        d.small_cutoff_mb,
+        d.frac_below_cutoff * 100.0
+    ));
+    out
+}
+
+/// Fig. 3: normalized invocation trends, minute-binned, plus the
+/// small:large ratio the paper reports as 4–6.5×.
+pub fn fig3(synth: &SynthConfig) -> String {
+    use std::fmt::Write;
+    let t = synthesize(synth);
+    let d = invocation_trends(&t);
+    let mut out = String::new();
+    let _ = writeln!(out, "## Fig 3: Normalized invocation trends (small vs large)");
+    let _ = writeln!(out, "mean small:large invocation ratio = {:.2}x", d.mean_ratio);
+    // Print a coarse time series (every ~1/12 of the trace).
+    let step = (d.small.len() / 12).max(1);
+    let _ = writeln!(out, "{:>8} {:>10} {:>10}", "minute", "small", "large");
+    for i in (0..d.small.len()).step_by(step) {
+        let _ = writeln!(out, "{:>8} {:>10.3} {:>10.3}", i, d.small[i], d.large[i]);
+    }
+    out
+}
+
+/// Fig. 4: IAT percentiles (sliding windows, z-score filtered).
+pub fn fig4(synth: &SynthConfig) -> String {
+    let t = synthesize(synth);
+    let d = iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 3.0);
+    let mut out = render_curves(
+        "Fig 4: Percentile distribution of inter-arrival times",
+        "s",
+        &[("small", &d.small_s), ("large", &d.large_s)],
+    );
+    out.push_str(&format!(
+        "windows={} samples_kept={}\n",
+        d.windows, d.samples_kept
+    ));
+    out
+}
+
+/// Fig. 5: cold-start latency percentiles per class.
+pub fn fig5(synth: &SynthConfig) -> String {
+    let t = synthesize(synth);
+    let d = coldstart_percentiles(&t);
+    render_curves(
+        "Fig 5: Percentile distribution of cold start latency",
+        "s",
+        &[("small", &d.small_s), ("large", &d.large_s)],
+    )
+}
+
+pub fn fig2_default() -> String {
+    fig2(&analysis_workload())
+}
+pub fn fig3_default() -> String {
+    fig3(&analysis_workload())
+}
+pub fn fig4_default() -> String {
+    fig4(&analysis_workload())
+}
+pub fn fig5_default() -> String {
+    fig5(&analysis_workload())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> SynthConfig {
+        SynthConfig {
+            n_small: 50,
+            n_large: 14,
+            duration_us: 1_800_000_000,
+            rate_per_sec: 30.0,
+            ..SynthConfig::default()
+        }
+    }
+
+    #[test]
+    fn all_workload_figures_render() {
+        for (name, text) in [
+            ("fig2", fig2(&fast())),
+            ("fig3", fig3(&fast())),
+            ("fig4", fig4(&fast())),
+            ("fig5", fig5(&fast())),
+        ] {
+            assert!(text.contains("##"), "{name} missing header:\n{text}");
+            assert!(text.lines().count() > 5, "{name} too short:\n{text}");
+        }
+    }
+
+    #[test]
+    fn fig3_reports_ratio_in_band() {
+        let text = fig3(&fast());
+        let line = text.lines().find(|l| l.contains("ratio")).unwrap();
+        let x: f64 = line
+            .split('=')
+            .nth(1)
+            .unwrap()
+            .trim()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!((3.0..=8.0).contains(&x), "{x}");
+    }
+}

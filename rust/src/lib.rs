@@ -1,0 +1,60 @@
+//! # kiss-faas — KiSS: Keep it Separated Serverless
+//!
+//! A production-grade reproduction of *"KiSS: A Novel Container Size-Aware
+//! Memory Management Policy for Serverless in Edge-Cloud Continuum"*
+//! (Gupta, Gratz, Lusher — CS.DC 2025).
+//!
+//! The crate is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the KiSS size-aware
+//!   partitioned warm-pool policy ([`coordinator`]), the discrete-event
+//!   FaaS simulator it is evaluated on ([`sim`]), the Azure-2019-style
+//!   trace synthesizer ([`trace`]), the offline workload analyzer
+//!   ([`analysis`]), every paper figure as a runnable experiment
+//!   ([`experiments`]), and a live serving path ([`serve`]) that executes
+//!   real AOT-compiled function payloads through PJRT ([`runtime`]).
+//! * **Layer 2** — JAX payload models (`python/compile/model.py`), lowered
+//!   once to HLO text artifacts by `python/compile/aot.py`.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`), the payload
+//!   hot spots, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `manifest.json`, and the Rust binary is
+//! self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use kiss_faas::config::SimConfig;
+//! use kiss_faas::experiments::run_single;
+//!
+//! let cfg = SimConfig::edge_default(8 * 1024); // 8 GiB node
+//! let report = run_single(&cfg);
+//! println!("cold-start% = {:.1}", report.overall.cold_start_pct());
+//! ```
+//!
+//! ## Offline-environment note
+//!
+//! This build environment has no network; only the `xla` crate's vendored
+//! closure is available. The substrates a production framework would pull
+//! from crates.io are implemented here from scratch: seeded PRNG +
+//! distributions ([`util::rng`]), a TOML-subset config parser
+//! ([`config`]), a JSON reader/writer ([`util::json`]), a micro-benchmark
+//! harness ([`bench`]), and a randomized property-test driver
+//! ([`util::prop`]).
+
+pub mod analysis;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub use config::SimConfig;
+pub use coordinator::{Dispatcher, Outcome};
+pub use metrics::Report;

@@ -1,0 +1,312 @@
+//! `repro` — the kiss-faas launcher.
+//!
+//! ```text
+//! repro experiment <fig2..fig16|stress|all> [--stress-scale F]
+//! repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F]
+//!                [--policy lru|gd|freq] [--seed N]
+//! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
+//! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
+//! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
+//! repro selfcheck [--artifacts DIR]               # load + verify payloads
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap offline — see crate docs);
+//! unknown flags are hard errors, not silent ignores.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use kiss_faas::config::{Mode, SimConfig};
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::experiments::{self, run_single};
+use kiss_faas::serve::node::EdgeNode;
+use kiss_faas::serve::server::Server;
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "analyze" => cmd_analyze(&flags),
+        "trace" => cmd_trace(&flags),
+        "serve" => cmd_serve(&flags),
+        "selfcheck" => cmd_selfcheck(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `repro help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "kiss-faas repro — KiSS: Keep it Separated Serverless (paper reproduction)\n\n\
+         USAGE:\n  repro experiment <fig2..fig16|stress|all> [--stress-scale F]\n  \
+         repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
+         repro analyze [--seed N] [--duration-s N]\n  \
+         repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
+         repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
+         repro selfcheck [--artifacts DIR]"
+    );
+}
+
+/// `--flag value` / `--flag` (bool) parser; positionals kept in order.
+struct Flags {
+    positional: Vec<String>,
+    named: HashMap<String, String>,
+}
+
+const BOOL_FLAGS: [&str; 2] = ["--baseline", "--verbose"];
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&a.as_str()) {
+                    named.insert(name.to_string(), "true".to_string());
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    named.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { positional, named })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(|s| s.as_str())
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .map(|v| v.parse::<T>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.named.contains_key(name)
+    }
+}
+
+fn cmd_experiment(flags: &Flags) -> Result<()> {
+    let name = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("experiment name required (fig2..fig16, stress, all)"))?;
+    let scale: f64 = flags.get_parsed("stress-scale")?.unwrap_or(1.0);
+    let names: Vec<&str> = if name == "all" {
+        let mut v: Vec<&str> = experiments::ALL_EXPERIMENTS.to_vec();
+        v.push("stress");
+        v
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        let out = experiments::run_by_name(n, scale)
+            .ok_or_else(|| anyhow!("unknown experiment {n:?}"))?;
+        println!("{out}");
+    }
+    Ok(())
+}
+
+fn build_sim_config(flags: &Flags) -> Result<SimConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => SimConfig::from_toml_file(Path::new(path))?,
+        None => SimConfig::edge_default(8 * 1024),
+    };
+    if let Some(gb) = flags.get_parsed::<u64>("mem-gb")? {
+        cfg.node_mem_mb = gb * 1024;
+    }
+    if flags.has("baseline") {
+        cfg.mode = Mode::Baseline;
+    } else if let Some(split) = flags.get_parsed::<f64>("split")? {
+        cfg.mode = Mode::Kiss {
+            small_frac: split,
+            threshold_mb: kiss_faas::config::DEFAULT_THRESHOLD_MB,
+        };
+    }
+    if let Some(p) = flags.get("policy") {
+        let kind = PolicyKind::parse(p).ok_or_else(|| anyhow!("bad --policy {p:?}"))?;
+        cfg.small_policy = kind;
+        cfg.large_policy = kind;
+    }
+    if let Some(seed) = flags.get_parsed::<u64>("seed")? {
+        cfg.synth.seed = seed;
+    }
+    if let Some(d) = flags.get_parsed::<u64>("duration-s")? {
+        cfg.synth.duration_us = d * 1_000_000;
+    }
+    if let Some(r) = flags.get_parsed::<f64>("rate")? {
+        cfg.synth.rate_per_sec = r;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(flags: &Flags) -> Result<()> {
+    let cfg = build_sim_config(flags)?;
+    println!("# {}", cfg.describe());
+    let r = run_single(&cfg);
+    println!(
+        "{:>14} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "slice", "hits", "misses", "drops", "coldstart%", "drop%"
+    );
+    for (name, c) in [("overall", &r.overall), ("small", &r.small), ("large", &r.large)] {
+        println!(
+            "{:>14} {:>10} {:>10} {:>10} {:>12.2} {:>12.2}",
+            name,
+            c.hits,
+            c.misses,
+            c.drops,
+            c.cold_start_pct(),
+            c.drop_pct()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(flags: &Flags) -> Result<()> {
+    let mut synth = experiments::workload::analysis_workload();
+    if let Some(seed) = flags.get_parsed::<u64>("seed")? {
+        synth.seed = seed;
+    }
+    if let Some(d) = flags.get_parsed::<u64>("duration-s")? {
+        synth.duration_us = d * 1_000_000;
+    }
+    for f in [
+        experiments::workload::fig2(&synth),
+        experiments::workload::fig3(&synth),
+        experiments::workload::fig4(&synth),
+        experiments::workload::fig5(&synth),
+    ] {
+        println!("{f}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(flags: &Flags) -> Result<()> {
+    let out = flags
+        .get("out")
+        .ok_or_else(|| anyhow!("--out STEM required"))?;
+    let mut synth = SynthConfig::default();
+    if let Some(seed) = flags.get_parsed::<u64>("seed")? {
+        synth.seed = seed;
+    }
+    if let Some(d) = flags.get_parsed::<u64>("duration-s")? {
+        synth.duration_us = d * 1_000_000;
+    }
+    if let Some(r) = flags.get_parsed::<f64>("rate")? {
+        synth.rate_per_sec = r;
+    }
+    let trace = synthesize(&synth);
+    loader::save(&trace, Path::new(out))?;
+    println!(
+        "wrote {} functions / {} events to {out}.{{functions,events}}.csv",
+        trace.functions.len(),
+        trace.events.len()
+    );
+    Ok(())
+}
+
+fn artifacts_dir(flags: &Flags) -> PathBuf {
+    flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn cmd_selfcheck(flags: &Flags) -> Result<()> {
+    let dir = artifacts_dir(flags);
+    let mut engine = kiss_faas::runtime::Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    let names = engine
+        .load_all(&dir)
+        .with_context(|| format!("loading artifacts from {}", dir.display()))?;
+    for n in &names {
+        let p = engine.get(n).unwrap();
+        println!(
+            "  {n}: in{:?} out{:?} compile {:?} — golden OK",
+            p.spec.input_shape, p.spec.output_shape, p.compile_time
+        );
+    }
+    println!("selfcheck OK ({} payloads)", names.len());
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let dir = artifacts_dir(flags);
+    let mem_gb: u64 = flags.get_parsed("mem-gb")?.unwrap_or(2);
+    let port: u16 = flags.get_parsed("port")?.unwrap_or(7077);
+    let cfg = SimConfig::edge_default(mem_gb * 1024);
+    println!("node: {}", cfg.describe());
+
+    // The node is built inside the server's worker thread (PJRT handles
+    // are not Send). Default deployment: one small (MLP) and one large
+    // (transformer) function, mirroring the paper's two classes.
+    let factory_cfg = cfg.clone();
+    let server = Server::start(
+        move || {
+            let mut node = EdgeNode::new(&factory_cfg, &dir)?;
+            node.deploy(live_profile(40, SizeClass::Small), "iot_mlp_b1")?;
+            node.deploy(live_profile(350, SizeClass::Large), "analytics_transformer_b1")?;
+            println!("partitions: {}", node.describe());
+            for f in node.functions() {
+                println!("  fn {} -> {} ({} MB)", f.profile.id.0, f.payload, f.profile.mem_mb);
+            }
+            Ok(node)
+        },
+        port,
+    )?;
+    println!("listening on {} — protocol: INVOKE <id> <csv> | STATS | QUIT", server.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn live_profile(mem_mb: u32, class: SizeClass) -> FunctionProfile {
+    FunctionProfile {
+        id: FunctionId(0),
+        app_id: 0,
+        mem_mb,
+        app_mem_mb: mem_mb,
+        cold_start_us: 0,
+        warm_start_us: 0,
+        exec_us_mean: 0,
+        class,
+    }
+}

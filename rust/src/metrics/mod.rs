@@ -1,0 +1,177 @@
+//! The six FaaSCache-style metrics the paper tracks (§5.2), split by size
+//! class for the fairness analysis (§4.4), plus latency accounting.
+//!
+//! * cold starts (misses), hits, drops
+//! * total accesses = hits + misses + drops
+//! * serviceable accesses = hits + misses
+//! * execution durations (cumulative, split warm/cold)
+
+use crate::trace::SizeClass;
+
+/// Counter set for one slice of traffic (overall, per class, or per pool).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// Invocations served from a warm container.
+    pub hits: u64,
+    /// Invocations that required container initialization (cold starts).
+    pub misses: u64,
+    /// Invocations that could not be placed at all (pushed to the cloud).
+    pub drops: u64,
+    /// Cumulative execution time (µs) of serviced invocations, excluding
+    /// startup.
+    pub exec_us: u64,
+    /// Cumulative startup wait (µs): warm dispatch for hits, cold
+    /// initialization for misses.
+    pub startup_us: u64,
+}
+
+impl Counters {
+    pub fn total_accesses(&self) -> u64 {
+        self.hits + self.misses + self.drops
+    }
+
+    pub fn serviceable(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Cold-start percentage over *serviceable* accesses — the paper's
+    /// primary metric ("the proportion of invocations requiring container
+    /// initialization").
+    pub fn cold_start_pct(&self) -> f64 {
+        pct(self.misses, self.serviceable())
+    }
+
+    /// Drop percentage over total accesses (§4.3).
+    pub fn drop_pct(&self) -> f64 {
+        pct(self.drops, self.total_accesses())
+    }
+
+    /// Warm hit rate over total accesses (§6.5 reports this).
+    pub fn hit_rate_pct(&self) -> f64 {
+        pct(self.hits, self.total_accesses())
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.drops += other.drops;
+        self.exec_us += other.exec_us;
+        self.startup_us += other.startup_us;
+    }
+}
+
+fn pct(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        100.0 * num as f64 / den as f64
+    }
+}
+
+/// Full per-run report: overall + per-class slices (fairness, §4.4).
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub overall: Counters,
+    pub small: Counters,
+    pub large: Counters,
+}
+
+impl Report {
+    pub fn class(&self, c: SizeClass) -> &Counters {
+        match c {
+            SizeClass::Small => &self.small,
+            SizeClass::Large => &self.large,
+        }
+    }
+
+    pub fn record(
+        &mut self,
+        class: SizeClass,
+        kind: RecordKind,
+        exec_us: u64,
+        startup_us: u64,
+    ) {
+        for c in [&mut self.overall, match class {
+            SizeClass::Small => &mut self.small,
+            SizeClass::Large => &mut self.large,
+        }] {
+            match kind {
+                RecordKind::Hit => c.hits += 1,
+                RecordKind::Miss => c.misses += 1,
+                RecordKind::Drop => c.drops += 1,
+            }
+            if kind != RecordKind::Drop {
+                c.exec_us += exec_us;
+                c.startup_us += startup_us;
+            }
+        }
+    }
+
+    /// Consistency invariant: overall must equal small + large, field by
+    /// field. Checked by the property suite after every simulation.
+    pub fn is_consistent(&self) -> bool {
+        let mut merged = self.small.clone();
+        merged.merge(&self.large);
+        merged == self.overall
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RecordKind {
+    Hit,
+    Miss,
+    Drop,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentages_basic() {
+        let c = Counters { hits: 60, misses: 20, drops: 20, ..Default::default() };
+        assert_eq!(c.total_accesses(), 100);
+        assert_eq!(c.serviceable(), 80);
+        assert!((c.cold_start_pct() - 25.0).abs() < 1e-12);
+        assert!((c.drop_pct() - 20.0).abs() < 1e-12);
+        assert!((c.hit_rate_pct() - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_counters_are_zero_pct() {
+        let c = Counters::default();
+        assert_eq!(c.cold_start_pct(), 0.0);
+        assert_eq!(c.drop_pct(), 0.0);
+    }
+
+    #[test]
+    fn record_keeps_overall_consistent() {
+        let mut r = Report::default();
+        r.record(SizeClass::Small, RecordKind::Hit, 100, 5);
+        r.record(SizeClass::Small, RecordKind::Miss, 200, 1_000);
+        r.record(SizeClass::Large, RecordKind::Drop, 0, 0);
+        r.record(SizeClass::Large, RecordKind::Hit, 300, 7);
+        assert!(r.is_consistent());
+        assert_eq!(r.overall.hits, 2);
+        assert_eq!(r.overall.misses, 1);
+        assert_eq!(r.overall.drops, 1);
+        assert_eq!(r.small.exec_us, 300);
+        assert_eq!(r.large.exec_us, 300);
+        assert_eq!(r.overall.startup_us, 1_012);
+    }
+
+    #[test]
+    fn drop_does_not_accumulate_durations() {
+        let mut r = Report::default();
+        r.record(SizeClass::Large, RecordKind::Drop, 999, 999);
+        assert_eq!(r.overall.exec_us, 0);
+        assert_eq!(r.overall.startup_us, 0);
+    }
+
+    #[test]
+    fn inconsistency_detected() {
+        let mut r = Report::default();
+        r.overall.hits = 5; // manually corrupted
+        assert!(!r.is_consistent());
+    }
+}

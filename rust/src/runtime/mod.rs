@@ -1,0 +1,293 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format (not serialized protos — see
+//! aot.py and /opt/xla-example/README.md: xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit instruction ids; the text parser reassigns them).
+//!
+//! Every loaded payload self-verifies at load time against the golden
+//! input/output binaries recorded in `manifest.json` — a corrupt artifact
+//! or a lowering mismatch fails fast, not at request time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Manifest entry for one compiled payload.
+#[derive(Clone, Debug)]
+pub struct PayloadSpec {
+    pub name: String,
+    pub hlo_file: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub golden_input_file: PathBuf,
+    pub golden_output_file: PathBuf,
+    pub golden_output_mean: f64,
+}
+
+impl PayloadSpec {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Batch dimension (first axis) of the payload's input.
+    pub fn batch(&self) -> usize {
+        *self.input_shape.first().unwrap_or(&1)
+    }
+}
+
+/// Parse `artifacts/manifest.json`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<PayloadSpec>> {
+    let mpath = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let payloads = json
+        .get("payloads")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing payloads[]"))?;
+
+    let shape = |v: &Json, key: &str| -> Result<Vec<usize>> {
+        v.get(key)
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("missing {key}"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect()
+    };
+    let field = |v: &Json, key: &str| -> Result<String> {
+        Ok(v.get(key)
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing {key}"))?
+            .to_string())
+    };
+
+    payloads
+        .iter()
+        .map(|p| {
+            Ok(PayloadSpec {
+                name: field(p, "name")?,
+                hlo_file: dir.join(field(p, "hlo_file")?),
+                input_shape: shape(p, "input_shape")?,
+                output_shape: shape(p, "output_shape")?,
+                golden_input_file: dir.join(field(p, "golden_input_file")?),
+                golden_output_file: dir.join(field(p, "golden_output_file")?),
+                golden_output_mean: p
+                    .get("golden_output_mean")
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| anyhow!("missing golden_output_mean"))?,
+            })
+        })
+        .collect()
+}
+
+/// Read a raw little-endian f32 binary (the golden I/O format).
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// A compiled, verified payload executable.
+pub struct LoadedPayload {
+    pub spec: PayloadSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling the HLO (the *real* cold-start cost of
+    /// this payload on this machine; reported by the serving examples).
+    pub compile_time: std::time::Duration,
+}
+
+impl LoadedPayload {
+    /// Execute on a flat f32 input of exactly `spec.input_len()` elements.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.spec.input_len() {
+            bail!(
+                "{}: input len {} != expected {}",
+                self.spec.name,
+                input.len(),
+                self.spec.input_len()
+            );
+        }
+        let dims: Vec<i64> = self.spec.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.spec.output_len() {
+            bail!(
+                "{}: output len {} != expected {}",
+                self.spec.name,
+                values.len(),
+                self.spec.output_len()
+            );
+        }
+        Ok(values)
+    }
+}
+
+/// The PJRT engine: one CPU client + every payload from the manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    payloads: HashMap<String, LoadedPayload>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client (no payloads yet).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, payloads: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile a payload afresh (no cache, no golden check) — the live
+    /// serving path uses this to pay a *real* compile cost per container
+    /// cold start. ~tens of ms on the CPU plugin for these payloads.
+    pub fn compile_fresh(&self, spec: &PayloadSpec) -> Result<LoadedPayload> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo_file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedPayload { spec: spec.clone(), exe, compile_time: t0.elapsed() })
+    }
+
+    /// Compile one payload from its HLO text and self-verify it against
+    /// the golden I/O. Idempotent per name.
+    pub fn load(&mut self, spec: &PayloadSpec) -> Result<&LoadedPayload> {
+        if !self.payloads.contains_key(&spec.name) {
+            let loaded = self.compile_fresh(spec)?;
+            verify_golden(&loaded)?;
+            self.payloads.insert(spec.name.clone(), loaded);
+        }
+        Ok(&self.payloads[&spec.name])
+    }
+
+    /// Load every payload in the manifest directory.
+    pub fn load_all(&mut self, artifacts_dir: &Path) -> Result<Vec<String>> {
+        let specs = load_manifest(artifacts_dir)?;
+        let mut names = Vec::new();
+        for spec in &specs {
+            self.load(spec)?;
+            names.push(spec.name.clone());
+        }
+        Ok(names)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedPayload> {
+        self.payloads.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.payloads.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Run the golden input through a freshly-compiled payload and compare
+/// with the Python-side golden output (rtol 1e-4 + atol 1e-5, plus a mean
+/// check against the manifest).
+fn verify_golden(p: &LoadedPayload) -> Result<()> {
+    let x = read_f32_bin(&p.spec.golden_input_file)?;
+    let want = read_f32_bin(&p.spec.golden_output_file)?;
+    if want.len() != p.spec.output_len() {
+        bail!("{}: golden output length mismatch", p.spec.name);
+    }
+    let got = p.run(&x)?;
+    let mut worst = 0f32;
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        let tol = 1e-5 + 1e-4 * w.abs();
+        let err = (g - w).abs();
+        if err > tol {
+            bail!(
+                "{}: golden mismatch at {i}: got {g}, want {w} (err {err})",
+                p.spec.name
+            );
+        }
+        worst = worst.max(err);
+    }
+    let mean = got.iter().map(|&v| v as f64).sum::<f64>() / got.len() as f64;
+    if (mean - p.spec.golden_output_mean).abs() > 1e-4 * (1.0 + p.spec.golden_output_mean.abs()) {
+        bail!(
+            "{}: golden mean mismatch: got {mean}, want {}",
+            p.spec.name,
+            p.spec.golden_output_mean
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let specs = load_manifest(&artifacts_dir()).unwrap();
+        assert!(specs.len() >= 4);
+        let mlp = specs.iter().find(|s| s.name == "iot_mlp_b8").unwrap();
+        assert_eq!(mlp.input_shape, vec![8, 64]);
+        assert_eq!(mlp.output_shape, vec![8, 16]);
+        assert_eq!(mlp.batch(), 8);
+        assert_eq!(mlp.input_len(), 512);
+    }
+
+    #[test]
+    fn golden_files_have_expected_sizes() {
+        if !have_artifacts() {
+            return;
+        }
+        for spec in load_manifest(&artifacts_dir()).unwrap() {
+            let x = read_f32_bin(&spec.golden_input_file).unwrap();
+            let y = read_f32_bin(&spec.golden_output_file).unwrap();
+            assert_eq!(x.len(), spec.input_len(), "{}", spec.name);
+            assert_eq!(y.len(), spec.output_len(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn read_f32_bin_rejects_ragged_files() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("kiss-ragged-{}.bin", std::process::id()));
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32_bin(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    // Full compile+execute round trips live in rust/tests/integration_runtime.rs
+    // (they need the PJRT plugin and ~seconds of compile time).
+}

@@ -1,0 +1,146 @@
+//! Dynamic batcher: packs queued requests for the same function into the
+//! largest AOT batch variant available, falling back to singles.
+//!
+//! The AOT pipeline compiles each payload at a fixed set of batch sizes
+//! (e.g. `iot_mlp_b1`, `iot_mlp_b8`); XLA executables are shape-static,
+//! so batching is a *selection* problem: given `n` queued requests and
+//! available sizes `S`, emit the largest `s ∈ S, s ≤ n` repeatedly.
+//! This is the standard serving pattern (vLLM-style bucketed batching)
+//! adapted to PJRT's static shapes.
+
+/// Plan for draining a queue of `n` same-function requests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Batch sizes to execute, in order; sums to the planned count.
+    pub batches: Vec<usize>,
+    /// Requests left unplanned (only when no size-1 artifact exists).
+    pub remainder: usize,
+}
+
+/// Compute the batch plan for `queued` requests over `sizes` (ascending
+/// list of available batch variants).
+pub fn plan(queued: usize, sizes: &[usize]) -> BatchPlan {
+    let mut batches = Vec::new();
+    let mut left = queued;
+    loop {
+        let Some(&best) = sizes.iter().rev().find(|&&s| s <= left) else {
+            break;
+        };
+        batches.push(best);
+        left -= best;
+    }
+    BatchPlan { batches, remainder: left }
+}
+
+/// A simple accumulation batcher: push requests, drain when either the
+/// largest batch size is reachable or the deadline expires.
+pub struct Batcher {
+    sizes: Vec<usize>,
+    pending: Vec<Vec<f32>>,
+    /// Max requests to hold before forcing a drain.
+    high_watermark: usize,
+}
+
+impl Batcher {
+    /// `sizes` = the payload's available batch variants (ascending).
+    pub fn new(mut sizes: Vec<usize>) -> Self {
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(!sizes.is_empty(), "batcher needs at least one batch size");
+        let high = *sizes.last().unwrap();
+        Self { sizes, pending: Vec::new(), high_watermark: high }
+    }
+
+    pub fn push(&mut self, input: Vec<f32>) {
+        self.pending.push(input);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// True when a full largest-variant batch is ready.
+    pub fn should_drain(&self) -> bool {
+        self.pending.len() >= self.high_watermark
+    }
+
+    /// Drain everything currently queued into concatenated batch inputs:
+    /// returns `(batch_size, packed_input)` per executable call, in
+    /// arrival order. Requests that cannot be planned (no b1 artifact)
+    /// stay queued.
+    pub fn drain(&mut self) -> Vec<(usize, Vec<f32>)> {
+        let p = plan(self.pending.len(), &self.sizes);
+        let mut out = Vec::with_capacity(p.batches.len());
+        let mut taken = self.pending.drain(..self.pending.len() - p.remainder);
+        for b in p.batches {
+            let mut packed = Vec::new();
+            for _ in 0..b {
+                packed.extend(taken.next().expect("plan covers drained requests"));
+            }
+            out.push((b, packed));
+        }
+        drop(taken);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_prefers_largest_batches() {
+        assert_eq!(plan(17, &[1, 8]).batches, vec![8, 8, 1]);
+        assert_eq!(plan(17, &[1, 8]).remainder, 0);
+        assert_eq!(plan(7, &[1, 8]).batches, vec![1; 7]);
+        assert_eq!(plan(3, &[1, 2]).batches, vec![2, 1]);
+    }
+
+    #[test]
+    fn plan_reports_remainder_without_b1() {
+        let p = plan(5, &[2]);
+        assert_eq!(p.batches, vec![2, 2]);
+        assert_eq!(p.remainder, 1);
+    }
+
+    #[test]
+    fn plan_empty_queue() {
+        assert_eq!(plan(0, &[1, 8]), BatchPlan { batches: vec![], remainder: 0 });
+    }
+
+    #[test]
+    fn batcher_packs_in_arrival_order() {
+        let mut b = Batcher::new(vec![1, 2]);
+        b.push(vec![1.0, 1.0]);
+        b.push(vec![2.0, 2.0]);
+        b.push(vec![3.0, 3.0]);
+        assert!(b.should_drain());
+        let drained = b.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0], (2, vec![1.0, 1.0, 2.0, 2.0]));
+        assert_eq!(drained[1], (1, vec![3.0, 3.0]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batcher_holds_remainder_without_b1() {
+        let mut b = Batcher::new(vec![2]);
+        b.push(vec![1.0]);
+        b.push(vec![2.0]);
+        b.push(vec![3.0]);
+        let drained = b.drain();
+        assert_eq!(drained, vec![(2, vec![1.0, 2.0])]);
+        assert_eq!(b.len(), 1, "unplannable request stays queued");
+    }
+
+    #[test]
+    fn watermark_matches_largest_size() {
+        let b = Batcher::new(vec![8, 1]);
+        assert!(!b.should_drain());
+        assert_eq!(b.high_watermark, 8);
+    }
+}

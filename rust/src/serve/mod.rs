@@ -1,0 +1,19 @@
+//! Live serving path: the same KiSS coordinator that the simulator
+//! drives, but attached to the real PJRT runtime — containers hold
+//! actually-compiled HLO executables and invocations run real inference.
+//!
+//! * [`node`] — [`node::EdgeNode`]: in-process serving node (the
+//!   end-to-end example drives this directly).
+//! * [`batcher`] — dynamic batcher that packs compatible requests into
+//!   the largest available AOT batch variant.
+//! * [`server`] — a threaded TCP front (line protocol) over an EdgeNode.
+//!
+//! Python never appears here: artifacts are compiled ahead of time and
+//! the request path is pure Rust + PJRT.
+
+pub mod batcher;
+pub mod node;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use node::{EdgeNode, InvokeResult, LiveFunction};

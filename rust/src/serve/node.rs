@@ -1,0 +1,259 @@
+//! In-process edge serving node: KiSS coordination over real PJRT
+//! executables.
+//!
+//! Container semantics in live mode:
+//!
+//! * **Cold start** — the function's HLO artifact is compiled *afresh*
+//!   (a genuine per-container initialization cost, measured), then run.
+//! * **Warm hit** — the container's existing executable runs immediately.
+//! * **Drop** — the KiSS balancer found no capacity; the request would be
+//!   punted to the cloud.
+//!
+//! Memory accounting uses the function profiles (as the platform would:
+//! declared container sizes), while latency/throughput are *measured*
+//! wall-clock over real inference.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::SimConfig;
+use crate::coordinator::{Balancer, ContainerId, Dispatcher, Outcome};
+use crate::metrics::{RecordKind, Report};
+use crate::runtime::{load_manifest, Engine, LoadedPayload, PayloadSpec};
+use crate::trace::{FunctionId, FunctionProfile};
+
+/// A deployed function: platform profile + which AOT payload it runs.
+#[derive(Clone, Debug)]
+pub struct LiveFunction {
+    pub profile: FunctionProfile,
+    /// Payload name in the artifact manifest (batch-1 variant).
+    pub payload: String,
+}
+
+/// One invocation's result.
+#[derive(Debug)]
+pub struct InvokeResult {
+    pub outcome_kind: RecordKind,
+    /// End-to-end latency (cold compile + execute, or execute only).
+    pub latency: Duration,
+    /// Model output (empty when dropped).
+    pub output: Vec<f32>,
+}
+
+struct LiveContainer {
+    exe: LoadedPayload,
+}
+
+/// The serving node.
+pub struct EdgeNode {
+    balancer: Balancer,
+    engine: Engine,
+    specs: HashMap<String, PayloadSpec>,
+    functions: Vec<LiveFunction>,
+    containers: HashMap<ContainerId, LiveContainer>,
+    epoch: Instant,
+    pub report: Report,
+}
+
+impl EdgeNode {
+    /// Build a node from a config and the artifact directory. Registers
+    /// no functions yet — call [`EdgeNode::deploy`].
+    pub fn new(cfg: &SimConfig, artifacts_dir: &Path) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        let specs = load_manifest(artifacts_dir)?
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        Ok(Self {
+            balancer: cfg.build_balancer(),
+            engine,
+            specs,
+            functions: Vec::new(),
+            containers: HashMap::new(),
+            epoch: Instant::now(),
+            report: Report::default(),
+        })
+    }
+
+    /// Deploy a function backed by `payload` (must exist in the manifest).
+    /// Returns its id. Function ids are dense, in deployment order.
+    pub fn deploy(&mut self, mut profile: FunctionProfile, payload: &str) -> Result<FunctionId> {
+        if !self.specs.contains_key(payload) {
+            bail!(
+                "unknown payload {payload:?}; available: {:?}",
+                self.specs.keys().collect::<Vec<_>>()
+            );
+        }
+        let id = FunctionId(self.functions.len() as u32);
+        profile.id = id;
+        self.functions.push(LiveFunction { profile, payload: payload.to_string() });
+        Ok(id)
+    }
+
+    pub fn function(&self, id: FunctionId) -> Option<&LiveFunction> {
+        self.functions.get(id.0 as usize)
+    }
+
+    pub fn functions(&self) -> &[LiveFunction] {
+        &self.functions
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn occupancy(&self) -> Vec<(u64, u64)> {
+        self.balancer.occupancy()
+    }
+
+    pub fn describe(&self) -> String {
+        self.balancer.describe()
+    }
+
+    fn spec_for(&self, payload: &str, batch: usize) -> Result<&PayloadSpec> {
+        // Payload names end in `_b<batch>`; swap the suffix.
+        let stem = payload
+            .rsplit_once("_b")
+            .map(|(s, _)| s)
+            .ok_or_else(|| anyhow!("payload {payload:?} has no _b<batch> suffix"))?;
+        let name = format!("{stem}_b{batch}");
+        self.specs
+            .get(&name)
+            .ok_or_else(|| anyhow!("no batch-{batch} artifact for {stem:?}"))
+    }
+
+    /// Available batch sizes for a function's payload family (ascending).
+    pub fn batch_sizes(&self, id: FunctionId) -> Vec<usize> {
+        let Some(f) = self.function(id) else { return Vec::new() };
+        let Some((stem, _)) = f.payload.rsplit_once("_b") else { return Vec::new() };
+        let mut sizes: Vec<usize> = self
+            .specs
+            .keys()
+            .filter_map(|n| n.rsplit_once("_b").filter(|(s, _)| *s == stem))
+            .filter_map(|(_, b)| b.parse().ok())
+            .collect();
+        sizes.sort_unstable();
+        sizes
+    }
+
+    /// Invoke a function on one input (batch = 1).
+    pub fn invoke(&mut self, id: FunctionId, input: &[f32]) -> Result<InvokeResult> {
+        self.invoke_batch(id, input, 1)
+    }
+
+    /// Invoke a function on a packed batch of `batch` inputs (a batch
+    /// executes inside one container, as formed by the [`super::Batcher`]).
+    pub fn invoke_batch(
+        &mut self,
+        id: FunctionId,
+        input: &[f32],
+        batch: usize,
+    ) -> Result<InvokeResult> {
+        let f = self
+            .functions
+            .get(id.0 as usize)
+            .ok_or_else(|| anyhow!("unknown function {id:?}"))?
+            .clone();
+        let spec = self.spec_for(&f.payload, batch)?.clone();
+        if input.len() != spec.input_len() {
+            bail!(
+                "{}: batch-{batch} input len {} != {}",
+                f.payload,
+                input.len(),
+                spec.input_len()
+            );
+        }
+
+        let t0 = Instant::now();
+        let now = self.now_us();
+        let outcome = self.balancer.dispatch(&f.profile, now);
+        let result = match outcome {
+            Outcome::Drop => {
+                self.report.record(f.profile.class, RecordKind::Drop, 0, 0);
+                InvokeResult {
+                    outcome_kind: RecordKind::Drop,
+                    latency: t0.elapsed(),
+                    output: Vec::new(),
+                }
+            }
+            Outcome::Cold { pool, container } => {
+                // Real initialization: compile the artifact afresh.
+                let exe = self.engine.compile_fresh(&spec)?;
+                let output = exe.run(input)?;
+                self.containers.insert(container, LiveContainer { exe });
+                let latency = t0.elapsed();
+                self.balancer.release(pool, container, self.now_us());
+                self.report.record(
+                    f.profile.class,
+                    RecordKind::Miss,
+                    latency.as_micros() as u64,
+                    0,
+                );
+                InvokeResult { outcome_kind: RecordKind::Miss, latency, output }
+            }
+            Outcome::Hit { pool, container } => {
+                // A warm container exists, but it may hold a different
+                // batch variant: recompile counts as part of the warm path
+                // only when the variant changes (rare under the batcher).
+                let needs_swap = self
+                    .containers
+                    .get(&container)
+                    .map(|c| c.exe.spec.name != spec.name)
+                    .unwrap_or(true);
+                if needs_swap {
+                    let exe = self.engine.compile_fresh(&spec)?;
+                    self.containers.insert(container, LiveContainer { exe });
+                }
+                let output = self.containers[&container].exe.run(input)?;
+                let latency = t0.elapsed();
+                self.balancer.release(pool, container, self.now_us());
+                self.report.record(
+                    f.profile.class,
+                    RecordKind::Hit,
+                    latency.as_micros() as u64,
+                    0,
+                );
+                InvokeResult { outcome_kind: RecordKind::Hit, latency, output }
+            }
+        };
+
+        // Garbage-collect evicted containers' executables.
+        self.containers
+            .retain(|id, _| self.balancer.pools().iter().any(|p| p.container(*id).is_some()));
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SizeClass;
+
+    pub(crate) fn mlp_profile(mem_mb: u32) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(0),
+            app_id: 0,
+            mem_mb,
+            app_mem_mb: mem_mb,
+            cold_start_us: 0,
+            warm_start_us: 0,
+            exec_us_mean: 0,
+            class: if mem_mb >= 200 { SizeClass::Large } else { SizeClass::Small },
+        }
+    }
+
+    // PJRT-backed tests live in rust/tests/integration_serve.rs; here we
+    // only test pure logic that needs no engine.
+    #[test]
+    fn batch_suffix_parsing() {
+        // spec_for logic is exercised via the integration tests; check the
+        // suffix convention assumption holds for manifest names.
+        let name = "iot_mlp_b8";
+        let (stem, b) = name.rsplit_once("_b").unwrap();
+        assert_eq!(stem, "iot_mlp");
+        assert_eq!(b, "8");
+    }
+}

@@ -1,0 +1,251 @@
+//! Threaded TCP front over an [`EdgeNode`] — a minimal line protocol so
+//! external clients (and the integration tests) can drive the live node.
+//!
+//! Architecture note: the `xla` crate's PJRT client is not `Send` (it
+//! holds `Rc` internals), so the node lives on ONE dedicated worker
+//! thread, constructed there via a factory closure. Connection handler
+//! threads parse the protocol and exchange [`Request`]s with the node
+//! thread over channels — the same single-owner pattern a tokio actor
+//! would use, built on std threads (no tokio offline; see crate docs).
+//!
+//! Protocol (one request per line, `\n`-terminated):
+//!
+//! ```text
+//! INVOKE <func_id> <v0,v1,...>      -> OK <hit|miss|drop> <latency_us> <o0,o1,o2,o3>
+//! STATS                             -> STATS {json}
+//! QUIT                              -> closes the connection
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::metrics::RecordKind;
+use crate::trace::FunctionId;
+use crate::util::json::{obj, Json};
+
+use super::node::EdgeNode;
+
+/// A request to the node thread; replies flow back over the embedded
+/// channel.
+enum Request {
+    Invoke {
+        id: FunctionId,
+        input: Vec<f32>,
+        reply: mpsc::Sender<String>,
+    },
+    Stats {
+        reply: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Handle to a running server; dropping it stops accept + node threads.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    node_tx: mpsc::Sender<Request>,
+    accept_thread: Option<JoinHandle<()>>,
+    node_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server on `127.0.0.1:port` (0 = ephemeral). The node is
+    /// constructed *inside* its worker thread by `factory` (PJRT handles
+    /// are not `Send`).
+    pub fn start<F>(factory: F, port: u16) -> Result<Self>
+    where
+        F: FnOnce() -> Result<EdgeNode> + Send + 'static,
+    {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (node_tx, node_rx) = mpsc::channel::<Request>();
+
+        // Node worker: owns the EdgeNode for its whole life.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let node_thread = std::thread::spawn(move || {
+            let mut node = match factory() {
+                Ok(n) => {
+                    let _ = ready_tx.send(Ok(()));
+                    n
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = node_rx.recv() {
+                match req {
+                    Request::Shutdown => break,
+                    Request::Stats { reply } => {
+                        let _ = reply.send(render_stats(&node));
+                    }
+                    Request::Invoke { id, input, reply } => {
+                        let msg = match node.invoke(id, &input) {
+                            Ok(res) => {
+                                let kind = match res.outcome_kind {
+                                    RecordKind::Hit => "hit",
+                                    RecordKind::Miss => "miss",
+                                    RecordKind::Drop => "drop",
+                                };
+                                let preview: Vec<String> = res
+                                    .output
+                                    .iter()
+                                    .take(4)
+                                    .map(|v| format!("{v:.6}"))
+                                    .collect();
+                                format!(
+                                    "OK {kind} {} {}",
+                                    res.latency.as_micros(),
+                                    preview.join(",")
+                                )
+                            }
+                            Err(e) => format!("ERR {e}"),
+                        };
+                        let _ = reply.send(msg);
+                    }
+                }
+            }
+        });
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("node thread died"))??;
+
+        // Accept loop.
+        let stop2 = stop.clone();
+        let conn_tx = node_tx.clone();
+        let accept_thread = std::thread::spawn(move || {
+            let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = conn_tx.clone();
+                        handlers.push(std::thread::spawn(move || {
+                            let _ = handle_client(stream, tx);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+        });
+
+        Ok(Self {
+            addr,
+            stop,
+            node_tx,
+            accept_thread: Some(accept_thread),
+            node_thread: Some(node_thread),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.node_tx.send(Request::Shutdown);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.node_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn render_stats(node: &EdgeNode) -> String {
+    let r = &node.report;
+    let occ = node.occupancy();
+    let json = obj([
+        ("hits", Json::Num(r.overall.hits as f64)),
+        ("misses", Json::Num(r.overall.misses as f64)),
+        ("drops", Json::Num(r.overall.drops as f64)),
+        ("cold_start_pct", Json::Num(r.overall.cold_start_pct())),
+        ("hit_rate_pct", Json::Num(r.overall.hit_rate_pct())),
+        (
+            "pools",
+            Json::Arr(
+                occ.iter()
+                    .map(|&(u, c)| {
+                        obj([
+                            ("used_mb", Json::Num(u as f64)),
+                            ("capacity_mb", Json::Num(c as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    format!("STATS {}", json.to_string_compact())
+}
+
+fn handle_client(stream: TcpStream, tx: mpsc::Sender<Request>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let response = match parse_line(line.trim(), &tx) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // QUIT
+            Err(e) => format!("ERR {e}"),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn parse_line(line: &str, tx: &mpsc::Sender<Request>) -> Result<Option<String>> {
+    let mut parts = line.splitn(3, ' ');
+    match parts.next().unwrap_or("") {
+        "QUIT" => Ok(None),
+        "STATS" => {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(Request::Stats { reply: reply_tx })
+                .map_err(|_| anyhow::anyhow!("node is down"))?;
+            Ok(Some(reply_rx.recv()?))
+        }
+        "INVOKE" => {
+            let id: u32 = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("INVOKE needs <func_id>"))?
+                .parse()?;
+            let input: Vec<f32> = parts
+                .next()
+                .unwrap_or("")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<f32>())
+                .collect::<Result<_, _>>()?;
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(Request::Invoke { id: FunctionId(id), input, reply: reply_tx })
+                .map_err(|_| anyhow::anyhow!("node is down"))?;
+            Ok(Some(reply_rx.recv()?))
+        }
+        other => anyhow::bail!("unknown command {other:?}"),
+    }
+}
+
+// Integration coverage (real sockets + PJRT) lives in
+// rust/tests/integration_serve.rs.

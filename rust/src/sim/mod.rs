@@ -1,0 +1,337 @@
+//! Discrete-event FaaS simulator — the modified-FaaSCache substrate the
+//! paper evaluates on (§4.1).
+//!
+//! The event model is the keep-alive server lifecycle:
+//!
+//! * **Arrival** — from the (time-sorted) trace. Before dispatching, every
+//!   completion due at or before the arrival time is applied, releasing
+//!   containers back to their pools.
+//! * **Completion** — a dispatched invocation finishes at
+//!   `arrival + startup + exec`; its container becomes idle (warm).
+//!
+//! The simulator is generic over [`Dispatcher`], so the baseline and KiSS
+//! (and any N-way partition) run on identical event semantics — the
+//! comparison isolates the memory-management policy exactly as the paper
+//! intends. Everything is deterministic: the virtual clock is `u64`
+//! microseconds and the only state is the dispatcher's.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::{ContainerId, Dispatcher, Outcome};
+use crate::metrics::{RecordKind, Report};
+use crate::trace::Trace;
+
+/// One pending completion in the event queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Completion {
+    end_us: u64,
+    /// Tie-breaker: completions at the same instant release in dispatch
+    /// order (deterministic).
+    seq: u64,
+    pool: usize,
+    container: ContainerId,
+}
+
+/// How container initialization interacts with memory occupancy.
+///
+/// FaaSCache-lineage simulators account the cold-start penalty as
+/// *latency* (the startup time added to the response) while the container
+/// occupies memory for the execution window — [`InitOccupancy::LatencyOnly`],
+/// the default, which reproduces the paper's convergence behaviour
+/// (baseline → ~0 cold starts beyond 16 GB). [`InitOccupancy::HoldsMemory`]
+/// additionally keeps the container busy for the whole init (a stricter
+/// model where 100 s large-container inits clog the node); the ablation
+/// bench compares both.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InitOccupancy {
+    #[default]
+    LatencyOnly,
+    HoldsMemory,
+}
+
+/// Simulation engine: drives a trace through a dispatcher.
+pub struct Engine<'a, D: Dispatcher + ?Sized> {
+    dispatcher: &'a mut D,
+    completions: BinaryHeap<Reverse<Completion>>,
+    seq: u64,
+    now_us: u64,
+    init_occupancy: InitOccupancy,
+    pub report: Report,
+    /// Peak total occupancy observed (MB), an efficiency gauge.
+    pub peak_used_mb: u64,
+}
+
+impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
+    pub fn new(dispatcher: &'a mut D) -> Self {
+        Self::with_options(dispatcher, InitOccupancy::default())
+    }
+
+    pub fn with_options(dispatcher: &'a mut D, init_occupancy: InitOccupancy) -> Self {
+        Self {
+            dispatcher,
+            completions: BinaryHeap::new(),
+            seq: 0,
+            now_us: 0,
+            init_occupancy,
+            report: Report::default(),
+            peak_used_mb: 0,
+        }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Apply all completions due at or before `t`.
+    fn drain_completions(&mut self, t: u64) {
+        while let Some(Reverse(c)) = self.completions.peek().copied() {
+            if c.end_us > t {
+                break;
+            }
+            self.completions.pop();
+            self.dispatcher.release(c.pool, c.container, c.end_us);
+        }
+    }
+
+    /// Process one arrival. Returns the outcome.
+    pub fn step(&mut self, trace: &Trace, ev: crate::trace::Invocation) -> Outcome {
+        debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
+        self.now_us = ev.t_us;
+        self.drain_completions(ev.t_us);
+
+        let profile = trace.profile(ev.func);
+        let outcome = self.dispatcher.dispatch(profile, ev.t_us);
+        match outcome {
+            Outcome::Hit { pool, container } => {
+                let end = ev.t_us + profile.warm_start_us + ev.exec_us;
+                self.push_completion(end, pool, container);
+                self.report.record(
+                    profile.class,
+                    RecordKind::Hit,
+                    ev.exec_us,
+                    profile.warm_start_us,
+                );
+            }
+            Outcome::Cold { pool, container } => {
+                let busy = match self.init_occupancy {
+                    InitOccupancy::LatencyOnly => ev.exec_us,
+                    InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
+                };
+                let end = ev.t_us + busy;
+                self.push_completion(end, pool, container);
+                self.report.record(
+                    profile.class,
+                    RecordKind::Miss,
+                    ev.exec_us,
+                    profile.cold_start_us,
+                );
+            }
+            Outcome::Drop => {
+                self.report.record(profile.class, RecordKind::Drop, 0, 0);
+            }
+        }
+
+        self.peak_used_mb = self.peak_used_mb.max(self.dispatcher.used_mb());
+        outcome
+    }
+
+    fn push_completion(&mut self, end_us: u64, pool: usize, container: ContainerId) {
+        self.seq += 1;
+        self.completions.push(Reverse(Completion {
+            end_us,
+            seq: self.seq,
+            pool,
+            container,
+        }));
+    }
+
+    /// Release everything still in flight (end-of-trace drain).
+    pub fn finish(&mut self) {
+        while let Some(Reverse(c)) = self.completions.pop() {
+            self.dispatcher.release(c.pool, c.container, c.end_us);
+        }
+    }
+}
+
+/// Run a whole trace through `dispatcher` and return the metrics report.
+pub fn run_trace<D: Dispatcher + ?Sized>(trace: &Trace, dispatcher: &mut D) -> Report {
+    run_trace_with(trace, dispatcher, InitOccupancy::default())
+}
+
+/// [`run_trace`] with an explicit init-occupancy model (ablation).
+pub fn run_trace_with<D: Dispatcher + ?Sized>(
+    trace: &Trace,
+    dispatcher: &mut D,
+    init_occupancy: InitOccupancy,
+) -> Report {
+    debug_assert!(trace.is_sorted());
+    let mut engine = Engine::with_options(dispatcher, init_occupancy);
+    for &ev in &trace.events {
+        engine.step(trace, ev);
+    }
+    engine.finish();
+    engine.report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::coordinator::Balancer;
+    use crate::trace::{FunctionId, FunctionProfile, Invocation, SizeClass};
+
+    fn trace_of(functions: Vec<FunctionProfile>, events: Vec<Invocation>) -> Trace {
+        Trace { functions, events }
+    }
+
+    fn func(id: u32, mem: u32, cold_us: u64, exec_us: u64) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(id),
+            app_id: id,
+            mem_mb: mem,
+            app_mem_mb: mem,
+            cold_start_us: cold_us,
+            warm_start_us: 100,
+            exec_us_mean: exec_us,
+            class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+        }
+    }
+
+    fn inv(t: u64, f: u32, exec: u64) -> Invocation {
+        Invocation { t_us: t, func: FunctionId(f), exec_us: exec }
+    }
+
+    #[test]
+    fn first_call_cold_second_warm() {
+        let t = trace_of(
+            vec![func(0, 40, 1_000, 500)],
+            vec![
+                inv(0, 0, 500),
+                inv(10_000, 0, 500), // arrives after 0+1000+500=1500 done
+            ],
+        );
+        let mut d = Balancer::baseline(1000, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        assert_eq!(r.overall.misses, 1);
+        assert_eq!(r.overall.hits, 1);
+        assert_eq!(r.overall.drops, 0);
+    }
+
+    #[test]
+    fn concurrent_calls_need_two_containers() {
+        // Second arrival lands while the first is still executing -> a
+        // second cold container is spun up.
+        let t = trace_of(
+            vec![func(0, 40, 1_000, 100_000)],
+            vec![inv(0, 0, 100_000), inv(50, 0, 100_000)],
+        );
+        let mut d = Balancer::baseline(1000, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        assert_eq!(r.overall.misses, 2);
+        assert_eq!(r.overall.hits, 0);
+    }
+
+    #[test]
+    fn completion_applied_before_arrival_at_same_time() {
+        // Arrival exactly at the completion instant reuses the container.
+        let t = trace_of(
+            vec![func(0, 40, 1_000, 500)],
+            vec![inv(0, 0, 500), inv(1_500, 0, 500)],
+        );
+        let mut d = Balancer::baseline(1000, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        assert_eq!(r.overall.hits, 1);
+    }
+
+    #[test]
+    fn drop_when_node_saturated() {
+        // 100 MB node; two 60 MB functions overlap -> second drops.
+        let t = trace_of(
+            vec![func(0, 60, 1_000, 100_000), func(1, 60, 1_000, 100_000)],
+            vec![inv(0, 0, 100_000), inv(10, 1, 100_000)],
+        );
+        let mut d = Balancer::baseline(100, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        assert_eq!(r.overall.misses, 1);
+        assert_eq!(r.overall.drops, 1);
+    }
+
+    #[test]
+    fn startup_latency_accounted() {
+        let t = trace_of(
+            vec![func(0, 40, 5_000, 500)],
+            vec![inv(0, 0, 500), inv(100_000, 0, 700)],
+        );
+        let mut d = Balancer::baseline(1000, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        // cold: 5000 startup; hit: 100 warm dispatch
+        assert_eq!(r.overall.startup_us, 5_100);
+        assert_eq!(r.overall.exec_us, 1_200);
+    }
+
+    #[test]
+    fn report_is_class_consistent() {
+        let t = trace_of(
+            vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            vec![inv(0, 0, 500), inv(10, 1, 2_000), inv(20_000, 0, 500)],
+        );
+        let mut d = Balancer::kiss(2000, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        assert!(r.is_consistent());
+        assert_eq!(r.small.serviceable(), 2);
+        assert_eq!(r.large.serviceable(), 1);
+    }
+
+    #[test]
+    fn kiss_prevents_figure1_displacement() {
+        // Figure 1(a) scenario: a large container arriving must not evict
+        // the small warm container under KiSS, but does under baseline.
+        let small = func(0, 100, 1_000, 100);
+        let large = func(1, 380, 50_000, 100);
+        let events = vec![
+            inv(0, 0, 100),       // small cold
+            inv(10_000, 1, 100),  // large arrives; small is idle
+            inv(200_000, 0, 100), // small again
+        ];
+        // Baseline 450 MB: large(380) only fits by evicting small's idle 100.
+        let t = trace_of(vec![small.clone(), large.clone()], events.clone());
+        let mut base = Balancer::baseline(450, PolicyKind::Lru);
+        let rb = run_trace(&t, &mut base);
+        assert_eq!(rb.small.misses, 2, "baseline: small displaced -> cold again");
+
+        // KiSS 500 MB, 60/40: small pool 300, large pool 200... large(380)
+        // won't fit its pool; use 50/50 on 800 to give large 400.
+        let mut kiss = Balancer::kiss(800, 0.5, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let rk = run_trace(&t, &mut kiss);
+        assert_eq!(rk.small.misses, 1, "KiSS: small stays warm");
+        assert_eq!(rk.small.hits, 1);
+    }
+
+    #[test]
+    fn peak_occupancy_tracked() {
+        let t = trace_of(
+            vec![func(0, 60, 1_000, 10_000), func(1, 60, 1_000, 10_000)],
+            vec![inv(0, 0, 10_000), inv(5, 1, 10_000)],
+        );
+        let mut d = Balancer::baseline(1000, PolicyKind::Lru);
+        let mut e = Engine::new(&mut d);
+        for &ev in &t.events {
+            e.step(&t, ev);
+        }
+        assert_eq!(e.peak_used_mb, 120);
+    }
+
+    #[test]
+    fn finish_releases_all_in_flight() {
+        let t = trace_of(
+            vec![func(0, 40, 1_000, 1_000_000)],
+            vec![inv(0, 0, 1_000_000)],
+        );
+        let mut d = Balancer::baseline(1000, PolicyKind::Lru);
+        let r = run_trace(&t, &mut d);
+        assert_eq!(r.overall.misses, 1);
+        assert_eq!(d.pool(0).idle_count(), 1, "finish() must release containers");
+        d.check_invariants().unwrap();
+    }
+}

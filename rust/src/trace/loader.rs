@@ -1,0 +1,206 @@
+//! CSV trace persistence, schema-compatible with the Azure Functions 2019
+//! release style (one row per invocation, plus a function-profile table).
+//!
+//! Two files:
+//! * `<stem>.functions.csv` — `func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class`
+//! * `<stem>.events.csv`    — `t_us,func_id,exec_us`
+//!
+//! Users with the real Azure dataset can convert it to this schema and run
+//! every experiment in the repo against it unchanged.
+
+use std::fs;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{FunctionId, FunctionProfile, Invocation, SizeClass, Trace};
+
+/// Write `trace` as `<stem>.functions.csv` + `<stem>.events.csv`.
+pub fn save(trace: &Trace, stem: &Path) -> Result<()> {
+    let fpath = stem.with_extension("functions.csv");
+    let mut w = BufWriter::new(fs::File::create(&fpath)?);
+    writeln!(
+        w,
+        "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class"
+    )?;
+    for f in &trace.functions {
+        writeln!(
+            w,
+            "{},{},{},{},{},{},{},{}",
+            f.id.0,
+            f.app_id,
+            f.mem_mb,
+            f.app_mem_mb,
+            f.cold_start_us,
+            f.warm_start_us,
+            f.exec_us_mean,
+            f.class.label()
+        )?;
+    }
+    w.flush()?;
+
+    let epath = stem.with_extension("events.csv");
+    let mut w = BufWriter::new(fs::File::create(&epath)?);
+    writeln!(w, "t_us,func_id,exec_us")?;
+    for e in &trace.events {
+        writeln!(w, "{},{},{}", e.t_us, e.func.0, e.exec_us)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a trace previously written by [`save`] (or converted from Azure).
+pub fn load(stem: &Path) -> Result<Trace> {
+    let fpath = stem.with_extension("functions.csv");
+    let ftext = fs::read_to_string(&fpath)
+        .with_context(|| format!("reading {}", fpath.display()))?;
+    let mut functions = Vec::new();
+    for (lineno, line) in ftext.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 8 {
+            bail!("{}:{}: expected 8 columns, got {}", fpath.display(), lineno + 1, cols.len());
+        }
+        let class = match cols[7].trim() {
+            "small" => SizeClass::Small,
+            "large" => SizeClass::Large,
+            other => bail!("{}:{}: bad class {other:?}", fpath.display(), lineno + 1),
+        };
+        functions.push(FunctionProfile {
+            id: FunctionId(cols[0].trim().parse()?),
+            app_id: cols[1].trim().parse()?,
+            mem_mb: cols[2].trim().parse()?,
+            app_mem_mb: cols[3].trim().parse()?,
+            cold_start_us: cols[4].trim().parse()?,
+            warm_start_us: cols[5].trim().parse()?,
+            exec_us_mean: cols[6].trim().parse()?,
+            class,
+        });
+    }
+    // Profiles must be dense and in id order (they are indexed by id).
+    for (i, f) in functions.iter().enumerate() {
+        if f.id.0 as usize != i {
+            bail!("function table not dense at row {i} (id {})", f.id.0);
+        }
+    }
+
+    let epath = stem.with_extension("events.csv");
+    let etext = fs::read_to_string(&epath)
+        .with_context(|| format!("reading {}", epath.display()))?;
+    let mut events = Vec::new();
+    for (lineno, line) in etext.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 3 {
+            bail!("{}:{}: expected 3 columns", epath.display(), lineno + 1);
+        }
+        let func = FunctionId(cols[1].trim().parse()?);
+        if func.0 as usize >= functions.len() {
+            bail!("{}:{}: unknown function id {}", epath.display(), lineno + 1, func.0);
+        }
+        events.push(Invocation {
+            t_us: cols[0].trim().parse()?,
+            func,
+            exec_us: cols[2].trim().parse()?,
+        });
+    }
+    let trace = Trace { functions, events };
+    if !trace.is_sorted() {
+        bail!("event stream is not time-sorted");
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{synthesize, SynthConfig};
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "kiss-trace-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_preserves_trace() {
+        let cfg = SynthConfig {
+            n_small: 10,
+            n_large: 3,
+            duration_us: 60_000_000,
+            rate_per_sec: 20.0,
+            ..SynthConfig::default()
+        };
+        let t = synthesize(&cfg);
+        let stem = tmpdir().join("roundtrip");
+        save(&t, &stem).unwrap();
+        let t2 = load(&stem).unwrap();
+        assert_eq!(t.functions.len(), t2.functions.len());
+        assert_eq!(t.events.len(), t2.events.len());
+        for (a, b) in t.functions.iter().zip(&t2.functions) {
+            assert_eq!(a.mem_mb, b.mem_mb);
+            assert_eq!(a.cold_start_us, b.cold_start_us);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.app_mem_mb, b.app_mem_mb);
+        }
+        for (a, b) in t.events.iter().zip(&t2.events) {
+            assert_eq!((a.t_us, a.func, a.exec_us), (b.t_us, b.func, b.exec_us));
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_function_id() {
+        let d = tmpdir();
+        let stem = d.join("bad");
+        fs::write(
+            stem.with_extension("functions.csv"),
+            "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class\n0,0,40,40,1000,10,5000,small\n",
+        )
+        .unwrap();
+        fs::write(
+            stem.with_extension("events.csv"),
+            "t_us,func_id,exec_us\n0,7,1000\n",
+        )
+        .unwrap();
+        assert!(load(&stem).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_events() {
+        let d = tmpdir();
+        let stem = d.join("unsorted");
+        fs::write(
+            stem.with_extension("functions.csv"),
+            "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class\n0,0,40,40,1000,10,5000,small\n",
+        )
+        .unwrap();
+        fs::write(
+            stem.with_extension("events.csv"),
+            "t_us,func_id,exec_us\n100,0,1000\n50,0,1000\n",
+        )
+        .unwrap();
+        assert!(load(&stem).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_class() {
+        let d = tmpdir();
+        let stem = d.join("badclass");
+        fs::write(
+            stem.with_extension("functions.csv"),
+            "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class\n0,0,40,40,1000,10,5000,medium\n",
+        )
+        .unwrap();
+        fs::write(stem.with_extension("events.csv"), "t_us,func_id,exec_us\n").unwrap();
+        assert!(load(&stem).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Workload traces: domain types, the Azure-2019-style synthesizer, and a
+//! CSV loader for real traces.
+//!
+//! The paper evaluates KiSS on a trace derived from the public Azure
+//! Functions 2019 dataset, edge-adapted (§4.2): small containers 30–60 MB,
+//! large containers 300–400 MB, small functions invoked 4–6.5× more often
+//! than large ones. The dataset itself is not available offline, so
+//! [`synth`] generates a statistically-equivalent trace calibrated to the
+//! paper's own workload analysis (Figures 2–5); [`loader`] reads/writes a
+//! CSV schema compatible with the Azure release so real traces drop in.
+//! The substitution is documented in DESIGN.md §2.
+
+pub mod loader;
+pub mod synth;
+
+/// Stable identifier of a function (index into the trace's profile table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FunctionId(pub u32);
+
+/// The paper's two workload classes (§2.5). Classification is by memory
+/// footprint against the coordinator's size threshold; the trace records
+/// the *ground-truth* class for fairness accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SizeClass {
+    Small,
+    Large,
+}
+
+impl SizeClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            SizeClass::Small => "small",
+            SizeClass::Large => "large",
+        }
+    }
+}
+
+/// Static profile of one function, as the platform would learn it from
+/// registration metadata + first executions.
+#[derive(Clone, Debug)]
+pub struct FunctionProfile {
+    pub id: FunctionId,
+    /// Application the function belongs to (Azure groups functions into
+    /// apps; Eq. 1 of the paper estimates function memory from app memory).
+    pub app_id: u32,
+    /// Container memory footprint in MB.
+    pub mem_mb: u32,
+    /// Whole-application memory footprint in MB (for the Eq. 1 analysis).
+    pub app_mem_mb: u32,
+    /// Cold-start initialization latency (µs) — image pull + runtime boot.
+    pub cold_start_us: u64,
+    /// Warm-start dispatch latency (µs).
+    pub warm_start_us: u64,
+    /// Mean execution duration (µs); per-invocation durations jitter
+    /// around this in the trace.
+    pub exec_us_mean: u64,
+    /// Ground-truth class used for fairness metrics.
+    pub class: SizeClass,
+}
+
+/// One invocation arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct Invocation {
+    /// Arrival time in µs since trace start.
+    pub t_us: u64,
+    pub func: FunctionId,
+    /// Execution duration of this invocation (µs), excluding startup.
+    pub exec_us: u64,
+}
+
+/// A complete workload: the function table plus a time-sorted arrival
+/// stream.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub functions: Vec<FunctionProfile>,
+    pub events: Vec<Invocation>,
+}
+
+impl Trace {
+    pub fn profile(&self, f: FunctionId) -> &FunctionProfile {
+        &self.functions[f.0 as usize]
+    }
+
+    pub fn duration_us(&self) -> u64 {
+        self.events.last().map(|e| e.t_us).unwrap_or(0)
+    }
+
+    /// Number of invocations per class: (small, large).
+    pub fn class_counts(&self) -> (u64, u64) {
+        let mut small = 0;
+        let mut large = 0;
+        for e in &self.events {
+            match self.profile(e.func).class {
+                SizeClass::Small => small += 1,
+                SizeClass::Large => large += 1,
+            }
+        }
+        (small, large)
+    }
+
+    /// Events must be sorted by arrival time; the synthesizer and loader
+    /// guarantee this, and consumers may debug_assert it.
+    pub fn is_sorted(&self) -> bool {
+        self.events.windows(2).all(|w| w[0].t_us <= w[1].t_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Trace {
+        let functions = vec![
+            FunctionProfile {
+                id: FunctionId(0),
+                app_id: 0,
+                mem_mb: 40,
+                app_mem_mb: 80,
+                cold_start_us: 1_000_000,
+                warm_start_us: 1_000,
+                exec_us_mean: 50_000,
+                class: SizeClass::Small,
+            },
+            FunctionProfile {
+                id: FunctionId(1),
+                app_id: 1,
+                mem_mb: 350,
+                app_mem_mb: 350,
+                cold_start_us: 20_000_000,
+                warm_start_us: 5_000,
+                exec_us_mean: 2_000_000,
+                class: SizeClass::Large,
+            },
+        ];
+        let events = vec![
+            Invocation { t_us: 0, func: FunctionId(0), exec_us: 50_000 },
+            Invocation { t_us: 10, func: FunctionId(1), exec_us: 100_000 },
+            Invocation { t_us: 20, func: FunctionId(0), exec_us: 60_000 },
+        ];
+        Trace { functions, events }
+    }
+
+    #[test]
+    fn class_counts_split_by_profile() {
+        let t = tiny_trace();
+        assert_eq!(t.class_counts(), (2, 1));
+    }
+
+    #[test]
+    fn sortedness_check() {
+        let mut t = tiny_trace();
+        assert!(t.is_sorted());
+        t.events.swap(0, 2);
+        assert!(!t.is_sorted());
+    }
+
+    #[test]
+    fn duration_is_last_event() {
+        assert_eq!(tiny_trace().duration_us(), 20);
+        assert_eq!(Trace::default().duration_us(), 0);
+    }
+}

@@ -1,0 +1,589 @@
+//! Azure-2019-style workload synthesizer, calibrated to the paper's own
+//! workload analysis (§2.5, Figures 2–5):
+//!
+//! * **Bimodal container sizes** — small 30–60 MB, large 300–400 MB
+//!   (the paper's edge adaptation, §4.2); application memory for the Eq. 1
+//!   analysis comes from grouping functions into apps.
+//! * **Invocation-frequency ratio** — aggregate small-class arrivals are
+//!   `small_large_ratio`× (4–6.5×, Fig. 3) the large-class arrivals, with
+//!   Zipf popularity skew *within* each class (a few hot functions carry
+//!   most of the traffic, as in Shahrad et al.).
+//! * **Cold-start latencies** — lognormal per class, calibrated so the
+//!   85th percentile lands near the paper's Fig. 5 (≈15 s small, ≈100 s
+//!   large).
+//! * **Diurnal modulation + bursts** — sinusoidal day cycle and an
+//!   optional MMPP (Markov-modulated Poisson) burst overlay (§4.2
+//!   "bursty traffic patterns").
+//!
+//! Arrivals are a non-homogeneous Poisson process per function, generated
+//! by thinning, then merge-sorted into one stream. Everything is
+//! deterministic in `(config, seed)`.
+
+use super::{FunctionId, FunctionProfile, Invocation, SizeClass, Trace};
+use crate::util::rng::Pcg64;
+
+/// Markov-modulated burst overlay: the process alternates between a calm
+/// state (rate ×1) and a burst state (rate ×`factor`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurstConfig {
+    /// Rate multiplier while bursting (>1).
+    pub factor: f64,
+    /// Mean calm-state dwell time (µs).
+    pub mean_calm_us: u64,
+    /// Mean burst-state dwell time (µs).
+    pub mean_burst_us: u64,
+}
+
+impl Default for BurstConfig {
+    fn default() -> Self {
+        Self { factor: 4.0, mean_calm_us: 300_000_000, mean_burst_us: 30_000_000 }
+    }
+}
+
+/// Function chaining overlay (paper §1.1: chaining frameworks like
+/// Xanadu / SpecFaaS make temporal locality in warm pools critical —
+/// a cold start in the middle of a chain stalls the whole workflow).
+/// With probability `prob`, an invocation triggers a child invocation of
+/// another function at its completion time, up to `max_depth` links.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChainConfig {
+    pub prob: f64,
+    pub max_depth: u32,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        Self { prob: 0.25, max_depth: 3 }
+    }
+}
+
+/// Full synthesizer parameterization. `Default` is the paper's edge
+/// workload; experiments override `duration_us` / `rate_per_sec` / `seed`.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub seed: u64,
+    /// Distinct small / large functions.
+    pub n_small: usize,
+    pub n_large: usize,
+    /// Trace length (µs).
+    pub duration_us: u64,
+    /// Aggregate mean arrival rate across all functions (per second).
+    pub rate_per_sec: f64,
+    /// Small:large aggregate invocation ratio (paper Fig. 3: 4–6.5).
+    pub small_large_ratio: f64,
+    /// Zipf exponent for within-class popularity skew.
+    pub zipf_s: f64,
+    /// Amplitude of the sinusoidal diurnal modulation, 0..1 (Fig. 3).
+    pub diurnal_amplitude: f64,
+    /// Optional MMPP burst overlay.
+    pub burst: Option<BurstConfig>,
+    /// Optional function-chaining overlay (§1.1).
+    pub chains: Option<ChainConfig>,
+    /// Container memory ranges (MB), inclusive (§4.2 edge adaptation).
+    pub small_mem_mb: (u32, u32),
+    pub large_mem_mb: (u32, u32),
+    /// Functions per application (inclusive range) for Eq. 1 grouping.
+    pub funcs_per_app: (u32, u32),
+    /// Cold-start lognormal (log-space mu, sigma) per class, seconds.
+    pub small_cold_lognorm: (f64, f64),
+    pub large_cold_lognorm: (f64, f64),
+    /// Cold-start clamp (s) so tails stay physical.
+    pub small_cold_cap_s: f64,
+    pub large_cold_cap_s: f64,
+    /// Execution-time lognormal (log-space mu, sigma), seconds.
+    pub small_exec_lognorm: (f64, f64),
+    pub large_exec_lognorm: (f64, f64),
+    /// Per-invocation duration jitter sigma (lognormal around the mean).
+    pub exec_jitter_sigma: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            n_small: 200,
+            n_large: 40,
+            duration_us: 3_600_000_000, // 1 h
+            rate_per_sec: 50.0,
+            small_large_ratio: 5.25, // middle of the paper's 4–6.5×
+            zipf_s: 0.9,
+            diurnal_amplitude: 0.35,
+            burst: None,
+            chains: None,
+            small_mem_mb: (30, 60),
+            large_mem_mb: (300, 400),
+            funcs_per_app: (1, 4),
+            // p85 = exp(mu + 1.0364*sigma): small ≈ 15 s, large ≈ 100 s
+            small_cold_lognorm: (1.40, 1.25),
+            large_cold_lognorm: (3.75, 0.85),
+            small_cold_cap_s: 20.0,
+            large_cold_cap_s: 150.0,
+            // small fns run ~100 ms median, large ~1.5 s median
+            small_exec_lognorm: (-2.30, 0.8),
+            large_exec_lognorm: (0.40, 0.7),
+            exec_jitter_sigma: 0.25,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// The §6.5 stress-test shape: 2 h unedited trace, 4–5 M invocations.
+    pub fn stress() -> Self {
+        Self {
+            duration_us: 7_200_000_000,
+            rate_per_sec: 625.0, // 625/s * 7200 s = 4.5 M
+            n_small: 400,
+            n_large: 80,
+            burst: Some(BurstConfig::default()),
+            ..Self::default()
+        }
+    }
+}
+
+/// Generate a trace. Deterministic in `cfg` (including `cfg.seed`).
+pub fn synthesize(cfg: &SynthConfig) -> Trace {
+    assert!(cfg.n_small > 0 && cfg.n_large > 0, "need both classes");
+    assert!(cfg.rate_per_sec > 0.0 && cfg.duration_us > 0);
+    let mut root = Pcg64::new(cfg.seed);
+
+    let functions = make_functions(cfg, &mut root);
+    let rates = per_function_rates(cfg);
+    let bursts = burst_schedule(cfg, &mut root);
+
+    // Per-function thinned Poisson arrivals.
+    let mut events: Vec<Invocation> = Vec::new();
+    for f in &functions {
+        let lambda = rates[f.id.0 as usize]; // events/sec, mean
+        let mut rng = root.fork(f.id.0 as u64 + 1);
+        gen_arrivals(cfg, f, lambda, &bursts, &mut rng, &mut events);
+    }
+    if let Some(chain) = cfg.chains {
+        let mut rng = root.fork(0xC4A1);
+        add_chains(cfg, chain, &functions, &mut rng, &mut events);
+    }
+    events.sort_unstable_by_key(|e| e.t_us);
+    Trace { functions, events }
+}
+
+/// Append chained child invocations: each root event spawns a child at
+/// its completion time with probability `chain.prob`, recursively up to
+/// `chain.max_depth` links. Children favour the same class as the parent
+/// (workflows are homogeneous more often than not) but cross classes 25%
+/// of the time — the §1.1 pattern where a small-function chain invokes a
+/// large analytics stage.
+fn add_chains(
+    cfg: &SynthConfig,
+    chain: ChainConfig,
+    functions: &[FunctionProfile],
+    rng: &mut Pcg64,
+    events: &mut Vec<Invocation>,
+) {
+    let n_events = events.len();
+    let mut pending: Vec<(Invocation, u32)> = Vec::new();
+    for i in 0..n_events {
+        let ev = events[i];
+        pending.push((ev, 0));
+        while let Some((parent, depth)) = pending.pop() {
+            if depth >= chain.max_depth || !rng.bernoulli(chain.prob) {
+                continue;
+            }
+            let parent_class = functions[parent.func.0 as usize].class;
+            let same_class = rng.bernoulli(0.75);
+            let pick_small = (parent_class == SizeClass::Small) == same_class;
+            let idx = if pick_small {
+                rng.below(cfg.n_small as u64) as usize
+            } else {
+                cfg.n_small + rng.below(cfg.n_large as u64) as usize
+            };
+            let child_fn = &functions[idx];
+            let t_us = parent.t_us.saturating_add(parent.exec_us);
+            if t_us >= cfg.duration_us {
+                continue;
+            }
+            let jitter = rng.lognormal(0.0, cfg.exec_jitter_sigma);
+            let exec_us = ((child_fn.exec_us_mean as f64) * jitter).max(1_000.0) as u64;
+            let child = Invocation { t_us, func: child_fn.id, exec_us };
+            events.push(child);
+            pending.push((child, depth + 1));
+        }
+    }
+}
+
+fn make_functions(cfg: &SynthConfig, rng: &mut Pcg64) -> Vec<FunctionProfile> {
+    let total = cfg.n_small + cfg.n_large;
+    let mut out = Vec::with_capacity(total);
+    let mut app_id = 0u32;
+    let mut app_left = 0u32;
+    let mut app_mem_acc: Vec<u32> = Vec::new(); // mem per app, fixed up later
+    let mut app_of: Vec<u32> = Vec::with_capacity(total);
+
+    for i in 0..total {
+        if app_left == 0 {
+            app_id = app_mem_acc.len() as u32;
+            app_left = rng.range_u64(cfg.funcs_per_app.0 as u64, cfg.funcs_per_app.1 as u64)
+                as u32;
+            app_mem_acc.push(0);
+        }
+        app_left -= 1;
+
+        let class = if i < cfg.n_small { SizeClass::Small } else { SizeClass::Large };
+        let (mem_lo, mem_hi) = match class {
+            SizeClass::Small => cfg.small_mem_mb,
+            SizeClass::Large => cfg.large_mem_mb,
+        };
+        let mem_mb = rng.range_u64(mem_lo as u64, mem_hi as u64) as u32;
+
+        let ((mu, sigma), cap) = match class {
+            SizeClass::Small => (cfg.small_cold_lognorm, cfg.small_cold_cap_s),
+            SizeClass::Large => (cfg.large_cold_lognorm, cfg.large_cold_cap_s),
+        };
+        let cold_s = rng.lognormal(mu, sigma).min(cap);
+        let warm_us = rng.range_u64(500, 10_000);
+
+        let (emu, esig) = match class {
+            SizeClass::Small => cfg.small_exec_lognorm,
+            SizeClass::Large => cfg.large_exec_lognorm,
+        };
+        let exec_s = rng.lognormal(emu, esig);
+
+        app_of.push(app_id);
+        app_mem_acc[app_id as usize] += mem_mb;
+        out.push(FunctionProfile {
+            id: FunctionId(i as u32),
+            app_id,
+            mem_mb,
+            app_mem_mb: 0, // fixed up below once the app is complete
+            cold_start_us: (cold_s * 1e6) as u64,
+            warm_start_us: warm_us,
+            exec_us_mean: (exec_s * 1e6).max(1_000.0) as u64,
+            class,
+        });
+    }
+    for f in &mut out {
+        f.app_mem_mb = app_mem_acc[app_of[f.id.0 as usize] as usize];
+    }
+    out
+}
+
+/// Mean arrival rate per function (events/sec), indexable by FunctionId.
+///
+/// The aggregate splits small:large as ratio:1 (Fig. 3) and each class's
+/// share is distributed across its functions by Zipf rank.
+pub fn per_function_rates(cfg: &SynthConfig) -> Vec<f64> {
+    let r = cfg.small_large_ratio;
+    let small_share = r / (1.0 + r);
+    let class_rate = [
+        cfg.rate_per_sec * small_share,
+        cfg.rate_per_sec * (1.0 - small_share),
+    ];
+    let mut rates = vec![0.0; cfg.n_small + cfg.n_large];
+    for (class_idx, (start, n)) in
+        [(0usize, cfg.n_small), (cfg.n_small, cfg.n_large)].iter().enumerate()
+    {
+        let weights: Vec<f64> =
+            (1..=*n).map(|k| 1.0 / (k as f64).powf(cfg.zipf_s)).collect();
+        let total: f64 = weights.iter().sum();
+        for (j, w) in weights.iter().enumerate() {
+            rates[start + j] = class_rate[class_idx] * w / total;
+        }
+    }
+    rates
+}
+
+/// Precomputed MMPP state intervals: sorted (start_us, is_burst).
+fn burst_schedule(cfg: &SynthConfig, rng: &mut Pcg64) -> Vec<(u64, bool)> {
+    let Some(b) = cfg.burst else { return vec![(0, false)] };
+    let mut sched = Vec::new();
+    let mut t = 0u64;
+    let mut bursting = false;
+    let mut r = rng.fork(0xB0B);
+    while t < cfg.duration_us {
+        sched.push((t, bursting));
+        let mean = if bursting { b.mean_burst_us } else { b.mean_calm_us };
+        let dwell = r.exponential(1.0 / mean as f64).max(1.0) as u64;
+        t = t.saturating_add(dwell);
+        bursting = !bursting;
+    }
+    sched
+}
+
+fn burst_factor_at(sched: &[(u64, bool)], factor: f64, t: u64) -> f64 {
+    // Binary search the last interval starting <= t.
+    let idx = sched.partition_point(|&(s, _)| s <= t).saturating_sub(1);
+    if sched[idx].1 {
+        factor
+    } else {
+        1.0
+    }
+}
+
+const DAY_US: f64 = 86_400_000_000.0;
+
+/// Instantaneous rate multiplier at time t (diurnal × burst overlay).
+fn rate_modulation(cfg: &SynthConfig, sched: &[(u64, bool)], t: u64) -> f64 {
+    let diurnal = 1.0
+        + cfg.diurnal_amplitude
+            * (2.0 * std::f64::consts::PI * (t as f64) / DAY_US).sin();
+    let burst = cfg
+        .burst
+        .map(|b| burst_factor_at(sched, b.factor, t))
+        .unwrap_or(1.0);
+    diurnal * burst
+}
+
+/// Thinned non-homogeneous Poisson arrivals for one function.
+fn gen_arrivals(
+    cfg: &SynthConfig,
+    f: &FunctionProfile,
+    lambda_mean: f64,
+    bursts: &[(u64, bool)],
+    rng: &mut Pcg64,
+    out: &mut Vec<Invocation>,
+) {
+    if lambda_mean <= 0.0 {
+        return;
+    }
+    // Upper envelope for thinning.
+    let burst_max = cfg.burst.map(|b| b.factor).unwrap_or(1.0);
+    let lambda_max = lambda_mean * (1.0 + cfg.diurnal_amplitude) * burst_max;
+    let mut t = 0.0f64; // seconds
+    let horizon_s = cfg.duration_us as f64 / 1e6;
+    loop {
+        t += rng.exponential(lambda_max);
+        if t >= horizon_s {
+            break;
+        }
+        let t_us = (t * 1e6) as u64;
+        let accept =
+            rate_modulation(cfg, bursts, t_us) * lambda_mean / lambda_max;
+        if rng.f64() < accept {
+            let jitter = rng.lognormal(0.0, cfg.exec_jitter_sigma);
+            let exec_us = ((f.exec_us_mean as f64) * jitter).max(1_000.0) as u64;
+            out.push(Invocation { t_us, func: f.id, exec_us });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile;
+
+    fn small_cfg() -> SynthConfig {
+        SynthConfig {
+            n_small: 40,
+            n_large: 10,
+            duration_us: 600_000_000, // 10 min
+            rate_per_sec: 30.0,
+            ..SynthConfig::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = small_cfg();
+        let a = synthesize(&cfg);
+        let b = synthesize(&cfg);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!((x.t_us, x.func, x.exec_us), (y.t_us, y.func, y.exec_us));
+        }
+    }
+
+    #[test]
+    fn different_seed_different_trace() {
+        let cfg = small_cfg();
+        let a = synthesize(&cfg);
+        let b = synthesize(&SynthConfig { seed: 43, ..cfg });
+        assert_ne!(
+            a.events.iter().map(|e| e.t_us).collect::<Vec<_>>(),
+            b.events.iter().map(|e| e.t_us).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn events_sorted_and_in_horizon() {
+        let cfg = small_cfg();
+        let t = synthesize(&cfg);
+        assert!(t.is_sorted());
+        assert!(t.events.iter().all(|e| e.t_us < cfg.duration_us));
+        assert!(!t.events.is_empty());
+    }
+
+    #[test]
+    fn volume_close_to_rate_times_duration() {
+        let cfg = small_cfg();
+        let t = synthesize(&cfg);
+        let expected = cfg.rate_per_sec * cfg.duration_us as f64 / 1e6;
+        let got = t.events.len() as f64;
+        // Diurnal modulation over a fraction of a day biases the sin term
+        // upward/downward a bit; allow 25%.
+        assert!(
+            (got - expected).abs() / expected < 0.25,
+            "got {got}, expected ~{expected}"
+        );
+    }
+
+    #[test]
+    fn class_ratio_matches_config() {
+        let cfg = SynthConfig {
+            duration_us: 1_800_000_000,
+            rate_per_sec: 60.0,
+            ..small_cfg()
+        };
+        let t = synthesize(&cfg);
+        let (s, l) = t.class_counts();
+        let ratio = s as f64 / l as f64;
+        assert!(
+            (ratio - cfg.small_large_ratio).abs() / cfg.small_large_ratio < 0.2,
+            "ratio {ratio} vs {}",
+            cfg.small_large_ratio
+        );
+    }
+
+    #[test]
+    fn memory_ranges_respected() {
+        let t = synthesize(&small_cfg());
+        for f in &t.functions {
+            match f.class {
+                SizeClass::Small => assert!((30..=60).contains(&f.mem_mb)),
+                SizeClass::Large => assert!((300..=400).contains(&f.mem_mb)),
+            }
+            assert!(f.app_mem_mb >= f.mem_mb);
+        }
+    }
+
+    #[test]
+    fn cold_start_p85_near_paper_fig5() {
+        // Use many functions so the percentile is stable.
+        let cfg = SynthConfig { n_small: 2000, n_large: 2000, ..small_cfg() };
+        let t = synthesize(&SynthConfig { rate_per_sec: 1.0, ..cfg });
+        let small: Vec<f64> = t
+            .functions
+            .iter()
+            .filter(|f| f.class == SizeClass::Small)
+            .map(|f| f.cold_start_us as f64 / 1e6)
+            .collect();
+        let large: Vec<f64> = t
+            .functions
+            .iter()
+            .filter(|f| f.class == SizeClass::Large)
+            .map(|f| f.cold_start_us as f64 / 1e6)
+            .collect();
+        let p85s = percentile(&small, 85.0);
+        let p85l = percentile(&large, 85.0);
+        assert!((8.0..=20.0).contains(&p85s), "small p85 {p85s}");
+        assert!((60.0..=150.0).contains(&p85l), "large p85 {p85l}");
+        assert!(p85l > 3.0 * p85s);
+    }
+
+    #[test]
+    fn zipf_popularity_skew_within_class() {
+        let cfg = small_cfg();
+        let t = synthesize(&cfg);
+        let mut counts = vec![0u64; t.functions.len()];
+        for e in &t.events {
+            counts[e.func.0 as usize] += 1;
+        }
+        // Function 0 is the rank-1 small function; it must dominate the
+        // median small function.
+        let mut small_counts: Vec<u64> = counts[..cfg.n_small].to_vec();
+        small_counts.sort_unstable();
+        let median = small_counts[cfg.n_small / 2];
+        assert!(counts[0] > median * 2, "rank-1 {} median {median}", counts[0]);
+    }
+
+    #[test]
+    fn burst_overlay_increases_volume() {
+        let base = SynthConfig { diurnal_amplitude: 0.0, ..small_cfg() };
+        let calm = synthesize(&base);
+        let bursty = synthesize(&SynthConfig {
+            burst: Some(BurstConfig {
+                factor: 6.0,
+                mean_calm_us: 60_000_000,
+                mean_burst_us: 60_000_000,
+            }),
+            ..base
+        });
+        // Expected uplift: half the time at 6x => ~3.5x; require >1.5x.
+        assert!(
+            bursty.events.len() as f64 > calm.events.len() as f64 * 1.5,
+            "calm {} bursty {}",
+            calm.events.len(),
+            bursty.events.len()
+        );
+    }
+
+    #[test]
+    fn chaining_adds_children_and_stays_sorted() {
+        let base = small_cfg();
+        let plain = synthesize(&base);
+        let chained = synthesize(&SynthConfig {
+            chains: Some(ChainConfig { prob: 0.3, max_depth: 3 }),
+            ..base.clone()
+        });
+        assert!(chained.is_sorted());
+        // Expected uplift: ~ prob/(1-prob) extra events per root.
+        let uplift = chained.events.len() as f64 / plain.events.len() as f64;
+        assert!(
+            (1.2..=1.8).contains(&uplift),
+            "uplift {uplift} (plain {}, chained {})",
+            plain.events.len(),
+            chained.events.len()
+        );
+        assert!(chained.events.iter().all(|e| e.t_us < base.duration_us));
+    }
+
+    #[test]
+    fn chaining_is_deterministic() {
+        let cfg = SynthConfig {
+            chains: Some(ChainConfig::default()),
+            ..small_cfg()
+        };
+        let a = synthesize(&cfg);
+        let b = synthesize(&cfg);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!((x.t_us, x.func), (y.t_us, y.func));
+        }
+    }
+
+    #[test]
+    fn chains_cross_classes_sometimes() {
+        let cfg = SynthConfig {
+            chains: Some(ChainConfig { prob: 0.5, max_depth: 2 }),
+            ..small_cfg()
+        };
+        let plain = synthesize(&SynthConfig { chains: None, ..cfg.clone() });
+        let chained = synthesize(&cfg);
+        let (_, l_plain) = plain.class_counts();
+        let (_, l_chained) = chained.class_counts();
+        // Cross-class chaining must add large-class invocations too.
+        assert!(l_chained > l_plain, "large {l_plain} -> {l_chained}");
+    }
+
+    #[test]
+    fn stress_preset_hits_paper_volume() {
+        // Don't generate the full 4.5M-event trace here (bench does);
+        // just validate the arithmetic.
+        let cfg = SynthConfig::stress();
+        let expected = cfg.rate_per_sec * cfg.duration_us as f64 / 1e6;
+        assert!((4_000_000.0..=5_000_000.0).contains(&expected));
+    }
+
+    #[test]
+    fn exec_durations_jitter_around_mean() {
+        let t = synthesize(&small_cfg());
+        let f0 = &t.functions[0];
+        let xs: Vec<f64> = t
+            .events
+            .iter()
+            .filter(|e| e.func == f0.id)
+            .map(|e| e.exec_us as f64)
+            .collect();
+        assert!(xs.len() > 10);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let rel = (mean - f0.exec_us_mean as f64).abs() / f0.exec_us_mean as f64;
+        assert!(rel < 0.35, "rel {rel}");
+    }
+}

@@ -1,0 +1,13 @@
+//! From-scratch substrates: PRNG + distributions, descriptive statistics,
+//! JSON reader/writer, and a randomized property-test driver.
+//!
+//! These exist because the build environment is fully offline (only the
+//! `xla` crate closure is vendored); see the crate-level docs. Each module
+//! is small, audited, and unit-tested — they are substrates of the
+//! reproduction, not incidental glue.
+
+pub mod fxhash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,299 @@
+//! Descriptive statistics: exact percentiles, streaming moments, EWMA,
+//! histograms, and z-score outlier filtering — the numerical substrate for
+//! the workload analysis (paper §2.5) and the metrics pipeline.
+
+/// Exact percentile over a sample set (linear interpolation, like
+/// `numpy.percentile(..., method="linear")`). Sorts a copy: analysis-path
+/// only, not for the request hot path.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of empty sample set");
+    assert!((0.0..=100.0).contains(&p), "p out of range: {p}");
+    let mut xs: Vec<f64> = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&xs, p)
+}
+
+/// Percentile over an already-sorted slice (no allocation).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// The standard percentile grid used by the paper's Figures 2, 4 and 5.
+pub const PCTL_GRID: [f64; 13] = [
+    1.0, 5.0, 10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0, 85.0, 95.0, 99.0,
+];
+
+/// Evaluate a whole percentile curve in one sort.
+pub fn percentile_curve(samples: &[f64], grid: &[f64]) -> Vec<(f64, f64)> {
+    let mut xs: Vec<f64> = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid.iter().map(|&p| (p, percentile_sorted(&xs, p))).collect()
+}
+
+/// Streaming mean/variance (Welford). O(1) memory, numerically stable.
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exponentially-weighted moving average — the coordinator's *online*
+/// frequency/footprint profiler uses this (paper Fig. 6 "workload
+/// analyzer"): O(1) state per function, recency-weighted.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Drop samples with |z| > `threshold` (the paper's IAT anomaly filter,
+/// §2.5.3). Returns the retained samples.
+pub fn zscore_filter(samples: &[f64], threshold: f64) -> Vec<f64> {
+    if samples.len() < 3 {
+        return samples.to_vec();
+    }
+    let mut m = Moments::new();
+    for &x in samples {
+        m.push(x);
+    }
+    let (mean, std) = (m.mean(), m.std());
+    if std == 0.0 {
+        return samples.to_vec();
+    }
+    samples
+        .iter()
+        .copied()
+        .filter(|x| ((x - mean) / std).abs() <= threshold)
+        .collect()
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to the
+/// edge bins. Used for the footprint distribution (Fig. 2) and as the
+/// bench harness's latency sketch.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins], count: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = if x <= self.lo {
+            0
+        } else if x >= self.hi {
+            n - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize
+        };
+        self.bins[idx.min(n - 1)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Approximate quantile from the binned CDF (bin-midpoint convention).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        let width = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.lo + width * (i as f64 + 0.5);
+            }
+        }
+        self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 85.0) - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn moments_match_direct_computation() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.5).collect();
+        let mut m = Moments::new();
+        for &x in &xs {
+            m.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((m.mean() - mean).abs() < 1e-9);
+        assert!((m.variance() - var).abs() < 1e-6);
+        assert_eq!(m.min(), 0.0);
+        assert_eq!(m.max(), 499.5);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..100 {
+            e.push(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_first_sample_is_value() {
+        let mut e = Ewma::new(0.1);
+        assert_eq!(e.push(42.0), 42.0);
+    }
+
+    #[test]
+    fn zscore_removes_outlier() {
+        let mut xs = vec![1.0; 50];
+        xs.push(1000.0);
+        let kept = zscore_filter(&xs, 3.0);
+        assert_eq!(kept.len(), 50);
+        assert!(kept.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn zscore_keeps_uniform_data() {
+        let xs = vec![2.0, 2.1, 1.9, 2.05, 1.95];
+        assert_eq!(zscore_filter(&xs, 3.0).len(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_roughly_match_exact() {
+        let xs: Vec<f64> = (0..10_000).map(|i| i as f64 / 100.0).collect();
+        let mut h = Histogram::new(0.0, 100.0, 1000);
+        for &x in &xs {
+            h.push(x);
+        }
+        let q50 = h.quantile(0.5);
+        assert!((q50 - 50.0).abs() < 0.5, "q50 {q50}");
+        let q99 = h.quantile(0.99);
+        assert!((q99 - 99.0).abs() < 0.5, "q99 {q99}");
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(50.0);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[9], 1);
+    }
+}

@@ -1,0 +1,123 @@
+//! Integration: coordinator components working together — analyzer-driven
+//! placement, multi-partition configurations, per-pool policy mixes, the
+//! Figure-1 pathologies at scale, and the TTL reaper extension.
+
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::{Balancer, Dispatcher, PartitionSpec};
+use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use kiss_faas::trace::SizeClass;
+
+fn workload(seed: u64) -> SynthConfig {
+    SynthConfig {
+        seed,
+        n_small: 60,
+        n_large: 10,
+        duration_us: 600_000_000,
+        rate_per_sec: 30.0,
+        ..kiss_faas::experiments::paper_workload()
+    }
+}
+
+#[test]
+fn online_analyzer_learns_the_workload() {
+    let t = synthesize(&workload(3));
+    let mut b = Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+    run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory);
+    // The analyzer saw every function and can estimate rates for hot ones.
+    assert_eq!(b.analyzer.functions_seen(), t.functions.len());
+    let hot = kiss_faas::trace::FunctionId(0); // rank-1 small function
+    let rate = b.analyzer.rate_per_sec(hot).expect("hot function has a rate");
+    assert!(rate > 0.5, "rank-1 rate {rate}");
+    // And the footprint histogram exposes the small/large valley.
+    let th = b.analyzer.suggest_threshold_mb(3).expect("bimodal workload");
+    assert!((61..=300).contains(&th), "suggested threshold {th}");
+}
+
+#[test]
+fn mixed_policies_per_pool() {
+    // KiSS's "policy independence" structurally: each pool can run its
+    // own policy, and the run completes with invariants intact.
+    let t = synthesize(&workload(4));
+    for (sp, lp) in [
+        (PolicyKind::Lru, PolicyKind::GreedyDual),
+        (PolicyKind::GreedyDual, PolicyKind::Freq),
+        (PolicyKind::Freq, PolicyKind::Lru),
+    ] {
+        let mut b = Balancer::kiss(4 * 1024, 0.8, 200, sp, lp);
+        let r = run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory);
+        assert!(r.is_consistent());
+        assert_eq!(b.pool(0).policy_name(), sp.label());
+        assert_eq!(b.pool(1).policy_name(), lp.label());
+        b.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn three_tier_partition_runs_end_to_end() {
+    // The paper's §3.3 extensibility claim: more pools as workloads
+    // evolve. Add a "medium" tier and verify traffic lands in all three.
+    let t = synthesize(&workload(5));
+    let mut b = Balancer::new(
+        6 * 1024,
+        vec![
+            PartitionSpec { name: "small", frac: 0.6, max_mb: 100, policy: PolicyKind::Lru },
+            PartitionSpec { name: "medium", frac: 0.2, max_mb: 300, policy: PolicyKind::Lru },
+            PartitionSpec {
+                name: "large",
+                frac: 0.2,
+                max_mb: u32::MAX,
+                policy: PolicyKind::GreedyDual,
+            },
+        ],
+    );
+    let r = run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory);
+    assert!(r.is_consistent());
+    // Small (30-60 MB) -> pool 0; large (300-400) -> pool 2.
+    let small = t.functions.iter().find(|f| f.class == SizeClass::Small).unwrap();
+    let large = t.functions.iter().find(|f| f.class == SizeClass::Large).unwrap();
+    assert_eq!(b.route(small), 0);
+    assert_eq!(b.route(large), 2);
+    b.check_invariants().unwrap();
+}
+
+#[test]
+fn figure1a_cascading_displacement_quantified() {
+    // Figure 1(a): one large admission in a unified pool displaces MANY
+    // small containers. Quantify: evictions per large admission.
+    let t = synthesize(&workload(6));
+    let mut base = Balancer::baseline(2 * 1024, PolicyKind::Lru);
+    run_trace_with(&t, &mut base, InitOccupancy::HoldsMemory);
+    let base_evictions = base.evictions();
+
+    let mut kiss = Balancer::kiss(2 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+    run_trace_with(&t, &mut kiss, InitOccupancy::HoldsMemory);
+    // Partitioning prevents cross-class displacement; total evictions in
+    // the small pool should drop relative to the unified pool's churn.
+    let small_pool_evictions = kiss.pool(0).evictions;
+    assert!(
+        small_pool_evictions < base_evictions,
+        "kiss small-pool {} vs baseline {}",
+        small_pool_evictions,
+        base_evictions
+    );
+}
+
+#[test]
+fn ttl_reaper_integrates_with_live_pool() {
+    // Extension feature: periodic TTL reaping during a simulation-like
+    // drive frees idle memory without breaking invariants.
+    let t = synthesize(&workload(7));
+    let mut b = Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+    run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory);
+    let idle_before: usize = b.pools().iter().map(|p| p.idle_count()).sum();
+    assert!(idle_before > 0);
+    // Reap half the trace horizon, then everything.
+    let reaped_half = b.expire_idle_before(t.duration_us() / 2);
+    b.check_invariants().unwrap();
+    let reaped_rest = b.expire_idle_before(u64::MAX);
+    b.check_invariants().unwrap();
+    assert_eq!(reaped_half + reaped_rest, idle_before);
+    assert_eq!(b.pools().iter().map(|p| p.idle_count()).sum::<usize>(), 0);
+    assert!(b.occupancy().iter().all(|&(_, _)| true));
+}

@@ -1,0 +1,86 @@
+//! Integration: the experiment registry end-to-end (reduced scales) and
+//! the CLI binary surface.
+
+use kiss_faas::experiments::{self, stress};
+
+#[test]
+fn stress_reduced_scale_matches_paper_shape() {
+    // 1% of the paper's 4-5M invocations: ~45k events, fast.
+    let (kiss, base) = stress::stress(10, 0.01, 7);
+    assert!(kiss.total_invocations > 20_000);
+    assert_eq!(kiss.total_invocations, base.total_invocations);
+    // §6.5 headline: KiSS lifts the warm hit rate under extreme load.
+    assert!(
+        kiss.hit_rate_pct > base.hit_rate_pct,
+        "kiss {:.2}% vs base {:.2}%",
+        kiss.hit_rate_pct,
+        base.hit_rate_pct
+    );
+    let table = stress::render(&kiss, &base);
+    assert!(table.contains("kiss-80-20") && table.contains("baseline"));
+}
+
+#[test]
+fn workload_experiments_run_via_registry() {
+    // fig2..fig5 are cheap (one synthesis + analysis each).
+    for name in ["fig2", "fig3", "fig4", "fig5"] {
+        let out = experiments::run_by_name(name, 1.0).unwrap();
+        assert!(out.contains("##"), "{name}: {out}");
+    }
+}
+
+#[test]
+fn registry_rejects_unknown() {
+    assert!(experiments::run_by_name("fig1", 1.0).is_none());
+    assert!(experiments::run_by_name("", 1.0).is_none());
+}
+
+#[test]
+fn cli_binary_simulate_and_trace() {
+    // Drive the actual binary (debug build) through a tiny simulation and
+    // a trace export, asserting on its stdout.
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe)
+        .args([
+            "simulate", "--mem-gb", "2", "--duration-s", "120", "--rate", "20",
+            "--seed", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("coldstart%"), "{stdout}");
+    assert!(stdout.contains("overall"), "{stdout}");
+
+    let dir = std::env::temp_dir().join(format!("kiss-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = dir.join("t");
+    let out = std::process::Command::new(exe)
+        .args([
+            "trace", "--out", stem.to_str().unwrap(), "--duration-s", "60", "--rate",
+            "10",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(stem.with_extension("events.csv").exists());
+    assert!(stem.with_extension("functions.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_binary_rejects_garbage() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe).args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe)
+        .args(["experiment", "fig99"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe)
+        .args(["simulate", "--policy", "mru"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,138 @@
+//! Integration: the PJRT runtime — compile HLO-text artifacts, verify
+//! golden numerics, and exercise real execution. Requires `make artifacts`
+//! (tests skip gracefully when the artifact directory is absent, so
+//! `cargo test` stays runnable pre-AOT; `make test` always builds
+//! artifacts first).
+
+use std::path::{Path, PathBuf};
+
+use kiss_faas::runtime::{load_manifest, read_f32_bin, Engine};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn load_all_payloads_and_verify_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let names = engine.load_all(&artifacts_dir()).unwrap();
+    assert!(names.len() >= 4, "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("iot_mlp")));
+    assert!(names.iter().any(|n| n.starts_with("analytics_transformer")));
+    // load() already golden-verifies; reaching here means numerics match
+    // the JAX-side outputs for every payload.
+}
+
+#[test]
+fn executes_and_matches_golden_output_exactly_once_more() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let specs = load_manifest(&artifacts_dir()).unwrap();
+    let spec = specs.iter().find(|s| s.name == "iot_mlp_b1").unwrap();
+    engine.load(spec).unwrap();
+    let p = engine.get("iot_mlp_b1").unwrap();
+    let x = read_f32_bin(&spec.golden_input_file).unwrap();
+    let want = read_f32_bin(&spec.golden_output_file).unwrap();
+    let got = p.run(&x).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() <= 1e-5 + 1e-4 * w.abs(), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn batch_variants_agree_row_wise() {
+    // The b8 artifact on 8 copies of the golden row must reproduce the
+    // b1 artifact's output in every row — the batcher relies on this.
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let specs = load_manifest(&artifacts_dir()).unwrap();
+    let b1 = specs.iter().find(|s| s.name == "iot_mlp_b1").unwrap().clone();
+    let b8 = specs.iter().find(|s| s.name == "iot_mlp_b8").unwrap().clone();
+    engine.load(&b1).unwrap();
+    engine.load(&b8).unwrap();
+
+    let row = read_f32_bin(&b1.golden_input_file).unwrap();
+    let out1 = engine.get("iot_mlp_b1").unwrap().run(&row).unwrap();
+
+    let mut batched = Vec::new();
+    for _ in 0..8 {
+        batched.extend_from_slice(&row);
+    }
+    let out8 = engine.get("iot_mlp_b8").unwrap().run(&batched).unwrap();
+    assert_eq!(out8.len(), out1.len() * 8);
+    for r in 0..8 {
+        for (i, &v1) in out1.iter().enumerate() {
+            let v8 = out8[r * out1.len() + i];
+            assert!(
+                (v8 - v1).abs() <= 1e-5 + 1e-4 * v1.abs(),
+                "row {r} elem {i}: {v8} vs {v1}"
+            );
+        }
+    }
+}
+
+#[test]
+fn run_rejects_wrong_input_length() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let specs = load_manifest(&artifacts_dir()).unwrap();
+    let spec = specs.iter().find(|s| s.name == "iot_mlp_b1").unwrap();
+    engine.load(spec).unwrap();
+    let p = engine.get("iot_mlp_b1").unwrap();
+    assert!(p.run(&[0.0; 3]).is_err());
+}
+
+#[test]
+fn compile_fresh_reports_cost_and_is_isolated() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let specs = load_manifest(&artifacts_dir()).unwrap();
+    let spec = specs.iter().find(|s| s.name == "iot_mlp_b1").unwrap();
+    let a = engine.compile_fresh(spec).unwrap();
+    let b = engine.compile_fresh(spec).unwrap();
+    assert!(a.compile_time.as_micros() > 0);
+    // Fresh compiles are independent executables; both run.
+    let x = read_f32_bin(&spec.golden_input_file).unwrap();
+    let ya = a.run(&x).unwrap();
+    let yb = b.run(&x).unwrap();
+    assert_eq!(ya, yb);
+}
+
+#[test]
+fn transformer_payload_runs_and_is_finite() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let specs = load_manifest(&artifacts_dir()).unwrap();
+    let spec = specs
+        .iter()
+        .find(|s| s.name == "analytics_transformer_b1")
+        .unwrap();
+    engine.load(spec).unwrap();
+    let p = engine.get("analytics_transformer_b1").unwrap();
+    let x = vec![0.25f32; spec.input_len()];
+    let y = p.run(&x).unwrap();
+    assert_eq!(y.len(), spec.output_len());
+    assert!(y.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,182 @@
+//! Integration: the live serving path — EdgeNode over real PJRT
+//! executables, the dynamic batcher, and the TCP server. Skips when
+//! artifacts are missing (run `make artifacts`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+use kiss_faas::config::SimConfig;
+use kiss_faas::metrics::RecordKind;
+use kiss_faas::serve::node::EdgeNode;
+use kiss_faas::serve::server::Server;
+use kiss_faas::serve::Batcher;
+use kiss_faas::trace::{FunctionId, FunctionProfile, SizeClass};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn profile(mem_mb: u32, class: SizeClass) -> FunctionProfile {
+    FunctionProfile {
+        id: FunctionId(0),
+        app_id: 0,
+        mem_mb,
+        app_mem_mb: mem_mb,
+        cold_start_us: 0,
+        warm_start_us: 0,
+        exec_us_mean: 0,
+        class,
+    }
+}
+
+#[test]
+fn cold_then_warm_invocations_with_real_inference() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = SimConfig::edge_default(1024);
+    let mut node = EdgeNode::new(&cfg, &artifacts_dir()).unwrap();
+    let f = node.deploy(profile(40, SizeClass::Small), "iot_mlp_b1").unwrap();
+
+    let x = vec![0.1f32; 64];
+    let first = node.invoke(f, &x).unwrap();
+    assert_eq!(first.outcome_kind, RecordKind::Miss, "first call cold");
+    assert_eq!(first.output.len(), 16);
+    assert!(first.output.iter().all(|v| v.is_finite()));
+
+    let second = node.invoke(f, &x).unwrap();
+    assert_eq!(second.outcome_kind, RecordKind::Hit, "second call warm");
+    assert_eq!(second.output, first.output, "same input, same model, same output");
+    // Warm path skips compilation: significantly faster.
+    assert!(
+        second.latency < first.latency,
+        "warm {:?} !< cold {:?}",
+        second.latency,
+        first.latency
+    );
+    assert_eq!(node.report.overall.hits, 1);
+    assert_eq!(node.report.overall.misses, 1);
+}
+
+#[test]
+fn node_drops_when_memory_exhausted() {
+    if !have_artifacts() {
+        return;
+    }
+    // 100 MB node: the 350 MB transformer function can never be placed.
+    let cfg = SimConfig::edge_default(100);
+    let mut node = EdgeNode::new(&cfg, &artifacts_dir()).unwrap();
+    let f = node
+        .deploy(profile(350, SizeClass::Large), "analytics_transformer_b1")
+        .unwrap();
+    let r = node.invoke(f, &vec![0.0f32; 128 * 256]).unwrap();
+    assert_eq!(r.outcome_kind, RecordKind::Drop);
+    assert!(r.output.is_empty());
+    assert_eq!(node.report.overall.drops, 1);
+}
+
+#[test]
+fn batched_invocation_matches_singles() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = SimConfig::edge_default(2048);
+    let mut node = EdgeNode::new(&cfg, &artifacts_dir()).unwrap();
+    let f = node.deploy(profile(40, SizeClass::Small), "iot_mlp_b1").unwrap();
+    assert_eq!(node.batch_sizes(f), vec![1, 8]);
+
+    // 8 distinct requests through the batcher -> one b8 call.
+    let mut batcher = Batcher::new(node.batch_sizes(f));
+    let inputs: Vec<Vec<f32>> = (0..8)
+        .map(|i| (0..64).map(|j| ((i * 64 + j) as f32).sin()).collect())
+        .collect();
+    for x in &inputs {
+        batcher.push(x.clone());
+    }
+    assert!(batcher.should_drain());
+    let batches = batcher.drain();
+    assert_eq!(batches.len(), 1);
+    let (bsz, packed) = &batches[0];
+    assert_eq!(*bsz, 8);
+    let batched_out = node.invoke_batch(f, packed, 8).unwrap();
+    assert_eq!(batched_out.output.len(), 8 * 16);
+
+    // Compare with singles.
+    for (i, x) in inputs.iter().enumerate() {
+        let single = node.invoke(f, x).unwrap();
+        let got = &batched_out.output[i * 16..(i + 1) * 16];
+        for (a, b) in got.iter().zip(&single.output) {
+            assert!((a - b).abs() <= 1e-5 + 1e-4 * b.abs(), "row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let mut server = Server::start(
+        move || {
+            let cfg = SimConfig::edge_default(1024);
+            let mut node = EdgeNode::new(&cfg, &dir)?;
+            node.deploy(profile(40, SizeClass::Small), "iot_mlp_b1")?;
+            Ok(node)
+        },
+        0,
+    )
+    .unwrap();
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Cold invoke.
+    let csv: Vec<String> = (0..64).map(|i| format!("{}", i as f32 * 0.01)).collect();
+    writeln!(stream, "INVOKE 0 {}", csv.join(",")).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK miss"), "{line}");
+
+    // Warm invoke.
+    writeln!(stream, "INVOKE 0 {}", csv.join(",")).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK hit"), "{line}");
+
+    // Stats reflect one miss + one hit.
+    writeln!(stream, "STATS").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("STATS {"), "{line}");
+    assert!(line.contains("\"hits\":1"), "{line}");
+    assert!(line.contains("\"misses\":1"), "{line}");
+
+    // Unknown command errors but keeps the connection.
+    writeln!(stream, "BOGUS").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+
+    writeln!(stream, "QUIT").unwrap();
+    server.stop();
+}
+
+#[test]
+fn unknown_payload_rejected_at_deploy() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = SimConfig::edge_default(1024);
+    let mut node = EdgeNode::new(&cfg, &artifacts_dir()).unwrap();
+    assert!(node.deploy(profile(40, SizeClass::Small), "nonexistent_b1").is_err());
+}

@@ -1,0 +1,131 @@
+//! Integration: the discrete-event simulator driving both dispatchers on
+//! real synthesized workloads — determinism, invariants, and the paper's
+//! qualitative orderings.
+
+use kiss_faas::config::SimConfig;
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::Balancer;
+use kiss_faas::experiments::paper_workload;
+use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+
+fn workload() -> SynthConfig {
+    SynthConfig {
+        seed: 99,
+        n_small: 80,
+        n_large: 10,
+        duration_us: 900_000_000, // 15 min
+        rate_per_sec: 30.0,
+        ..paper_workload()
+    }
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let t = synthesize(&workload());
+    let run = || {
+        let mut b = Balancer::kiss(6 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.overall.hits, b.overall.hits);
+    assert_eq!(a.overall.misses, b.overall.misses);
+    assert_eq!(a.overall.drops, b.overall.drops);
+    assert_eq!(a.overall.exec_us, b.overall.exec_us);
+}
+
+#[test]
+fn invariants_hold_after_full_run_all_policies_both_modes() {
+    let t = synthesize(&workload());
+    for kind in PolicyKind::ALL {
+        for occ in [InitOccupancy::LatencyOnly, InitOccupancy::HoldsMemory] {
+            let mut kiss = Balancer::kiss(4 * 1024, 0.8, 200, kind, kind);
+            let r = run_trace_with(&t, &mut kiss, occ);
+            assert!(r.is_consistent(), "{kind:?}/{occ:?}");
+            kiss.check_invariants().unwrap();
+            assert_eq!(
+                r.overall.total_accesses(),
+                t.events.len() as u64,
+                "conservation under {kind:?}/{occ:?}"
+            );
+
+            let mut base = Balancer::baseline(4 * 1024, kind);
+            let r = run_trace_with(&t, &mut base, occ);
+            assert!(r.is_consistent());
+            base.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn more_memory_never_hurts_cold_starts_much() {
+    // Monotonicity sanity: cold-start% at 16 GB must not exceed 2 GB's.
+    let t = synthesize(&workload());
+    let run_at = |mb: u64| {
+        let mut b = Balancer::kiss(mb, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory)
+            .overall
+            .cold_start_pct()
+    };
+    assert!(run_at(16 * 1024) <= run_at(2 * 1024) + 1.0);
+}
+
+#[test]
+fn holds_memory_is_strictly_harsher() {
+    // Init-occupancy ablation: holding memory during init can only add
+    // pressure — drops must be >= the latency-only model's.
+    let t = synthesize(&workload());
+    let drops = |occ| {
+        let mut b = Balancer::baseline(2 * 1024, PolicyKind::Lru);
+        run_trace_with(&t, &mut b, occ).overall.drops
+    };
+    assert!(drops(InitOccupancy::HoldsMemory) >= drops(InitOccupancy::LatencyOnly));
+}
+
+#[test]
+fn kiss_beats_baseline_on_the_edge_node() {
+    // The headline claim on a fresh (non-experiment) workload: KiSS
+    // reduces overall cold starts on a memory-constrained node.
+    let t = synthesize(&workload());
+    let mut kiss = Balancer::kiss(3 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+    let rk = run_trace_with(&t, &mut kiss, InitOccupancy::HoldsMemory);
+    let mut base = Balancer::baseline(3 * 1024, PolicyKind::Lru);
+    let rb = run_trace_with(&t, &mut base, InitOccupancy::HoldsMemory);
+    assert!(
+        rk.overall.cold_start_pct() < rb.overall.cold_start_pct(),
+        "kiss {:.1}% vs baseline {:.1}%",
+        rk.overall.cold_start_pct(),
+        rb.overall.cold_start_pct()
+    );
+}
+
+#[test]
+fn config_to_simulation_end_to_end() {
+    // TOML config -> balancer -> simulation, the full production path.
+    let cfg = SimConfig::from_toml_str(
+        r#"
+        [node]
+        mem_mb = 4096
+        [kiss]
+        small_frac = 0.8
+        threshold_mb = 200
+        small_policy = "gd"
+        large_policy = "lru"
+        [trace]
+        seed = 5
+        n_small = 40
+        n_large = 6
+        duration_s = 300
+        rate_per_sec = 20.0
+        "#,
+    )
+    .unwrap();
+    let t = synthesize(&cfg.synth);
+    let mut b = cfg.build_balancer();
+    let r = run_trace_with(&t, &mut b, InitOccupancy::HoldsMemory);
+    assert!(r.overall.total_accesses() > 1_000);
+    assert!(r.is_consistent());
+    assert_eq!(b.pool(0).policy_name(), "gd");
+    assert_eq!(b.pool(1).policy_name(), "lru");
+}

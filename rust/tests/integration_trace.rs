@@ -1,0 +1,128 @@
+//! Integration: trace synthesis ⊕ persistence ⊕ analysis at realistic scale.
+
+use kiss_faas::analysis;
+use kiss_faas::trace::synth::{synthesize, BurstConfig, SynthConfig};
+use kiss_faas::trace::{loader, SizeClass};
+
+fn workload() -> SynthConfig {
+    SynthConfig {
+        seed: 1234,
+        n_small: 150,
+        n_large: 30,
+        duration_us: 3_600_000_000, // 1 h
+        rate_per_sec: 80.0,
+        ..SynthConfig::default()
+    }
+}
+
+#[test]
+fn hour_scale_trace_is_well_formed() {
+    let t = synthesize(&workload());
+    assert!(t.is_sorted());
+    // ~288k events expected; allow wide band.
+    assert!(t.events.len() > 150_000, "{}", t.events.len());
+    let (s, l) = t.class_counts();
+    assert!(s > l * 3, "small {s} large {l}");
+    // every function id resolves
+    for e in &t.events {
+        let _ = t.profile(e.func);
+    }
+}
+
+#[test]
+fn csv_roundtrip_at_scale() {
+    let t = synthesize(&SynthConfig {
+        duration_us: 600_000_000,
+        ..workload()
+    });
+    let dir = std::env::temp_dir().join(format!("kiss-it-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = dir.join("scale");
+    loader::save(&t, &stem).unwrap();
+    let t2 = loader::load(&stem).unwrap();
+    assert_eq!(t.events.len(), t2.events.len());
+    assert_eq!(t.functions.len(), t2.functions.len());
+    // spot-check a deep event
+    let i = t.events.len() / 2;
+    assert_eq!(t.events[i].t_us, t2.events[i].t_us);
+    assert_eq!(t.events[i].func, t2.events[i].func);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn analysis_pipeline_over_synthesized_trace() {
+    let t = synthesize(&workload());
+
+    // Fig 2 over the edge workload: everything small sits below 225 MB.
+    let fp = analysis::footprint_percentiles(&t, 225.0);
+    assert!(fp.frac_below_cutoff > 0.7);
+
+    // Fig 3: frequency ratio in the paper band.
+    let tr = analysis::invocation_trends(&t);
+    assert!((3.0..=8.0).contains(&tr.mean_ratio), "{}", tr.mean_ratio);
+
+    // Fig 4: large-function IATs at p50 are not wildly worse than small
+    // (the paper: similar or better periodicity per function).
+    let iat = analysis::iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 3.0);
+    let s50 = analysis::curve_at(&iat.small_s, 50.0).unwrap();
+    let l50 = analysis::curve_at(&iat.large_s, 50.0).unwrap();
+    assert!(l50 < s50 * 20.0, "small p50 {s50}s large p50 {l50}s");
+
+    // Fig 5: class separation of cold-start latency.
+    let cs = analysis::coldstart_percentiles(&t);
+    let s85 = analysis::curve_at(&cs.small_s, 85.0).unwrap();
+    let l85 = analysis::curve_at(&cs.large_s, 85.0).unwrap();
+    assert!(l85 > s85);
+}
+
+#[test]
+fn bursty_trace_has_higher_peak_to_mean() {
+    let calm = synthesize(&SynthConfig { diurnal_amplitude: 0.0, ..workload() });
+    let bursty = synthesize(&SynthConfig {
+        diurnal_amplitude: 0.0,
+        burst: Some(BurstConfig {
+            factor: 8.0,
+            mean_calm_us: 120_000_000,
+            mean_burst_us: 20_000_000,
+        }),
+        ..workload()
+    });
+    let peak_mean = |t: &kiss_faas::trace::Trace| {
+        let mins = (t.duration_us() / 60_000_000 + 1) as usize;
+        let mut bins = vec![0u64; mins];
+        for e in &t.events {
+            bins[(e.t_us / 60_000_000) as usize] += 1;
+        }
+        let peak = *bins.iter().max().unwrap() as f64;
+        let mean = bins.iter().sum::<u64>() as f64 / mins as f64;
+        peak / mean
+    };
+    assert!(
+        peak_mean(&bursty) > peak_mean(&calm) * 1.3,
+        "bursty {} calm {}",
+        peak_mean(&bursty),
+        peak_mean(&calm)
+    );
+}
+
+#[test]
+fn per_class_memory_is_bimodal() {
+    let t = synthesize(&workload());
+    let small_max = t
+        .functions
+        .iter()
+        .filter(|f| f.class == SizeClass::Small)
+        .map(|f| f.mem_mb)
+        .max()
+        .unwrap();
+    let large_min = t
+        .functions
+        .iter()
+        .filter(|f| f.class == SizeClass::Large)
+        .map(|f| f.mem_mb)
+        .min()
+        .unwrap();
+    // The paper's edge adaptation: a hard valley between 60 and 300 MB.
+    assert!(small_max <= 60);
+    assert!(large_min >= 300);
+}

@@ -1,0 +1,240 @@
+//! Property-based tests over coordinator invariants (routing, pool
+//! accounting, metrics conservation), using the in-repo randomized
+//! driver `util::prop` (proptest is unavailable offline — see crate docs).
+
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::pool::{Acquire, WarmPool};
+use kiss_faas::coordinator::{Balancer, ContainerId, Dispatcher};
+use kiss_faas::metrics::Report;
+use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use kiss_faas::trace::{FunctionId, FunctionProfile, SizeClass};
+use kiss_faas::util::prop::forall;
+use kiss_faas::util::rng::Pcg64;
+
+fn rand_profile(rng: &mut Pcg64, id: u32) -> FunctionProfile {
+    let large = rng.bernoulli(0.3);
+    let mem_mb = if large {
+        rng.range_u64(300, 400) as u32
+    } else {
+        rng.range_u64(30, 60) as u32
+    };
+    FunctionProfile {
+        id: FunctionId(id),
+        app_id: id,
+        mem_mb,
+        app_mem_mb: mem_mb,
+        cold_start_us: rng.range_u64(100_000, 5_000_000),
+        warm_start_us: rng.range_u64(100, 10_000),
+        exec_us_mean: rng.range_u64(10_000, 500_000),
+        class: if large { SizeClass::Large } else { SizeClass::Small },
+    }
+}
+
+/// Random interleavings of acquire/release against one pool keep every
+/// structural invariant, under every policy.
+#[test]
+fn prop_pool_invariants_under_random_ops() {
+    for kind in PolicyKind::ALL {
+        forall(&format!("pool invariants [{}]", kind.label()), 128, |rng| {
+            let cap = rng.range_u64(256, 4096);
+            let mut pool = WarmPool::new(cap, kind.build());
+            let profiles: Vec<FunctionProfile> =
+                (0..rng.range_u64(1, 12) as u32).map(|i| rand_profile(rng, i)).collect();
+            let mut busy: Vec<ContainerId> = Vec::new();
+            let mut t = 0u64;
+            for _ in 0..rng.range_u64(50, 400) {
+                t += rng.range_u64(1, 10_000);
+                if !busy.is_empty() && rng.bernoulli(0.45) {
+                    let idx = rng.below(busy.len() as u64) as usize;
+                    let id = busy.swap_remove(idx);
+                    pool.release(id, t);
+                } else {
+                    let p = &profiles[rng.below(profiles.len() as u64) as usize];
+                    match pool.try_acquire(p, t) {
+                        Acquire::Hit(id) | Acquire::Cold(id) => busy.push(id),
+                        Acquire::Drop => {}
+                    }
+                }
+                pool.check_invariants().map_err(|e| format!("t={t}: {e}"))?;
+                if pool.used_mb() > cap {
+                    return Err(format!("over capacity at t={t}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// KiSS routing is total, stable, and respects the size threshold.
+#[test]
+fn prop_routing_respects_threshold() {
+    forall("routing threshold", 256, |rng| {
+        let threshold = rng.range_u64(61, 300) as u32;
+        let small_frac = rng.range_f64(0.1, 0.9);
+        let b = Balancer::kiss(8192, small_frac, threshold, PolicyKind::Lru, PolicyKind::Lru);
+        for i in 0..50 {
+            let p = rand_profile(rng, i);
+            let pool = b.route(&p);
+            let expect = usize::from(p.mem_mb >= threshold);
+            if pool != expect {
+                return Err(format!(
+                    "mem {} threshold {threshold} routed to {pool}",
+                    p.mem_mb
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Partition capacities always sum to (approximately) the node total, and
+/// per-pool usage never exceeds its capacity after arbitrary traffic.
+#[test]
+fn prop_partition_capacity_conserved() {
+    forall("capacity conservation", 64, |rng| {
+        let total: u64 = rng.range_u64(1024, 32 * 1024);
+        let frac = rng.range_f64(0.3, 0.9);
+        let mut b = Balancer::kiss(total, frac, 200, PolicyKind::Lru, PolicyKind::GreedyDual);
+        let cap_sum: u64 = b.occupancy().iter().map(|&(_, c)| c).sum();
+        if cap_sum.abs_diff(total) > 1 {
+            return Err(format!("caps {cap_sum} != total {total}"));
+        }
+        let mut t = 0;
+        for i in 0..300u32 {
+            t += rng.range_u64(1, 5_000);
+            let p = rand_profile(rng, i % 9);
+            let _ = b.dispatch(&p, t);
+            for (used, cap) in b.occupancy() {
+                if used > cap {
+                    return Err(format!("pool over capacity: {used}/{cap}"));
+                }
+            }
+        }
+        b.check_invariants().map_err(|e| e)?;
+        Ok(())
+    });
+}
+
+/// Metric conservation: every simulated event lands in exactly one of
+/// hits/misses/drops, and per-class slices sum to the overall.
+#[test]
+fn prop_simulation_conserves_events() {
+    forall("event conservation", 24, |rng| {
+        let synth = SynthConfig {
+            seed: rng.next_u64(),
+            n_small: rng.range_u64(5, 40) as usize,
+            n_large: rng.range_u64(2, 10) as usize,
+            duration_us: 120_000_000,
+            rate_per_sec: rng.range_f64(5.0, 40.0),
+            ..SynthConfig::default()
+        };
+        let trace = synthesize(&synth);
+        let mem = rng.range_u64(512, 8192);
+        let frac = rng.range_f64(0.4, 0.9);
+        let mut b = Balancer::kiss(mem, frac, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let occ = if rng.bernoulli(0.5) {
+            InitOccupancy::HoldsMemory
+        } else {
+            InitOccupancy::LatencyOnly
+        };
+        let r: Report = run_trace_with(&trace, &mut b, occ);
+        if r.overall.total_accesses() != trace.events.len() as u64 {
+            return Err(format!(
+                "total {} != events {}",
+                r.overall.total_accesses(),
+                trace.events.len()
+            ));
+        }
+        if !r.is_consistent() {
+            return Err("class slices do not sum to overall".into());
+        }
+        b.check_invariants()?;
+        Ok(())
+    });
+}
+
+/// A KiSS balancer whose threshold routes EVERYTHING to one pool behaves
+/// identically to the baseline with the same policy (the partition is the
+/// only difference between the two dispatchers).
+#[test]
+fn prop_degenerate_kiss_equals_baseline() {
+    forall("degenerate kiss == baseline", 16, |rng| {
+        let synth = SynthConfig {
+            seed: rng.next_u64(),
+            n_small: 20,
+            n_large: 5,
+            duration_us: 120_000_000,
+            rate_per_sec: 20.0,
+            ..SynthConfig::default()
+        };
+        let trace = synthesize(&synth);
+        let mem = rng.range_u64(1024, 4096);
+        // threshold 1 MB: all functions are >= 1 MB, so everything routes
+        // to the large pool, which gets ~100% of memory.
+        let mut kiss =
+            Balancer::kiss(mem, 1e-9, 1, PolicyKind::Lru, PolicyKind::Lru);
+        let mut base = Balancer::baseline(mem, PolicyKind::Lru);
+        let rk = run_trace_with(&trace, &mut kiss, InitOccupancy::HoldsMemory);
+        let rb = run_trace_with(&trace, &mut base, InitOccupancy::HoldsMemory);
+        // The large pool's capacity is (1-1e-9)*mem rounded — identical to
+        // mem, so the reports must match exactly.
+        if rk.overall != rb.overall {
+            return Err(format!("kiss {:?} != baseline {:?}", rk.overall, rb.overall));
+        }
+        Ok(())
+    });
+}
+
+/// GD and Freq policies never evict a container that was just inserted
+/// ahead of a strictly-worse candidate (spot-check of ordering sanity
+/// via the pool API: after two releases, the pop order is deterministic
+/// and stable across runs).
+#[test]
+fn prop_policy_victim_order_is_deterministic() {
+    for kind in PolicyKind::ALL {
+        forall(&format!("victim determinism [{}]", kind.label()), 64, |rng| {
+            let seed = rng.next_u64();
+            let run = |seed: u64| {
+                let mut local = Pcg64::new(seed);
+                let mut pool = WarmPool::new(100_000, kind.build());
+                let profiles: Vec<FunctionProfile> =
+                    (0..8).map(|i| rand_profile(&mut local, i)).collect();
+                let mut order = Vec::new();
+                let mut busy = Vec::new();
+                let mut t = 0;
+                for _ in 0..100 {
+                    t += local.range_u64(1, 1000);
+                    let p = &profiles[local.below(8) as usize];
+                    match pool.try_acquire(p, t) {
+                        Acquire::Hit(id) | Acquire::Cold(id) => busy.push(id),
+                        Acquire::Drop => {}
+                    }
+                    if busy.len() > 3 {
+                        let id = busy.remove(0);
+                        pool.release(id, t);
+                    }
+                }
+                // Evict everything idle; record the order.
+                let huge = FunctionProfile {
+                    id: FunctionId(99),
+                    app_id: 99,
+                    mem_mb: 99_000,
+                    app_mem_mb: 99_000,
+                    cold_start_us: 1,
+                    warm_start_us: 1,
+                    exec_us_mean: 1,
+                    class: SizeClass::Large,
+                };
+                let evictions_before = pool.evictions;
+                let _ = pool.try_acquire(&huge, t + 1);
+                order.push(pool.evictions - evictions_before);
+                order
+            };
+            if run(seed) != run(seed) {
+                return Err(format!("non-deterministic victim order, seed {seed}"));
+            }
+            Ok(())
+        });
+    }
+}
