@@ -198,6 +198,7 @@ fn main() -> anyhow::Result<()> {
                 RecordKind::Hit => "warm",
                 RecordKind::Miss => "cold",
                 RecordKind::Drop => "drop",
+                RecordKind::Offload => "offload",
             }
         );
         if lats.is_empty() {

@@ -2,3 +2,12 @@ import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+# The payload suite needs JAX (and hypothesis); on hosts without it —
+# e.g. the Rust-only CI runner — skip collection instead of erroring at
+# import time so `pytest python` stays green everywhere.
+try:
+    import jax  # noqa: F401
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore_glob = ["tests/*"]

@@ -1,0 +1,114 @@
+//! Cluster-engine benchmarks: event throughput as the node count scales
+//! (the router runs on every arrival, so cluster dispatch must stay in
+//! the same class as single-node dispatch), a router comparison at a
+//! fixed fleet size, and a multi-trial sweep parallelized across
+//! `std::thread` (the embarrassingly-parallel shape the experiment
+//! harness uses for seed replication).
+
+use std::time::{Duration, Instant};
+
+use kiss_faas::bench::{group, Bencher};
+use kiss_faas::experiments::paper_workload;
+use kiss_faas::sim::cluster::{run_cluster, ClusterSpec, NodePolicy, RouterKind};
+use kiss_faas::sim::InitOccupancy;
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+
+const TOTAL_MEM_MB: u64 = 16 * 1024;
+
+fn bench_workload(seed: u64) -> SynthConfig {
+    SynthConfig {
+        seed,
+        n_small: 120,
+        n_large: 16,
+        duration_us: 900_000_000, // 15 min
+        rate_per_sec: 60.0,
+        ..paper_workload()
+    }
+}
+
+fn spec(n: usize, router: RouterKind) -> ClusterSpec {
+    ClusterSpec::homogeneous(n, TOTAL_MEM_MB / n as u64, NodePolicy::kiss_default())
+        .with_router(router)
+        .with_init_occupancy(InitOccupancy::HoldsMemory)
+        .with_cloud(80_000)
+}
+
+fn main() {
+    let trace = synthesize(&bench_workload(17));
+    let n_events = trace.events.len() as f64;
+    println!("trace: {} events, {} functions", trace.events.len(), trace.functions.len());
+
+    group("cluster: event throughput vs node count (16 GB total, least-loaded)");
+    for &n in &[1usize, 2, 4, 8] {
+        let s = spec(n, RouterKind::LeastLoaded);
+        let r = Bencher::new(&format!("cluster/least-loaded/{n}-nodes"))
+            .items_per_iter(n_events)
+            .target(Duration::from_secs(1))
+            .run(|| {
+                std::hint::black_box(run_cluster(&trace, &s));
+            });
+        println!("{r}");
+    }
+
+    group("cluster: router comparison (4 nodes)");
+    for router in [
+        RouterKind::RoundRobin,
+        RouterKind::LeastLoaded,
+        RouterKind::SizeAffinity { small_nodes: 2 },
+        RouterKind::Sticky,
+    ] {
+        let s = spec(4, router);
+        let r = Bencher::new(&format!("cluster/4-nodes/{}", router.label()))
+            .items_per_iter(n_events)
+            .target(Duration::from_secs(1))
+            .run(|| {
+                std::hint::black_box(run_cluster(&trace, &s));
+            });
+        println!("{r}");
+    }
+
+    group("cluster: multi-trial sweep across std::thread (8 seeds, 4 nodes)");
+    let seeds: Vec<u64> = (0..8).map(|i| 100 + i).collect();
+
+    // Serial reference.
+    let t0 = Instant::now();
+    let mut serial_events = 0u64;
+    for &seed in &seeds {
+        let trace = synthesize(&bench_workload(seed));
+        serial_events += trace.events.len() as u64;
+        std::hint::black_box(run_cluster(&trace, &spec(4, RouterKind::LeastLoaded)));
+    }
+    let serial = t0.elapsed();
+
+    // One thread per trial (synthesis + simulation both inside).
+    let t0 = Instant::now();
+    let handles: Vec<_> = seeds
+        .iter()
+        .map(|&seed| {
+            std::thread::spawn(move || {
+                let trace = synthesize(&bench_workload(seed));
+                let report = run_cluster(&trace, &spec(4, RouterKind::LeastLoaded));
+                (trace.events.len() as u64, report.report.overall.cold_start_pct())
+            })
+        })
+        .collect();
+    let mut parallel_events = 0u64;
+    for h in handles {
+        let (events, cold_pct) = h.join().expect("trial thread panicked");
+        parallel_events += events;
+        std::hint::black_box(cold_pct);
+    }
+    let parallel = t0.elapsed();
+    assert_eq!(serial_events, parallel_events, "trials must be deterministic");
+
+    let rate = |events: u64, d: Duration| events as f64 / d.as_secs_f64() / 1e6;
+    println!(
+        "  serial:   {serial_events} events in {serial:?} ({:.2} M events/s)",
+        rate(serial_events, serial)
+    );
+    println!(
+        "  threaded: {parallel_events} events in {parallel:?} ({:.2} M events/s, {:.2}x)",
+        rate(parallel_events, parallel),
+        serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9)
+    );
+}

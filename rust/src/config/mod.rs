@@ -20,6 +20,17 @@
 //! n_large = 40
 //! duration_s = 3600
 //! rate_per_sec = 50.0
+//!
+//! [cluster]
+//! nodes = 4
+//! mem_mb = [4096, 4096, 2048, 2048]   # or a single value; omit to
+//!                                     # replicate node.mem_mb
+//! router = "least-loaded"             # round-robin|least-loaded|
+//!                                     # size-affinity|sticky
+//! small_nodes = 2                     # size-affinity split
+//! fallbacks = 1
+//! cloud_rtt_ms = 80                   # 0 / absent = no cloud tier
+//! policies = ["kiss", "kiss", "baseline", "adaptive"]
 //! ```
 
 pub mod toml;
@@ -29,7 +40,8 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::policy::PolicyKind;
-use crate::coordinator::Balancer;
+use crate::coordinator::{AdaptiveConfig, Balancer};
+use crate::sim::cluster::{CloudTier, ClusterSpec, NodePolicy, NodeSpec, RouterKind};
 use crate::trace::synth::{BurstConfig, SynthConfig};
 
 /// Partitioning mode under test.
@@ -39,6 +51,63 @@ pub enum Mode {
     Baseline,
     /// KiSS partitioning with the small pool's share and size threshold.
     Kiss { small_frac: f64, threshold_mb: u32 },
+}
+
+/// Which memory policy a cluster node runs; the `kiss`/`adaptive`
+/// variants take their parameters from the `[kiss]` section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodePolicyKind {
+    /// Follow the top-level mode (`[kiss]` enabled → KiSS, else baseline).
+    Inherit,
+    Baseline,
+    Kiss,
+    Adaptive,
+}
+
+impl NodePolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "inherit" => Some(Self::Inherit),
+            "baseline" => Some(Self::Baseline),
+            "kiss" => Some(Self::Kiss),
+            "adaptive" => Some(Self::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// `[cluster]` section: the multi-node edge-cluster layer
+/// ([`crate::sim::cluster`]). Absent = single-node simulation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Edge node count.
+    pub nodes: usize,
+    /// Per-node memory (MB): empty = every node replicates `node.mem_mb`;
+    /// one entry = homogeneous; otherwise exactly one entry per node.
+    pub node_mem_mb: Vec<u64>,
+    /// Cluster router. `SizeAffinity { small_nodes: 0 }` means "auto":
+    /// resolved to ⌈nodes/2⌉ small nodes at build time.
+    pub router: RouterKind,
+    /// Fallback nodes tried after the primary drops.
+    pub fallbacks: usize,
+    /// Edge→cloud round-trip (µs); 0 disables the cloud tier.
+    pub cloud_rtt_us: u64,
+    /// Per-node policies: empty = all inherit the top-level mode; one
+    /// entry = homogeneous; otherwise one per node.
+    pub policies: Vec<NodePolicyKind>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 1,
+            node_mem_mb: Vec::new(),
+            router: RouterKind::RoundRobin,
+            fallbacks: 1,
+            cloud_rtt_us: 0,
+            policies: Vec::new(),
+        }
+    }
 }
 
 /// Complete simulation configuration.
@@ -53,6 +122,8 @@ pub struct SimConfig {
     pub large_policy: PolicyKind,
     /// Workload synthesizer parameters.
     pub synth: SynthConfig,
+    /// Multi-node cluster layer; `None` = single node.
+    pub cluster: Option<ClusterConfig>,
 }
 
 /// The paper's size threshold for the edge workload: between the
@@ -76,6 +147,7 @@ impl SimConfig {
             small_policy: PolicyKind::Lru,
             large_policy: PolicyKind::Lru,
             synth: SynthConfig::default(),
+            cluster: None,
         }
     }
 
@@ -98,9 +170,119 @@ impl SimConfig {
         }
     }
 
+    /// Build the [`ClusterSpec`] this config describes — the `[cluster]`
+    /// section, or the N=1 degenerate cluster of the configured node when
+    /// the section is absent (which reproduces single-node results
+    /// exactly; see `tests/integration_cluster.rs`). The init-occupancy
+    /// model follows the same convention as the experiment harness
+    /// (`run_on`): `HoldsMemory` unless `KISS_INIT_LATENCY_ONLY` is set,
+    /// so a degenerate cluster run matches `run_single` on the same
+    /// config.
+    pub fn build_cluster_spec(&self) -> ClusterSpec {
+        let default_cc = ClusterConfig::default();
+        let cc = self.cluster.as_ref().unwrap_or(&default_cc);
+        let n = cc.nodes;
+        let mem_at = |i: usize| -> u64 {
+            match cc.node_mem_mb.len() {
+                0 => self.node_mem_mb,
+                1 => cc.node_mem_mb[0],
+                _ => cc.node_mem_mb[i],
+            }
+        };
+        let (kiss_frac, kiss_threshold) = match self.mode {
+            Mode::Kiss { small_frac, threshold_mb } => (small_frac, threshold_mb),
+            Mode::Baseline => (DEFAULT_SMALL_FRAC, DEFAULT_THRESHOLD_MB),
+        };
+        let inherit = match self.mode {
+            Mode::Baseline => NodePolicy::Baseline { policy: self.small_policy },
+            Mode::Kiss { small_frac, threshold_mb } => NodePolicy::Kiss {
+                small_frac,
+                threshold_mb,
+                small_policy: self.small_policy,
+                large_policy: self.large_policy,
+            },
+        };
+        let policy_at = |i: usize| -> NodePolicy {
+            let kind = match cc.policies.len() {
+                0 => NodePolicyKind::Inherit,
+                1 => cc.policies[0],
+                _ => cc.policies[i],
+            };
+            match kind {
+                NodePolicyKind::Inherit => inherit,
+                NodePolicyKind::Baseline => NodePolicy::Baseline { policy: self.small_policy },
+                NodePolicyKind::Kiss => NodePolicy::Kiss {
+                    small_frac: kiss_frac,
+                    threshold_mb: kiss_threshold,
+                    small_policy: self.small_policy,
+                    large_policy: self.large_policy,
+                },
+                NodePolicyKind::Adaptive => NodePolicy::Adaptive {
+                    cfg: AdaptiveConfig {
+                        initial_frac: kiss_frac,
+                        threshold_mb: kiss_threshold,
+                        ..AdaptiveConfig::default()
+                    },
+                    small_policy: self.small_policy,
+                    large_policy: self.large_policy,
+                },
+            }
+        };
+        let router = match cc.router {
+            RouterKind::SizeAffinity { small_nodes: 0 } => {
+                RouterKind::SizeAffinity { small_nodes: n.div_ceil(2) }
+            }
+            r => r,
+        };
+        ClusterSpec {
+            nodes: (0..n)
+                .map(|i| NodeSpec { mem_mb: mem_at(i), policy: policy_at(i) })
+                .collect(),
+            router,
+            max_fallbacks: cc.fallbacks,
+            cloud: (cc.cloud_rtt_us > 0).then_some(CloudTier { rtt_us: cc.cloud_rtt_us }),
+            init_occupancy: if std::env::var_os("KISS_INIT_LATENCY_ONLY").is_some() {
+                crate::sim::InitOccupancy::LatencyOnly
+            } else {
+                crate::sim::InitOccupancy::HoldsMemory
+            },
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.node_mem_mb == 0 {
             bail!("node.mem_mb must be > 0");
+        }
+        if let Some(c) = &self.cluster {
+            if c.nodes == 0 {
+                bail!("cluster.nodes must be > 0");
+            }
+            if c.node_mem_mb.len() > 1 && c.node_mem_mb.len() != c.nodes {
+                bail!(
+                    "cluster.mem_mb needs 1 or {} entries, got {}",
+                    c.nodes,
+                    c.node_mem_mb.len()
+                );
+            }
+            if c.node_mem_mb.iter().any(|&m| m == 0) {
+                bail!("cluster.mem_mb entries must be > 0");
+            }
+            if c.policies.len() > 1 && c.policies.len() != c.nodes {
+                bail!(
+                    "cluster.policies needs 1 or {} entries, got {}",
+                    c.nodes,
+                    c.policies.len()
+                );
+            }
+            if let RouterKind::SizeAffinity { small_nodes } = c.router {
+                if small_nodes > c.nodes {
+                    bail!(
+                        "cluster.small_nodes {} exceeds node count {}",
+                        small_nodes,
+                        c.nodes
+                    );
+                }
+            }
         }
         if let Mode::Kiss { small_frac, threshold_mb } = self.mode {
             if !(0.0..1.0).contains(&small_frac) || small_frac <= 0.0 {
@@ -214,6 +396,99 @@ impl SimConfig {
             cfg.synth.burst = Some(b);
         }
 
+        if let Some(section) = doc.section("cluster") {
+            let mut cc = ClusterConfig::default();
+            let mut router_name: Option<String> = None;
+            let mut small_nodes: Option<usize> = None;
+            for (key, v) in section {
+                match key.as_str() {
+                    "nodes" => {
+                        cc.nodes =
+                            v.as_u64().ok_or_else(|| anyhow!("cluster.nodes"))? as usize
+                    }
+                    "mem_mb" => {
+                        cc.node_mem_mb = match v {
+                            toml::Value::Arr(items) => items
+                                .iter()
+                                .map(|x| {
+                                    x.as_u64()
+                                        .ok_or_else(|| anyhow!("cluster.mem_mb: bad entry"))
+                                })
+                                .collect::<Result<_>>()?,
+                            other => {
+                                vec![other.as_u64().ok_or_else(|| anyhow!("cluster.mem_mb"))?]
+                            }
+                        }
+                    }
+                    "router" => {
+                        router_name = Some(
+                            v.as_str()
+                                .ok_or_else(|| anyhow!("cluster.router must be a string"))?
+                                .to_string(),
+                        )
+                    }
+                    "small_nodes" => {
+                        small_nodes =
+                            Some(v.as_u64().ok_or_else(|| anyhow!("cluster.small_nodes"))?
+                                as usize)
+                    }
+                    "fallbacks" => {
+                        cc.fallbacks =
+                            v.as_u64().ok_or_else(|| anyhow!("cluster.fallbacks"))? as usize
+                    }
+                    "cloud_rtt_ms" => {
+                        let ms = v.as_f64().ok_or_else(|| anyhow!("cluster.cloud_rtt_ms"))?;
+                        if ms < 0.0 {
+                            bail!("cluster.cloud_rtt_ms must be >= 0");
+                        }
+                        cc.cloud_rtt_us = (ms * 1000.0).round() as u64;
+                    }
+                    "policies" => {
+                        let parse_one = |x: &toml::Value| -> Result<NodePolicyKind> {
+                            let s = x.as_str().ok_or_else(|| {
+                                anyhow!("cluster.policies: strings expected")
+                            })?;
+                            NodePolicyKind::parse(s).ok_or_else(|| {
+                                anyhow!(
+                                    "unknown node policy {s:?} \
+                                     (inherit|baseline|kiss|adaptive)"
+                                )
+                            })
+                        };
+                        cc.policies = match v {
+                            toml::Value::Arr(items) => {
+                                items.iter().map(parse_one).collect::<Result<_>>()?
+                            }
+                            other => vec![parse_one(other)?],
+                        };
+                    }
+                    other => bail!("unknown cluster key: {other}"),
+                }
+            }
+            if let Some(name) = router_name {
+                cc.router = RouterKind::parse(&name, small_nodes.unwrap_or(0)).ok_or_else(
+                    || {
+                        anyhow!(
+                            "unknown cluster.router {name:?} \
+                             (round-robin|least-loaded|size-affinity|sticky)"
+                        )
+                    },
+                )?;
+                if small_nodes.is_some()
+                    && !matches!(cc.router, RouterKind::SizeAffinity { .. })
+                {
+                    bail!(
+                        "cluster.small_nodes only applies to the size-affinity \
+                         router, but router = {name:?}"
+                    );
+                }
+            } else if let Some(k) = small_nodes {
+                // small_nodes without an explicit router implies affinity.
+                cc.router = RouterKind::SizeAffinity { small_nodes: k };
+            }
+            cfg.cluster = Some(cc);
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -231,7 +506,22 @@ impl SimConfig {
                 self.large_policy.label()
             ),
         };
-        format!("{} | node {} MB | seed {}", mode, self.node_mem_mb, self.synth.seed)
+        let base =
+            format!("{} | node {} MB | seed {}", mode, self.node_mem_mb, self.synth.seed);
+        match &self.cluster {
+            Some(c) => format!(
+                "{base} | cluster {}x router {} fallbacks {} cloud {}",
+                c.nodes,
+                c.router.label(),
+                c.fallbacks,
+                if c.cloud_rtt_us > 0 {
+                    format!("{:.1}ms", c.cloud_rtt_us as f64 / 1000.0)
+                } else {
+                    "off".to_string()
+                }
+            ),
+            None => base,
+        }
     }
 }
 
@@ -324,5 +614,100 @@ mod tests {
         let d = SimConfig::edge_default(8192).describe();
         assert!(d.contains("kiss 80-20"), "{d}");
         assert!(d.contains("8192"), "{d}");
+    }
+
+    #[test]
+    fn cluster_toml_roundtrip() {
+        let cfg = SimConfig::from_toml_str(
+            r#"
+            [node]
+            mem_mb = 8192
+            [cluster]
+            nodes = 4
+            mem_mb = [4096, 4096, 2048, 2048]
+            router = "size-affinity"
+            small_nodes = 2
+            fallbacks = 2
+            cloud_rtt_ms = 80
+            policies = ["kiss", "kiss", "baseline", "adaptive"]
+            "#,
+        )
+        .unwrap();
+        let cc = cfg.cluster.as_ref().unwrap();
+        assert_eq!(cc.nodes, 4);
+        assert_eq!(cc.node_mem_mb, vec![4096, 4096, 2048, 2048]);
+        assert_eq!(cc.router, RouterKind::SizeAffinity { small_nodes: 2 });
+        assert_eq!(cc.fallbacks, 2);
+        assert_eq!(cc.cloud_rtt_us, 80_000);
+        assert_eq!(cc.policies.len(), 4);
+        assert_eq!(cc.policies[2], NodePolicyKind::Baseline);
+
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.nodes.len(), 4);
+        assert_eq!(spec.nodes[2].mem_mb, 2048);
+        assert_eq!(spec.nodes[2].policy.label(), "baseline");
+        assert_eq!(spec.nodes[3].policy.label(), "adaptive");
+        assert_eq!(spec.cloud, Some(CloudTier { rtt_us: 80_000 }));
+        let d = cfg.describe();
+        assert!(d.contains("cluster 4x"), "{d}");
+        assert!(d.contains("size-affinity"), "{d}");
+    }
+
+    #[test]
+    fn cluster_defaults_to_degenerate_single_node() {
+        let cfg = SimConfig::edge_default(8192);
+        assert!(cfg.cluster.is_none());
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.nodes.len(), 1);
+        assert_eq!(spec.nodes[0].mem_mb, 8192);
+        assert_eq!(spec.nodes[0].policy.label(), "kiss");
+        assert!(spec.cloud.is_none());
+    }
+
+    #[test]
+    fn cluster_auto_small_nodes_resolves_to_half() {
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 5\nrouter = \"size-affinity\"",
+        )
+        .unwrap();
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.router, RouterKind::SizeAffinity { small_nodes: 3 });
+    }
+
+    #[test]
+    fn cluster_homogeneous_scalars_broadcast() {
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 3\nmem_mb = 2048\npolicies = \"baseline\"",
+        )
+        .unwrap();
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.nodes.len(), 3);
+        assert!(spec.nodes.iter().all(|n| n.mem_mb == 2048));
+        assert!(spec.nodes.iter().all(|n| n.policy.label() == "baseline"));
+    }
+
+    #[test]
+    fn rejects_bad_cluster_configs() {
+        assert!(SimConfig::from_toml_str("[cluster]\nnodes = 0").is_err());
+        assert!(
+            SimConfig::from_toml_str("[cluster]\nnodes = 3\nmem_mb = [1, 2]").is_err(),
+            "mem_mb arity mismatch"
+        );
+        assert!(SimConfig::from_toml_str("[cluster]\nnodes = 2\nmem_mb = 0").is_err());
+        assert!(SimConfig::from_toml_str("[cluster]\nrouter = \"warp\"").is_err());
+        assert!(SimConfig::from_toml_str("[cluster]\npolicies = \"mru\"").is_err());
+        assert!(SimConfig::from_toml_str("[cluster]\ncloud_rtt_ms = -1").is_err());
+        assert!(SimConfig::from_toml_str("[cluster]\nbogus = 1").is_err());
+        assert!(
+            SimConfig::from_toml_str("[cluster]\nnodes = 2\nsmall_nodes = 3").is_err(),
+            "small_nodes beyond node count"
+        );
+        assert!(
+            SimConfig::from_toml_str(
+                "[cluster]\nnodes = 2\nrouter = \"sticky\"\nsmall_nodes = 1"
+            )
+            .is_err(),
+            "small_nodes is dead with a non-affinity router"
+        );
     }
 }

@@ -24,7 +24,7 @@ use super::{Dispatcher, Outcome};
 use crate::trace::FunctionProfile;
 
 /// Rebalancing configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AdaptiveConfig {
     /// Initial small-pool share.
     pub initial_frac: f64,

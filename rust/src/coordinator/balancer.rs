@@ -173,7 +173,7 @@ impl Dispatcher for Balancer {
     }
 
     fn used_mb(&self) -> u64 {
-        // Hot path: no allocation (cf. the default occupancy()-based impl).
+        // Hot path: no allocation — sums pool occupancy directly.
         self.pools.iter().map(|p| p.used_mb()).sum()
     }
 

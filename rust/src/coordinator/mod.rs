@@ -80,12 +80,14 @@ pub trait Dispatcher {
     /// `(used_mb, capacity_mb)` per pool.
     fn occupancy(&self) -> Vec<(u64, u64)>;
 
-    /// Total resident memory (MB) across pools. Allocation-free — called
-    /// on the simulator hot path once per event (see EXPERIMENTS.md §Perf:
-    /// using `occupancy()` here cost ~15% of end-to-end throughput).
-    fn used_mb(&self) -> u64 {
-        self.occupancy().iter().map(|&(u, _)| u).sum()
-    }
+    /// Total resident memory (MB) across pools. Called on the simulator
+    /// hot path once per event, so implementations MUST be allocation-free
+    /// — sum pool occupancy directly instead of going through
+    /// [`Dispatcher::occupancy`] (a former default impl did exactly that,
+    /// building a `Vec` per event; see EXPERIMENTS.md §Perf: ~15% of
+    /// end-to-end throughput). Required, so new dispatchers cannot
+    /// silently inherit the allocating path.
+    fn used_mb(&self) -> u64;
 
     /// Human-readable policy/partition description (reports & logs).
     fn describe(&self) -> String;

@@ -1,0 +1,216 @@
+//! Cluster-scale scenarios — beyond the paper's single node, into the
+//! edge-cloud continuum the title promises:
+//!
+//! * **cluster-scale** — cold-start % as one 16 GB edge tier is split
+//!   across 1..8 KiSS nodes, per router. The N=1 column is exactly the
+//!   paper's single-node configuration (the degenerate case); the rest
+//!   shows what cluster-level routing costs/buys (fragmentation vs
+//!   locality).
+//! * **cluster-offload** — offload % on the same grid: how much traffic
+//!   leaves the edge for the cloud tier as nodes shrink.
+//! * **cluster-hetero** — a heterogeneous fleet (8/4/2/2 GB running
+//!   KiSS/KiSS/baseline/adaptive) against the cloud RTT axis: with no
+//!   cloud tier placement failures are hard drops; as RTT grows the
+//!   offload path stays available but ever more expensive.
+
+use super::common::{paper_workload, Series, Sweep};
+use crate::sim::cluster::{run_cluster, ClusterSpec, NodePolicy, NodeSpec, RouterKind};
+use crate::sim::InitOccupancy;
+use crate::trace::synth::{synthesize, SynthConfig};
+
+/// Node counts the scale sweeps walk.
+pub const NODE_GRID: [usize; 4] = [1, 2, 4, 8];
+
+/// Total edge memory (MB) held constant while the node count scales.
+pub const TOTAL_MEM_MB: u64 = 16 * 1024;
+
+/// Cloud RTT used by the scale sweeps (µs) — a regional DC ~80 ms away.
+pub const CLOUD_RTT_US: u64 = 80_000;
+
+/// Reduced-length workload for the cluster sweeps: the router × node-count
+/// grid multiplies run counts, so keep the trace at 30 minutes.
+pub fn cluster_workload() -> SynthConfig {
+    SynthConfig { duration_us: 1_800_000_000, ..paper_workload() }
+}
+
+/// The four routers, with the affinity split resolved for `n` nodes.
+pub fn routers(n: usize) -> [RouterKind; 4] {
+    [
+        RouterKind::RoundRobin,
+        RouterKind::LeastLoaded,
+        RouterKind::SizeAffinity { small_nodes: n.div_ceil(2) },
+        RouterKind::Sticky,
+    ]
+}
+
+/// Homogeneous KiSS cluster: `TOTAL_MEM_MB` split evenly over `n` nodes,
+/// one fallback, the paper's init-occupancy model, cloud tier attached.
+fn scale_spec(n: usize, router: RouterKind) -> ClusterSpec {
+    ClusterSpec::homogeneous(n, TOTAL_MEM_MB / n as u64, NodePolicy::kiss_default())
+        .with_router(router)
+        .with_init_occupancy(InitOccupancy::HoldsMemory)
+        .with_cloud(CLOUD_RTT_US)
+}
+
+/// Run the node-count × router grid **once** and derive both scale
+/// sweeps from it (cold-start % and offload %) — callers that want both
+/// tables must not pay for the grid twice.
+pub fn cluster_scale_and_offload(synth: &SynthConfig) -> (Sweep, Sweep) {
+    let trace = synthesize(synth);
+    let mut cold_series: Vec<Series> = Vec::new();
+    let mut offl_series: Vec<Series> = Vec::new();
+    for (r_idx, label) in RouterKind::ALL_LABELS.iter().enumerate() {
+        let mut cold = Vec::new();
+        let mut offl = Vec::new();
+        for &n in &NODE_GRID {
+            let spec = scale_spec(n, routers(n)[r_idx]);
+            let overall = run_cluster(&trace, &spec).report.overall;
+            cold.push(overall.cold_start_pct());
+            offl.push(overall.offload_pct());
+        }
+        cold_series.push(Series { label: (*label).to_string(), values: cold });
+        offl_series.push(Series { label: (*label).to_string(), values: offl });
+    }
+    let xs: Vec<f64> = NODE_GRID.iter().map(|&n| n as f64).collect();
+    (
+        Sweep {
+            title: "Cluster scale: cold-start % vs node count (16 GB total, KiSS 80-20)"
+                .into(),
+            x_label: "nodes".into(),
+            y_label: "cold-start %".into(),
+            xs: xs.clone(),
+            series: cold_series,
+        },
+        Sweep {
+            title: "Cluster offload: offload % vs node count (16 GB total, cloud RTT 80 ms)"
+                .into(),
+            x_label: "nodes".into(),
+            y_label: "offload %".into(),
+            xs,
+            series: offl_series,
+        },
+    )
+}
+
+/// Cold-start % vs node count, per router (16 GB total edge memory).
+pub fn cluster_scale(synth: &SynthConfig) -> Sweep {
+    cluster_scale_and_offload(synth).0
+}
+
+/// Offload % vs node count, per router — traffic the edge pushed to the
+/// cloud tier.
+pub fn cluster_offload(synth: &SynthConfig) -> Sweep {
+    cluster_scale_and_offload(synth).1
+}
+
+/// The heterogeneous fleet the continuum argument needs: mixed node sizes
+/// and mixed per-node policies behind one least-loaded router.
+pub fn hetero_nodes() -> Vec<NodeSpec> {
+    let kiss = NodePolicy::kiss_default();
+    vec![
+        NodeSpec { mem_mb: 8 * 1024, policy: kiss },
+        NodeSpec { mem_mb: 4 * 1024, policy: kiss },
+        NodeSpec {
+            mem_mb: 2 * 1024,
+            policy: NodePolicy::Baseline {
+                policy: crate::coordinator::policy::PolicyKind::Lru,
+            },
+        },
+        NodeSpec {
+            mem_mb: 2 * 1024,
+            policy: NodePolicy::Adaptive {
+                cfg: crate::coordinator::AdaptiveConfig::default(),
+                small_policy: crate::coordinator::policy::PolicyKind::Lru,
+                large_policy: crate::coordinator::policy::PolicyKind::Lru,
+            },
+        },
+    ]
+}
+
+/// Heterogeneous cluster vs cloud RTT: cold-start %, offload %, drop %.
+/// RTT 0 means *no* cloud tier (failures are hard drops).
+pub fn cluster_hetero(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let rtts_ms = [0u64, 20, 80, 200];
+    let mut cold = Vec::new();
+    let mut offl = Vec::new();
+    let mut drops = Vec::new();
+    for &rtt_ms in &rtts_ms {
+        let mut spec = ClusterSpec {
+            nodes: hetero_nodes(),
+            router: RouterKind::LeastLoaded,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::HoldsMemory,
+        };
+        if rtt_ms > 0 {
+            spec = spec.with_cloud(rtt_ms * 1000);
+        }
+        let r = run_cluster(&trace, &spec).report.overall;
+        cold.push(r.cold_start_pct());
+        offl.push(r.offload_pct());
+        drops.push(r.drop_pct());
+    }
+    Sweep {
+        title: "Cluster hetero: 8/4/2/2 GB fleet (kiss/kiss/baseline/adaptive) vs cloud RTT"
+            .into(),
+        x_label: "rtt_ms".into(),
+        y_label: "%".into(),
+        xs: rtts_ms.iter().map(|&r| r as f64).collect(),
+        series: vec![
+            Series { label: "cold-start%".into(), values: cold },
+            Series { label: "offload%".into(), values: offl },
+            Series { label: "drop%".into(), values: drops },
+        ],
+    }
+}
+
+/// Default-workload entry points used by the CLI registry.
+pub fn cluster_scale_default() -> Sweep {
+    cluster_scale(&cluster_workload())
+}
+pub fn cluster_offload_default() -> Sweep {
+    cluster_offload(&cluster_workload())
+}
+pub fn cluster_hetero_default() -> Sweep {
+    cluster_hetero(&cluster_workload())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SynthConfig {
+        SynthConfig {
+            seed: 5,
+            n_small: 30,
+            n_large: 6,
+            duration_us: 120_000_000,
+            rate_per_sec: 20.0,
+            ..paper_workload()
+        }
+    }
+
+    #[test]
+    fn scale_sweep_covers_grid_and_routers() {
+        let s = cluster_scale(&tiny());
+        assert_eq!(s.xs.len(), NODE_GRID.len());
+        assert_eq!(s.series.len(), RouterKind::ALL_LABELS.len());
+        for series in &s.series {
+            assert_eq!(series.values.len(), NODE_GRID.len());
+            assert!(series.values.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn hetero_sweep_drops_only_without_cloud() {
+        let s = cluster_hetero(&tiny());
+        let drops = s.series_named("drop%").unwrap();
+        // With a cloud tier attached (rtt > 0), nothing is hard-dropped.
+        for &v in &drops.values[1..] {
+            assert_eq!(v, 0.0, "{drops:?}");
+        }
+        let offl = s.series_named("offload%").unwrap();
+        assert_eq!(offl.values[0], 0.0, "no cloud tier, no offloads");
+    }
+}

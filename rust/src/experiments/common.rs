@@ -137,6 +137,7 @@ pub fn kiss_cfg(synth: &SynthConfig, mem_gb: u64, small_frac: f64) -> SimConfig 
         small_policy: PolicyKind::Lru,
         large_policy: PolicyKind::Lru,
         synth: synth.clone(),
+        cluster: None,
     }
 }
 
@@ -148,6 +149,7 @@ pub fn baseline_cfg(synth: &SynthConfig, mem_gb: u64) -> SimConfig {
         small_policy: PolicyKind::Lru,
         large_policy: PolicyKind::Lru,
         synth: synth.clone(),
+        cluster: None,
     }
 }
 

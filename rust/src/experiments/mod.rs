@@ -8,10 +8,12 @@
 //! | fig10–13  | fairness per class (§6.3)                   | [`fairness`] |
 //! | fig14–16  | policy independence (§6.4)                  | [`policy_independence`] |
 //! | stress    | 2 h, 4–5 M invocation stress test (§6.5)    | [`stress`] |
+//! | cluster-* | multi-node edge cluster + offload (beyond the paper) | [`cluster`] |
 //!
 //! `run_by_name` is the CLI entry: it renders the experiment's table(s)
 //! as text, which EXPERIMENTS.md records against the paper's numbers.
 
+pub mod cluster;
 pub mod common;
 pub mod fairness;
 pub mod policy_independence;
@@ -22,9 +24,10 @@ pub mod workload;
 pub use common::{paper_workload, run_on, run_single, Series, Sweep, MEM_GRID_GB, SPLITS};
 
 /// All experiment names accepted by [`run_by_name`].
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 17] = [
     "fig2", "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "fig14", "fig15", "fig16",
+    "fig13", "fig14", "fig15", "fig16", "cluster-scale", "cluster-offload",
+    "cluster-hetero",
 ];
 
 /// Run one experiment by its paper-figure name and render its output.
@@ -45,6 +48,9 @@ pub fn run_by_name(name: &str, stress_scale: f64) -> Option<String> {
         "fig14" => policy_independence::fig14_default().render(),
         "fig15" => policy_independence::fig15_default().render(),
         "fig16" => policy_independence::fig16_default().render(),
+        "cluster-scale" => cluster::cluster_scale_default().render(),
+        "cluster-offload" => cluster::cluster_offload_default().render(),
+        "cluster-hetero" => cluster::cluster_hetero_default().render(),
         "stress" => {
             let (k, b) = stress::stress(10, stress_scale, 2025);
             stress::render(&k, &b)

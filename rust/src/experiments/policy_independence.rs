@@ -34,6 +34,7 @@ pub fn policy_sweep(synth: &SynthConfig, slice: Slice) -> Sweep {
                     small_policy: kind,
                     large_policy: kind,
                     synth: synth.clone(),
+                    cluster: None,
                 };
                 let r = run_on(&trace, &cfg);
                 match slice {

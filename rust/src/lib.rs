@@ -8,11 +8,13 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: the KiSS size-aware
 //!   partitioned warm-pool policy ([`coordinator`]), the discrete-event
-//!   FaaS simulator it is evaluated on ([`sim`]), the Azure-2019-style
+//!   FaaS simulator it is evaluated on ([`sim`]), the multi-node
+//!   edge-cluster layer over it ([`sim::cluster`]), the Azure-2019-style
 //!   trace synthesizer ([`trace`]), the offline workload analyzer
 //!   ([`analysis`]), every paper figure as a runnable experiment
 //!   ([`experiments`]), and a live serving path ([`serve`]) that executes
-//!   real AOT-compiled function payloads through PJRT ([`runtime`]).
+//!   real AOT-compiled function payloads through PJRT ([`runtime`],
+//!   behind the `pjrt` feature).
 //! * **Layer 2** — JAX payload models (`python/compile/model.py`), lowered
 //!   once to HLO text artifacts by `python/compile/aot.py`.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`), the payload
@@ -21,6 +23,28 @@
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + `manifest.json`, and the Rust binary is
 //! self-contained afterwards.
+//!
+//! ## Cluster architecture (edge-cloud continuum)
+//!
+//! [`sim::cluster::Cluster`] owns N heterogeneous nodes, each wrapping
+//! its own [`Dispatcher`] (baseline / KiSS / adaptive, per node), behind
+//! a pluggable router ([`sim::cluster::RouterKind`]):
+//!
+//! * `round-robin` — cycle nodes in index order.
+//! * `least-loaded` — smallest used/capacity fraction (integer compare,
+//!   ties to the lowest index).
+//! * `size-affinity` — small/large size classes on disjoint node sets
+//!   (KiSS partitioning lifted to cluster scope).
+//! * `sticky` — `fxhash(function) % nodes`, concentrating warm state.
+//!
+//! A node-level `Drop` is retried on fallback nodes and finally offloaded
+//! to a modeled cloud tier (configurable RTT), recorded as
+//! [`metrics::RecordKind::Offload`]. A one-node cluster reproduces
+//! [`sim::run_trace`] bit-for-bit. Configure via the `[cluster]` TOML
+//! section (`nodes`, `mem_mb`, `router`, `small_nodes`, `fallbacks`,
+//! `cloud_rtt_ms`, `policies`) or `repro cluster` CLI flags; sweep via
+//! the `cluster-scale` / `cluster-offload` / `cluster-hetero`
+//! experiments and `benches/cluster_bench.rs`.
 //!
 //! ## Quick start
 //!

@@ -1,9 +1,11 @@
 //! `repro` — the kiss-faas launcher.
 //!
 //! ```text
-//! repro experiment <fig2..fig16|stress|all> [--stress-scale F]
+//! repro experiment <fig2..fig16|cluster-*|stress|all> [--stress-scale F]
 //! repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F]
 //!                [--policy lru|gd|freq] [--seed N]
+//! repro cluster  [--config FILE] [--nodes N] [--router R] [--small-nodes N]
+//!                [--fallbacks N] [--cloud-rtt-ms F] [--mem-gb N] [--sweep]
 //! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
@@ -24,6 +26,7 @@ use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::experiments::{self, run_single};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
+use kiss_faas::sim::cluster::{run_cluster, RouterKind};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
 
@@ -47,6 +50,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "experiment" => cmd_experiment(&flags),
         "simulate" => cmd_simulate(&flags),
+        "cluster" => cmd_cluster(&flags),
         "analyze" => cmd_analyze(&flags),
         "trace" => cmd_trace(&flags),
         "serve" => cmd_serve(&flags),
@@ -62,8 +66,9 @@ fn run(args: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "kiss-faas repro — KiSS: Keep it Separated Serverless (paper reproduction)\n\n\
-         USAGE:\n  repro experiment <fig2..fig16|stress|all> [--stress-scale F]\n  \
+         USAGE:\n  repro experiment <fig2..fig16|cluster-*|stress|all> [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F] [--sweep]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -77,7 +82,7 @@ struct Flags {
     named: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: [&str; 2] = ["--baseline", "--verbose"];
+const BOOL_FLAGS: [&str; 3] = ["--baseline", "--verbose", "--sweep"];
 
 impl Flags {
     fn parse(args: &[String]) -> Result<Self> {
@@ -126,7 +131,7 @@ fn cmd_experiment(flags: &Flags) -> Result<()> {
     let name = flags
         .positional
         .first()
-        .ok_or_else(|| anyhow!("experiment name required (fig2..fig16, stress, all)"))?;
+        .ok_or_else(|| anyhow!("experiment name required (fig2..fig16, cluster-*, stress, all)"))?;
     let scale: f64 = flags.get_parsed("stress-scale")?.unwrap_or(1.0);
     let names: Vec<&str> = if name == "all" {
         let mut v: Vec<&str> = experiments::ALL_EXPERIMENTS.to_vec();
@@ -194,6 +199,80 @@ fn cmd_simulate(flags: &Flags) -> Result<()> {
             c.drops,
             c.cold_start_pct(),
             c.drop_pct()
+        );
+    }
+    Ok(())
+}
+
+/// `repro cluster` — run one multi-node simulation (or, with `--sweep`,
+/// the whole cluster experiment family).
+fn cmd_cluster(flags: &Flags) -> Result<()> {
+    if flags.has("sweep") {
+        // One grid run yields both scale tables; hetero is its own grid.
+        let synth = experiments::cluster::cluster_workload();
+        let (scale, offload) = experiments::cluster::cluster_scale_and_offload(&synth);
+        println!("{}", scale.render());
+        println!("{}", offload.render());
+        println!("{}", experiments::cluster::cluster_hetero(&synth).render());
+        return Ok(());
+    }
+
+    let mut cfg = build_sim_config(flags)?;
+    let mut cc = cfg.cluster.clone().unwrap_or_default();
+    if let Some(n) = flags.get_parsed::<usize>("nodes")? {
+        cc.nodes = n;
+    }
+    let small_nodes = flags.get_parsed::<usize>("small-nodes")?;
+    if let Some(r) = flags.get("router") {
+        cc.router = RouterKind::parse(r, small_nodes.unwrap_or(0)).ok_or_else(|| {
+            anyhow!("bad --router {r:?} (round-robin|least-loaded|size-affinity|sticky)")
+        })?;
+    } else if let Some(k) = small_nodes {
+        cc.router = RouterKind::SizeAffinity { small_nodes: k };
+    }
+    if let Some(f) = flags.get_parsed::<usize>("fallbacks")? {
+        cc.fallbacks = f;
+    }
+    if let Some(ms) = flags.get_parsed::<f64>("cloud-rtt-ms")? {
+        if ms < 0.0 {
+            bail!("--cloud-rtt-ms must be >= 0");
+        }
+        cc.cloud_rtt_us = (ms * 1000.0).round() as u64;
+    }
+    cfg.cluster = Some(cc);
+    cfg.validate()?;
+    println!("# {}", cfg.describe());
+
+    let trace = synthesize(&cfg.synth);
+    // build_cluster_spec already applies the experiment-harness
+    // init-occupancy convention (HoldsMemory / KISS_INIT_LATENCY_ONLY).
+    let spec = cfg.build_cluster_spec();
+    let r = run_cluster(&trace, &spec);
+
+    println!(
+        "{:>10} {:>10} {:>10} {:>8} {:>9} {:>12} {:>8} {:>10}",
+        "slice", "hits", "misses", "drops", "offloads", "coldstart%", "drop%", "offload%"
+    );
+    for (name, c) in
+        [("overall", &r.report.overall), ("small", &r.report.small), ("large", &r.report.large)]
+    {
+        println!(
+            "{:>10} {:>10} {:>10} {:>8} {:>9} {:>12.2} {:>8.2} {:>10.2}",
+            name,
+            c.hits,
+            c.misses,
+            c.drops,
+            c.offloads,
+            c.cold_start_pct(),
+            c.drop_pct(),
+            c.offload_pct()
+        );
+    }
+    println!("\nper-node ({} invocations rerouted to fallbacks):", r.rerouted);
+    for (i, node) in r.per_node.iter().enumerate() {
+        println!(
+            "  node {i}: hits {:>9} misses {:>8} peak {:>6} MB | {}",
+            node.overall.hits, node.overall.misses, r.peak_used_mb[i], r.descriptions[i]
         );
     }
     Ok(())

@@ -1,10 +1,15 @@
 //! The six FaaSCache-style metrics the paper tracks (§5.2), split by size
 //! class for the fairness analysis (§4.4), plus latency accounting.
 //!
-//! * cold starts (misses), hits, drops
-//! * total accesses = hits + misses + drops
-//! * serviceable accesses = hits + misses
+//! * cold starts (misses), hits, drops, offloads
+//! * total accesses = hits + misses + drops + offloads
+//! * serviceable accesses = hits + misses (served on the edge)
 //! * execution durations (cumulative, split warm/cold)
+//!
+//! The `offloads` counter is the cluster extension (edge-cloud continuum):
+//! an invocation no edge node could place but that a modeled cloud tier
+//! served, paying a configured RTT. Single-node simulations never offload,
+//! so every pre-cluster metric is bit-for-bit unchanged.
 
 use crate::trace::SizeClass;
 
@@ -15,19 +20,22 @@ pub struct Counters {
     pub hits: u64,
     /// Invocations that required container initialization (cold starts).
     pub misses: u64,
-    /// Invocations that could not be placed at all (pushed to the cloud).
+    /// Invocations that could not be placed at all (lost).
     pub drops: u64,
+    /// Invocations punted to the modeled cloud tier (served, but off the
+    /// edge and after the configured round-trip). Zero on a single node.
+    pub offloads: u64,
     /// Cumulative execution time (µs) of serviced invocations, excluding
     /// startup.
     pub exec_us: u64,
     /// Cumulative startup wait (µs): warm dispatch for hits, cold
-    /// initialization for misses.
+    /// initialization for misses, cloud RTT for offloads.
     pub startup_us: u64,
 }
 
 impl Counters {
     pub fn total_accesses(&self) -> u64 {
-        self.hits + self.misses + self.drops
+        self.hits + self.misses + self.drops + self.offloads
     }
 
     pub fn serviceable(&self) -> u64 {
@@ -46,6 +54,12 @@ impl Counters {
         pct(self.drops, self.total_accesses())
     }
 
+    /// Offload percentage over total accesses (cluster extension): how
+    /// much traffic left the edge for the cloud tier.
+    pub fn offload_pct(&self) -> f64 {
+        pct(self.offloads, self.total_accesses())
+    }
+
     /// Warm hit rate over total accesses (§6.5 reports this).
     pub fn hit_rate_pct(&self) -> f64 {
         pct(self.hits, self.total_accesses())
@@ -55,6 +69,7 @@ impl Counters {
         self.hits += other.hits;
         self.misses += other.misses;
         self.drops += other.drops;
+        self.offloads += other.offloads;
         self.exec_us += other.exec_us;
         self.startup_us += other.startup_us;
     }
@@ -69,7 +84,7 @@ fn pct(num: u64, den: u64) -> f64 {
 }
 
 /// Full per-run report: overall + per-class slices (fairness, §4.4).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Report {
     pub overall: Counters,
     pub small: Counters,
@@ -99,6 +114,7 @@ impl Report {
                 RecordKind::Hit => c.hits += 1,
                 RecordKind::Miss => c.misses += 1,
                 RecordKind::Drop => c.drops += 1,
+                RecordKind::Offload => c.offloads += 1,
             }
             if kind != RecordKind::Drop {
                 c.exec_us += exec_us;
@@ -121,6 +137,9 @@ pub enum RecordKind {
     Hit,
     Miss,
     Drop,
+    /// Served by the modeled cloud tier after local placement failed
+    /// (cluster extension). `startup_us` carries the cloud RTT.
+    Offload,
 }
 
 #[cfg(test)]
@@ -166,6 +185,21 @@ mod tests {
         r.record(SizeClass::Large, RecordKind::Drop, 999, 999);
         assert_eq!(r.overall.exec_us, 0);
         assert_eq!(r.overall.startup_us, 0);
+    }
+
+    #[test]
+    fn offloads_count_as_accesses_not_serviceable() {
+        let mut r = Report::default();
+        r.record(SizeClass::Large, RecordKind::Offload, 2_000, 80_000);
+        r.record(SizeClass::Large, RecordKind::Hit, 300, 7);
+        assert!(r.is_consistent());
+        assert_eq!(r.overall.offloads, 1);
+        assert_eq!(r.overall.total_accesses(), 2);
+        assert_eq!(r.overall.serviceable(), 1, "offloads served off-edge");
+        // Offloads pay the cloud RTT as startup and still execute.
+        assert_eq!(r.large.startup_us, 80_007);
+        assert_eq!(r.large.exec_us, 2_300);
+        assert!((r.overall.offload_pct() - 50.0).abs() < 1e-12);
     }
 
     #[test]

@@ -10,14 +10,24 @@
 //! Every loaded payload self-verifies at load time against the golden
 //! input/output binaries recorded in `manifest.json` — a corrupt artifact
 //! or a lowering mismatch fails fast, not at request time.
+//!
+//! ## Feature gate
+//!
+//! The `xla` crate is a vendored native dependency that exists only on
+//! hosts with the PJRT plugin installed, so everything that touches it
+//! lives behind the **`pjrt`** cargo feature (see CONTRIBUTING.md).
+//! Without the feature, manifest parsing and golden-file I/O keep
+//! working, and [`Engine`]/[`LoadedPayload`] are API-identical stubs
+//! whose constructors return a descriptive error — the simulator,
+//! cluster, and experiment paths never notice.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
+
+pub use engine::{Engine, LoadedPayload};
 
 /// Manifest entry for one compiled payload.
 #[derive(Clone, Debug)]
@@ -103,140 +113,230 @@ pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// A compiled, verified payload executable.
-pub struct LoadedPayload {
-    pub spec: PayloadSpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// Wall time spent compiling the HLO (the *real* cold-start cost of
-    /// this payload on this machine; reported by the serving examples).
-    pub compile_time: std::time::Duration,
-}
+/// The real PJRT-backed engine (feature `pjrt`).
+#[cfg(feature = "pjrt")]
+mod engine {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::time::Instant;
 
-impl LoadedPayload {
-    /// Execute on a flat f32 input of exactly `spec.input_len()` elements.
-    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
-        if input.len() != self.spec.input_len() {
+    use anyhow::{anyhow, bail, Result};
+
+    use super::{load_manifest, read_f32_bin, PayloadSpec};
+
+    /// A compiled, verified payload executable.
+    pub struct LoadedPayload {
+        pub spec: PayloadSpec,
+        exe: xla::PjRtLoadedExecutable,
+        /// Wall time spent compiling the HLO (the *real* cold-start cost
+        /// of this payload on this machine; reported by the serving
+        /// examples).
+        pub compile_time: std::time::Duration,
+    }
+
+    impl LoadedPayload {
+        /// Execute on a flat f32 input of exactly `spec.input_len()`
+        /// elements.
+        pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+            if input.len() != self.spec.input_len() {
+                bail!(
+                    "{}: input len {} != expected {}",
+                    self.spec.name,
+                    input.len(),
+                    self.spec.input_len()
+                );
+            }
+            let dims: Vec<i64> = self.spec.input_shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            let values = out.to_vec::<f32>()?;
+            if values.len() != self.spec.output_len() {
+                bail!(
+                    "{}: output len {} != expected {}",
+                    self.spec.name,
+                    values.len(),
+                    self.spec.output_len()
+                );
+            }
+            Ok(values)
+        }
+    }
+
+    /// The PJRT engine: one CPU client + every payload from the manifest.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        payloads: HashMap<String, LoadedPayload>,
+    }
+
+    impl Engine {
+        /// Create a CPU PJRT client (no payloads yet).
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self { client, payloads: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile a payload afresh (no cache, no golden check) — the
+        /// live serving path uses this to pay a *real* compile cost per
+        /// container cold start. ~tens of ms on the CPU plugin for these
+        /// payloads.
+        pub fn compile_fresh(&self, spec: &PayloadSpec) -> Result<LoadedPayload> {
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(LoadedPayload { spec: spec.clone(), exe, compile_time: t0.elapsed() })
+        }
+
+        /// Compile one payload from its HLO text and self-verify it
+        /// against the golden I/O. Idempotent per name.
+        pub fn load(&mut self, spec: &PayloadSpec) -> Result<&LoadedPayload> {
+            if !self.payloads.contains_key(&spec.name) {
+                let loaded = self.compile_fresh(spec)?;
+                verify_golden(&loaded)?;
+                self.payloads.insert(spec.name.clone(), loaded);
+            }
+            Ok(&self.payloads[&spec.name])
+        }
+
+        /// Load every payload in the manifest directory.
+        pub fn load_all(&mut self, artifacts_dir: &Path) -> Result<Vec<String>> {
+            let specs = load_manifest(artifacts_dir)?;
+            let mut names = Vec::new();
+            for spec in &specs {
+                self.load(spec)?;
+                names.push(spec.name.clone());
+            }
+            Ok(names)
+        }
+
+        pub fn get(&self, name: &str) -> Option<&LoadedPayload> {
+            self.payloads.get(name)
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.payloads.keys().map(|s| s.as_str()).collect();
+            v.sort_unstable();
+            v
+        }
+    }
+
+    /// Run the golden input through a freshly-compiled payload and
+    /// compare with the Python-side golden output (rtol 1e-4 + atol 1e-5,
+    /// plus a mean check against the manifest).
+    fn verify_golden(p: &LoadedPayload) -> Result<()> {
+        let x = read_f32_bin(&p.spec.golden_input_file)?;
+        let want = read_f32_bin(&p.spec.golden_output_file)?;
+        if want.len() != p.spec.output_len() {
+            bail!("{}: golden output length mismatch", p.spec.name);
+        }
+        let got = p.run(&x)?;
+        let mut worst = 0f32;
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            let tol = 1e-5 + 1e-4 * w.abs();
+            let err = (g - w).abs();
+            if err > tol {
+                bail!(
+                    "{}: golden mismatch at {i}: got {g}, want {w} (err {err})",
+                    p.spec.name
+                );
+            }
+            worst = worst.max(err);
+        }
+        let mean = got.iter().map(|&v| v as f64).sum::<f64>() / got.len() as f64;
+        if (mean - p.spec.golden_output_mean).abs()
+            > 1e-4 * (1.0 + p.spec.golden_output_mean.abs())
+        {
             bail!(
-                "{}: input len {} != expected {}",
-                self.spec.name,
-                input.len(),
-                self.spec.input_len()
+                "{}: golden mean mismatch: got {mean}, want {}",
+                p.spec.name,
+                p.spec.golden_output_mean
             );
         }
-        let dims: Vec<i64> = self.spec.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        if values.len() != self.spec.output_len() {
-            bail!(
-                "{}: output len {} != expected {}",
-                self.spec.name,
-                values.len(),
-                self.spec.output_len()
-            );
-        }
-        Ok(values)
+        Ok(())
     }
 }
 
-/// The PJRT engine: one CPU client + every payload from the manifest.
-pub struct Engine {
-    client: xla::PjRtClient,
-    payloads: HashMap<String, LoadedPayload>,
-}
+/// API-identical stub used when the crate is built without the `pjrt`
+/// feature: constructors fail with a descriptive error instead of
+/// compiling against the (absent) native `xla` crate. Everything that
+/// merely *links* to the runtime — the serve layer, the CLI, the
+/// examples — still compiles and reports the missing feature at runtime.
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::time::Duration;
 
-impl Engine {
-    /// Create a CPU PJRT client (no payloads yet).
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, payloads: HashMap::new() })
+    use anyhow::{bail, Result};
+
+    use super::{load_manifest, PayloadSpec};
+
+    const NO_PJRT: &str = "kiss-faas was built without the `pjrt` feature: the PJRT/XLA \
+         runtime is unavailable. Rebuild with `--features pjrt` on a host with the \
+         vendored `xla` crate (see CONTRIBUTING.md). The simulator, cluster, and \
+         experiment paths are fully functional without it.";
+
+    /// Stub of the compiled payload; never constructed.
+    pub struct LoadedPayload {
+        pub spec: PayloadSpec,
+        pub compile_time: Duration,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile a payload afresh (no cache, no golden check) — the live
-    /// serving path uses this to pay a *real* compile cost per container
-    /// cold start. ~tens of ms on the CPU plugin for these payloads.
-    pub fn compile_fresh(&self, spec: &PayloadSpec) -> Result<LoadedPayload> {
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.hlo_file
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(LoadedPayload { spec: spec.clone(), exe, compile_time: t0.elapsed() })
-    }
-
-    /// Compile one payload from its HLO text and self-verify it against
-    /// the golden I/O. Idempotent per name.
-    pub fn load(&mut self, spec: &PayloadSpec) -> Result<&LoadedPayload> {
-        if !self.payloads.contains_key(&spec.name) {
-            let loaded = self.compile_fresh(spec)?;
-            verify_golden(&loaded)?;
-            self.payloads.insert(spec.name.clone(), loaded);
+    impl LoadedPayload {
+        pub fn run(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            bail!(NO_PJRT)
         }
-        Ok(&self.payloads[&spec.name])
     }
 
-    /// Load every payload in the manifest directory.
-    pub fn load_all(&mut self, artifacts_dir: &Path) -> Result<Vec<String>> {
-        let specs = load_manifest(artifacts_dir)?;
-        let mut names = Vec::new();
-        for spec in &specs {
-            self.load(spec)?;
-            names.push(spec.name.clone());
+    /// Stub engine: `cpu()` fails, so no payload can ever be loaded.
+    pub struct Engine {
+        payloads: HashMap<String, LoadedPayload>,
+    }
+
+    impl Engine {
+        pub fn cpu() -> Result<Self> {
+            bail!(NO_PJRT)
         }
-        Ok(names)
-    }
 
-    pub fn get(&self, name: &str) -> Option<&LoadedPayload> {
-        self.payloads.get(name)
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.payloads.keys().map(|s| s.as_str()).collect();
-        v.sort_unstable();
-        v
-    }
-}
-
-/// Run the golden input through a freshly-compiled payload and compare
-/// with the Python-side golden output (rtol 1e-4 + atol 1e-5, plus a mean
-/// check against the manifest).
-fn verify_golden(p: &LoadedPayload) -> Result<()> {
-    let x = read_f32_bin(&p.spec.golden_input_file)?;
-    let want = read_f32_bin(&p.spec.golden_output_file)?;
-    if want.len() != p.spec.output_len() {
-        bail!("{}: golden output length mismatch", p.spec.name);
-    }
-    let got = p.run(&x)?;
-    let mut worst = 0f32;
-    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
-        let tol = 1e-5 + 1e-4 * w.abs();
-        let err = (g - w).abs();
-        if err > tol {
-            bail!(
-                "{}: golden mismatch at {i}: got {g}, want {w} (err {err})",
-                p.spec.name
-            );
+        pub fn platform(&self) -> String {
+            "unavailable (built without `pjrt`)".to_string()
         }
-        worst = worst.max(err);
+
+        pub fn compile_fresh(&self, _spec: &PayloadSpec) -> Result<LoadedPayload> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn load(&mut self, _spec: &PayloadSpec) -> Result<&LoadedPayload> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn load_all(&mut self, artifacts_dir: &Path) -> Result<Vec<String>> {
+            // Manifest parsing still works without PJRT; fail afterwards
+            // so the caller sees the real blocker.
+            let _ = load_manifest(artifacts_dir)?;
+            bail!(NO_PJRT)
+        }
+
+        pub fn get(&self, name: &str) -> Option<&LoadedPayload> {
+            self.payloads.get(name)
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.payloads.keys().map(|s| s.as_str()).collect();
+            v.sort_unstable();
+            v
+        }
     }
-    let mean = got.iter().map(|&v| v as f64).sum::<f64>() / got.len() as f64;
-    if (mean - p.spec.golden_output_mean).abs() > 1e-4 * (1.0 + p.spec.golden_output_mean.abs()) {
-        bail!(
-            "{}: golden mean mismatch: got {mean}, want {}",
-            p.spec.name,
-            p.spec.golden_output_mean
-        );
-    }
-    Ok(())
 }
 
 #[cfg(test)]

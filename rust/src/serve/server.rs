@@ -94,6 +94,7 @@ impl Server {
                                     RecordKind::Hit => "hit",
                                     RecordKind::Miss => "miss",
                                     RecordKind::Drop => "drop",
+                                    RecordKind::Offload => "offload",
                                 };
                                 let preview: Vec<String> = res
                                     .output

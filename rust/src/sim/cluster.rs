@@ -1,0 +1,755 @@
+//! Multi-node edge-cluster simulation — the edge-cloud continuum layer.
+//!
+//! The single-node engine ([`super::Engine`]) evaluates the *memory
+//! policy* in isolation; real edge deployments run fleets of small,
+//! heterogeneous nodes behind a cluster-level router, and an invocation
+//! that no edge node can place is not lost — it is offloaded to a cloud
+//! region at a latency cost (LaSS, Fifer). This module adds exactly that
+//! layer on identical event semantics:
+//!
+//! * [`Cluster`] owns N nodes, each wrapping its own [`Dispatcher`]
+//!   (baseline, KiSS, or adaptive — per node, so heterogeneous fleets are
+//!   first-class). One global completion queue keeps virtual time
+//!   coherent across nodes; with a single node the engine reduces
+//!   *bit-for-bit* to [`super::run_trace_with`] (the determinism lock in
+//!   `tests/integration_cluster.rs`).
+//! * [`RouterKind`] — pluggable cluster routers: round-robin,
+//!   least-loaded-memory (deterministic fraction compare, ties to the
+//!   lowest index), size-class affinity (small/large functions on
+//!   disjoint node sets — KiSS partitioning lifted to cluster scope), and
+//!   sticky function→node hashing via [`crate::util::fxhash`] (warm state
+//!   concentrates per function).
+//! * **Offload path** — a primary-node `Drop` is retried on up to
+//!   `max_fallbacks` other nodes (ascending index, deterministic); if
+//!   every candidate drops, the invocation goes to the modeled
+//!   [`CloudTier`], recorded as [`RecordKind::Offload`] with the
+//!   configured RTT as startup wait. Without a cloud tier it stays a
+//!   `Drop`, exactly as on a single node.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::hash::Hasher;
+
+use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::{
+    AdaptiveBalancer, AdaptiveConfig, Balancer, ContainerId, Dispatcher, Outcome,
+};
+use crate::metrics::{RecordKind, Report};
+use crate::trace::{FunctionProfile, Invocation, SizeClass, Trace};
+use crate::util::fxhash::FxHasher;
+
+use super::InitOccupancy;
+
+/// Memory-management policy of one node (what [`NodeSpec::build`] turns
+/// into a [`Dispatcher`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodePolicy {
+    /// Unified warm pool (the paper's baseline).
+    Baseline { policy: PolicyKind },
+    /// KiSS size-aware partitioning.
+    Kiss {
+        small_frac: f64,
+        threshold_mb: u32,
+        small_policy: PolicyKind,
+        large_policy: PolicyKind,
+    },
+    /// KiSS with the adaptive split (§7.3 extension).
+    Adaptive {
+        cfg: AdaptiveConfig,
+        small_policy: PolicyKind,
+        large_policy: PolicyKind,
+    },
+}
+
+impl NodePolicy {
+    /// The paper's default edge policy: KiSS 80-20, LRU both pools.
+    pub fn kiss_default() -> Self {
+        NodePolicy::Kiss {
+            small_frac: crate::config::DEFAULT_SMALL_FRAC,
+            threshold_mb: crate::config::DEFAULT_THRESHOLD_MB,
+            small_policy: PolicyKind::Lru,
+            large_policy: PolicyKind::Lru,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodePolicy::Baseline { .. } => "baseline",
+            NodePolicy::Kiss { .. } => "kiss",
+            NodePolicy::Adaptive { .. } => "adaptive",
+        }
+    }
+}
+
+/// One edge node of the cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeSpec {
+    /// Node memory (MB). Must be > 0.
+    pub mem_mb: u64,
+    pub policy: NodePolicy,
+}
+
+impl NodeSpec {
+    pub fn build(&self) -> Box<dyn Dispatcher> {
+        assert!(self.mem_mb > 0, "node memory must be > 0");
+        match self.policy {
+            NodePolicy::Baseline { policy } => Box::new(Balancer::baseline(self.mem_mb, policy)),
+            NodePolicy::Kiss {
+                small_frac,
+                threshold_mb,
+                small_policy,
+                large_policy,
+            } => Box::new(Balancer::kiss(
+                self.mem_mb,
+                small_frac,
+                threshold_mb,
+                small_policy,
+                large_policy,
+            )),
+            NodePolicy::Adaptive {
+                cfg,
+                small_policy,
+                large_policy,
+            } => Box::new(AdaptiveBalancer::new(
+                self.mem_mb,
+                cfg,
+                small_policy,
+                large_policy,
+            )),
+        }
+    }
+}
+
+/// Cluster-level routing policy: which node an invocation is *first*
+/// offered to. Every router is deterministic (ties break to the lowest
+/// node index), so whole-cluster runs replay exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Cycle through nodes in index order.
+    RoundRobin,
+    /// Node with the smallest used/capacity fraction (integer
+    /// cross-multiplication — no float drift, ties to lowest index).
+    LeastLoaded,
+    /// Small functions on nodes `[0, small_nodes)`, large on the rest
+    /// (disjoint sets — KiSS partitioning lifted to the cluster), least
+    /// loaded within each set. A set that would be empty (`small_nodes`
+    /// 0 or ≥ the node count) falls back to all nodes.
+    SizeAffinity { small_nodes: usize },
+    /// `fxhash(function id) % nodes` — a function always lands on the
+    /// same node, concentrating its warm state.
+    Sticky,
+}
+
+impl RouterKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::SizeAffinity { .. } => "size-affinity",
+            RouterKind::Sticky => "sticky",
+        }
+    }
+
+    /// Parse a router name; `small_nodes` seeds the size-affinity split.
+    pub fn parse(s: &str, small_nodes: usize) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(RouterKind::RoundRobin),
+            "least-loaded" | "ll" => Some(RouterKind::LeastLoaded),
+            "size-affinity" | "affinity" => Some(RouterKind::SizeAffinity { small_nodes }),
+            "sticky" | "hash" => Some(RouterKind::Sticky),
+            _ => None,
+        }
+    }
+
+    pub const ALL_LABELS: [&'static str; 4] =
+        ["round-robin", "least-loaded", "size-affinity", "sticky"];
+}
+
+/// The modeled cloud region invocations are offloaded to when no edge
+/// node can place them. Capacity is effectively infinite (the cloud
+/// autoscales); the cost is the round trip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CloudTier {
+    /// Edge→cloud round-trip latency (µs), recorded as startup wait of
+    /// every offloaded invocation.
+    pub rtt_us: u64,
+}
+
+/// Complete cluster description: nodes + router + offload path.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    pub router: RouterKind,
+    /// How many *additional* nodes to try (ascending index, skipping the
+    /// primary) when the routed node drops. 0 = no retry.
+    pub max_fallbacks: usize,
+    /// `None` = a cluster-wide placement failure is a hard drop.
+    pub cloud: Option<CloudTier>,
+    pub init_occupancy: InitOccupancy,
+}
+
+impl ClusterSpec {
+    /// N identical nodes of `mem_mb` each, round-robin, one fallback, no
+    /// cloud tier.
+    pub fn homogeneous(n: usize, mem_mb: u64, policy: NodePolicy) -> Self {
+        Self {
+            nodes: vec![NodeSpec { mem_mb, policy }; n],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::default(),
+        }
+    }
+
+    pub fn with_router(mut self, router: RouterKind) -> Self {
+        self.router = router;
+        self
+    }
+
+    pub fn with_cloud(mut self, rtt_us: u64) -> Self {
+        self.cloud = Some(CloudTier { rtt_us });
+        self
+    }
+
+    pub fn with_fallbacks(mut self, n: usize) -> Self {
+        self.max_fallbacks = n;
+        self
+    }
+
+    pub fn with_init_occupancy(mut self, occ: InitOccupancy) -> Self {
+        self.init_occupancy = occ;
+        self
+    }
+
+    pub fn total_mem_mb(&self) -> u64 {
+        self.nodes.iter().map(|n| n.mem_mb).sum()
+    }
+}
+
+/// Where one invocation ended up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterOutcome {
+    /// Served on an edge node (`cold` = required initialization).
+    Placed { node: usize, cold: bool },
+    /// Served by the cloud tier after the edge declined.
+    Offloaded,
+    /// No edge capacity and no cloud tier: lost.
+    Dropped,
+}
+
+/// One pending completion; ordered by (end time, dispatch sequence) so
+/// simultaneous completions across *different nodes* release in dispatch
+/// order — the same tie-break the single-node engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Completion {
+    end_us: u64,
+    seq: u64,
+    node: usize,
+    pool: usize,
+    container: ContainerId,
+}
+
+/// The cluster engine: N dispatchers behind one router, one virtual
+/// clock.
+pub struct Cluster {
+    nodes: Vec<Box<dyn Dispatcher>>,
+    /// Total capacity per node, cached at construction (constant: live
+    /// resizes move capacity between pools, never across nodes).
+    caps: Vec<u64>,
+    router: RouterKind,
+    max_fallbacks: usize,
+    cloud: Option<CloudTier>,
+    init_occupancy: InitOccupancy,
+    completions: BinaryHeap<Reverse<Completion>>,
+    seq: u64,
+    now_us: u64,
+    rr_next: usize,
+    /// Cluster-wide metrics (offloads and drops live only here).
+    pub report: Report,
+    /// What each node actually served (no drops/offloads: those are
+    /// cluster-level outcomes).
+    pub per_node: Vec<Report>,
+    /// Peak occupancy per node (MB).
+    pub peak_used_mb: Vec<u64>,
+    /// Invocations served by a fallback node after the primary dropped.
+    pub rerouted: u64,
+}
+
+impl Cluster {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        assert!(!spec.nodes.is_empty(), "cluster needs at least one node");
+        let nodes: Vec<Box<dyn Dispatcher>> = spec.nodes.iter().map(|n| n.build()).collect();
+        let caps: Vec<u64> = nodes
+            .iter()
+            .map(|n| n.occupancy().iter().map(|&(_, c)| c).sum())
+            .collect();
+        let count = nodes.len();
+        Self {
+            nodes,
+            caps,
+            router: spec.router,
+            max_fallbacks: spec.max_fallbacks,
+            cloud: spec.cloud,
+            init_occupancy: spec.init_occupancy,
+            completions: BinaryHeap::new(),
+            seq: 0,
+            now_us: 0,
+            rr_next: 0,
+            report: Report::default(),
+            per_node: vec![Report::default(); count],
+            peak_used_mb: vec![0; count],
+            rerouted: 0,
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    pub fn node(&self, idx: usize) -> &dyn Dispatcher {
+        self.nodes[idx].as_ref()
+    }
+
+    /// Apply all completions due at or before `t`, cluster-wide.
+    fn drain_completions(&mut self, t: u64) {
+        while let Some(Reverse(c)) = self.completions.peek().copied() {
+            if c.end_us > t {
+                break;
+            }
+            self.completions.pop();
+            self.nodes[c.node].release(c.pool, c.container, c.end_us);
+        }
+    }
+
+    /// Least-loaded node in `[lo, hi)` by used/capacity fraction;
+    /// deterministic (strict improvement only, so ties keep the lowest
+    /// index). Allocation-free: uses [`Dispatcher::used_mb`].
+    fn least_loaded(&self, lo: usize, hi: usize) -> usize {
+        let mut best = lo;
+        let mut best_used = self.nodes[lo].used_mb();
+        for i in (lo + 1)..hi {
+            let used = self.nodes[i].used_mb();
+            // used_i/cap_i < used_best/cap_best, cross-multiplied.
+            if (used as u128) * (self.caps[best] as u128)
+                < (best_used as u128) * (self.caps[i] as u128)
+            {
+                best = i;
+                best_used = used;
+            }
+        }
+        best
+    }
+
+    /// Primary node for `profile` under the configured router.
+    fn route(&mut self, profile: &FunctionProfile) -> usize {
+        let n = self.nodes.len();
+        match self.router {
+            RouterKind::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % n;
+                i
+            }
+            RouterKind::LeastLoaded => self.least_loaded(0, n),
+            RouterKind::SizeAffinity { small_nodes } => {
+                let k = small_nodes.min(n);
+                let (lo, hi) = match profile.class {
+                    SizeClass::Small if k > 0 => (0, k),
+                    SizeClass::Large if k < n => (k, n),
+                    // Degenerate split: the set would be empty, use all.
+                    _ => (0, n),
+                };
+                self.least_loaded(lo, hi)
+            }
+            RouterKind::Sticky => {
+                let mut h = FxHasher::default();
+                h.write_u32(profile.id.0);
+                (h.finish() % n as u64) as usize
+            }
+        }
+    }
+
+    fn push_completion(&mut self, end_us: u64, node: usize, pool: usize, container: ContainerId) {
+        self.seq += 1;
+        self.completions.push(Reverse(Completion {
+            end_us,
+            seq: self.seq,
+            node,
+            pool,
+            container,
+        }));
+    }
+
+    fn record_served(
+        &mut self,
+        node: usize,
+        class: SizeClass,
+        kind: RecordKind,
+        exec_us: u64,
+        startup_us: u64,
+    ) {
+        self.report.record(class, kind, exec_us, startup_us);
+        self.per_node[node].record(class, kind, exec_us, startup_us);
+        self.peak_used_mb[node] = self.peak_used_mb[node].max(self.nodes[node].used_mb());
+    }
+
+    /// Process one arrival end-to-end: route, dispatch, fall back, and
+    /// (maybe) offload.
+    pub fn step(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
+        debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
+        self.now_us = ev.t_us;
+        self.drain_completions(ev.t_us);
+
+        let profile = trace.profile(ev.func);
+        let primary = self.route(profile);
+        let n = self.nodes.len();
+
+        let mut cand = primary;
+        let mut attempts = 0usize;
+        let mut scan = 0usize; // next fallback index to consider
+        loop {
+            match self.nodes[cand].dispatch(profile, ev.t_us) {
+                Outcome::Hit { pool, container } => {
+                    let end = ev.t_us + profile.warm_start_us + ev.exec_us;
+                    self.push_completion(end, cand, pool, container);
+                    self.record_served(
+                        cand,
+                        profile.class,
+                        RecordKind::Hit,
+                        ev.exec_us,
+                        profile.warm_start_us,
+                    );
+                    if cand != primary {
+                        self.rerouted += 1;
+                    }
+                    return ClusterOutcome::Placed { node: cand, cold: false };
+                }
+                Outcome::Cold { pool, container } => {
+                    let busy = match self.init_occupancy {
+                        InitOccupancy::LatencyOnly => ev.exec_us,
+                        InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
+                    };
+                    self.push_completion(ev.t_us + busy, cand, pool, container);
+                    self.record_served(
+                        cand,
+                        profile.class,
+                        RecordKind::Miss,
+                        ev.exec_us,
+                        profile.cold_start_us,
+                    );
+                    if cand != primary {
+                        self.rerouted += 1;
+                    }
+                    return ClusterOutcome::Placed { node: cand, cold: true };
+                }
+                Outcome::Drop => {
+                    attempts += 1;
+                    if attempts > self.max_fallbacks {
+                        break;
+                    }
+                    // Next untried node in ascending index order.
+                    while scan < n && scan == primary {
+                        scan += 1;
+                    }
+                    if scan >= n {
+                        break;
+                    }
+                    cand = scan;
+                    scan += 1;
+                }
+            }
+        }
+
+        // Every candidate declined: offload to the cloud tier, or drop.
+        match self.cloud {
+            Some(cloud) => {
+                self.report
+                    .record(profile.class, RecordKind::Offload, ev.exec_us, cloud.rtt_us);
+                ClusterOutcome::Offloaded
+            }
+            None => {
+                self.report.record(profile.class, RecordKind::Drop, 0, 0);
+                ClusterOutcome::Dropped
+            }
+        }
+    }
+
+    /// Release everything still in flight (end-of-trace drain).
+    pub fn finish(&mut self) {
+        while let Some(Reverse(c)) = self.completions.pop() {
+            self.nodes[c.node].release(c.pool, c.container, c.end_us);
+        }
+    }
+
+    /// Per-node invariant check (property/integration suites).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // Cluster-wide hits/misses must equal the per-node sum; drops and
+        // offloads are cluster-level outcomes and appear nowhere per-node.
+        let mut served = Report::default();
+        for r in &self.per_node {
+            served.overall.merge(&r.overall);
+            served.small.merge(&r.small);
+            served.large.merge(&r.large);
+            if !r.is_consistent() {
+                return Err("per-node report inconsistent".into());
+            }
+            if r.overall.drops != 0 || r.overall.offloads != 0 {
+                return Err("per-node reports must not carry drops/offloads".into());
+            }
+        }
+        if served.overall.hits != self.report.overall.hits
+            || served.overall.misses != self.report.overall.misses
+        {
+            return Err(format!(
+                "per-node sum (h{} m{}) != cluster (h{} m{})",
+                served.overall.hits,
+                served.overall.misses,
+                self.report.overall.hits,
+                self.report.overall.misses
+            ));
+        }
+        if !self.report.is_consistent() {
+            return Err("cluster report inconsistent".into());
+        }
+        Ok(())
+    }
+
+    fn into_report(self) -> ClusterReport {
+        ClusterReport {
+            descriptions: self.nodes.iter().map(|n| n.describe()).collect(),
+            report: self.report,
+            per_node: self.per_node,
+            peak_used_mb: self.peak_used_mb,
+            rerouted: self.rerouted,
+        }
+    }
+}
+
+/// Everything a cluster run produces.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Cluster-wide metrics (includes offloads/drops).
+    pub report: Report,
+    /// What each node served.
+    pub per_node: Vec<Report>,
+    /// Peak occupancy per node (MB).
+    pub peak_used_mb: Vec<u64>,
+    /// Invocations served by a fallback node after the primary dropped.
+    pub rerouted: u64,
+    /// One [`Dispatcher::describe`] line per node (post-run state, so
+    /// adaptive nodes show their final split).
+    pub descriptions: Vec<String>,
+}
+
+/// Run a whole trace through a cluster and return the full report.
+pub fn run_cluster(trace: &Trace, spec: &ClusterSpec) -> ClusterReport {
+    debug_assert!(trace.is_sorted());
+    let mut cluster = Cluster::new(spec);
+    for &ev in &trace.events {
+        cluster.step(trace, ev);
+    }
+    cluster.finish();
+    debug_assert!(cluster.check_invariants().is_ok());
+    cluster.into_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run_trace_with;
+    use crate::trace::{FunctionId, FunctionProfile, Invocation, SizeClass};
+
+    fn func(id: u32, mem: u32, cold_us: u64, exec_us: u64) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(id),
+            app_id: id,
+            mem_mb: mem,
+            app_mem_mb: mem,
+            cold_start_us: cold_us,
+            warm_start_us: 100,
+            exec_us_mean: exec_us,
+            class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+        }
+    }
+
+    fn inv(t: u64, f: u32, exec: u64) -> Invocation {
+        Invocation { t_us: t, func: FunctionId(f), exec_us: exec }
+    }
+
+    fn kiss_node(mem_mb: u64) -> NodeSpec {
+        NodeSpec { mem_mb, policy: NodePolicy::kiss_default() }
+    }
+
+    fn baseline_node(mem_mb: u64) -> NodeSpec {
+        NodeSpec { mem_mb, policy: NodePolicy::Baseline { policy: PolicyKind::Lru } }
+    }
+
+    #[test]
+    fn single_node_matches_engine_exactly() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: vec![inv(0, 0, 500), inv(10, 1, 2_000), inv(20_000, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![kiss_node(2000)],
+            router: RouterKind::LeastLoaded,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+        };
+        let cluster = run_cluster(&t, &spec);
+        let mut single =
+            Balancer::kiss(2000, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let want = run_trace_with(&t, &mut single, InitOccupancy::LatencyOnly);
+        assert_eq!(cluster.report, want, "N=1 must reduce to the single-node engine");
+        assert_eq!(cluster.per_node[0], want);
+    }
+
+    #[test]
+    fn round_robin_cycles_nodes() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 1_000_000)],
+            events: vec![inv(0, 0, 1_000_000), inv(10, 0, 1_000_000), inv(20, 0, 1_000_000)],
+        };
+        let spec = ClusterSpec::homogeneous(3, 1000, NodePolicy::kiss_default());
+        let r = run_cluster(&t, &spec);
+        for (i, node) in r.per_node.iter().enumerate() {
+            assert_eq!(node.overall.total_accesses(), 1, "node {i}: {node:?}");
+        }
+    }
+
+    #[test]
+    fn least_loaded_ties_break_to_lowest_index() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 1_000_000)],
+            events: vec![inv(0, 0, 1_000_000)],
+        };
+        let spec = ClusterSpec::homogeneous(3, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::LeastLoaded);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.per_node[0].overall.misses, 1, "empty cluster routes to node 0");
+        assert_eq!(r.per_node[1].overall.total_accesses(), 0);
+    }
+
+    #[test]
+    fn sticky_keeps_function_on_one_node() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 50, 1_000, 500)],
+            events: (0..20u64).map(|i| inv(i * 100_000, (i % 2) as u32, 500)).collect(),
+        };
+        let spec = ClusterSpec::homogeneous(4, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_fallbacks(0);
+        let r = run_cluster(&t, &spec);
+        // Each function hashes to exactly one node: at most 2 nodes serve
+        // traffic, and each sees either all-of-f0 or all-of-f1 (10 each).
+        let busy: Vec<u64> = r
+            .per_node
+            .iter()
+            .map(|n| n.overall.total_accesses())
+            .filter(|&c| c > 0)
+            .collect();
+        assert!(busy.len() <= 2, "{busy:?}");
+        assert_eq!(busy.iter().sum::<u64>(), 20);
+        for c in busy {
+            assert_eq!(c % 10, 0, "a function's stream must not split");
+        }
+    }
+
+    #[test]
+    fn size_affinity_separates_classes() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10, 1, 500), inv(100_000, 0, 500), inv(100_010, 1, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(2, 1000, NodePolicy::Baseline { policy: PolicyKind::Lru })
+            .with_router(RouterKind::SizeAffinity { small_nodes: 1 })
+            .with_fallbacks(0);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.per_node[0].large.total_accesses(), 0, "small node got a large fn");
+        assert_eq!(r.per_node[1].small.total_accesses(), 0, "large node got a small fn");
+        assert_eq!(r.per_node[0].small.total_accesses(), 2);
+        assert_eq!(r.per_node[1].large.total_accesses(), 2);
+    }
+
+    #[test]
+    fn fallback_serves_on_second_node() {
+        // Node 0 too small for the function; round-robin sends it there
+        // first, the fallback places it on node 1.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(100), baseline_node(1000)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+        };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.misses, 1);
+        assert_eq!(r.report.overall.drops, 0);
+        assert_eq!(r.per_node[1].overall.misses, 1);
+        assert_eq!(r.rerouted, 1);
+    }
+
+    #[test]
+    fn no_fallback_drops_instead() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(100), baseline_node(1000)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+        };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.drops, 1);
+        assert_eq!(r.rerouted, 0);
+    }
+
+    #[test]
+    fn cloud_tier_absorbs_cluster_drops() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10, 0, 500)],
+        };
+        // Both nodes far too small: everything offloads.
+        let spec = ClusterSpec::homogeneous(2, 100, NodePolicy::Baseline { policy: PolicyKind::Lru })
+            .with_cloud(80_000);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.offloads, 2);
+        assert_eq!(r.report.overall.drops, 0);
+        assert_eq!(r.report.large.offloads, 2, "offloads keep class slices");
+        // Cloud RTT paid as startup, execution still accounted.
+        assert_eq!(r.report.overall.startup_us, 160_000);
+        assert_eq!(r.report.overall.exec_us, 1_000);
+        assert!(r.report.is_consistent());
+    }
+
+    #[test]
+    fn cluster_spec_helpers() {
+        let spec = ClusterSpec::homogeneous(4, 2048, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_cloud(50_000)
+            .with_fallbacks(3)
+            .with_init_occupancy(InitOccupancy::HoldsMemory);
+        assert_eq!(spec.total_mem_mb(), 4 * 2048);
+        assert_eq!(spec.cloud, Some(CloudTier { rtt_us: 50_000 }));
+        assert_eq!(spec.max_fallbacks, 3);
+        assert_eq!(RouterKind::parse("ll", 0), Some(RouterKind::LeastLoaded));
+        assert_eq!(
+            RouterKind::parse("affinity", 2),
+            Some(RouterKind::SizeAffinity { small_nodes: 2 })
+        );
+        assert_eq!(RouterKind::parse("bogus", 0), None);
+        assert_eq!(NodePolicy::kiss_default().label(), "kiss");
+    }
+}

@@ -14,6 +14,12 @@
 //! comparison isolates the memory-management policy exactly as the paper
 //! intends. Everything is deterministic: the virtual clock is `u64`
 //! microseconds and the only state is the dispatcher's.
+//!
+//! [`cluster`] lifts the same event semantics to a multi-node edge
+//! cluster with pluggable routers and an edge→cloud offload path; a
+//! one-node cluster reduces bit-for-bit to [`run_trace_with`].
+
+pub mod cluster;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

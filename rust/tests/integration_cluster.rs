@@ -1,0 +1,259 @@
+//! Integration: the multi-node cluster engine — the determinism lock
+//! (N=1 reduces bit-for-bit to the single-node engine), offload
+//! accounting, router determinism, and config-to-spec threading.
+
+use kiss_faas::config::SimConfig;
+use kiss_faas::coordinator::policy::PolicyKind;
+use kiss_faas::coordinator::Balancer;
+use kiss_faas::experiments::paper_workload;
+use kiss_faas::sim::cluster::{
+    run_cluster, ClusterSpec, NodePolicy, NodeSpec, RouterKind,
+};
+use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+
+fn workload(seed: u64) -> SynthConfig {
+    SynthConfig {
+        seed,
+        n_small: 60,
+        n_large: 10,
+        duration_us: 600_000_000, // 10 min
+        rate_per_sec: 30.0,
+        ..paper_workload()
+    }
+}
+
+fn kiss_node(mem_mb: u64) -> NodeSpec {
+    NodeSpec {
+        mem_mb,
+        policy: NodePolicy::Kiss {
+            small_frac: 0.8,
+            threshold_mb: 200,
+            small_policy: PolicyKind::Lru,
+            large_policy: PolicyKind::Lru,
+        },
+    }
+}
+
+/// The acceptance-criteria lock: a one-node cluster must reproduce
+/// `run_trace` exactly — same hits, misses, drops, startup_us, exec_us,
+/// in every slice — for every router kind (the router is irrelevant with
+/// one node) and both init-occupancy models.
+#[test]
+fn one_node_cluster_is_bit_identical_to_run_trace() {
+    let trace = synthesize(&workload(42));
+    for occ in [InitOccupancy::LatencyOnly, InitOccupancy::HoldsMemory] {
+        let mut single = Balancer::kiss(4 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let want = run_trace_with(&trace, &mut single, occ);
+        for router in [
+            RouterKind::RoundRobin,
+            RouterKind::LeastLoaded,
+            RouterKind::SizeAffinity { small_nodes: 1 },
+            RouterKind::Sticky,
+        ] {
+            let spec = ClusterSpec {
+                nodes: vec![kiss_node(4 * 1024)],
+                router,
+                max_fallbacks: 1,
+                cloud: None,
+                init_occupancy: occ,
+            };
+            let got = run_cluster(&trace, &spec);
+            assert_eq!(
+                got.report,
+                want,
+                "router {} / {occ:?} diverged from the single-node engine",
+                router.label()
+            );
+            assert_eq!(got.per_node.len(), 1);
+            assert_eq!(got.rerouted, 0);
+        }
+    }
+}
+
+/// The degenerate config path: no `[cluster]` section builds a 1-node
+/// spec that also matches the single-node engine on the same trace.
+#[test]
+fn default_config_cluster_spec_matches_single_node() {
+    let mut cfg = SimConfig::edge_default(4 * 1024);
+    cfg.synth = workload(7);
+    let trace = synthesize(&cfg.synth);
+
+    let mut balancer = cfg.build_balancer();
+    let want = run_trace_with(&trace, &mut balancer, InitOccupancy::HoldsMemory);
+
+    let mut spec = cfg.build_cluster_spec();
+    spec.init_occupancy = InitOccupancy::HoldsMemory;
+    let got = run_cluster(&trace, &spec);
+    assert_eq!(got.report, want);
+}
+
+#[test]
+fn cluster_runs_are_deterministic() {
+    let trace = synthesize(&workload(3));
+    let spec = ClusterSpec {
+        nodes: vec![kiss_node(2 * 1024), kiss_node(1024), kiss_node(512)],
+        router: RouterKind::LeastLoaded,
+        max_fallbacks: 2,
+        cloud: None,
+        init_occupancy: InitOccupancy::HoldsMemory,
+    }
+    .with_cloud(80_000);
+    let a = run_cluster(&trace, &spec);
+    let b = run_cluster(&trace, &spec);
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.per_node, b.per_node);
+    assert_eq!(a.peak_used_mb, b.peak_used_mb);
+    assert_eq!(a.rerouted, b.rerouted);
+}
+
+/// Offload accounting is class-consistent: overall = small + large in
+/// every field (`Report::is_consistent`), offloads never appear in
+/// per-node reports, and the cloud tier absorbs exactly the drops the
+/// cloudless cluster would have suffered.
+#[test]
+fn offload_accounting_is_class_consistent() {
+    let trace = synthesize(&workload(11));
+    // Deliberately undersized fleet so placement failures actually occur.
+    let base = ClusterSpec {
+        nodes: vec![kiss_node(768), kiss_node(512)],
+        router: RouterKind::LeastLoaded,
+        max_fallbacks: 1,
+        cloud: None,
+        init_occupancy: InitOccupancy::HoldsMemory,
+    };
+    let dropped = run_cluster(&trace, &base);
+    assert!(
+        dropped.report.overall.drops > 0,
+        "workload must stress the fleet: {:?}",
+        dropped.report.overall
+    );
+
+    let offloaded = run_cluster(&trace, &base.clone().with_cloud(80_000));
+    let o = &offloaded.report;
+    assert!(o.is_consistent(), "overall != small + large: {o:?}");
+    assert_eq!(o.overall.drops, 0, "cloud tier absorbs every placement failure");
+    assert_eq!(o.overall.offloads, dropped.report.overall.drops);
+    assert_eq!(o.small.offloads, dropped.report.small.drops);
+    assert_eq!(o.large.offloads, dropped.report.large.drops);
+    // Offloads pay the RTT as startup wait.
+    assert_eq!(
+        o.overall.startup_us,
+        dropped.report.overall.startup_us + 80_000 * o.overall.offloads
+    );
+    // Hits/misses on the edge are untouched by the cloud tier.
+    assert_eq!(o.overall.hits, dropped.report.overall.hits);
+    assert_eq!(o.overall.misses, dropped.report.overall.misses);
+    for node in &offloaded.per_node {
+        assert_eq!(node.overall.offloads, 0, "offloads are cluster-level only");
+        assert_eq!(node.overall.drops, 0);
+    }
+}
+
+/// Router ties break deterministically: on an idle homogeneous fleet the
+/// least-loaded router picks node 0, and repeated runs agree on every
+/// per-node counter.
+#[test]
+fn router_ties_break_deterministically() {
+    let trace = synthesize(&workload(23));
+    let spec = ClusterSpec::homogeneous(4, 2 * 1024, NodePolicy::kiss_default())
+        .with_router(RouterKind::LeastLoaded)
+        .with_init_occupancy(InitOccupancy::HoldsMemory);
+    let a = run_cluster(&trace, &spec);
+    let b = run_cluster(&trace, &spec);
+    assert_eq!(a.per_node, b.per_node, "tie-breaks must not wobble");
+    // The very first event of the trace lands on node 0 (lowest index
+    // wins the all-idle tie).
+    assert!(a.per_node[0].overall.total_accesses() > 0);
+}
+
+/// Sticky routing is per-function stable: with fallbacks disabled, the
+/// per-function traffic of any node is identical across runs, and a
+/// 2-node fleet splits functions (not invocations) between nodes.
+#[test]
+fn sticky_router_is_function_stable() {
+    let trace = synthesize(&workload(31));
+    let spec = ClusterSpec::homogeneous(2, 4 * 1024, NodePolicy::kiss_default())
+        .with_router(RouterKind::Sticky)
+        .with_fallbacks(0)
+        .with_init_occupancy(InitOccupancy::HoldsMemory);
+    let r = run_cluster(&trace, &spec);
+    let total: u64 = r.per_node.iter().map(|n| n.overall.total_accesses()).sum();
+    let served_or_dropped =
+        r.report.overall.total_accesses() - r.report.overall.drops - r.report.overall.offloads;
+    assert_eq!(total, served_or_dropped);
+    assert!(
+        r.per_node[0].overall.total_accesses() > 0
+            && r.per_node[1].overall.total_accesses() > 0,
+        "fxhash should spread functions over both nodes: {:?}",
+        r.per_node.iter().map(|n| n.overall.total_accesses()).collect::<Vec<_>>()
+    );
+}
+
+/// Size-affinity with fallbacks disabled keeps the classes on disjoint
+/// node sets end-to-end.
+#[test]
+fn size_affinity_isolates_classes_at_scale() {
+    let trace = synthesize(&workload(13));
+    let spec = ClusterSpec::homogeneous(4, 2 * 1024, NodePolicy::kiss_default())
+        .with_router(RouterKind::SizeAffinity { small_nodes: 2 })
+        .with_fallbacks(0)
+        .with_init_occupancy(InitOccupancy::HoldsMemory);
+    let r = run_cluster(&trace, &spec);
+    for (i, node) in r.per_node.iter().enumerate() {
+        if i < 2 {
+            assert_eq!(node.large.total_accesses(), 0, "small node {i} served large fns");
+            assert!(node.small.total_accesses() > 0, "small node {i} idle");
+        } else {
+            assert_eq!(node.small.total_accesses(), 0, "large node {i} served small fns");
+        }
+    }
+}
+
+/// Fallback routing strictly reduces placement failures on a skewed
+/// fleet (a sticky-overloaded node spills onto its neighbours).
+#[test]
+fn fallbacks_reduce_placement_failures() {
+    let trace = synthesize(&workload(19));
+    let tight = ClusterSpec {
+        nodes: vec![kiss_node(768), kiss_node(768), kiss_node(768)],
+        router: RouterKind::Sticky,
+        max_fallbacks: 0,
+        cloud: None,
+        init_occupancy: InitOccupancy::HoldsMemory,
+    };
+    let without = run_cluster(&trace, &tight);
+    assert_eq!(without.rerouted, 0, "no fallbacks, no reroutes");
+    let with = run_cluster(&trace, &tight.clone().with_fallbacks(2));
+    if without.report.overall.drops > 0 {
+        assert!(with.rerouted > 0, "a stressed sticky fleet should reroute");
+    }
+    // Every invocation is still accounted for exactly once.
+    assert_eq!(
+        with.report.overall.total_accesses(),
+        without.report.overall.total_accesses()
+    );
+    assert!(with.report.is_consistent());
+}
+
+/// The cluster sweep experiments run end-to-end on a reduced workload
+/// and produce well-formed tables.
+#[test]
+fn cluster_sweeps_run_end_to_end() {
+    let synth = SynthConfig {
+        seed: 5,
+        n_small: 30,
+        n_large: 6,
+        duration_us: 120_000_000,
+        rate_per_sec: 20.0,
+        ..paper_workload()
+    };
+    let scale = kiss_faas::experiments::cluster::cluster_scale(&synth);
+    let rendered = scale.render();
+    assert!(rendered.contains("##"), "{rendered}");
+    assert!(rendered.contains("least-loaded"), "{rendered}");
+    assert_eq!(scale.xs, vec![1.0, 2.0, 4.0, 8.0]);
+
+    let hetero = kiss_faas::experiments::cluster::cluster_hetero(&synth);
+    assert!(hetero.series_named("offload%").is_some());
+}
