@@ -199,6 +199,7 @@ fn main() -> anyhow::Result<()> {
                 RecordKind::Miss => "cold",
                 RecordKind::Drop => "drop",
                 RecordKind::Offload => "offload",
+                RecordKind::Migrate { .. } => "migrate",
             }
         );
         if lats.is_empty() {

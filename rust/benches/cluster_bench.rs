@@ -9,7 +9,9 @@ use std::time::{Duration, Instant};
 
 use kiss_faas::bench::{group, Bencher};
 use kiss_faas::experiments::paper_workload;
-use kiss_faas::sim::cluster::{run_cluster, ClusterSpec, NodePolicy, RouterKind};
+use kiss_faas::sim::cluster::{
+    run_cluster, ClusterSpec, ControllerConfig, NodePolicy, RouterKind,
+};
 use kiss_faas::sim::InitOccupancy;
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 
@@ -65,6 +67,28 @@ fn main() {
                 std::hint::black_box(run_cluster(&trace, &s));
             });
         println!("{r}");
+    }
+
+    group("cluster: migration/controller overhead (4 nodes, least-loaded)");
+    {
+        let base = spec(4, RouterKind::LeastLoaded);
+        let variants: [(&str, ClusterSpec); 3] = [
+            ("static", base.clone()),
+            ("migrate", base.clone().with_migration(15_000)),
+            (
+                "migrate+ctl",
+                base.with_migration(15_000).with_controller(ControllerConfig::default()),
+            ),
+        ];
+        for (label, s) in &variants {
+            let r = Bencher::new(&format!("cluster/4-nodes/{label}"))
+                .items_per_iter(n_events)
+                .target(Duration::from_secs(1))
+                .run(|| {
+                    std::hint::black_box(run_cluster(&trace, s));
+                });
+            println!("{r}");
+        }
     }
 
     group("cluster: multi-trial sweep across std::thread (8 seeds, 4 nodes)");

@@ -31,6 +31,19 @@
 //! fallbacks = 1
 //! cloud_rtt_ms = 80                   # 0 / absent = no cloud tier
 //! policies = ["kiss", "kiss", "baseline", "adaptive"]
+//!
+//! [cluster.migration]                 # absent = migration disabled
+//! enabled = true                      # optional kill switch
+//! cost_ms = 15                        # warm-container transfer cost
+//!
+//! [cluster.controller]                # absent = controller disabled
+//! enabled = true                      # optional kill switch
+//! epoch_s = 60                        # virtual time between decisions
+//! step = 0.05                         # split capacity moved per decision
+//! min_frac = 0.5                      # per-node small-share clamp
+//! max_frac = 0.95
+//! reassign_small_nodes = true         # size-affinity boundary lever
+//! resplit_nodes = true                # per-node KiSS split lever
 //! ```
 
 pub mod toml;
@@ -41,7 +54,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::{AdaptiveConfig, Balancer};
-use crate::sim::cluster::{CloudTier, ClusterSpec, NodePolicy, NodeSpec, RouterKind};
+use crate::sim::cluster::{
+    CloudTier, ClusterSpec, ControllerConfig, MigrationPolicy, NodePolicy, NodeSpec, RouterKind,
+};
 use crate::trace::synth::{BurstConfig, SynthConfig};
 
 /// Partitioning mode under test.
@@ -50,7 +65,12 @@ pub enum Mode {
     /// Unified warm pool (the paper's baseline).
     Baseline,
     /// KiSS partitioning with the small pool's share and size threshold.
-    Kiss { small_frac: f64, threshold_mb: u32 },
+    Kiss {
+        /// Small-pool share of node memory (the paper's "80-20" = 0.8).
+        small_frac: f64,
+        /// Size threshold (MB) separating the classes.
+        threshold_mb: u32,
+    },
 }
 
 /// Which memory policy a cluster node runs; the `kiss`/`adaptive`
@@ -59,12 +79,16 @@ pub enum Mode {
 pub enum NodePolicyKind {
     /// Follow the top-level mode (`[kiss]` enabled → KiSS, else baseline).
     Inherit,
+    /// Unified warm pool (the paper's baseline).
     Baseline,
+    /// KiSS size-aware partitioning with the `[kiss]` parameters.
     Kiss,
+    /// KiSS with the node-local adaptive split (§7.3 extension).
     Adaptive,
 }
 
 impl NodePolicyKind {
+    /// Parse a policy name (`inherit`/`baseline`/`kiss`/`adaptive`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "inherit" => Some(Self::Inherit),
@@ -95,6 +119,12 @@ pub struct ClusterConfig {
     /// Per-node policies: empty = all inherit the top-level mode; one
     /// entry = homogeneous; otherwise one per node.
     pub policies: Vec<NodePolicyKind>,
+    /// Warm-container migration (`[cluster.migration]`); `None` =
+    /// disabled, the static PR-1 cluster.
+    pub migration: Option<MigrationPolicy>,
+    /// Online small-nodes/split controller (`[cluster.controller]`);
+    /// `None` = disabled.
+    pub controller: Option<ControllerConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -106,6 +136,8 @@ impl Default for ClusterConfig {
             fallbacks: 1,
             cloud_rtt_us: 0,
             policies: Vec::new(),
+            migration: None,
+            controller: None,
         }
     }
 }
@@ -115,6 +147,7 @@ impl Default for ClusterConfig {
 pub struct SimConfig {
     /// Node memory (MB). The paper sweeps 1–24 GB for edge scenarios.
     pub node_mem_mb: u64,
+    /// Partitioning mode under test (baseline or KiSS).
     pub mode: Mode,
     /// Replacement policy for the small pool (and the baseline pool).
     pub small_policy: PolicyKind,
@@ -134,6 +167,11 @@ pub const DEFAULT_THRESHOLD_MB: u32 = 200;
 
 /// The paper's representative split (§4.1): 80% small / 20% large.
 pub const DEFAULT_SMALL_FRAC: f64 = 0.8;
+
+/// Default warm-container transfer cost (µs) when `[cluster.migration]`
+/// is enabled without an explicit `cost_ms`: 15 ms, a CRIU-style
+/// checkpoint/transfer/restore of a small container over an edge LAN.
+pub const DEFAULT_MIGRATION_COST_US: u64 = 15_000;
 
 impl SimConfig {
     /// The paper's default edge node: KiSS 80-20, LRU everywhere.
@@ -178,6 +216,30 @@ impl SimConfig {
     /// (`run_on`): `HoldsMemory` unless `KISS_INIT_LATENCY_ONLY` is set,
     /// so a degenerate cluster run matches `run_single` on the same
     /// config.
+    ///
+    /// ```no_run
+    /// // (no_run: doctest binaries miss the libstdc++ rpath in this
+    /// // image — see util::prop; the same parse+build flow executes in
+    /// // this module's tests and tests/integration_cluster.rs)
+    /// use kiss_faas::config::SimConfig;
+    ///
+    /// let cfg = SimConfig::from_toml_str(r#"
+    ///     [cluster]
+    ///     nodes = 4
+    ///     mem_mb = 2048
+    ///     router = "size-affinity"
+    ///     small_nodes = 2
+    ///     cloud_rtt_ms = 80
+    ///     [cluster.migration]
+    ///     cost_ms = 15
+    ///     [cluster.controller]
+    ///     epoch_s = 60
+    /// "#).unwrap();
+    /// let spec = cfg.build_cluster_spec();
+    /// assert_eq!(spec.nodes.len(), 4);
+    /// assert_eq!(spec.migration.unwrap().cost_us, 15_000);
+    /// assert_eq!(spec.controller.unwrap().epoch_us, 60_000_000);
+    /// ```
     pub fn build_cluster_spec(&self) -> ClusterSpec {
         let default_cc = ClusterConfig::default();
         let cc = self.cluster.as_ref().unwrap_or(&default_cc);
@@ -246,14 +308,36 @@ impl SimConfig {
             } else {
                 crate::sim::InitOccupancy::HoldsMemory
             },
+            migration: cc.migration,
+            controller: cc.controller,
         }
     }
 
+    /// Reject configurations the simulator cannot run (zero memory,
+    /// degenerate splits, arity mismatches, invalid controller bounds).
     pub fn validate(&self) -> Result<()> {
         if self.node_mem_mb == 0 {
             bail!("node.mem_mb must be > 0");
         }
         if let Some(c) = &self.cluster {
+            if let Some(ctl) = &c.controller {
+                if ctl.epoch_us == 0 {
+                    bail!("cluster.controller.epoch_s must be > 0");
+                }
+                if !(ctl.step > 0.0 && ctl.step < 1.0) {
+                    bail!("cluster.controller.step must be in (0, 1), got {}", ctl.step);
+                }
+                if !(ctl.min_frac > 0.0
+                    && ctl.min_frac <= ctl.max_frac
+                    && ctl.max_frac < 1.0)
+                {
+                    bail!(
+                        "cluster.controller needs 0 < min_frac <= max_frac < 1, got {}..{}",
+                        ctl.min_frac,
+                        ctl.max_frac
+                    );
+                }
+            }
             if c.nodes == 0 {
                 bail!("cluster.nodes must be > 0");
             }
@@ -311,6 +395,8 @@ impl SimConfig {
         Self::from_toml_str(&text)
     }
 
+    /// Parse a TOML-subset document (see the module docs for the full
+    /// schema); unset keys keep their [`SimConfig::edge_default`] values.
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let doc = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
         let mut cfg = Self::edge_default(8 * 1024);
@@ -489,6 +575,87 @@ impl SimConfig {
             cfg.cluster = Some(cc);
         }
 
+        let migration_section = doc.section("cluster.migration");
+        let controller_section = doc.section("cluster.controller");
+        if cfg.cluster.is_none()
+            && (migration_section.is_some() || controller_section.is_some())
+        {
+            bail!("[cluster.migration] / [cluster.controller] require a [cluster] section");
+        }
+
+        if let Some(section) = migration_section {
+            let mut enabled = true;
+            let mut cost_us = DEFAULT_MIGRATION_COST_US;
+            for (key, v) in section {
+                match key.as_str() {
+                    "enabled" => {
+                        enabled = v
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("cluster.migration.enabled: bad value"))?
+                    }
+                    "cost_ms" => {
+                        let ms =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.migration.cost_ms"))?;
+                        if ms < 0.0 {
+                            bail!("cluster.migration.cost_ms must be >= 0");
+                        }
+                        cost_us = (ms * 1000.0).round() as u64;
+                    }
+                    other => bail!("unknown cluster.migration key: {other}"),
+                }
+            }
+            if enabled {
+                let cc = cfg.cluster.as_mut().expect("checked above");
+                cc.migration = Some(MigrationPolicy { cost_us });
+            }
+        }
+
+        if let Some(section) = controller_section {
+            let mut enabled = true;
+            let mut ctl = ControllerConfig::default();
+            for (key, v) in section {
+                match key.as_str() {
+                    "enabled" => {
+                        enabled = v
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("cluster.controller.enabled: bad value"))?
+                    }
+                    "epoch_s" => {
+                        ctl.epoch_us =
+                            v.as_u64().ok_or_else(|| anyhow!("cluster.controller.epoch_s"))?
+                                * 1_000_000
+                    }
+                    "step" => {
+                        ctl.step =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.controller.step"))?
+                    }
+                    "min_frac" => {
+                        ctl.min_frac =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.controller.min_frac"))?
+                    }
+                    "max_frac" => {
+                        ctl.max_frac =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.controller.max_frac"))?
+                    }
+                    "reassign_small_nodes" => {
+                        ctl.reassign_small_nodes = v.as_bool().ok_or_else(|| {
+                            anyhow!("cluster.controller.reassign_small_nodes: bad value")
+                        })?
+                    }
+                    "resplit_nodes" => {
+                        ctl.resplit_nodes = v.as_bool().ok_or_else(|| {
+                            anyhow!("cluster.controller.resplit_nodes: bad value")
+                        })?
+                    }
+                    other => bail!("unknown cluster.controller key: {other}"),
+                }
+            }
+            if enabled {
+                let cc = cfg.cluster.as_mut().expect("checked above");
+                cc.controller = Some(ctl);
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -509,17 +676,29 @@ impl SimConfig {
         let base =
             format!("{} | node {} MB | seed {}", mode, self.node_mem_mb, self.synth.seed);
         match &self.cluster {
-            Some(c) => format!(
-                "{base} | cluster {}x router {} fallbacks {} cloud {}",
-                c.nodes,
-                c.router.label(),
-                c.fallbacks,
-                if c.cloud_rtt_us > 0 {
-                    format!("{:.1}ms", c.cloud_rtt_us as f64 / 1000.0)
-                } else {
-                    "off".to_string()
+            Some(c) => {
+                let mut extras = String::new();
+                if let Some(m) = &c.migration {
+                    extras.push_str(&format!(
+                        " migrate {:.1}ms",
+                        m.cost_us as f64 / 1000.0
+                    ));
                 }
-            ),
+                if let Some(ctl) = &c.controller {
+                    extras.push_str(&format!(" ctl {}s", ctl.epoch_us / 1_000_000));
+                }
+                format!(
+                    "{base} | cluster {}x router {} fallbacks {} cloud {}{extras}",
+                    c.nodes,
+                    c.router.label(),
+                    c.fallbacks,
+                    if c.cloud_rtt_us > 0 {
+                        format!("{:.1}ms", c.cloud_rtt_us as f64 / 1000.0)
+                    } else {
+                        "off".to_string()
+                    }
+                )
+            }
             None => base,
         }
     }
@@ -684,6 +863,83 @@ mod tests {
         assert_eq!(spec.nodes.len(), 3);
         assert!(spec.nodes.iter().all(|n| n.mem_mb == 2048));
         assert!(spec.nodes.iter().all(|n| n.policy.label() == "baseline"));
+    }
+
+    #[test]
+    fn migration_and_controller_toml_roundtrip() {
+        let cfg = SimConfig::from_toml_str(
+            r#"
+            [cluster]
+            nodes = 4
+            router = "size-affinity"
+            small_nodes = 2
+            cloud_rtt_ms = 80
+            [cluster.migration]
+            cost_ms = 25.5
+            [cluster.controller]
+            epoch_s = 30
+            step = 0.1
+            min_frac = 0.4
+            max_frac = 0.9
+            reassign_small_nodes = true
+            resplit_nodes = false
+            "#,
+        )
+        .unwrap();
+        let cc = cfg.cluster.as_ref().unwrap();
+        assert_eq!(cc.migration, Some(MigrationPolicy { cost_us: 25_500 }));
+        let ctl = cc.controller.unwrap();
+        assert_eq!(ctl.epoch_us, 30_000_000);
+        assert_eq!(ctl.step, 0.1);
+        assert_eq!(ctl.min_frac, 0.4);
+        assert_eq!(ctl.max_frac, 0.9);
+        assert!(ctl.reassign_small_nodes);
+        assert!(!ctl.resplit_nodes);
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.migration, cc.migration);
+        assert_eq!(spec.controller, cc.controller);
+        let d = cfg.describe();
+        assert!(d.contains("migrate 25.5ms"), "{d}");
+        assert!(d.contains("ctl 30s"), "{d}");
+    }
+
+    #[test]
+    fn migration_defaults_and_kill_switch() {
+        // Bare section enables migration at the default cost.
+        let cfg =
+            SimConfig::from_toml_str("[cluster]\nnodes = 2\n[cluster.migration]").unwrap();
+        assert_eq!(
+            cfg.cluster.as_ref().unwrap().migration,
+            Some(MigrationPolicy { cost_us: DEFAULT_MIGRATION_COST_US })
+        );
+        // enabled = false keeps it off even with a cost set.
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.migration]\nenabled = false\ncost_ms = 5",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().migration, None);
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.controller]\nenabled = false",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().controller, None);
+    }
+
+    #[test]
+    fn rejects_bad_migration_and_controller_configs() {
+        // Subsections without [cluster] are configuration mistakes.
+        assert!(SimConfig::from_toml_str("[cluster.migration]\ncost_ms = 5").is_err());
+        assert!(SimConfig::from_toml_str("[cluster.controller]\nepoch_s = 5").is_err());
+        for bad in [
+            "[cluster]\nnodes = 2\n[cluster.migration]\ncost_ms = -1",
+            "[cluster]\nnodes = 2\n[cluster.migration]\nbogus = 1",
+            "[cluster]\nnodes = 2\n[cluster.controller]\nepoch_s = 0",
+            "[cluster]\nnodes = 2\n[cluster.controller]\nstep = 1.5",
+            "[cluster]\nnodes = 2\n[cluster.controller]\nmin_frac = 0.9\nmax_frac = 0.5",
+            "[cluster]\nnodes = 2\n[cluster.controller]\nbogus = 1",
+        ] {
+            assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -12,16 +12,23 @@
 
 use std::collections::BTreeMap;
 
+/// One parsed TOML value (the scalar/array subset this parser supports).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A double-quoted string.
     Str(String),
+    /// An integer literal (underscore separators allowed).
     Int(i64),
+    /// A float literal (or scientific notation).
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of scalars.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -29,6 +36,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is a [`Value::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(x) => Some(*x),
@@ -36,6 +44,7 @@ impl Value {
         }
     }
 
+    /// The integer payload as unsigned; negative values yield `None`.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_i64().filter(|x| *x >= 0).map(|x| x as u64)
     }
@@ -49,6 +58,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -56,6 +66,7 @@ impl Value {
         }
     }
 
+    /// The array payload, if this is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -68,22 +79,29 @@ impl Value {
 /// live under `""`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Document {
+    /// Section name (full dotted path for `[a.b]`) → key → value.
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
 impl Document {
+    /// Look one key up in one section.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section)?.get(key)
     }
 
+    /// All keys of one section, if present. Subsections (`[a.b]`) are
+    /// separate sections named with the full dotted path.
     pub fn section(&self, name: &str) -> Option<&BTreeMap<String, Value>> {
         self.sections.get(name)
     }
 }
 
+/// A parse failure, with the 1-based line it occurred on.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line number of the offending line.
     pub line: usize,
+    /// What was wrong with it.
     pub msg: String,
 }
 
@@ -95,6 +113,7 @@ impl std::fmt::Display for TomlError {
 
 impl std::error::Error for TomlError {}
 
+/// Parse a TOML-subset document (see the module docs for the grammar).
 pub fn parse(text: &str) -> Result<Document, TomlError> {
     let mut doc = Document::default();
     let mut current = String::new();

@@ -204,6 +204,30 @@ impl Dispatcher for AdaptiveBalancer {
     fn route(&self, profile: &FunctionProfile) -> usize {
         self.inner.route(profile)
     }
+
+    fn has_idle(&self, profile: &FunctionProfile) -> bool {
+        self.inner.has_idle(profile)
+    }
+
+    fn take_idle(&mut self, profile: &FunctionProfile) -> bool {
+        self.inner.take_idle(profile)
+    }
+
+    fn can_admit(&self, profile: &FunctionProfile) -> bool {
+        self.inner.can_admit(profile)
+    }
+
+    fn admit_migrated(
+        &mut self,
+        profile: &FunctionProfile,
+        now_us: u64,
+    ) -> Option<(usize, ContainerId)> {
+        self.inner.admit_migrated(profile, now_us)
+    }
+
+    // An adaptive node manages its own split; the cluster controller must
+    // not fight its hill-climbing loop, so external resizes are refused
+    // (`small_frac` stays `None` via the trait default).
 }
 
 #[cfg(test)]

@@ -200,6 +200,40 @@ impl Dispatcher for Balancer {
             .position(|s| profile.mem_mb < s.max_mb)
             .expect("catch-all partition guarantees a route")
     }
+
+    fn has_idle(&self, profile: &FunctionProfile) -> bool {
+        self.pools[self.route(profile)].has_idle(profile.id)
+    }
+
+    fn take_idle(&mut self, profile: &FunctionProfile) -> bool {
+        let pool = self.route(profile);
+        self.pools[pool].take_idle_mru(profile.id).is_some()
+    }
+
+    fn can_admit(&self, profile: &FunctionProfile) -> bool {
+        self.pools[self.route(profile)].can_admit(profile.mem_mb)
+    }
+
+    fn admit_migrated(
+        &mut self,
+        profile: &FunctionProfile,
+        now_us: u64,
+    ) -> Option<(usize, ContainerId)> {
+        let pool = self.route(profile);
+        self.pools[pool].admit_warm(profile, now_us).map(|c| (pool, c))
+    }
+
+    fn small_frac(&self) -> Option<f64> {
+        (self.pools.len() == 2).then_some(self.specs[0].frac)
+    }
+
+    fn try_set_split(&mut self, small_frac: f64) -> bool {
+        if self.pools.len() != 2 || small_frac <= 0.0 || small_frac >= 1.0 {
+            return false;
+        }
+        self.set_split(small_frac);
+        true
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +355,41 @@ mod tests {
             1000,
             vec![PartitionSpec { name: "x", frac: 1.0, max_mb: 100, policy: PolicyKind::Lru }],
         );
+    }
+
+    #[test]
+    fn migration_hooks_route_to_the_right_pool() {
+        let mut b = Balancer::kiss(1000, 0.5, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let small = profile(0, 100);
+        assert!(!b.has_idle(&small));
+        let Outcome::Cold { pool: 0, container } = b.dispatch(&small, 0) else { panic!() };
+        b.release(0, container, 1);
+        assert!(b.has_idle(&small));
+        // Donate the idle container: the small pool empties.
+        assert!(b.take_idle(&small));
+        assert!(!b.has_idle(&small));
+        assert_eq!(b.pool(0).used_mb(), 0);
+        // Admission routes by size: a large profile admits into pool 1.
+        let large = profile(1, 400);
+        assert!(b.can_admit(&large));
+        let (pool, c) = b.admit_migrated(&large, 2).unwrap();
+        assert_eq!(pool, 1);
+        b.release(pool, c, 3);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_control_hooks() {
+        let mut b = Balancer::kiss(1000, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        assert_eq!(b.small_frac(), Some(0.8));
+        assert!(b.try_set_split(0.6));
+        assert_eq!(b.small_frac(), Some(0.6));
+        assert_eq!(b.pool(0).capacity_mb(), 600);
+        assert!(!b.try_set_split(0.0), "degenerate splits refused");
+        // Baseline (one pool) has no adjustable split.
+        let mut base = Balancer::baseline(1000, PolicyKind::Lru);
+        assert_eq!(base.small_frac(), None);
+        assert!(!base.try_set_split(0.5));
     }
 
     #[test]

@@ -17,11 +17,18 @@
 //! are `Dispatcher`s, so every experiment isolates exactly the policy
 //! difference the paper studies.
 
+// `policy` is fully `missing_docs`-clean; the sibling modules keep an
+// allow until their own documentation pass.
+#[allow(missing_docs)]
 pub mod adaptive;
+#[allow(missing_docs)]
 pub mod analyzer;
+#[allow(missing_docs)]
 pub mod balancer;
+#[allow(missing_docs)]
 pub mod container;
 pub mod policy;
+#[allow(missing_docs)]
 pub mod pool;
 
 pub use adaptive::{AdaptiveBalancer, AdaptiveConfig};
@@ -36,12 +43,16 @@ use crate::trace::{FunctionProfile, SizeClass};
 pub enum Outcome {
     /// Warm container reused.
     Hit {
+        /// Pool index the container lives in.
         pool: usize,
+        /// Handle to release when the invocation completes.
         container: ContainerId,
     },
     /// Cold start: a new container was admitted (possibly after evictions).
     Cold {
+        /// Pool index the container was admitted into.
         pool: usize,
+        /// Handle to release when the invocation completes.
         container: ContainerId,
     },
     /// No capacity: the invocation is punted to the cloud.
@@ -49,14 +60,17 @@ pub enum Outcome {
 }
 
 impl Outcome {
+    /// Whether this is a [`Outcome::Drop`].
     pub fn is_drop(&self) -> bool {
         matches!(self, Outcome::Drop)
     }
 
+    /// Whether this is a warm [`Outcome::Hit`].
     pub fn is_hit(&self) -> bool {
         matches!(self, Outcome::Hit { .. })
     }
 
+    /// Whether this is a [`Outcome::Cold`] start.
     pub fn is_cold(&self) -> bool {
         matches!(self, Outcome::Cold { .. })
     }
@@ -94,6 +108,69 @@ pub trait Dispatcher {
 
     /// Which pool this profile would route to (stable; used by metrics).
     fn route(&self, profile: &FunctionProfile) -> usize;
+
+    // --- Cross-node migration hooks (cluster extension) ---------------
+    //
+    // The cluster engine uses these to move an idle warm container from
+    // a donor node to a recipient node when placement would otherwise
+    // fail. Every method has an opt-out default, so dispatchers that do
+    // not participate in migration (e.g. the live serving node) need no
+    // changes.
+
+    /// Whether an idle warm container of `profile`'s function is resident
+    /// (this node could donate one to a migration). Default: no.
+    fn has_idle(&self, profile: &FunctionProfile) -> bool {
+        let _ = profile;
+        false
+    }
+
+    /// Remove the most-recently-used idle warm container of `profile`'s
+    /// function (the donor side of a migration). Returns whether one was
+    /// removed. Default: never donates.
+    fn take_idle(&mut self, profile: &FunctionProfile) -> bool {
+        let _ = profile;
+        false
+    }
+
+    /// Whether a busy container of `profile` could be admitted into its
+    /// routed pool right now (busy memory is unreclaimable; idle memory
+    /// counts as evictable headroom). Default: no.
+    fn can_admit(&self, profile: &FunctionProfile) -> bool {
+        let _ = profile;
+        false
+    }
+
+    /// Admit a migrated warm container, born busy serving the triggering
+    /// invocation (the recipient side of a migration); evicts idle
+    /// containers per policy to make room. Returns the `(pool, container)`
+    /// handle the driver later passes to [`Dispatcher::release`], or
+    /// `None` when admission is infeasible. Default: never admits.
+    fn admit_migrated(
+        &mut self,
+        profile: &FunctionProfile,
+        now_us: u64,
+    ) -> Option<(usize, ContainerId)> {
+        let _ = (profile, now_us);
+        None
+    }
+
+    // --- Online-controller hooks (cluster extension) ------------------
+
+    /// Current small-pool share of a two-pool KiSS dispatcher, or `None`
+    /// when this dispatcher has no externally adjustable split (baseline
+    /// single pool, self-managing adaptive node, N-way partitions).
+    fn small_frac(&self) -> Option<f64> {
+        None
+    }
+
+    /// Ask the dispatcher to live-resize its small/large split to
+    /// `small_frac` (the cluster controller's per-node lever). Returns
+    /// whether the resize was applied. Default: refuses — only two-pool
+    /// KiSS balancers are externally resizable.
+    fn try_set_split(&mut self, small_frac: f64) -> bool {
+        let _ = small_frac;
+        false
+    }
 }
 
 /// Classify a function against a size threshold — the KiSS router's core

@@ -11,6 +11,7 @@ use super::ReplacementPolicy;
 
 type Key = (u64, u64); // (uses, last_used_us)
 
+/// Frequency-based policy: victim = smallest `(uses, last_used_us)`.
 #[derive(Debug, Default)]
 pub struct Freq {
     order: BTreeSet<(Key, ContainerId)>,
@@ -18,6 +19,7 @@ pub struct Freq {
 }
 
 impl Freq {
+    /// An empty frequency index.
     pub fn new() -> Self {
         Self::default()
     }

@@ -27,6 +27,7 @@ fn key_bits(p: f64) -> u64 {
     p.to_bits()
 }
 
+/// GDSF policy state: a priority index plus the aging clock.
 #[derive(Debug, Default)]
 pub struct GreedyDual {
     clock: f64,
@@ -35,6 +36,7 @@ pub struct GreedyDual {
 }
 
 impl GreedyDual {
+    /// An empty GDSF index with the clock at zero.
     pub fn new() -> Self {
         Self::default()
     }

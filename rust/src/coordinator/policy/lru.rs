@@ -20,6 +20,7 @@ pub struct Lru {
 }
 
 impl Lru {
+    /// An empty LRU index.
     pub fn new() -> Self {
         Self::default()
     }

@@ -38,22 +38,29 @@ pub trait ReplacementPolicy: Send {
     /// Number of idle containers currently indexed (for invariants).
     fn len(&self) -> usize;
 
+    /// Whether no idle container is indexed.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Short policy name (`lru`/`gd`/`freq`), used in reports.
     fn name(&self) -> &'static str;
 }
 
 /// Policy selector used by configs / CLI flags.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
+    /// Least-recently-used ([`Lru`]) — the paper's default.
     Lru,
+    /// GreedyDual / GDSF ([`GreedyDual`]) — FaaSCache's cost-size-aware
+    /// policy.
     GreedyDual,
+    /// Least-frequently-used ([`Freq`]).
     Freq,
 }
 
 impl PolicyKind {
+    /// Instantiate the selected policy.
     pub fn build(self) -> Box<dyn ReplacementPolicy> {
         match self {
             PolicyKind::Lru => Box::new(Lru::new()),
@@ -62,6 +69,7 @@ impl PolicyKind {
         }
     }
 
+    /// Short name (`lru`/`gd`/`freq`), matching [`PolicyKind::parse`].
     pub fn label(self) -> &'static str {
         match self {
             PolicyKind::Lru => "lru",
@@ -70,6 +78,8 @@ impl PolicyKind {
         }
     }
 
+    /// Parse a policy name (case-insensitive; accepts the `label` forms
+    /// plus `greedydual`/`greedy-dual`/`frequency`).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "lru" => Some(PolicyKind::Lru),
@@ -79,6 +89,7 @@ impl PolicyKind {
         }
     }
 
+    /// Every selectable policy, in experiment-sweep order.
     pub const ALL: [PolicyKind; 3] =
         [PolicyKind::Lru, PolicyKind::GreedyDual, PolicyKind::Freq];
 }

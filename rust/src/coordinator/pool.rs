@@ -135,33 +135,12 @@ impl WarmPool {
             }
         }
 
-        // 2. Cold path: is admission feasible at all? Busy memory is not
-        //    reclaimable; the headroom is capacity minus busy memory
-        //    (robust to transient over-commit after a live shrink).
-        let needed = profile.mem_mb as u64;
-        let busy_mb = self.used_mb - self.idle_mb;
-        let headroom = self.capacity_mb.saturating_sub(busy_mb);
-        if needed > headroom {
-            return Acquire::Drop;
+        // 2-4. Cold path: feasibility check, policy evictions, born-busy
+        //      admission — shared with the migration path (admit_warm).
+        match self.admit_warm(profile, now_us) {
+            Some(id) => Acquire::Cold(id),
+            None => Acquire::Drop,
         }
-
-        // 3. Evict per policy until the new container fits.
-        while self.free_mb() < needed {
-            let victim = self
-                .policy
-                .pop_victim()
-                .expect("feasibility check guaranteed a victim");
-            self.remove_idle(victim);
-            self.evictions += 1;
-        }
-
-        // 4. Admit, born busy.
-        let id = ContainerId(self.next_id);
-        self.next_id += 1;
-        let c = Container::new(id, profile.id, profile.mem_mb, profile.cold_start_us, now_us);
-        self.used_mb += needed;
-        self.containers.insert(id, c);
-        Acquire::Cold(id)
     }
 
     /// An invocation finished; its container becomes idle (warm).
@@ -195,6 +174,64 @@ impl WarmPool {
                 self.idle_by_func.remove(&c.func);
             }
         }
+    }
+
+    /// Whether any idle warm container of `func` is resident (a cluster
+    /// migration donor candidate holds one).
+    pub fn has_idle(&self, func: FunctionId) -> bool {
+        self.idle_by_func.contains_key(&func)
+    }
+
+    /// Whether a busy container of `mem_mb` could be admitted right now
+    /// (the cold-path feasibility check, without performing evictions):
+    /// busy memory is unreclaimable, idle memory is.
+    pub fn can_admit(&self, mem_mb: u32) -> bool {
+        let busy_mb = self.used_mb - self.idle_mb;
+        mem_mb as u64 <= self.capacity_mb.saturating_sub(busy_mb)
+    }
+
+    /// Remove and return the most-recently-used idle container of `func`
+    /// (the donor side of a cross-node migration). Unlike an eviction,
+    /// this does not count toward [`WarmPool::evictions`] — the warm
+    /// state moves to another node instead of being destroyed.
+    pub fn take_idle_mru(&mut self, func: FunctionId) -> Option<ContainerId> {
+        let set = self.idle_by_func.get(&func)?;
+        let &(_, id) = set.iter().next_back()?;
+        self.policy.on_leave(id);
+        self.remove_idle(id);
+        Some(id)
+    }
+
+    /// Admit a new container of `profile`, born busy serving an
+    /// invocation: feasibility is checked *before* evicting (a doomed
+    /// admission never destroys warm state; busy memory is
+    /// unreclaimable, idle memory is), then idle containers are evicted
+    /// per policy until the container fits. Returns `None` when
+    /// admission is infeasible (see [`WarmPool::can_admit`]).
+    ///
+    /// This is both the cold path of [`WarmPool::try_acquire`] (the
+    /// container then pays its init) and the recipient side of a
+    /// cross-node migration (the container arrives warm) — one shared
+    /// implementation so the two admission paths can never desync.
+    pub fn admit_warm(&mut self, profile: &FunctionProfile, now_us: u64) -> Option<ContainerId> {
+        let needed = profile.mem_mb as u64;
+        if !self.can_admit(profile.mem_mb) {
+            return None;
+        }
+        while self.free_mb() < needed {
+            let victim = self
+                .policy
+                .pop_victim()
+                .expect("can_admit guaranteed a victim");
+            self.remove_idle(victim);
+            self.evictions += 1;
+        }
+        let id = ContainerId(self.next_id);
+        self.next_id += 1;
+        let c = Container::new(id, profile.id, profile.mem_mb, profile.cold_start_us, now_us);
+        self.used_mb += needed;
+        self.containers.insert(id, c);
+        Some(id)
     }
 
     /// Extension: reap idle containers whose last use is older than
@@ -401,6 +438,45 @@ mod tests {
         assert_eq!(p.expire_idle_before(500), 1);
         assert_eq!(p.container_count(), 1);
         assert!(p.container(cg).is_some());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn take_idle_mru_removes_without_counting_eviction() {
+        let mut p = pool(200);
+        let f = profile(0, 40);
+        let Acquire::Cold(c1) = p.try_acquire(&f, 0) else { panic!() };
+        let Acquire::Cold(c2) = p.try_acquire(&f, 1) else { panic!() };
+        p.release(c1, 10);
+        p.release(c2, 20);
+        assert!(p.has_idle(FunctionId(0)));
+        // MRU instance (c2, last used at t=1) leaves first.
+        assert_eq!(p.take_idle_mru(FunctionId(0)), Some(c2));
+        assert_eq!(p.take_idle_mru(FunctionId(0)), Some(c1));
+        assert_eq!(p.take_idle_mru(FunctionId(0)), None);
+        assert!(!p.has_idle(FunctionId(0)));
+        assert_eq!(p.evictions, 0, "migration take is not an eviction");
+        assert_eq!(p.used_mb(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_warm_respects_feasibility_and_evicts_for_room() {
+        let mut p = pool(100);
+        let a = profile(0, 60);
+        let Acquire::Cold(ca) = p.try_acquire(&a, 0) else { panic!() };
+        p.release(ca, 5);
+        // 60 idle; a 50 MB migrated container fits only after evicting it.
+        let b = profile(1, 50);
+        assert!(p.can_admit(50));
+        let id = p.admit_warm(&b, 10).expect("feasible admission");
+        assert_eq!(p.evictions, 1);
+        assert_eq!(p.used_mb(), 50);
+        assert!(!p.container(id).unwrap().is_idle(), "admitted born busy");
+        // 50 busy now; another 60 MB container cannot be admitted.
+        assert!(!p.can_admit(60));
+        assert_eq!(p.admit_warm(&a, 20), None);
+        p.release(id, 30);
         p.check_invariants().unwrap();
     }
 

@@ -12,11 +12,25 @@
 //!   KiSS/KiSS/baseline/adaptive) against the cloud RTT axis: with no
 //!   cloud tier placement failures are hard drops; as RTT grows the
 //!   offload path stays available but ever more expensive.
+//! * **cluster-migration** — the same hetero fleet vs the warm-container
+//!   transfer cost: placement-failure % (drops + offloads) for static
+//!   KiSS, migration only, and migration + controller. Migration rescues
+//!   invocations the least-loaded router strands: a node can be globally
+//!   least loaded while its KiSS large pool is busy-full, even as idle
+//!   warm copies of the same function sit on "hotter" nodes.
+//! * **cluster-controller** — the hetero fleet behind a deliberately
+//!   misprovisioned size-affinity boundary (3 of 4 nodes reserved for
+//!   the small class) vs the controller epoch: the online controller
+//!   re-learns the boundary and the per-node splits; shorter epochs
+//!   react faster.
 
 use super::common::{paper_workload, Series, Sweep};
-use crate::sim::cluster::{run_cluster, ClusterSpec, NodePolicy, NodeSpec, RouterKind};
+use crate::sim::cluster::{
+    run_cluster, ClusterSpec, ControllerConfig, NodePolicy, NodeSpec, RouterKind,
+};
 use crate::sim::InitOccupancy;
 use crate::trace::synth::{synthesize, SynthConfig};
+use crate::trace::Trace;
 
 /// Node counts the scale sweeps walk.
 pub const NODE_GRID: [usize; 4] = [1, 2, 4, 8];
@@ -142,6 +156,8 @@ pub fn cluster_hetero(synth: &SynthConfig) -> Sweep {
             max_fallbacks: 1,
             cloud: None,
             init_occupancy: InitOccupancy::HoldsMemory,
+            migration: None,
+            controller: None,
         };
         if rtt_ms > 0 {
             spec = spec.with_cloud(rtt_ms * 1000);
@@ -165,6 +181,110 @@ pub fn cluster_hetero(synth: &SynthConfig) -> Sweep {
     }
 }
 
+/// Warm-container transfer costs the migration sweep walks (ms).
+pub const MIGRATION_COST_GRID_MS: [u64; 4] = [0, 5, 15, 50];
+
+/// Controller epoch lengths the controller sweep walks (s).
+pub const CONTROLLER_EPOCH_GRID_S: [u64; 3] = [15, 60, 240];
+
+/// The hetero fleet behind a least-loaded router with the cloud tier
+/// attached — the baseline configuration the migration sweep perturbs
+/// (public so the integration locks exercise the *same* spec the
+/// experiment reports).
+pub fn hetero_spec() -> ClusterSpec {
+    ClusterSpec {
+        nodes: hetero_nodes(),
+        router: RouterKind::LeastLoaded,
+        max_fallbacks: 1,
+        cloud: None,
+        init_occupancy: InitOccupancy::HoldsMemory,
+        migration: None,
+        controller: None,
+    }
+    .with_cloud(CLOUD_RTT_US)
+}
+
+/// The hetero fleet behind a deliberately misprovisioned size-affinity
+/// boundary (3 of 4 nodes reserved for the small class, so the large
+/// class is squeezed onto one node) — what the controller sweep has to
+/// repair online.
+fn misprovisioned_affinity_spec() -> ClusterSpec {
+    hetero_spec().with_router(RouterKind::SizeAffinity { small_nodes: 3 })
+}
+
+fn failure_pct(trace: &Trace, spec: &ClusterSpec) -> (f64, f64) {
+    let overall = run_cluster(trace, spec).report.overall;
+    (overall.failure_pct(), overall.migration_pct())
+}
+
+/// Placement-failure % (drops + offloads) of the hetero fleet vs the
+/// warm-container transfer cost: static KiSS, migration only, and
+/// migration + online controller (default 60 s epoch).
+pub fn cluster_migration(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let (static_fail, _) = failure_pct(&trace, &hetero_spec());
+    let mut migrate = Vec::new();
+    let mut both = Vec::new();
+    let mut migrated = Vec::new();
+    for &cost_ms in &MIGRATION_COST_GRID_MS {
+        let spec = hetero_spec().with_migration(cost_ms * 1000);
+        let (fail, pct) = failure_pct(&trace, &spec);
+        migrate.push(fail);
+        migrated.push(pct);
+        let spec = spec.with_controller(ControllerConfig::default());
+        both.push(failure_pct(&trace, &spec).0);
+    }
+    let n = MIGRATION_COST_GRID_MS.len();
+    Sweep {
+        title: "Cluster migration: placement-failure % vs transfer cost \
+                (8/4/2/2 GB hetero fleet, least-loaded, cloud RTT 80 ms)"
+            .into(),
+        x_label: "cost_ms".into(),
+        y_label: "drop+offload %".into(),
+        xs: MIGRATION_COST_GRID_MS.iter().map(|&c| c as f64).collect(),
+        series: vec![
+            Series { label: "static".into(), values: vec![static_fail; n] },
+            Series { label: "migrate".into(), values: migrate },
+            Series { label: "migrate+ctl".into(), values: both },
+            Series { label: "migrated%".into(), values: migrated },
+        ],
+    }
+}
+
+/// Placement-failure % of the misprovisioned size-affinity fleet vs the
+/// controller epoch: static (never repaired), controller only, and
+/// controller + migration (15 ms transfer).
+pub fn cluster_controller(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let (static_fail, _) = failure_pct(&trace, &misprovisioned_affinity_spec());
+    let mut ctl = Vec::new();
+    let mut ctl_migrate = Vec::new();
+    for &epoch_s in &CONTROLLER_EPOCH_GRID_S {
+        let cfg = ControllerConfig {
+            epoch_us: epoch_s * 1_000_000,
+            ..ControllerConfig::default()
+        };
+        let spec = misprovisioned_affinity_spec().with_controller(cfg);
+        ctl.push(failure_pct(&trace, &spec).0);
+        let spec = spec.with_migration(15_000);
+        ctl_migrate.push(failure_pct(&trace, &spec).0);
+    }
+    let n = CONTROLLER_EPOCH_GRID_S.len();
+    Sweep {
+        title: "Cluster controller: placement-failure % vs epoch \
+                (hetero fleet, size-affinity misprovisioned at 3 small nodes)"
+            .into(),
+        x_label: "epoch_s".into(),
+        y_label: "drop+offload %".into(),
+        xs: CONTROLLER_EPOCH_GRID_S.iter().map(|&e| e as f64).collect(),
+        series: vec![
+            Series { label: "static".into(), values: vec![static_fail; n] },
+            Series { label: "controller".into(), values: ctl },
+            Series { label: "ctl+migrate".into(), values: ctl_migrate },
+        ],
+    }
+}
+
 /// Default-workload entry points used by the CLI registry.
 pub fn cluster_scale_default() -> Sweep {
     cluster_scale(&cluster_workload())
@@ -174,6 +294,12 @@ pub fn cluster_offload_default() -> Sweep {
 }
 pub fn cluster_hetero_default() -> Sweep {
     cluster_hetero(&cluster_workload())
+}
+pub fn cluster_migration_default() -> Sweep {
+    cluster_migration(&cluster_workload())
+}
+pub fn cluster_controller_default() -> Sweep {
+    cluster_controller(&cluster_workload())
 }
 
 #[cfg(test)]
@@ -198,6 +324,38 @@ mod tests {
         assert_eq!(s.series.len(), RouterKind::ALL_LABELS.len());
         for series in &s.series {
             assert_eq!(series.values.len(), NODE_GRID.len());
+            assert!(series.values.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn migration_sweep_is_well_formed() {
+        let s = cluster_migration(&tiny());
+        assert_eq!(s.xs.len(), MIGRATION_COST_GRID_MS.len());
+        assert_eq!(s.series.len(), 4);
+        for series in &s.series {
+            assert_eq!(series.values.len(), MIGRATION_COST_GRID_MS.len());
+            assert!(series.values.iter().all(|v| v.is_finite()));
+        }
+        // The static reference is flat and migration can only help.
+        let stat = s.series_named("static").unwrap();
+        assert!(stat.values.windows(2).all(|w| w[0] == w[1]));
+        // Migration redirects would-be failures to warm serves; knock-on
+        // effects are second-order, so it stays within noise of static
+        // even on this tiny workload.
+        let migrate = s.series_named("migrate").unwrap();
+        for (m, st) in migrate.values.iter().zip(&stat.values) {
+            assert!(*m <= st + 2.0, "migration must not add failures: {m} vs {st}");
+        }
+    }
+
+    #[test]
+    fn controller_sweep_is_well_formed() {
+        let s = cluster_controller(&tiny());
+        assert_eq!(s.xs.len(), CONTROLLER_EPOCH_GRID_S.len());
+        assert_eq!(s.series.len(), 3);
+        for series in &s.series {
+            assert_eq!(series.values.len(), CONTROLLER_EPOCH_GRID_S.len());
             assert!(series.values.iter().all(|v| v.is_finite()));
         }
     }

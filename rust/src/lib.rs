@@ -1,5 +1,8 @@
 //! # kiss-faas — KiSS: Keep it Separated Serverless
 //!
+//! *(Crate-level rustdoc; see the repository `README.md` for the
+//! quickstart and `docs/ARCHITECTURE.md` for the full design tour.)*
+//!
 //! A production-grade reproduction of *"KiSS: A Novel Container Size-Aware
 //! Memory Management Policy for Serverless in Edge-Cloud Continuum"*
 //! (Gupta, Gratz, Lusher — CS.DC 2025).
@@ -37,14 +40,28 @@
 //!   (KiSS partitioning lifted to cluster scope).
 //! * `sticky` — `fxhash(function) % nodes`, concentrating warm state.
 //!
-//! A node-level `Drop` is retried on fallback nodes and finally offloaded
-//! to a modeled cloud tier (configurable RTT), recorded as
-//! [`metrics::RecordKind::Offload`]. A one-node cluster reproduces
-//! [`sim::run_trace`] bit-for-bit. Configure via the `[cluster]` TOML
-//! section (`nodes`, `mem_mb`, `router`, `small_nodes`, `fallbacks`,
-//! `cloud_rtt_ms`, `policies`) or `repro cluster` CLI flags; sweep via
-//! the `cluster-scale` / `cluster-offload` / `cluster-hetero`
-//! experiments and `benches/cluster_bench.rs`.
+//! A node-level `Drop` is retried on fallback nodes, then rescued by
+//! **cross-node warm-container migration** when enabled
+//! ([`sim::cluster::MigrationPolicy`]: an idle warm container of the same
+//! function moves from a donor node to a strictly less-loaded recipient
+//! with headroom, served warm at a transfer cost and recorded as
+//! [`metrics::RecordKind::Migrate`] — or, when no better-placed recipient
+//! exists, served directly on the holder as a free *rescue hit*), and
+//! finally offloaded to a modeled cloud tier (configurable RTT),
+//! recorded as [`metrics::RecordKind::Offload`]. A periodic **online
+//! controller** ([`sim::cluster::ControllerConfig`]) can reassign the
+//! size-affinity `small_nodes` boundary and live-resize per-node KiSS
+//! splits from observed pressure — the single-node adaptive logic
+//! generalized to the fleet. A one-node cluster reproduces
+//! [`sim::run_trace`] bit-for-bit, and disabling migration + controller
+//! reproduces the static cluster bit-for-bit. Configure via the
+//! `[cluster]` TOML section (`nodes`, `mem_mb`, `router`, `small_nodes`,
+//! `fallbacks`, `cloud_rtt_ms`, `policies`) and its `[cluster.migration]`
+//! / `[cluster.controller]` subsections, or `repro cluster` CLI flags;
+//! sweep via the `cluster-scale` / `cluster-offload` / `cluster-hetero` /
+//! `cluster-migration` / `cluster-controller` experiments and
+//! `benches/cluster_bench.rs`. See `docs/ARCHITECTURE.md` for the full
+//! event flow and schema.
 //!
 //! ## Quick start
 //!
@@ -67,16 +84,29 @@
 //! harness ([`bench`]), and a randomized property-test driver
 //! ([`util::prop`]).
 
+#![warn(missing_docs)]
+
+// Public-API documentation is enforced (`missing_docs`) module by
+// module; the modules below with an `allow` predate the lint and will be
+// brought into scope in follow-up documentation passes. `sim`, `config`,
+// `metrics`, and `coordinator::policy` are fully documented.
+#[allow(missing_docs)]
 pub mod analysis;
+#[allow(missing_docs)]
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod experiments;
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod serve;
 pub mod sim;
+#[allow(missing_docs)]
 pub mod trace;
+#[allow(missing_docs)]
 pub mod util;
 
 pub use config::SimConfig;

@@ -5,7 +5,8 @@
 //! repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F]
 //!                [--policy lru|gd|freq] [--seed N]
 //! repro cluster  [--config FILE] [--nodes N] [--router R] [--small-nodes N]
-//!                [--fallbacks N] [--cloud-rtt-ms F] [--mem-gb N] [--sweep]
+//!                [--fallbacks N] [--cloud-rtt-ms F] [--mem-gb N]
+//!                [--migration-cost-ms F] [--controller-epoch-s N] [--sweep]
 //! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
@@ -26,7 +27,7 @@ use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::experiments::{self, run_single};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
-use kiss_faas::sim::cluster::{run_cluster, RouterKind};
+use kiss_faas::sim::cluster::{run_cluster, MigrationPolicy, RouterKind};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
 
@@ -68,7 +69,7 @@ fn print_usage() {
         "kiss-faas repro — KiSS: Keep it Separated Serverless (paper reproduction)\n\n\
          USAGE:\n  repro experiment <fig2..fig16|cluster-*|stress|all> [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
-         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F] [--sweep]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--sweep]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -214,6 +215,8 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         println!("{}", scale.render());
         println!("{}", offload.render());
         println!("{}", experiments::cluster::cluster_hetero(&synth).render());
+        println!("{}", experiments::cluster::cluster_migration(&synth).render());
+        println!("{}", experiments::cluster::cluster_controller(&synth).render());
         return Ok(());
     }
 
@@ -239,6 +242,20 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         }
         cc.cloud_rtt_us = (ms * 1000.0).round() as u64;
     }
+    if let Some(ms) = flags.get_parsed::<f64>("migration-cost-ms")? {
+        if ms < 0.0 {
+            bail!("--migration-cost-ms must be >= 0");
+        }
+        cc.migration = Some(MigrationPolicy { cost_us: (ms * 1000.0).round() as u64 });
+    }
+    if let Some(s) = flags.get_parsed::<u64>("controller-epoch-s")? {
+        if s == 0 {
+            bail!("--controller-epoch-s must be > 0");
+        }
+        let mut ctl = cc.controller.unwrap_or_default();
+        ctl.epoch_us = s * 1_000_000;
+        cc.controller = Some(ctl);
+    }
     cfg.cluster = Some(cc);
     cfg.validate()?;
     println!("# {}", cfg.describe());
@@ -250,29 +267,50 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     let r = run_cluster(&trace, &spec);
 
     println!(
-        "{:>10} {:>10} {:>10} {:>8} {:>9} {:>12} {:>8} {:>10}",
-        "slice", "hits", "misses", "drops", "offloads", "coldstart%", "drop%", "offload%"
+        "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12} {:>8} {:>10} {:>8}",
+        "slice", "hits", "misses", "drops", "offloads", "migr", "coldstart%", "drop%",
+        "offload%", "migr%"
     );
     for (name, c) in
         [("overall", &r.report.overall), ("small", &r.report.small), ("large", &r.report.large)]
     {
         println!(
-            "{:>10} {:>10} {:>10} {:>8} {:>9} {:>12.2} {:>8.2} {:>10.2}",
+            "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12.2} {:>8.2} {:>10.2} {:>8.2}",
             name,
             c.hits,
             c.misses,
             c.drops,
             c.offloads,
+            c.migrations,
             c.cold_start_pct(),
             c.drop_pct(),
-            c.offload_pct()
+            c.offload_pct(),
+            c.migration_pct()
         );
     }
     println!("\nper-node ({} invocations rerouted to fallbacks):", r.rerouted);
     for (i, node) in r.per_node.iter().enumerate() {
         println!(
-            "  node {i}: hits {:>9} misses {:>8} peak {:>6} MB | {}",
-            node.overall.hits, node.overall.misses, r.peak_used_mb[i], r.descriptions[i]
+            "  node {i}: hits {:>9} misses {:>8} migr {:>6} peak {:>6} MB | {}",
+            node.overall.hits,
+            node.overall.misses,
+            node.overall.migrations,
+            r.peak_used_mb[i],
+            r.descriptions[i]
+        );
+    }
+    if cfg.cluster.as_ref().is_some_and(|c| c.migration.is_some()) {
+        println!(
+            "\nmigration: {} containers migrated, {} rescue hits served in place",
+            r.report.overall.migrations, r.rescues
+        );
+    }
+    if cfg.cluster.as_ref().is_some_and(|c| c.controller.is_some()) {
+        println!(
+            "\ncontroller: {} small-node moves, {} node resplits, final router {}",
+            r.small_node_moves,
+            r.resplits,
+            r.router.label()
         );
     }
     Ok(())

@@ -1,15 +1,20 @@
 //! The six FaaSCache-style metrics the paper tracks (§5.2), split by size
 //! class for the fairness analysis (§4.4), plus latency accounting.
 //!
-//! * cold starts (misses), hits, drops, offloads
-//! * total accesses = hits + misses + drops + offloads
-//! * serviceable accesses = hits + misses (served on the edge)
+//! * cold starts (misses), hits, drops, offloads, migrations
+//! * total accesses = hits + misses + drops + offloads + migrations
+//! * serviceable accesses = hits + misses + migrations (served on the edge)
 //! * execution durations (cumulative, split warm/cold)
 //!
 //! The `offloads` counter is the cluster extension (edge-cloud continuum):
 //! an invocation no edge node could place but that a modeled cloud tier
-//! served, paying a configured RTT. Single-node simulations never offload,
-//! so every pre-cluster metric is bit-for-bit unchanged.
+//! served, paying a configured RTT. The `migrations` counter is the
+//! cross-node warm-container migration extension: an invocation that
+//! would have offloaded or dropped, but was served warm on a recipient
+//! node after pulling an idle container from a donor node
+//! ([`RecordKind::Migrate`] carries the donor/recipient node ids).
+//! Single-node simulations never offload or migrate, so every pre-cluster
+//! metric is bit-for-bit unchanged.
 
 use crate::trace::SizeClass;
 
@@ -25,21 +30,28 @@ pub struct Counters {
     /// Invocations punted to the modeled cloud tier (served, but off the
     /// edge and after the configured round-trip). Zero on a single node.
     pub offloads: u64,
+    /// Invocations served warm on an edge node after a cross-node
+    /// warm-container migration (cluster extension). Zero on a single
+    /// node and whenever migration is disabled.
+    pub migrations: u64,
     /// Cumulative execution time (µs) of serviced invocations, excluding
     /// startup.
     pub exec_us: u64,
     /// Cumulative startup wait (µs): warm dispatch for hits, cold
-    /// initialization for misses, cloud RTT for offloads.
+    /// initialization for misses, cloud RTT for offloads, warm dispatch
+    /// plus transfer cost for migrations.
     pub startup_us: u64,
 }
 
 impl Counters {
+    /// Every invocation this slice observed, however it ended.
     pub fn total_accesses(&self) -> u64 {
-        self.hits + self.misses + self.drops + self.offloads
+        self.hits + self.misses + self.drops + self.offloads + self.migrations
     }
 
+    /// Invocations served *on the edge*: hits, misses, and migrations.
     pub fn serviceable(&self) -> u64 {
-        self.hits + self.misses
+        self.hits + self.misses + self.migrations
     }
 
     /// Cold-start percentage over *serviceable* accesses — the paper's
@@ -60,16 +72,31 @@ impl Counters {
         pct(self.offloads, self.total_accesses())
     }
 
+    /// Migration percentage over total accesses (cluster extension): how
+    /// much traffic was rescued by cross-node warm-container migration.
+    pub fn migration_pct(&self) -> f64 {
+        pct(self.migrations, self.total_accesses())
+    }
+
+    /// Placement-failure percentage over total accesses: traffic the edge
+    /// could not serve locally (hard drops plus cloud offloads). The
+    /// migration/controller experiments minimize this.
+    pub fn failure_pct(&self) -> f64 {
+        pct(self.drops + self.offloads, self.total_accesses())
+    }
+
     /// Warm hit rate over total accesses (§6.5 reports this).
     pub fn hit_rate_pct(&self) -> f64 {
         pct(self.hits, self.total_accesses())
     }
 
+    /// Field-wise accumulate `other` into `self`.
     pub fn merge(&mut self, other: &Counters) {
         self.hits += other.hits;
         self.misses += other.misses;
         self.drops += other.drops;
         self.offloads += other.offloads;
+        self.migrations += other.migrations;
         self.exec_us += other.exec_us;
         self.startup_us += other.startup_us;
     }
@@ -86,12 +113,16 @@ fn pct(num: u64, den: u64) -> f64 {
 /// Full per-run report: overall + per-class slices (fairness, §4.4).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Report {
+    /// Every invocation, regardless of size class.
     pub overall: Counters,
+    /// The small-container slice (below the KiSS size threshold).
     pub small: Counters,
+    /// The large-container slice (at or above the KiSS size threshold).
     pub large: Counters,
 }
 
 impl Report {
+    /// The per-class slice for `c`.
     pub fn class(&self, c: SizeClass) -> &Counters {
         match c {
             SizeClass::Small => &self.small,
@@ -99,6 +130,10 @@ impl Report {
         }
     }
 
+    /// Record one invocation outcome into the overall and per-class
+    /// slices. `startup_us` is the wait before execution began (warm
+    /// dispatch, cold init, cloud RTT, or migration transfer); drops
+    /// accumulate no durations.
     pub fn record(
         &mut self,
         class: SizeClass,
@@ -115,6 +150,7 @@ impl Report {
                 RecordKind::Miss => c.misses += 1,
                 RecordKind::Drop => c.drops += 1,
                 RecordKind::Offload => c.offloads += 1,
+                RecordKind::Migrate { .. } => c.migrations += 1,
             }
             if kind != RecordKind::Drop {
                 c.exec_us += exec_us;
@@ -132,14 +168,28 @@ impl Report {
     }
 }
 
+/// How one invocation ended, as recorded into a [`Report`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RecordKind {
+    /// Served from a warm container (no initialization).
     Hit,
+    /// Served after a cold start (container initialization).
     Miss,
+    /// Could not be placed anywhere: lost.
     Drop,
     /// Served by the modeled cloud tier after local placement failed
     /// (cluster extension). `startup_us` carries the cloud RTT.
     Offload,
+    /// Served warm on `recipient` after pulling an idle container of the
+    /// same function from `donor` (cross-node warm-container migration,
+    /// cluster extension). `startup_us` carries the warm dispatch plus
+    /// the configured migration cost.
+    Migrate {
+        /// Node index the idle warm container was taken from.
+        donor: usize,
+        /// Node index that admitted the container and served the request.
+        recipient: usize,
+    },
 }
 
 #[cfg(test)]
@@ -161,6 +211,8 @@ mod tests {
         let c = Counters::default();
         assert_eq!(c.cold_start_pct(), 0.0);
         assert_eq!(c.drop_pct(), 0.0);
+        assert_eq!(c.migration_pct(), 0.0);
+        assert_eq!(c.failure_pct(), 0.0);
     }
 
     #[test]
@@ -200,6 +252,37 @@ mod tests {
         assert_eq!(r.large.startup_us, 80_007);
         assert_eq!(r.large.exec_us, 2_300);
         assert!((r.overall.offload_pct() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migrations_are_serviceable_and_pay_transfer_as_startup() {
+        let mut r = Report::default();
+        r.record(SizeClass::Small, RecordKind::Hit, 100, 5);
+        r.record(
+            SizeClass::Small,
+            RecordKind::Migrate { donor: 2, recipient: 0 },
+            400,
+            15_100, // warm dispatch 100 + migration cost 15 ms
+        );
+        assert!(r.is_consistent());
+        assert_eq!(r.overall.migrations, 1);
+        assert_eq!(r.overall.total_accesses(), 2);
+        assert_eq!(r.overall.serviceable(), 2, "migrations serve on the edge");
+        assert_eq!(r.small.startup_us, 15_105);
+        assert_eq!(r.small.exec_us, 500);
+        assert!((r.overall.migration_pct() - 50.0).abs() < 1e-12);
+        // Migrations are warm serves: they add no cold starts.
+        assert_eq!(r.overall.cold_start_pct(), 0.0);
+    }
+
+    #[test]
+    fn failure_pct_counts_drops_and_offloads_only() {
+        let mut r = Report::default();
+        r.record(SizeClass::Small, RecordKind::Drop, 0, 0);
+        r.record(SizeClass::Small, RecordKind::Offload, 10, 10);
+        r.record(SizeClass::Small, RecordKind::Migrate { donor: 1, recipient: 0 }, 10, 10);
+        r.record(SizeClass::Small, RecordKind::Hit, 10, 10);
+        assert!((r.overall.failure_pct() - 50.0).abs() < 1e-12);
     }
 
     #[test]

@@ -95,6 +95,7 @@ impl Server {
                                     RecordKind::Miss => "miss",
                                     RecordKind::Drop => "drop",
                                     RecordKind::Offload => "offload",
+                                    RecordKind::Migrate { .. } => "migrate",
                                 };
                                 let preview: Vec<String> = res
                                     .output

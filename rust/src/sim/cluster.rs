@@ -25,6 +25,26 @@
 //!   [`CloudTier`], recorded as [`RecordKind::Offload`] with the
 //!   configured RTT as startup wait. Without a cloud tier it stays a
 //!   `Drop`, exactly as on a single node.
+//! * **Warm-container migration** ([`MigrationPolicy`]) — before falling
+//!   back to offload/drop, the cluster may *migrate* an idle warm
+//!   container of the same function from a donor node to a strictly
+//!   less-loaded recipient with admission headroom, serving the
+//!   invocation warm at a configurable transfer cost (recorded as
+//!   [`RecordKind::Migrate`] with donor/recipient node ids) — or, when
+//!   no better-placed recipient exists, serve the invocation directly on
+//!   the holder for free (a *rescue hit*). Skewed invocation patterns
+//!   pin warm state to overloaded nodes; migration un-pins it
+//!   (context-aware orchestration, Hao et al. 2024; LaSS, Wang et al.
+//!   2021).
+//! * **Online controller** ([`ControllerConfig`]) — a periodic
+//!   epoch-driven controller observes per-node and per-class pressure
+//!   and reassigns the size-affinity `small_nodes` boundary and each
+//!   KiSS node's small/large split online, generalizing the single-node
+//!   [`crate::coordinator::adaptive`] hill-climbing logic to the fleet.
+//!
+//! With migration and the controller disabled (`None`, the default),
+//! every code path is identical to the static cluster: results are
+//! bit-for-bit unchanged (locked by `tests/integration_cluster.rs`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -45,18 +65,28 @@ use super::InitOccupancy;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum NodePolicy {
     /// Unified warm pool (the paper's baseline).
-    Baseline { policy: PolicyKind },
+    Baseline {
+        /// Replacement policy of the unified pool.
+        policy: PolicyKind,
+    },
     /// KiSS size-aware partitioning.
     Kiss {
+        /// Small-pool share of node memory (the paper's "80-20" = 0.8).
         small_frac: f64,
+        /// Size threshold (MB) separating the classes.
         threshold_mb: u32,
+        /// Replacement policy of the small pool.
         small_policy: PolicyKind,
+        /// Replacement policy of the large pool.
         large_policy: PolicyKind,
     },
     /// KiSS with the adaptive split (§7.3 extension).
     Adaptive {
+        /// Rebalancing configuration of the node-local adaptive loop.
         cfg: AdaptiveConfig,
+        /// Replacement policy of the small pool.
         small_policy: PolicyKind,
+        /// Replacement policy of the large pool.
         large_policy: PolicyKind,
     },
 }
@@ -72,6 +102,7 @@ impl NodePolicy {
         }
     }
 
+    /// Short name of the policy family (`baseline`/`kiss`/`adaptive`).
     pub fn label(&self) -> &'static str {
         match self {
             NodePolicy::Baseline { .. } => "baseline",
@@ -86,10 +117,12 @@ impl NodePolicy {
 pub struct NodeSpec {
     /// Node memory (MB). Must be > 0.
     pub mem_mb: u64,
+    /// Memory-management policy the node runs.
     pub policy: NodePolicy,
 }
 
 impl NodeSpec {
+    /// Build the node's dispatcher. Panics when `mem_mb` is 0.
     pub fn build(&self) -> Box<dyn Dispatcher> {
         assert!(self.mem_mb > 0, "node memory must be > 0");
         match self.policy {
@@ -134,13 +167,18 @@ pub enum RouterKind {
     /// (disjoint sets — KiSS partitioning lifted to the cluster), least
     /// loaded within each set. A set that would be empty (`small_nodes`
     /// 0 or ≥ the node count) falls back to all nodes.
-    SizeAffinity { small_nodes: usize },
+    SizeAffinity {
+        /// Number of nodes (prefix of the index space) reserved for the
+        /// small size class.
+        small_nodes: usize,
+    },
     /// `fxhash(function id) % nodes` — a function always lands on the
     /// same node, concentrating its warm state.
     Sticky,
 }
 
 impl RouterKind {
+    /// Short name of the router (`round-robin`/`least-loaded`/…).
     pub fn label(&self) -> &'static str {
         match self {
             RouterKind::RoundRobin => "round-robin",
@@ -161,6 +199,7 @@ impl RouterKind {
         }
     }
 
+    /// Canonical names of the four routers, in sweep order.
     pub const ALL_LABELS: [&'static str; 4] =
         ["round-robin", "least-loaded", "size-affinity", "sticky"];
 }
@@ -175,22 +214,104 @@ pub struct CloudTier {
     pub rtt_us: u64,
 }
 
-/// Complete cluster description: nodes + router + offload path.
+/// Cross-node warm-container migration (`[cluster.migration]`).
+///
+/// When the fallback scan fails (the invocation would offload or drop),
+/// the cluster becomes warm-state-aware: it finds the least-loaded
+/// *holder* node with an idle warm container of the same function (any
+/// node the fallback scan tried would have served a warm hit instead of
+/// dropping, so holders are always outside the tried set) and the
+/// least-loaded admissible *non-holder*. If the non-holder is strictly
+/// less loaded, the container is torn down on the holder (the donor),
+/// re-admitted warm on the recipient, and the invocation is served there
+/// — paying `cost_us` on top of the warm dispatch time instead of a cold
+/// start or a cloud round trip; recorded as [`RecordKind::Migrate`] with
+/// both node ids. Otherwise the invocation is served *on* the holder for
+/// free (a rescue hit, counted in [`Cluster::rescues`]): the engine
+/// never pays to move warm state toward a hotter node, and never evicts
+/// a local warm copy to admit a transferred one.
+///
+/// All selections are deterministic (strict load improvement, ties to
+/// the lowest node index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigrationPolicy {
+    /// One-time cost (µs) of moving a warm container between nodes,
+    /// charged as startup wait of the migrated invocation (checkpoint +
+    /// transfer + restore; CRIU-style live migration lands in the
+    /// 10–100 ms range on edge links).
+    pub cost_us: u64,
+}
+
+/// The cluster-level online controller (`[cluster.controller]`): a
+/// periodic loop over *virtual* time that observes per-node and
+/// per-class pressure and re-provisions the fleet, generalizing the
+/// single-node [`crate::coordinator::adaptive`] logic:
+///
+/// * **`small_nodes` reassignment** — with a size-affinity router, the
+///   boundary between the small-class and large-class node sets moves
+///   toward the class with the higher placement-failure rate.
+/// * **Per-node re-splitting** — each two-pool KiSS node whose local
+///   drop pressure is skewed toward one class gets its small/large split
+///   shifted by `step` (clamped to `[min_frac, max_frac]`), via
+///   [`Dispatcher::try_set_split`]. Baseline nodes (no split) and
+///   adaptive nodes (self-managing) are left alone.
+///
+/// All decisions are deterministic functions of the observed window, so
+/// controller runs replay exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControllerConfig {
+    /// Epoch length in virtual time (µs) between control decisions.
+    pub epoch_us: u64,
+    /// Per-node split capacity shifted per decision (fraction of node
+    /// memory).
+    pub step: f64,
+    /// Lower clamp for a re-split node's small-pool share.
+    pub min_frac: f64,
+    /// Upper clamp for a re-split node's small-pool share.
+    pub max_frac: f64,
+    /// Whether the controller may move the size-affinity boundary.
+    pub reassign_small_nodes: bool,
+    /// Whether the controller may resize per-node KiSS splits.
+    pub resplit_nodes: bool,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            epoch_us: 60_000_000, // one decision per virtual minute
+            step: 0.05,
+            min_frac: 0.5,
+            max_frac: 0.95,
+            reassign_small_nodes: true,
+            resplit_nodes: true,
+        }
+    }
+}
+
+/// Complete cluster description: nodes + router + offload path +
+/// (optional) migration and online-controller extensions.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
+    /// The edge fleet, in node-index order.
     pub nodes: Vec<NodeSpec>,
+    /// Cluster-level routing policy.
     pub router: RouterKind,
     /// How many *additional* nodes to try (ascending index, skipping the
     /// primary) when the routed node drops. 0 = no retry.
     pub max_fallbacks: usize,
     /// `None` = a cluster-wide placement failure is a hard drop.
     pub cloud: Option<CloudTier>,
+    /// How container initialization interacts with memory occupancy.
     pub init_occupancy: InitOccupancy,
+    /// Warm-container migration; `None` = disabled (the static cluster).
+    pub migration: Option<MigrationPolicy>,
+    /// Online controller; `None` = disabled (the static cluster).
+    pub controller: Option<ControllerConfig>,
 }
 
 impl ClusterSpec {
     /// N identical nodes of `mem_mb` each, round-robin, one fallback, no
-    /// cloud tier.
+    /// cloud tier, migration and controller disabled.
     pub fn homogeneous(n: usize, mem_mb: u64, policy: NodePolicy) -> Self {
         Self {
             nodes: vec![NodeSpec { mem_mb, policy }; n],
@@ -198,29 +319,48 @@ impl ClusterSpec {
             max_fallbacks: 1,
             cloud: None,
             init_occupancy: InitOccupancy::default(),
+            migration: None,
+            controller: None,
         }
     }
 
+    /// Replace the router.
     pub fn with_router(mut self, router: RouterKind) -> Self {
         self.router = router;
         self
     }
 
+    /// Attach a cloud tier with the given round-trip latency (µs).
     pub fn with_cloud(mut self, rtt_us: u64) -> Self {
         self.cloud = Some(CloudTier { rtt_us });
         self
     }
 
+    /// Set the fallback-retry budget.
     pub fn with_fallbacks(mut self, n: usize) -> Self {
         self.max_fallbacks = n;
         self
     }
 
+    /// Set the init-occupancy model.
     pub fn with_init_occupancy(mut self, occ: InitOccupancy) -> Self {
         self.init_occupancy = occ;
         self
     }
 
+    /// Enable warm-container migration at the given transfer cost (µs).
+    pub fn with_migration(mut self, cost_us: u64) -> Self {
+        self.migration = Some(MigrationPolicy { cost_us });
+        self
+    }
+
+    /// Enable the online controller.
+    pub fn with_controller(mut self, cfg: ControllerConfig) -> Self {
+        self.controller = Some(cfg);
+        self
+    }
+
+    /// Total fleet memory (MB).
     pub fn total_mem_mb(&self) -> u64 {
         self.nodes.iter().map(|n| n.mem_mb).sum()
     }
@@ -230,7 +370,20 @@ impl ClusterSpec {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClusterOutcome {
     /// Served on an edge node (`cold` = required initialization).
-    Placed { node: usize, cold: bool },
+    Placed {
+        /// Node index that served the invocation.
+        node: usize,
+        /// Whether the node had to cold-start a container.
+        cold: bool,
+    },
+    /// Served warm on `recipient` after migrating an idle container of
+    /// the same function from `donor`.
+    Migrated {
+        /// Node the idle warm container was taken from.
+        donor: usize,
+        /// Node that admitted the container and served the invocation.
+        recipient: usize,
+    },
     /// Served by the cloud tier after the edge declined.
     Offloaded,
     /// No edge capacity and no cloud tier: lost.
@@ -249,8 +402,59 @@ struct Completion {
     container: ContainerId,
 }
 
+/// Per-epoch observation window for the online controller. Class index:
+/// 0 = small, 1 = large.
+#[derive(Clone, Debug, Default)]
+struct ControllerWindow {
+    /// Cluster-level placement failures (offload or drop) per class.
+    class_failures: [u64; 2],
+    /// Cluster-level arrivals per class.
+    class_arrivals: [u64; 2],
+    /// Dispatch-level drops per node, per class.
+    node_drops: Vec<[u64; 2]>,
+    /// Dispatch attempts per node, per class.
+    node_dispatches: Vec<[u64; 2]>,
+}
+
+impl ControllerWindow {
+    fn new(nodes: usize) -> Self {
+        Self {
+            class_failures: [0; 2],
+            class_arrivals: [0; 2],
+            node_drops: vec![[0; 2]; nodes],
+            node_dispatches: vec![[0; 2]; nodes],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.class_failures = [0; 2];
+        self.class_arrivals = [0; 2];
+        for d in &mut self.node_drops {
+            *d = [0; 2];
+        }
+        for d in &mut self.node_dispatches {
+            *d = [0; 2];
+        }
+    }
+}
+
+fn class_idx(class: SizeClass) -> usize {
+    match class {
+        SizeClass::Small => 0,
+        SizeClass::Large => 1,
+    }
+}
+
+fn rate(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
 /// The cluster engine: N dispatchers behind one router, one virtual
-/// clock.
+/// clock, with optional migration and online-controller extensions.
 pub struct Cluster {
     nodes: Vec<Box<dyn Dispatcher>>,
     /// Total capacity per node, cached at construction (constant: live
@@ -260,6 +464,10 @@ pub struct Cluster {
     max_fallbacks: usize,
     cloud: Option<CloudTier>,
     init_occupancy: InitOccupancy,
+    migration: Option<MigrationPolicy>,
+    controller: Option<ControllerConfig>,
+    window: ControllerWindow,
+    next_epoch_us: u64,
     completions: BinaryHeap<Reverse<Completion>>,
     seq: u64,
     now_us: u64,
@@ -267,17 +475,43 @@ pub struct Cluster {
     /// Cluster-wide metrics (offloads and drops live only here).
     pub report: Report,
     /// What each node actually served (no drops/offloads: those are
-    /// cluster-level outcomes).
+    /// cluster-level outcomes; migrations are recorded on the recipient).
     pub per_node: Vec<Report>,
     /// Peak occupancy per node (MB).
     pub peak_used_mb: Vec<u64>,
     /// Invocations served by a fallback node after the primary dropped.
     pub rerouted: u64,
+    /// Would-be failures served warm *in place* on a holder node (the
+    /// migration path decided moving the state was not worth it). Also
+    /// counted in `rerouted`.
+    pub rescues: u64,
+    /// Controller decisions that moved the size-affinity boundary.
+    pub small_node_moves: u64,
+    /// Controller decisions that live-resized a node's KiSS split.
+    pub resplits: u64,
 }
 
 impl Cluster {
+    /// Build a cluster from its spec. Panics on an empty fleet or an
+    /// invalid controller config (the TOML path validates these in
+    /// [`crate::config::SimConfig::validate`]; programmatic specs are
+    /// checked here so a bad clamp fails at construction, not mid-run).
     pub fn new(spec: &ClusterSpec) -> Self {
         assert!(!spec.nodes.is_empty(), "cluster needs at least one node");
+        if let Some(ctl) = &spec.controller {
+            assert!(ctl.epoch_us > 0, "controller epoch must be > 0");
+            assert!(
+                ctl.step > 0.0 && ctl.step < 1.0,
+                "controller step must be in (0, 1), got {}",
+                ctl.step
+            );
+            assert!(
+                ctl.min_frac > 0.0 && ctl.min_frac <= ctl.max_frac && ctl.max_frac < 1.0,
+                "controller needs 0 < min_frac <= max_frac < 1, got {}..{}",
+                ctl.min_frac,
+                ctl.max_frac
+            );
+        }
         let nodes: Vec<Box<dyn Dispatcher>> = spec.nodes.iter().map(|n| n.build()).collect();
         let caps: Vec<u64> = nodes
             .iter()
@@ -291,6 +525,10 @@ impl Cluster {
             max_fallbacks: spec.max_fallbacks,
             cloud: spec.cloud,
             init_occupancy: spec.init_occupancy,
+            migration: spec.migration,
+            controller: spec.controller,
+            window: ControllerWindow::new(count),
+            next_epoch_us: spec.controller.map_or(u64::MAX, |c| c.epoch_us),
             completions: BinaryHeap::new(),
             seq: 0,
             now_us: 0,
@@ -299,19 +537,31 @@ impl Cluster {
             per_node: vec![Report::default(); count],
             peak_used_mb: vec![0; count],
             rerouted: 0,
+            rescues: 0,
+            small_node_moves: 0,
+            resplits: 0,
         }
     }
 
+    /// Number of nodes in the fleet.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Current virtual time (µs).
     pub fn now_us(&self) -> u64 {
         self.now_us
     }
 
+    /// Borrow one node's dispatcher (inspection in tests/benches).
     pub fn node(&self, idx: usize) -> &dyn Dispatcher {
         self.nodes[idx].as_ref()
+    }
+
+    /// The router as currently configured — the controller may have moved
+    /// the size-affinity boundary since construction.
+    pub fn router(&self) -> RouterKind {
+        self.router
     }
 
     /// Apply all completions due at or before `t`, cluster-wide.
@@ -325,6 +575,16 @@ impl Cluster {
         }
     }
 
+    /// Whether node `a` (at `used_a` MB) is strictly less loaded than
+    /// node `b` (at `used_b` MB) by used/capacity fraction —
+    /// `used_a/cap_a < used_b/cap_b` via u128 cross-multiplication, so
+    /// there is no float drift and ties compare false (callers keep the
+    /// lowest index). The single load metric shared by the router, the
+    /// migration holder/target scan, and the migrate-vs-rescue decision.
+    fn frac_less(&self, a: usize, used_a: u64, b: usize, used_b: u64) -> bool {
+        (used_a as u128) * (self.caps[b] as u128) < (used_b as u128) * (self.caps[a] as u128)
+    }
+
     /// Least-loaded node in `[lo, hi)` by used/capacity fraction;
     /// deterministic (strict improvement only, so ties keep the lowest
     /// index). Allocation-free: uses [`Dispatcher::used_mb`].
@@ -333,10 +593,7 @@ impl Cluster {
         let mut best_used = self.nodes[lo].used_mb();
         for i in (lo + 1)..hi {
             let used = self.nodes[i].used_mb();
-            // used_i/cap_i < used_best/cap_best, cross-multiplied.
-            if (used as u128) * (self.caps[best] as u128)
-                < (best_used as u128) * (self.caps[i] as u128)
-            {
+            if self.frac_less(i, used, best, best_used) {
                 best = i;
                 best_used = used;
             }
@@ -396,14 +653,208 @@ impl Cluster {
         self.peak_used_mb[node] = self.peak_used_mb[node].max(self.nodes[node].used_mb());
     }
 
-    /// Process one arrival end-to-end: route, dispatch, fall back, and
-    /// (maybe) offload.
+    /// Run one controller epoch if it is due at virtual time `now_us`.
+    /// No-op (and not even reached) when the controller is disabled.
+    fn maybe_epoch(&mut self, now_us: u64) {
+        let Some(cfg) = self.controller else { return };
+        if now_us < self.next_epoch_us {
+            return;
+        }
+        self.next_epoch_us = now_us + cfg.epoch_us;
+
+        // 1. Move the size-affinity boundary toward the class with the
+        //    higher placement-failure rate (clamped so neither set
+        //    empties). Mirrors the adaptive balancer's 1.5×-skew +
+        //    1%-absolute-floor decision rule.
+        if cfg.reassign_small_nodes {
+            if let RouterKind::SizeAffinity { small_nodes } = self.router {
+                let n = self.nodes.len();
+                let fs = rate(self.window.class_failures[0], self.window.class_arrivals[0]);
+                let fl = rate(self.window.class_failures[1], self.window.class_arrivals[1]);
+                let new_k = if fs > fl * 1.5 && fs > 0.01 && small_nodes + 1 < n {
+                    small_nodes + 1
+                } else if fl > fs * 1.5 && fl > 0.01 && small_nodes > 1 {
+                    small_nodes - 1
+                } else {
+                    small_nodes
+                };
+                if new_k != small_nodes {
+                    self.router = RouterKind::SizeAffinity { small_nodes: new_k };
+                    self.small_node_moves += 1;
+                }
+            }
+        }
+
+        // 2. Shift each resizable node's KiSS split toward its locally
+        //    pressured class. Baseline nodes (`small_frac` = None) and
+        //    adaptive nodes (self-managing) are skipped.
+        if cfg.resplit_nodes {
+            for i in 0..self.nodes.len() {
+                let Some(cur) = self.nodes[i].small_frac() else { continue };
+                let d = self.window.node_drops[i];
+                let a = self.window.node_dispatches[i];
+                let rs = rate(d[0], a[0]);
+                let rl = rate(d[1], a[1]);
+                let delta = if rl > rs * 1.5 && rl > 0.01 {
+                    -cfg.step // large pool is starving: give it capacity
+                } else if rs > rl * 1.5 && rs > 0.01 {
+                    cfg.step
+                } else {
+                    continue;
+                };
+                let new_frac = (cur + delta).clamp(cfg.min_frac, cfg.max_frac);
+                // The clamp can reverse the direction of travel when the
+                // configured split starts outside [min_frac, max_frac];
+                // never move against the pressure signal.
+                let moved = new_frac - cur;
+                if moved.abs() > 1e-9
+                    && moved.signum() == delta.signum()
+                    && self.nodes[i].try_set_split(new_frac)
+                {
+                    self.resplits += 1;
+                }
+            }
+        }
+
+        self.window.reset();
+    }
+
+    /// The warm-state rescue path, tried when the fallback scan failed.
+    /// Finds the least-loaded *holder* (a node with an idle warm
+    /// container of `profile`'s function — always outside the tried set,
+    /// since a tried holder would have served a Hit) and the least-loaded
+    /// admissible *non-holder*. If the non-holder is strictly less loaded
+    /// it pays `cost_us` to migrate the container there; otherwise it
+    /// serves the invocation on the holder for free (a rescue hit — never
+    /// pay to move warm state toward a hotter node, and never evict a
+    /// local warm copy to admit a transferred one). Returns `None` when
+    /// migration is disabled or no warm state exists anywhere (the caller
+    /// then offloads or drops as before).
+    fn try_migrate(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+    ) -> Option<ClusterOutcome> {
+        let cost_us = self.migration?.cost_us;
+        let n = self.nodes.len();
+        let class = class_idx(profile.class);
+        // One scan, two argmins (strict improvement, ties to the lowest
+        // index): least-loaded holder and least-loaded admissible
+        // non-holder.
+        let mut holder: Option<(usize, u64)> = None;
+        let mut target: Option<(usize, u64)> = None;
+        for i in 0..n {
+            let used = self.nodes[i].used_mb();
+            let slot = if self.nodes[i].has_idle(profile) {
+                &mut holder
+            } else if self.nodes[i].can_admit(profile) {
+                &mut target
+            } else {
+                continue;
+            };
+            let better = match *slot {
+                None => true,
+                Some((b, b_used)) => self.frac_less(i, used, b, b_used),
+            };
+            if better {
+                *slot = Some((i, used));
+            }
+        }
+        let (holder, holder_used) = holder?; // no warm state anywhere
+
+        if let Some((recipient, rec_used)) = target {
+            if self.frac_less(recipient, rec_used, holder, holder_used) {
+                let took = self.nodes[holder].take_idle(profile);
+                debug_assert!(took, "holder certified an idle container");
+                let (pool, container) = self.nodes[recipient]
+                    .admit_migrated(profile, ev.t_us)
+                    .expect("can_admit certified admission");
+                // Count the serve toward the recipient's dispatch window
+                // (as the rescue branch does for the holder) so the
+                // controller's per-node drop rates see migration traffic.
+                if self.controller.is_some() {
+                    self.window.node_dispatches[recipient][class] += 1;
+                }
+                // The migrated container serves warm; under HoldsMemory
+                // the transfer occupies the container like init does.
+                let busy = match self.init_occupancy {
+                    InitOccupancy::LatencyOnly => profile.warm_start_us + ev.exec_us,
+                    InitOccupancy::HoldsMemory => {
+                        profile.warm_start_us + cost_us + ev.exec_us
+                    }
+                };
+                self.push_completion(ev.t_us + busy, recipient, pool, container);
+                self.record_served(
+                    recipient,
+                    profile.class,
+                    RecordKind::Migrate { donor: holder, recipient },
+                    ev.exec_us,
+                    profile.warm_start_us + cost_us,
+                );
+                return Some(ClusterOutcome::Migrated { donor: holder, recipient });
+            }
+        }
+
+        // Rescue hit: serve where the warm state already lives. The
+        // dispatch is guaranteed warm except on an adaptive node whose
+        // self-rebalance just resized the copy away — handle all
+        // outcomes rather than assume.
+        if self.controller.is_some() {
+            self.window.node_dispatches[holder][class] += 1;
+        }
+        match self.nodes[holder].dispatch(profile, ev.t_us) {
+            Outcome::Hit { pool, container } => {
+                let end = ev.t_us + profile.warm_start_us + ev.exec_us;
+                self.push_completion(end, holder, pool, container);
+                self.record_served(
+                    holder,
+                    profile.class,
+                    RecordKind::Hit,
+                    ev.exec_us,
+                    profile.warm_start_us,
+                );
+                self.rerouted += 1;
+                self.rescues += 1;
+                Some(ClusterOutcome::Placed { node: holder, cold: false })
+            }
+            Outcome::Cold { pool, container } => {
+                let busy = match self.init_occupancy {
+                    InitOccupancy::LatencyOnly => ev.exec_us,
+                    InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
+                };
+                self.push_completion(ev.t_us + busy, holder, pool, container);
+                self.record_served(
+                    holder,
+                    profile.class,
+                    RecordKind::Miss,
+                    ev.exec_us,
+                    profile.cold_start_us,
+                );
+                self.rerouted += 1;
+                Some(ClusterOutcome::Placed { node: holder, cold: true })
+            }
+            Outcome::Drop => {
+                if self.controller.is_some() {
+                    self.window.node_drops[holder][class] += 1;
+                }
+                None
+            }
+        }
+    }
+
+    /// Process one arrival end-to-end: route, dispatch, fall back,
+    /// migrate, and (maybe) offload.
     pub fn step(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
         debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
         self.now_us = ev.t_us;
         self.drain_completions(ev.t_us);
+        self.maybe_epoch(ev.t_us); // no-op unless a controller is active
 
         let profile = trace.profile(ev.func);
+        let class = class_idx(profile.class);
+        if self.controller.is_some() {
+            self.window.class_arrivals[class] += 1;
+        }
         let primary = self.route(profile);
         let n = self.nodes.len();
 
@@ -411,6 +862,9 @@ impl Cluster {
         let mut attempts = 0usize;
         let mut scan = 0usize; // next fallback index to consider
         loop {
+            if self.controller.is_some() {
+                self.window.node_dispatches[cand][class] += 1;
+            }
             match self.nodes[cand].dispatch(profile, ev.t_us) {
                 Outcome::Hit { pool, container } => {
                     let end = ev.t_us + profile.warm_start_us + ev.exec_us;
@@ -446,6 +900,9 @@ impl Cluster {
                     return ClusterOutcome::Placed { node: cand, cold: true };
                 }
                 Outcome::Drop => {
+                    if self.controller.is_some() {
+                        self.window.node_drops[cand][class] += 1;
+                    }
                     attempts += 1;
                     if attempts > self.max_fallbacks {
                         break;
@@ -463,7 +920,15 @@ impl Cluster {
             }
         }
 
-        // Every candidate declined: offload to the cloud tier, or drop.
+        // Every candidate declined: migrate warm state if possible, then
+        // offload to the cloud tier, then drop. (`try_migrate` is an
+        // immediate no-op when migration is disabled.)
+        if let Some(outcome) = self.try_migrate(profile, ev) {
+            return outcome;
+        }
+        if self.controller.is_some() {
+            self.window.class_failures[class] += 1;
+        }
         match self.cloud {
             Some(cloud) => {
                 self.report
@@ -486,8 +951,9 @@ impl Cluster {
 
     /// Per-node invariant check (property/integration suites).
     pub fn check_invariants(&self) -> Result<(), String> {
-        // Cluster-wide hits/misses must equal the per-node sum; drops and
-        // offloads are cluster-level outcomes and appear nowhere per-node.
+        // Cluster-wide hits/misses/migrations must equal the per-node
+        // sum; drops and offloads are cluster-level outcomes and appear
+        // nowhere per-node.
         let mut served = Report::default();
         for r in &self.per_node {
             served.overall.merge(&r.overall);
@@ -502,13 +968,16 @@ impl Cluster {
         }
         if served.overall.hits != self.report.overall.hits
             || served.overall.misses != self.report.overall.misses
+            || served.overall.migrations != self.report.overall.migrations
         {
             return Err(format!(
-                "per-node sum (h{} m{}) != cluster (h{} m{})",
+                "per-node sum (h{} m{} g{}) != cluster (h{} m{} g{})",
                 served.overall.hits,
                 served.overall.misses,
+                served.overall.migrations,
                 self.report.overall.hits,
-                self.report.overall.misses
+                self.report.overall.misses,
+                self.report.overall.migrations
             ));
         }
         if !self.report.is_consistent() {
@@ -520,10 +989,14 @@ impl Cluster {
     fn into_report(self) -> ClusterReport {
         ClusterReport {
             descriptions: self.nodes.iter().map(|n| n.describe()).collect(),
+            router: self.router,
             report: self.report,
             per_node: self.per_node,
             peak_used_mb: self.peak_used_mb,
             rerouted: self.rerouted,
+            rescues: self.rescues,
+            small_node_moves: self.small_node_moves,
+            resplits: self.resplits,
         }
     }
 }
@@ -531,20 +1004,49 @@ impl Cluster {
 /// Everything a cluster run produces.
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
-    /// Cluster-wide metrics (includes offloads/drops).
+    /// Cluster-wide metrics (includes offloads/drops/migrations).
     pub report: Report,
-    /// What each node served.
+    /// What each node served (migrations appear on their recipient).
     pub per_node: Vec<Report>,
     /// Peak occupancy per node (MB).
     pub peak_used_mb: Vec<u64>,
     /// Invocations served by a fallback node after the primary dropped.
     pub rerouted: u64,
+    /// Would-be failures served warm in place on a holder node (also
+    /// counted in `rerouted`).
+    pub rescues: u64,
+    /// Controller decisions that moved the size-affinity boundary.
+    pub small_node_moves: u64,
+    /// Controller decisions that live-resized a node's KiSS split.
+    pub resplits: u64,
+    /// The router at end of run — the controller may have moved the
+    /// size-affinity boundary from its configured starting point.
+    pub router: RouterKind,
     /// One [`Dispatcher::describe`] line per node (post-run state, so
-    /// adaptive nodes show their final split).
+    /// adaptive/re-split nodes show their final split).
     pub descriptions: Vec<String>,
 }
 
 /// Run a whole trace through a cluster and return the full report.
+///
+/// ```no_run
+/// // (no_run: doctest binaries miss the libstdc++ rpath in this image —
+/// // see util::prop; the same flow executes in this module's tests and
+/// // tests/integration_cluster.rs)
+/// use kiss_faas::sim::cluster::{run_cluster, ClusterSpec, NodePolicy};
+/// use kiss_faas::trace::synth::{synthesize, SynthConfig};
+///
+/// let trace = synthesize(&SynthConfig {
+///     duration_us: 60_000_000, // 1 virtual minute
+///     ..SynthConfig::default()
+/// });
+/// let spec = ClusterSpec::homogeneous(4, 2048, NodePolicy::kiss_default())
+///     .with_cloud(80_000)      // 80 ms cloud RTT
+///     .with_migration(15_000); // 15 ms warm-container transfer
+/// let result = run_cluster(&trace, &spec);
+/// assert!(result.report.is_consistent());
+/// assert_eq!(result.per_node.len(), 4);
+/// ```
 pub fn run_cluster(trace: &Trace, spec: &ClusterSpec) -> ClusterReport {
     debug_assert!(trace.is_sorted());
     let mut cluster = Cluster::new(spec);
@@ -599,6 +1101,8 @@ mod tests {
             max_fallbacks: 1,
             cloud: None,
             init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: None,
         };
         let cluster = run_cluster(&t, &spec);
         let mut single =
@@ -689,6 +1193,8 @@ mod tests {
             max_fallbacks: 1,
             cloud: None,
             init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: None,
         };
         let r = run_cluster(&t, &spec);
         assert_eq!(r.report.overall.misses, 1);
@@ -709,6 +1215,8 @@ mod tests {
             max_fallbacks: 0,
             cloud: None,
             init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: None,
         };
         let r = run_cluster(&t, &spec);
         assert_eq!(r.report.overall.drops, 1);
@@ -740,10 +1248,14 @@ mod tests {
             .with_router(RouterKind::Sticky)
             .with_cloud(50_000)
             .with_fallbacks(3)
-            .with_init_occupancy(InitOccupancy::HoldsMemory);
+            .with_init_occupancy(InitOccupancy::HoldsMemory)
+            .with_migration(15_000)
+            .with_controller(ControllerConfig::default());
         assert_eq!(spec.total_mem_mb(), 4 * 2048);
         assert_eq!(spec.cloud, Some(CloudTier { rtt_us: 50_000 }));
         assert_eq!(spec.max_fallbacks, 3);
+        assert_eq!(spec.migration, Some(MigrationPolicy { cost_us: 15_000 }));
+        assert_eq!(spec.controller.unwrap().epoch_us, 60_000_000);
         assert_eq!(RouterKind::parse("ll", 0), Some(RouterKind::LeastLoaded));
         assert_eq!(
             RouterKind::parse("affinity", 2),
@@ -751,5 +1263,282 @@ mod tests {
         );
         assert_eq!(RouterKind::parse("bogus", 0), None);
         assert_eq!(NodePolicy::kiss_default().label(), "kiss");
+    }
+
+    #[test]
+    fn migrate_records_donor_and_recipient() {
+        // Fleet [400, 1000, 100] MB, round-robin, no fallback, no cloud.
+        // f (300 MB) cold-starts on node 0 (leaving it 75% full with the
+        // idle copy); a small function g lands on node 1 (4% full). The
+        // third arrival of f routes to node 2 (too small -> Drop); the
+        // migration path finds holder = node 0, and node 1 — strictly
+        // less loaded with plenty of headroom — becomes the recipient.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500), func(1, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 1, 500), inv(20_000, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(1000), baseline_node(100)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: Some(MigrationPolicy { cost_us: 15_000 }),
+            controller: None,
+        };
+        let mut cluster = Cluster::new(&spec);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            ClusterOutcome::Placed { node: 0, cold: true }
+        );
+        assert_eq!(
+            cluster.step(&t, t.events[1]),
+            ClusterOutcome::Placed { node: 1, cold: true }
+        );
+        let profile = t.profile(FunctionId(0));
+        assert!(cluster.node(0).has_idle(profile));
+        assert_eq!(
+            cluster.step(&t, t.events[2]),
+            ClusterOutcome::Migrated { donor: 0, recipient: 1 }
+        );
+        assert!(!cluster.node(0).has_idle(profile), "donor gave up its container");
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.report.overall.migrations, 1);
+        assert_eq!(cluster.report.overall.drops, 0);
+        assert_eq!(cluster.rescues, 0);
+        assert_eq!(cluster.per_node[1].overall.migrations, 1, "recorded on recipient");
+        // Startup: 2 cold (1000 each) + warm dispatch 100 + cost 15000.
+        assert_eq!(cluster.report.overall.startup_us, 2_000 + 100 + 15_000);
+    }
+
+    #[test]
+    fn rescue_hit_serves_on_holder_instead_of_paying_migration() {
+        // Fleet [400, 400, 100]: after two cold starts of f, both holders
+        // are equally loaded and no less-loaded node can admit f — the
+        // rescue path must serve the third arrival warm ON a holder for
+        // free rather than evict node 1's own copy to admit a transfer.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500), inv(20_000, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(400), baseline_node(100)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: Some(MigrationPolicy { cost_us: 15_000 }),
+            controller: None,
+        };
+        let mut cluster = Cluster::new(&spec);
+        cluster.step(&t, t.events[0]);
+        cluster.step(&t, t.events[1]);
+        // Ties break to the lowest index: the rescue hit lands on node 0.
+        assert_eq!(
+            cluster.step(&t, t.events[2]),
+            ClusterOutcome::Placed { node: 0, cold: false }
+        );
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.rescues, 1);
+        assert_eq!(cluster.rerouted, 1);
+        assert_eq!(cluster.report.overall.migrations, 0, "no transfer was paid");
+        assert_eq!(cluster.report.overall.hits, 1);
+        assert_eq!(cluster.report.overall.drops, 0);
+        // Both warm copies survive (no self-eviction on node 1).
+        let profile = t.profile(FunctionId(0));
+        assert!(cluster.node(0).has_idle(profile));
+        assert!(cluster.node(1).has_idle(profile));
+        // Startup: 2 cold (1000 each) + one plain warm dispatch (100).
+        assert_eq!(cluster.report.overall.startup_us, 2_100);
+    }
+
+    #[test]
+    fn resplit_never_moves_against_the_pressure_signal() {
+        // A node configured at small_frac 0.45 sits below the controller's
+        // min_frac clamp (0.5). Large-class pressure asks for an even
+        // smaller small pool; the clamp would *raise* it to 0.5 — the
+        // wrong direction — so the controller must skip the move.
+        let t = Trace {
+            functions: vec![func(0, 600, 1_000, 100)],
+            events: (0..20u64).map(|i| inv(i * 100_000, 0, 100)).collect(),
+        };
+        let node = NodeSpec {
+            mem_mb: 1024,
+            policy: NodePolicy::Kiss {
+                small_frac: 0.45,
+                threshold_mb: 200,
+                small_policy: PolicyKind::Lru,
+                large_policy: PolicyKind::Lru,
+            },
+        };
+        let spec = ClusterSpec {
+            nodes: vec![node],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: Some(ControllerConfig {
+                epoch_us: 500_000,
+                ..ControllerConfig::default()
+            }),
+        };
+        let r = run_cluster(&t, &spec);
+        // The 563 MB large pool can never hold the 600 MB function: every
+        // epoch sees pure large-class pressure, yet no resplit happens.
+        assert_eq!(r.resplits, 0, "{r:?}");
+        assert_eq!(r.report.overall.drops, 20);
+    }
+
+    #[test]
+    fn migration_disabled_still_drops() {
+        // Same scenario as above with migration off: the third arrival
+        // is a hard drop (the PR-1 static path).
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500), inv(20_000, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(400), baseline_node(100)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: None,
+        };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.drops, 1);
+        assert_eq!(r.report.overall.migrations, 0);
+    }
+
+    #[test]
+    fn migration_without_donor_falls_through_to_offload() {
+        // No warm copy of f exists anywhere: migration cannot help and
+        // the invocation offloads exactly as without migration.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(2, 100, NodePolicy::Baseline { policy: PolicyKind::Lru })
+            .with_cloud(80_000)
+            .with_migration(15_000);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.offloads, 1);
+        assert_eq!(r.report.overall.migrations, 0);
+    }
+
+    #[test]
+    fn controller_shrinks_small_node_set_under_large_pressure() {
+        // 3 baseline nodes behind size-affinity with 2 small nodes; the
+        // workload is all-large and node 2 (the only large node, 400 MB)
+        // saturates -> large-class failures dominate every epoch and the
+        // controller hands node 1 to the large set.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 2_000_000), func(1, 310, 1_000, 2_000_000)],
+            events: (0..40u64)
+                .map(|i| inv(i * 100_000, (i % 2) as u32, 2_000_000))
+                .collect(),
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(400), baseline_node(400)],
+            router: RouterKind::SizeAffinity { small_nodes: 2 },
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: Some(ControllerConfig {
+                epoch_us: 500_000,
+                ..ControllerConfig::default()
+            }),
+        };
+        let r = run_cluster(&t, &spec);
+        assert!(r.small_node_moves > 0, "controller must react: {r:?}");
+        assert_eq!(
+            r.router,
+            RouterKind::SizeAffinity { small_nodes: 1 },
+            "boundary clamps at one small node"
+        );
+        // With nodes 1 and 2 serving the large class, capacity doubled.
+        assert!(r.per_node[1].large.total_accesses() > 0);
+    }
+
+    #[test]
+    fn controller_resplits_a_starving_kiss_node() {
+        // One KiSS 90-10 node (1 GB): its 102 MB large pool drops every
+        // 350 MB invocation. The controller shifts capacity to the large
+        // pool (mirroring the adaptive balancer, but driven from the
+        // cluster level).
+        let t = Trace {
+            functions: vec![func(0, 350, 1_000, 100)],
+            events: (0..60u64).map(|i| inv(i * 100_000, 0, 100)).collect(),
+        };
+        let node = NodeSpec {
+            mem_mb: 1024,
+            policy: NodePolicy::Kiss {
+                small_frac: 0.9,
+                threshold_mb: 200,
+                small_policy: PolicyKind::Lru,
+                large_policy: PolicyKind::Lru,
+            },
+        };
+        let spec = ClusterSpec {
+            nodes: vec![node],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: Some(ControllerConfig {
+                epoch_us: 500_000,
+                step: 0.1,
+                ..ControllerConfig::default()
+            }),
+        };
+        let r = run_cluster(&t, &spec);
+        assert!(r.resplits > 0, "controller must resize the split: {r:?}");
+        // Once the large pool holds >= 350 MB the drops stop.
+        assert!(
+            r.report.overall.misses + r.report.overall.hits > 0,
+            "large fn eventually serves: {:?}",
+            r.report.overall
+        );
+        assert!(r.report.overall.drops < 60, "{:?}", r.report.overall);
+    }
+
+    #[test]
+    #[should_panic(expected = "controller needs")]
+    fn invalid_controller_config_fails_fast_at_construction() {
+        // Programmatic specs bypass SimConfig::validate; the constructor
+        // must reject an inverted clamp instead of panicking mid-run
+        // inside f64::clamp.
+        let spec = ClusterSpec::homogeneous(2, 1024, NodePolicy::kiss_default())
+            .with_controller(ControllerConfig {
+                min_frac: 0.9,
+                max_frac: 0.5,
+                ..ControllerConfig::default()
+            });
+        let _ = Cluster::new(&spec);
+    }
+
+    #[test]
+    fn disabled_extensions_do_not_change_results() {
+        // A controller that never fires (epoch beyond the trace) and no
+        // migration must be bit-for-bit identical to the plain cluster.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: vec![inv(0, 0, 500), inv(10, 1, 2_000), inv(20_000, 0, 500)],
+        };
+        let plain = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default());
+        let instrumented = plain
+            .clone()
+            .with_controller(ControllerConfig { epoch_us: u64::MAX, ..Default::default() });
+        let a = run_cluster(&t, &plain);
+        let b = run_cluster(&t, &instrumented);
+        assert_eq!(a.report, b.report);
+        assert_eq!(a.per_node, b.per_node);
+        assert_eq!(a.peak_used_mb, b.peak_used_mb);
     }
 }

@@ -16,8 +16,10 @@
 //! microseconds and the only state is the dispatcher's.
 //!
 //! [`cluster`] lifts the same event semantics to a multi-node edge
-//! cluster with pluggable routers and an edge→cloud offload path; a
-//! one-node cluster reduces bit-for-bit to [`run_trace_with`].
+//! cluster with pluggable routers, an edge→cloud offload path, optional
+//! cross-node warm-container migration, and an online small-nodes/split
+//! controller; a one-node cluster reduces bit-for-bit to
+//! [`run_trace_with`].
 
 pub mod cluster;
 
@@ -51,8 +53,12 @@ struct Completion {
 /// bench compares both.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum InitOccupancy {
+    /// Cold-start latency is charged to the response only; the container
+    /// occupies memory for the execution window (the default).
     #[default]
     LatencyOnly,
+    /// The container additionally stays busy (and holds memory) for the
+    /// whole initialization — the stricter model.
     HoldsMemory,
 }
 
@@ -63,16 +69,19 @@ pub struct Engine<'a, D: Dispatcher + ?Sized> {
     seq: u64,
     now_us: u64,
     init_occupancy: InitOccupancy,
+    /// Metrics accumulated so far (hits/misses/drops + durations).
     pub report: Report,
     /// Peak total occupancy observed (MB), an efficiency gauge.
     pub peak_used_mb: u64,
 }
 
 impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
+    /// An engine over `dispatcher` with the default init-occupancy model.
     pub fn new(dispatcher: &'a mut D) -> Self {
         Self::with_options(dispatcher, InitOccupancy::default())
     }
 
+    /// An engine with an explicit init-occupancy model.
     pub fn with_options(dispatcher: &'a mut D, init_occupancy: InitOccupancy) -> Self {
         Self {
             dispatcher,
@@ -85,6 +94,7 @@ impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
         }
     }
 
+    /// Current virtual time (µs).
     pub fn now_us(&self) -> u64 {
         self.now_us
     }

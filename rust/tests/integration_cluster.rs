@@ -1,16 +1,20 @@
 //! Integration: the multi-node cluster engine — the determinism lock
 //! (N=1 reduces bit-for-bit to the single-node engine), offload
-//! accounting, router determinism, and config-to-spec threading.
+//! accounting, router determinism, config-to-spec threading, and the
+//! migration/controller extensions (disabled == PR-1 static path
+//! bit-for-bit; enabled strictly reduces placement failures on the
+//! stressed hetero workload).
 
 use kiss_faas::config::SimConfig;
 use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::coordinator::Balancer;
 use kiss_faas::experiments::paper_workload;
 use kiss_faas::sim::cluster::{
-    run_cluster, ClusterSpec, NodePolicy, NodeSpec, RouterKind,
+    run_cluster, ClusterSpec, ControllerConfig, NodePolicy, NodeSpec, RouterKind,
 };
 use kiss_faas::sim::{run_trace_with, InitOccupancy};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use kiss_faas::util::prop::forall;
 
 fn workload(seed: u64) -> SynthConfig {
     SynthConfig {
@@ -57,6 +61,8 @@ fn one_node_cluster_is_bit_identical_to_run_trace() {
                 max_fallbacks: 1,
                 cloud: None,
                 init_occupancy: occ,
+                migration: None,
+                controller: None,
             };
             let got = run_cluster(&trace, &spec);
             assert_eq!(
@@ -97,6 +103,8 @@ fn cluster_runs_are_deterministic() {
         max_fallbacks: 2,
         cloud: None,
         init_occupancy: InitOccupancy::HoldsMemory,
+        migration: None,
+        controller: None,
     }
     .with_cloud(80_000);
     let a = run_cluster(&trace, &spec);
@@ -121,6 +129,8 @@ fn offload_accounting_is_class_consistent() {
         max_fallbacks: 1,
         cloud: None,
         init_occupancy: InitOccupancy::HoldsMemory,
+        migration: None,
+        controller: None,
     };
     let dropped = run_cluster(&trace, &base);
     assert!(
@@ -221,6 +231,8 @@ fn fallbacks_reduce_placement_failures() {
         max_fallbacks: 0,
         cloud: None,
         init_occupancy: InitOccupancy::HoldsMemory,
+        migration: None,
+        controller: None,
     };
     let without = run_cluster(&trace, &tight);
     assert_eq!(without.rerouted, 0, "no fallbacks, no reroutes");
@@ -234,6 +246,185 @@ fn fallbacks_reduce_placement_failures() {
         without.report.overall.total_accesses()
     );
     assert!(with.report.is_consistent());
+}
+
+/// The hetero fleet the migration/controller locks exercise, stressed
+/// enough (high rate, many large functions) that the static cluster
+/// suffers real placement failures on its 16 GB of edge memory.
+fn stressed_hetero_workload() -> SynthConfig {
+    SynthConfig {
+        seed: 2025,
+        n_small: 120,
+        n_large: 40,
+        duration_us: 480_000_000, // 8 min
+        rate_per_sec: 120.0,
+        ..paper_workload()
+    }
+}
+
+// The acceptance lock runs on the exact spec the cluster-migration
+// experiment reports on — imported, not copied, so they cannot drift.
+use kiss_faas::experiments::cluster::hetero_spec;
+
+/// Migration determinism (property): for any seed, two runs of the same
+/// migration+controller spec produce identical `Counters` — including
+/// the `migrations` field — in every slice, per-node and cluster-wide.
+#[test]
+fn prop_migration_runs_are_seed_deterministic() {
+    forall("migration determinism", 12, |rng| {
+        let synth = SynthConfig {
+            seed: rng.below(1 << 20),
+            n_small: 40,
+            n_large: 10,
+            duration_us: 120_000_000, // 2 min
+            rate_per_sec: 40.0,
+            ..paper_workload()
+        };
+        let trace = synthesize(&synth);
+        let spec = ClusterSpec {
+            nodes: vec![kiss_node(1024), kiss_node(768), kiss_node(512)],
+            router: RouterKind::LeastLoaded,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::HoldsMemory,
+            migration: None,
+            controller: None,
+        }
+        .with_cloud(80_000)
+        .with_migration(15_000)
+        .with_controller(ControllerConfig {
+            epoch_us: 30_000_000,
+            ..ControllerConfig::default()
+        });
+        let a = run_cluster(&trace, &spec);
+        let b = run_cluster(&trace, &spec);
+        if a.report != b.report {
+            return Err(format!("cluster reports diverged: {:?} vs {:?}", a.report, b.report));
+        }
+        if a.per_node != b.per_node {
+            return Err("per-node reports diverged".into());
+        }
+        if a.report.overall.migrations != b.report.overall.migrations {
+            return Err("migration counters diverged".into());
+        }
+        if (a.small_node_moves, a.resplits, a.rescues)
+            != (b.small_node_moves, b.resplits, b.rescues)
+        {
+            return Err("controller/rescue decisions diverged".into());
+        }
+        if !a.report.is_consistent() {
+            return Err(format!("inconsistent report: {:?}", a.report));
+        }
+        Ok(())
+    });
+}
+
+/// The PR-1 compatibility lock: with migration disabled — whether by
+/// omitting `[cluster.migration]` or by `enabled = false` — and no
+/// controller, the multi-node cluster reproduces the static path
+/// bit-for-bit, and a controller that never fires (epoch beyond the
+/// trace) observes without perturbing.
+#[test]
+fn migration_disabled_matches_static_cluster_bit_for_bit() {
+    let trace = synthesize(&workload(42));
+
+    let base_toml = "
+        [node]
+        mem_mb = 1024
+        [cluster]
+        nodes = 3
+        mem_mb = [1024, 768, 512]
+        router = \"least-loaded\"
+        fallbacks = 1
+        cloud_rtt_ms = 80
+    ";
+    let absent = SimConfig::from_toml_str(base_toml).unwrap();
+    let disabled = SimConfig::from_toml_str(&format!(
+        "{base_toml}\n[cluster.migration]\nenabled = false\ncost_ms = 15\n\
+         [cluster.controller]\nenabled = false"
+    ))
+    .unwrap();
+
+    let mut spec_absent = absent.build_cluster_spec();
+    spec_absent.init_occupancy = InitOccupancy::HoldsMemory;
+    let mut spec_disabled = disabled.build_cluster_spec();
+    spec_disabled.init_occupancy = InitOccupancy::HoldsMemory;
+    assert!(spec_absent.migration.is_none() && spec_disabled.migration.is_none());
+
+    let a = run_cluster(&trace, &spec_absent);
+    let b = run_cluster(&trace, &spec_disabled);
+    assert_eq!(a.report, b.report, "disabled-in-TOML must equal absent-in-TOML");
+    assert_eq!(a.per_node, b.per_node);
+    assert_eq!(a.peak_used_mb, b.peak_used_mb);
+    assert_eq!(a.report.overall.migrations, 0);
+
+    // An armed-but-never-firing controller is observation-only.
+    let mut spec_idle_ctl = spec_absent.clone();
+    spec_idle_ctl.controller =
+        Some(ControllerConfig { epoch_us: u64::MAX, ..ControllerConfig::default() });
+    let c = run_cluster(&trace, &spec_idle_ctl);
+    assert_eq!(a.report, c.report, "idle controller must not perturb results");
+    assert_eq!(a.per_node, c.per_node);
+    assert_eq!(c.small_node_moves, 0);
+    assert_eq!(c.resplits, 0);
+}
+
+/// The acceptance lock: on the stressed hetero workload, migration +
+/// controller strictly reduces placement failures (drops + offloads)
+/// below static KiSS, and migrations actually happen.
+#[test]
+fn migration_and_controller_strictly_reduce_failures_on_hetero_fleet() {
+    let trace = synthesize(&stressed_hetero_workload());
+
+    let static_run = run_cluster(&trace, &hetero_spec());
+    let static_failures =
+        static_run.report.overall.drops + static_run.report.overall.offloads;
+    assert!(
+        static_failures > 0,
+        "the stressed workload must defeat the static fleet: {:?}",
+        static_run.report.overall
+    );
+
+    let both_spec = hetero_spec()
+        .with_migration(15_000)
+        .with_controller(ControllerConfig::default());
+    let both = run_cluster(&trace, &both_spec);
+    let both_failures = both.report.overall.drops + both.report.overall.offloads;
+
+    assert!(
+        both.report.overall.migrations + both.rescues > 0,
+        "the warm-state rescue path must fire: {:?} (rescues {})",
+        both.report.overall,
+        both.rescues
+    );
+    assert!(
+        both_failures < static_failures,
+        "migration+controller must strictly reduce drops+offloads: {both_failures} vs \
+         {static_failures} (migrations {}, rescues {})",
+        both.report.overall.migrations,
+        both.rescues
+    );
+    assert!(both.report.is_consistent());
+    // Total accesses are conserved across the variants.
+    assert_eq!(
+        both.report.overall.total_accesses(),
+        static_run.report.overall.total_accesses()
+    );
+}
+
+/// The cluster-migration experiment table reflects the same ordering the
+/// acceptance lock asserts, on its own reduced workload.
+#[test]
+fn migration_experiment_reports_the_reduction() {
+    let sweep = kiss_faas::experiments::cluster::cluster_migration(&stressed_hetero_workload());
+    let static_fail = sweep.value_at("static", 15.0).unwrap();
+    let both_fail = sweep.value_at("migrate+ctl", 15.0).unwrap();
+    let migrated = sweep.value_at("migrated%", 15.0).unwrap();
+    assert!(migrated.is_finite() && migrated >= 0.0, "{sweep:?}");
+    assert!(
+        both_fail < static_fail,
+        "experiment must show the reduction: {both_fail} vs {static_fail}"
+    );
 }
 
 /// The cluster sweep experiments run end-to-end on a reduced workload
