@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use kiss_faas::bench::{group, Bencher};
 use kiss_faas::experiments::paper_workload;
 use kiss_faas::sim::cluster::{
-    run_cluster, ClusterSpec, ControllerConfig, NodePolicy, RouterKind,
+    run_cluster, ChurnConfig, ClusterSpec, ControllerConfig, NodePolicy, RouterKind, Topology,
 };
 use kiss_faas::sim::InitOccupancy;
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
@@ -78,6 +78,32 @@ fn main() {
             (
                 "migrate+ctl",
                 base.with_migration(15_000).with_controller(ControllerConfig::default()),
+            ),
+        ];
+        for (label, s) in &variants {
+            let r = Bencher::new(&format!("cluster/4-nodes/{label}"))
+                .items_per_iter(n_events)
+                .target(Duration::from_secs(1))
+                .run(|| {
+                    std::hint::black_box(run_cluster(&trace, s));
+                });
+            println!("{r}");
+        }
+    }
+
+    group("cluster: topology/churn overhead (4 nodes, least-loaded)");
+    {
+        let base = spec(4, RouterKind::LeastLoaded).with_migration(15_000);
+        let variants: [(&str, ClusterSpec); 3] = [
+            ("flat", base.clone()),
+            ("ring-2ms", base.clone().with_topology(Topology::Ring { hop_us: 2_000 })),
+            (
+                "ring-2ms+churn",
+                base.with_topology(Topology::Ring { hop_us: 2_000 }).with_churn(ChurnConfig {
+                    seed: 11,
+                    mean_up_us: 120_000_000, // ~7 failures/node over 15 min
+                    mean_down_us: 20_000_000,
+                }),
             ),
         ];
         for (label, s) in &variants {

@@ -44,6 +44,19 @@
 //! max_frac = 0.95
 //! reassign_small_nodes = true         # size-affinity boundary lever
 //! resplit_nodes = true                # per-node KiSS split lever
+//!
+//! [cluster.topology]                  # absent = flat (zero-cost) fabric
+//! kind = "ring"                       # flat|star|ring|matrix
+//! hop_ms = 1.0                        # per-hop latency (star/ring)
+//! # matrix kind instead takes a row-major nodes×nodes latency list
+//! # (this TOML subset cannot nest arrays):
+//! # lat_ms = [0, 2, 4,  2, 0, 2,  4, 2, 0]
+//!
+//! [cluster.churn]                     # absent = nodes never fail
+//! enabled = true                      # optional kill switch
+//! seed = 1                            # churn schedule seed
+//! mean_up_s = 600                     # mean live dwell between failures
+//! mean_down_s = 30                    # mean outage duration
 //! ```
 
 pub mod toml;
@@ -55,7 +68,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::{AdaptiveConfig, Balancer};
 use crate::sim::cluster::{
-    CloudTier, ClusterSpec, ControllerConfig, MigrationPolicy, NodePolicy, NodeSpec, RouterKind,
+    ChurnConfig, CloudTier, ClusterSpec, ControllerConfig, MigrationPolicy, NodePolicy, NodeSpec,
+    RouterKind, Topology,
 };
 use crate::trace::synth::{BurstConfig, SynthConfig};
 
@@ -125,6 +139,12 @@ pub struct ClusterConfig {
     /// Online small-nodes/split controller (`[cluster.controller]`);
     /// `None` = disabled.
     pub controller: Option<ControllerConfig>,
+    /// Inter-node network topology (`[cluster.topology]`);
+    /// [`Topology::Flat`] = the zero-cost fabric, the historical model.
+    pub topology: Topology,
+    /// Node churn injection (`[cluster.churn]`); `None` = nodes never
+    /// fail.
+    pub churn: Option<ChurnConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -138,6 +158,8 @@ impl Default for ClusterConfig {
             policies: Vec::new(),
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         }
     }
 }
@@ -172,6 +194,11 @@ pub const DEFAULT_SMALL_FRAC: f64 = 0.8;
 /// is enabled without an explicit `cost_ms`: 15 ms, a CRIU-style
 /// checkpoint/transfer/restore of a small container over an edge LAN.
 pub const DEFAULT_MIGRATION_COST_US: u64 = 15_000;
+
+/// Default per-hop latency (µs) when `[cluster.topology]` selects a
+/// star/ring without an explicit `hop_ms`: 1 ms, a switched edge LAN
+/// hop.
+pub const DEFAULT_HOP_US: u64 = 1_000;
 
 impl SimConfig {
     /// The paper's default edge node: KiSS 80-20, LRU everywhere.
@@ -310,6 +337,8 @@ impl SimConfig {
             },
             migration: cc.migration,
             controller: cc.controller,
+            topology: cc.topology.clone(),
+            churn: cc.churn,
         }
     }
 
@@ -365,6 +394,17 @@ impl SimConfig {
                         small_nodes,
                         c.nodes
                     );
+                }
+            }
+            if let Err(e) = c.topology.validate(c.nodes) {
+                bail!("cluster.topology: {e}");
+            }
+            if let Some(churn) = &c.churn {
+                if churn.mean_up_us == 0 {
+                    bail!("cluster.churn.mean_up_s must be > 0");
+                }
+                if churn.mean_down_us == 0 {
+                    bail!("cluster.churn.mean_down_s must be > 0");
                 }
             }
         }
@@ -577,10 +617,15 @@ impl SimConfig {
 
         let migration_section = doc.section("cluster.migration");
         let controller_section = doc.section("cluster.controller");
+        let topology_section = doc.section("cluster.topology");
+        let churn_section = doc.section("cluster.churn");
         if cfg.cluster.is_none()
-            && (migration_section.is_some() || controller_section.is_some())
+            && (migration_section.is_some()
+                || controller_section.is_some()
+                || topology_section.is_some()
+                || churn_section.is_some())
         {
-            bail!("[cluster.migration] / [cluster.controller] require a [cluster] section");
+            bail!("[cluster.*] subsections require a [cluster] section");
         }
 
         if let Some(section) = migration_section {
@@ -656,6 +701,106 @@ impl SimConfig {
             }
         }
 
+        if let Some(section) = topology_section {
+            let mut kind: Option<String> = None;
+            let mut hop_us = DEFAULT_HOP_US;
+            let mut lat_row_major: Option<Vec<u64>> = None;
+            for (key, v) in section {
+                match key.as_str() {
+                    "kind" => {
+                        kind = Some(
+                            v.as_str()
+                                .ok_or_else(|| {
+                                    anyhow!("cluster.topology.kind must be a string")
+                                })?
+                                .to_string(),
+                        )
+                    }
+                    "hop_ms" => {
+                        let ms =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.topology.hop_ms"))?;
+                        if ms < 0.0 {
+                            bail!("cluster.topology.hop_ms must be >= 0");
+                        }
+                        hop_us = (ms * 1000.0).round() as u64;
+                    }
+                    "lat_ms" => {
+                        let items = v.as_arr().ok_or_else(|| {
+                            anyhow!(
+                                "cluster.topology.lat_ms must be a row-major array \
+                                 (nodes*nodes entries)"
+                            )
+                        })?;
+                        let mut out = Vec::with_capacity(items.len());
+                        for x in items {
+                            let ms = x
+                                .as_f64()
+                                .ok_or_else(|| anyhow!("cluster.topology.lat_ms: bad entry"))?;
+                            if ms < 0.0 {
+                                bail!("cluster.topology.lat_ms entries must be >= 0");
+                            }
+                            out.push((ms * 1000.0).round() as u64);
+                        }
+                        lat_row_major = Some(out);
+                    }
+                    other => bail!("unknown cluster.topology key: {other}"),
+                }
+            }
+            let topology = match (kind.as_deref(), lat_row_major) {
+                (Some("matrix"), Some(flat)) | (None, Some(flat)) => {
+                    Topology::from_row_major(flat).map_err(|e| anyhow!("cluster.topology: {e}"))?
+                }
+                (Some("matrix"), None) => {
+                    bail!("cluster.topology kind \"matrix\" needs lat_ms")
+                }
+                (Some(name), None) => Topology::parse(name, hop_us).ok_or_else(|| {
+                    anyhow!("unknown cluster.topology.kind {name:?} (flat|star|ring|matrix)")
+                })?,
+                (Some(name), Some(_)) => {
+                    bail!("cluster.topology.lat_ms only applies to kind \"matrix\", not {name:?}")
+                }
+                (None, None) => bail!("cluster.topology needs a kind (or lat_ms for matrix)"),
+            };
+            cfg.cluster.as_mut().expect("checked above").topology = topology;
+        }
+
+        if let Some(section) = churn_section {
+            let mut enabled = true;
+            let mut churn = ChurnConfig::default();
+            for (key, v) in section {
+                match key.as_str() {
+                    "enabled" => {
+                        enabled = v
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("cluster.churn.enabled: bad value"))?
+                    }
+                    "seed" => {
+                        churn.seed = v.as_u64().ok_or_else(|| anyhow!("cluster.churn.seed"))?
+                    }
+                    "mean_up_s" => {
+                        let s =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.churn.mean_up_s"))?;
+                        if s <= 0.0 {
+                            bail!("cluster.churn.mean_up_s must be > 0");
+                        }
+                        churn.mean_up_us = (s * 1e6).round() as u64;
+                    }
+                    "mean_down_s" => {
+                        let s =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.churn.mean_down_s"))?;
+                        if s <= 0.0 {
+                            bail!("cluster.churn.mean_down_s must be > 0");
+                        }
+                        churn.mean_down_us = (s * 1e6).round() as u64;
+                    }
+                    other => bail!("unknown cluster.churn key: {other}"),
+                }
+            }
+            if enabled {
+                cfg.cluster.as_mut().expect("checked above").churn = Some(churn);
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -686,6 +831,16 @@ impl SimConfig {
                 }
                 if let Some(ctl) = &c.controller {
                     extras.push_str(&format!(" ctl {}s", ctl.epoch_us / 1_000_000));
+                }
+                if c.topology != Topology::Flat {
+                    extras.push_str(&format!(" topo {}", c.topology.label()));
+                }
+                if let Some(churn) = &c.churn {
+                    extras.push_str(&format!(
+                        " churn {}s/{}s",
+                        churn.mean_up_us / 1_000_000,
+                        churn.mean_down_us / 1_000_000
+                    ));
                 }
                 format!(
                     "{base} | cluster {}x router {} fallbacks {} cloud {}{extras}",
@@ -937,6 +1092,93 @@ mod tests {
             "[cluster]\nnodes = 2\n[cluster.controller]\nstep = 1.5",
             "[cluster]\nnodes = 2\n[cluster.controller]\nmin_frac = 0.9\nmax_frac = 0.5",
             "[cluster]\nnodes = 2\n[cluster.controller]\nbogus = 1",
+        ] {
+            assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn topology_and_churn_toml_roundtrip() {
+        let cfg = SimConfig::from_toml_str(
+            r#"
+            [cluster]
+            nodes = 3
+            router = "least-loaded"
+            cloud_rtt_ms = 80
+            [cluster.topology]
+            kind = "ring"
+            hop_ms = 2.5
+            [cluster.churn]
+            seed = 7
+            mean_up_s = 120
+            mean_down_s = 15
+            "#,
+        )
+        .unwrap();
+        let cc = cfg.cluster.as_ref().unwrap();
+        assert_eq!(cc.topology, Topology::Ring { hop_us: 2_500 });
+        assert_eq!(
+            cc.churn,
+            Some(ChurnConfig { seed: 7, mean_up_us: 120_000_000, mean_down_us: 15_000_000 })
+        );
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.topology, cc.topology);
+        assert_eq!(spec.churn, cc.churn);
+        let d = cfg.describe();
+        assert!(d.contains("topo ring"), "{d}");
+        assert!(d.contains("churn 120s/15s"), "{d}");
+
+        // Matrix: row-major lat_ms, kind optional.
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.topology]\nlat_ms = [0, 2, 2, 0]",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.cluster.as_ref().unwrap().topology,
+            Topology::Matrix { lat_us: vec![vec![0, 2_000], vec![2_000, 0]] }
+        );
+
+        // Bare star picks the default hop.
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.topology]\nkind = \"star\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.cluster.as_ref().unwrap().topology,
+            Topology::Star { hop_us: DEFAULT_HOP_US }
+        );
+    }
+
+    #[test]
+    fn churn_defaults_and_kill_switch() {
+        let cfg =
+            SimConfig::from_toml_str("[cluster]\nnodes = 2\n[cluster.churn]").unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().churn, Some(ChurnConfig::default()));
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.churn]\nenabled = false\nmean_up_s = 60",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().churn, None);
+    }
+
+    #[test]
+    fn rejects_bad_topology_and_churn_configs() {
+        // Subsections without [cluster] are configuration mistakes.
+        assert!(SimConfig::from_toml_str("[cluster.topology]\nkind = \"ring\"").is_err());
+        assert!(SimConfig::from_toml_str("[cluster.churn]\nseed = 1").is_err());
+        for bad in [
+            "[cluster]\nnodes = 2\n[cluster.topology]",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nkind = \"mesh\"",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nhop_ms = -1\nkind = \"ring\"",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nkind = \"matrix\"",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nkind = \"ring\"\nlat_ms = [0, 1, 1, 0]",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nlat_ms = [0, 1, 1]",
+            "[cluster]\nnodes = 3\n[cluster.topology]\nlat_ms = [0, 1, 1, 0]",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nlat_ms = [5, 1, 1, 0]",
+            "[cluster]\nnodes = 2\n[cluster.topology]\nbogus = 1",
+            "[cluster]\nnodes = 2\n[cluster.churn]\nmean_up_s = 0",
+            "[cluster]\nnodes = 2\n[cluster.churn]\nmean_down_s = -3",
+            "[cluster]\nnodes = 2\n[cluster.churn]\nbogus = 1",
         ] {
             assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
         }

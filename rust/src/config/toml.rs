@@ -8,7 +8,10 @@
 //!
 //! Not supported (rejected with an error, never silently misparsed):
 //! inline tables, arrays of tables, multiline strings, dotted keys,
-//! datetimes.
+//! datetimes, nested arrays. Config keys that are conceptually matrices
+//! (e.g. `[cluster.topology] lat_ms`) therefore use a *row-major flat
+//! array* with n×n entries; the consumer re-chunks it (see
+//! [`crate::sim::cluster::Topology::from_row_major`]).
 
 use std::collections::BTreeMap;
 

@@ -34,8 +34,9 @@ pub struct AdaptiveConfig {
     pub interval_us: u64,
     /// Capacity shifted per decision (fraction of node memory).
     pub step: f64,
-    /// Clamp for the small-pool share.
+    /// Lower clamp for the small-pool share.
     pub min_frac: f64,
+    /// Upper clamp for the small-pool share.
     pub max_frac: f64,
 }
 
@@ -73,6 +74,7 @@ impl Pressure {
 pub struct AdaptiveBalancer {
     inner: Balancer,
     cfg: AdaptiveConfig,
+    /// Current small-pool share (moves as the node rebalances).
     pub small_frac: f64,
     window: [Pressure; 2],
     next_decision_us: u64,
@@ -86,6 +88,8 @@ pub struct AdaptiveBalancer {
 }
 
 impl AdaptiveBalancer {
+    /// An adaptive KiSS node of `total_mb`, starting at
+    /// `cfg.initial_frac` and rebalancing every `cfg.interval_us`.
     pub fn new(
         total_mb: u64,
         cfg: AdaptiveConfig,
@@ -111,6 +115,7 @@ impl AdaptiveBalancer {
         }
     }
 
+    /// Borrow the wrapped two-pool KiSS balancer (inspection).
     pub fn inner(&self) -> &Balancer {
         &self.inner
     }
@@ -223,6 +228,10 @@ impl Dispatcher for AdaptiveBalancer {
         now_us: u64,
     ) -> Option<(usize, ContainerId)> {
         self.inner.admit_migrated(profile, now_us)
+    }
+
+    fn evict_all(&mut self) -> Vec<crate::trace::FunctionId> {
+        self.inner.evict_all()
     }
 
     // An adaptive node manages its own split; the cluster controller must

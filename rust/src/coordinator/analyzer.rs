@@ -14,8 +14,11 @@ use crate::util::stats::{Ewma, Histogram};
 pub struct FuncStats {
     /// EWMA of the inter-arrival time (µs) — inverse of invocation rate.
     pub iat_us: Ewma,
+    /// Time (µs) of the most recent arrival, once one was seen.
     pub last_arrival_us: Option<u64>,
+    /// Total arrivals observed for this function.
     pub invocations: u64,
+    /// Memory footprint (MB) from the function's profile.
     pub mem_mb: u32,
 }
 
@@ -39,6 +42,8 @@ impl Default for WorkloadAnalyzer {
 }
 
 impl WorkloadAnalyzer {
+    /// An empty analyzer whose EWMAs decay with smoothing factor
+    /// `alpha`.
     pub fn new(alpha: f64) -> Self {
         Self {
             funcs: Vec::new(),
@@ -75,6 +80,7 @@ impl WorkloadAnalyzer {
         entry.last_arrival_us = Some(now_us);
     }
 
+    /// The online profile of `f`, if it has been observed.
     pub fn stats(&self, f: FunctionId) -> Option<&FuncStats> {
         self.funcs.get(f.0 as usize)?.as_ref()
     }
@@ -88,6 +94,7 @@ impl WorkloadAnalyzer {
         Some(1e6 / iat)
     }
 
+    /// Number of distinct functions observed so far.
     pub fn functions_seen(&self) -> usize {
         self.seen
     }

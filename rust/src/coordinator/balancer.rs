@@ -21,12 +21,14 @@ use crate::trace::FunctionProfile;
 /// by an earlier partition) route here.
 #[derive(Clone, Debug)]
 pub struct PartitionSpec {
+    /// Human-readable partition name (`small`/`large`/`unified`/…).
     pub name: &'static str,
     /// Fraction of node memory given to this partition (Σ ≈ 1.0).
     pub frac: f64,
     /// Exclusive upper size bound routed to this partition; the last
     /// partition must use `u32::MAX` to be a catch-all.
     pub max_mb: u32,
+    /// Replacement policy of this partition's pool.
     pub policy: PolicyKind,
 }
 
@@ -34,6 +36,8 @@ pub struct PartitionSpec {
 pub struct Balancer {
     specs: Vec<PartitionSpec>,
     pools: Vec<WarmPool>,
+    /// The online workload analyzer fed by every dispatch (Figure 6's
+    /// "workload analyser" box).
     pub analyzer: WorkloadAnalyzer,
     total_mb: u64,
 }
@@ -103,18 +107,22 @@ impl Balancer {
         )
     }
 
+    /// Borrow one partition's pool by index.
     pub fn pool(&self, idx: usize) -> &WarmPool {
         &self.pools[idx]
     }
 
+    /// All partition pools, in spec order.
     pub fn pools(&self) -> &[WarmPool] {
         &self.pools
     }
 
+    /// Total node memory (MB) across partitions.
     pub fn total_mb(&self) -> u64 {
         self.total_mb
     }
 
+    /// Number of partitions (1 = baseline, 2 = KiSS, N = generalized).
     pub fn partition_count(&self) -> usize {
         self.pools.len()
     }
@@ -233,6 +241,10 @@ impl Dispatcher for Balancer {
         }
         self.set_split(small_frac);
         true
+    }
+
+    fn evict_all(&mut self) -> Vec<crate::trace::FunctionId> {
+        self.pools.iter_mut().flat_map(|p| p.drain_all()).collect()
     }
 }
 

@@ -7,6 +7,7 @@ use crate::trace::FunctionId;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ContainerId(pub u64);
 
+/// Lifecycle state of a provisioned container.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ContainerState {
     /// Warm and idle: reusable by the next invocation of its function,
@@ -21,9 +22,13 @@ pub enum ContainerState {
 /// One container instance.
 #[derive(Clone, Debug)]
 pub struct Container {
+    /// Pool-global identifier (see [`ContainerId`]).
     pub id: ContainerId,
+    /// The function this container is provisioned for.
     pub func: FunctionId,
+    /// Memory footprint (MB) while resident.
     pub mem_mb: u32,
+    /// Current lifecycle state (idle = warm and evictable).
     pub state: ContainerState,
     /// Last time (µs) this container started serving an invocation.
     pub last_used_us: u64,
@@ -37,6 +42,8 @@ pub struct Container {
 }
 
 impl Container {
+    /// A freshly admitted container, born busy serving its first
+    /// invocation at `now_us`.
     pub fn new(
         id: ContainerId,
         func: FunctionId,
@@ -56,6 +63,7 @@ impl Container {
         }
     }
 
+    /// Whether the container is warm and idle (reusable / evictable).
     pub fn is_idle(&self) -> bool {
         self.state == ContainerState::Idle
     }

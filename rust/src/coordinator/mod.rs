@@ -17,18 +17,13 @@
 //! are `Dispatcher`s, so every experiment isolates exactly the policy
 //! difference the paper studies.
 
-// `policy` is fully `missing_docs`-clean; the sibling modules keep an
-// allow until their own documentation pass.
-#[allow(missing_docs)]
+// Every submodule is `missing_docs`-clean (enforced by the crate-level
+// `#![warn(missing_docs)]` and CI's `RUSTDOCFLAGS=-D warnings` gate).
 pub mod adaptive;
-#[allow(missing_docs)]
 pub mod analyzer;
-#[allow(missing_docs)]
 pub mod balancer;
-#[allow(missing_docs)]
 pub mod container;
 pub mod policy;
-#[allow(missing_docs)]
 pub mod pool;
 
 pub use adaptive::{AdaptiveBalancer, AdaptiveConfig};
@@ -152,6 +147,20 @@ pub trait Dispatcher {
     ) -> Option<(usize, ContainerId)> {
         let _ = (profile, now_us);
         None
+    }
+
+    // --- Churn hook (cluster extension) -------------------------------
+
+    /// The node failed: tear down every resident container (busy ones
+    /// included — the cluster driver separately retires their pending
+    /// completions) and return the functions of the *idle* (warm)
+    /// containers destroyed, so the driver can account the lost warm
+    /// state ([`crate::metrics::Counters::churn_evictions`]). The
+    /// dispatcher keeps its configuration (partition split, analyzer
+    /// state) — only container state dies with the node. Default: nothing
+    /// resident, nothing to do.
+    fn evict_all(&mut self) -> Vec<crate::trace::FunctionId> {
+        Vec::new()
     }
 
     // --- Online-controller hooks (cluster extension) ------------------

@@ -27,11 +27,17 @@ use crate::trace::{FunctionId, FunctionProfile};
 /// Result of [`WarmPool::try_acquire`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Acquire {
+    /// Warm hit: the MRU idle container of the function was reused.
     Hit(ContainerId),
+    /// Cold start: a new container was admitted (possibly after
+    /// evictions) and is busy serving the invocation.
     Cold(ContainerId),
+    /// Infeasible even after evicting every idle container: dropped.
     Drop,
 }
 
+/// A memory-bounded warm container pool with a pluggable replacement
+/// policy — see the module docs for the hit/cold/drop semantics.
 pub struct WarmPool {
     capacity_mb: u64,
     used_mb: u64,
@@ -47,6 +53,8 @@ pub struct WarmPool {
 }
 
 impl WarmPool {
+    /// An empty pool of `capacity_mb` running the given replacement
+    /// policy.
     pub fn new(capacity_mb: u64, policy: Box<dyn ReplacementPolicy>) -> Self {
         Self {
             capacity_mb,
@@ -60,18 +68,22 @@ impl WarmPool {
         }
     }
 
+    /// Configured capacity (MB).
     pub fn capacity_mb(&self) -> u64 {
         self.capacity_mb
     }
 
+    /// Resident memory (MB): idle + busy containers.
     pub fn used_mb(&self) -> u64 {
         self.used_mb
     }
 
+    /// Memory (MB) held by idle (warm, evictable) containers.
     pub fn idle_mb(&self) -> u64 {
         self.idle_mb
     }
 
+    /// Unoccupied capacity (MB).
     pub fn free_mb(&self) -> u64 {
         // Saturating: a live resize (set_capacity_mb) may leave the pool
         // transiently over-committed by busy containers.
@@ -99,18 +111,22 @@ impl WarmPool {
         evicted
     }
 
+    /// Number of resident containers (idle + busy).
     pub fn container_count(&self) -> usize {
         self.containers.len()
     }
 
+    /// Number of idle (warm) containers.
     pub fn idle_count(&self) -> usize {
         self.policy.len()
     }
 
+    /// Short name of the replacement policy (`lru`/`gd`/`freq`).
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Borrow a resident container by id, if present.
     pub fn container(&self, id: ContainerId) -> Option<&Container> {
         self.containers.get(&id)
     }
@@ -232,6 +248,30 @@ impl WarmPool {
         self.used_mb += needed;
         self.containers.insert(id, c);
         Some(id)
+    }
+
+    /// Tear down *every* resident container — the pool's node failed
+    /// (churn extension). Busy containers die too (the driver retires
+    /// their pending completions separately); the returned list holds the
+    /// functions of the idle (warm) containers destroyed, for
+    /// churn-eviction accounting. Unlike policy evictions this does not
+    /// count toward [`WarmPool::evictions`] — the node, not memory
+    /// pressure, killed the state. Capacity and policy configuration
+    /// survive for the node's eventual recovery.
+    pub fn drain_all(&mut self) -> Vec<FunctionId> {
+        // Empty the policy's idle index first so it cannot dangle.
+        while self.policy.pop_victim().is_some() {}
+        let idle_funcs = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle())
+            .map(|c| c.func)
+            .collect();
+        self.containers.clear();
+        self.idle_by_func.clear();
+        self.used_mb = 0;
+        self.idle_mb = 0;
+        idle_funcs
     }
 
     /// Extension: reap idle containers whose last use is older than
@@ -477,6 +517,25 @@ mod tests {
         assert!(!p.can_admit(60));
         assert_eq!(p.admit_warm(&a, 20), None);
         p.release(id, 30);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_all_wipes_idle_and_busy_state() {
+        let mut p = pool(200);
+        let f = profile(0, 40);
+        let g = profile(1, 60);
+        let Acquire::Cold(cf) = p.try_acquire(&f, 0) else { panic!() };
+        let Acquire::Cold(_) = p.try_acquire(&g, 1) else { panic!() };
+        p.release(cf, 10); // f idle, g still busy
+        let lost = p.drain_all();
+        assert_eq!(lost, vec![FunctionId(0)], "only idle warm state is reported");
+        assert_eq!(p.container_count(), 0);
+        assert_eq!(p.used_mb(), 0);
+        assert_eq!(p.idle_count(), 0);
+        assert_eq!(p.evictions, 0, "a node failure is not a policy eviction");
+        // The pool keeps working after the wipe (node recovery).
+        let Acquire::Cold(_) = p.try_acquire(&f, 20) else { panic!() };
         p.check_invariants().unwrap();
     }
 

@@ -24,10 +24,11 @@ pub mod workload;
 pub use common::{paper_workload, run_on, run_single, Series, Sweep, MEM_GRID_GB, SPLITS};
 
 /// All experiment names accepted by [`run_by_name`].
-pub const ALL_EXPERIMENTS: [&str; 19] = [
+pub const ALL_EXPERIMENTS: [&str; 21] = [
     "fig2", "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "fig14", "fig15", "fig16", "cluster-scale", "cluster-offload",
-    "cluster-hetero", "cluster-migration", "cluster-controller",
+    "cluster-hetero", "cluster-migration", "cluster-controller", "cluster-topology",
+    "cluster-churn",
 ];
 
 /// Run one experiment by its paper-figure name and render its output.
@@ -53,6 +54,8 @@ pub fn run_by_name(name: &str, stress_scale: f64) -> Option<String> {
         "cluster-hetero" => cluster::cluster_hetero_default().render(),
         "cluster-migration" => cluster::cluster_migration_default().render(),
         "cluster-controller" => cluster::cluster_controller_default().render(),
+        "cluster-topology" => cluster::cluster_topology_default().render(),
+        "cluster-churn" => cluster::cluster_churn_default().render(),
         "stress" => {
             let (k, b) = stress::stress(10, stress_scale, 2025);
             stress::render(&k, &b)

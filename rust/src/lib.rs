@@ -52,16 +52,30 @@
 //! controller** ([`sim::cluster::ControllerConfig`]) can reassign the
 //! size-affinity `small_nodes` boundary and live-resize per-node KiSS
 //! splits from observed pressure — the single-node adaptive logic
-//! generalized to the fleet. A one-node cluster reproduces
-//! [`sim::run_trace`] bit-for-bit, and disabling migration + controller
+//! generalized to the fleet.
+//!
+//! The fleet is networked and fallible: an inter-node **topology**
+//! ([`sim::cluster::Topology`]: flat, star, ring, or an explicit
+//! per-edge latency matrix) charges per-hop latency on every cross-node
+//! action (fallback retries, migrations, rescues), and a seeded **churn
+//! injector** ([`sim::cluster::ChurnConfig`]) takes nodes down and up
+//! deterministically — a failing node loses its warm pool
+//! ([`metrics::Counters::churn_evictions`]) and its in-flight work is
+//! retried through the same fallback/migration/offload path
+//! ([`metrics::RecordKind::NodeDown`] / [`metrics::RecordKind::NodeUp`]).
+//!
+//! A one-node cluster reproduces [`sim::run_trace`] bit-for-bit, and
+//! disabling migration + controller + churn on a flat topology
 //! reproduces the static cluster bit-for-bit. Configure via the
 //! `[cluster]` TOML section (`nodes`, `mem_mb`, `router`, `small_nodes`,
 //! `fallbacks`, `cloud_rtt_ms`, `policies`) and its `[cluster.migration]`
-//! / `[cluster.controller]` subsections, or `repro cluster` CLI flags;
-//! sweep via the `cluster-scale` / `cluster-offload` / `cluster-hetero` /
-//! `cluster-migration` / `cluster-controller` experiments and
-//! `benches/cluster_bench.rs`. See `docs/ARCHITECTURE.md` for the full
-//! event flow and schema.
+//! / `[cluster.controller]` / `[cluster.topology]` / `[cluster.churn]`
+//! subsections, or `repro cluster` CLI flags; sweep via the
+//! `cluster-scale` / `cluster-offload` / `cluster-hetero` /
+//! `cluster-migration` / `cluster-controller` / `cluster-topology` /
+//! `cluster-churn` experiments and `benches/cluster_bench.rs`. See
+//! `docs/ARCHITECTURE.md` for the full event flow and schema, and
+//! `docs/EXPERIMENTS.md` for the experiment catalog.
 //!
 //! ## Quick start
 //!
@@ -89,7 +103,7 @@
 // Public-API documentation is enforced (`missing_docs`) module by
 // module; the modules below with an `allow` predate the lint and will be
 // brought into scope in follow-up documentation passes. `sim`, `config`,
-// `metrics`, and `coordinator::policy` are fully documented.
+// `metrics`, `trace`, and all of `coordinator` are fully documented.
 #[allow(missing_docs)]
 pub mod analysis;
 #[allow(missing_docs)]
@@ -104,7 +118,6 @@ pub mod runtime;
 #[allow(missing_docs)]
 pub mod serve;
 pub mod sim;
-#[allow(missing_docs)]
 pub mod trace;
 #[allow(missing_docs)]
 pub mod util;

@@ -6,7 +6,9 @@
 //!                [--policy lru|gd|freq] [--seed N]
 //! repro cluster  [--config FILE] [--nodes N] [--router R] [--small-nodes N]
 //!                [--fallbacks N] [--cloud-rtt-ms F] [--mem-gb N]
-//!                [--migration-cost-ms F] [--controller-epoch-s N] [--sweep]
+//!                [--migration-cost-ms F] [--controller-epoch-s N]
+//!                [--topology flat|star|ring] [--hop-ms F]
+//!                [--churn-rate F] [--sweep]
 //! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
@@ -27,7 +29,7 @@ use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::experiments::{self, run_single};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
-use kiss_faas::sim::cluster::{run_cluster, MigrationPolicy, RouterKind};
+use kiss_faas::sim::cluster::{run_cluster, MigrationPolicy, RouterKind, Topology};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
 
@@ -69,7 +71,7 @@ fn print_usage() {
         "kiss-faas repro — KiSS: Keep it Separated Serverless (paper reproduction)\n\n\
          USAGE:\n  repro experiment <fig2..fig16|cluster-*|stress|all> [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
-         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--sweep]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -217,6 +219,8 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         println!("{}", experiments::cluster::cluster_hetero(&synth).render());
         println!("{}", experiments::cluster::cluster_migration(&synth).render());
         println!("{}", experiments::cluster::cluster_controller(&synth).render());
+        println!("{}", experiments::cluster::cluster_topology(&synth).render());
+        println!("{}", experiments::cluster::cluster_churn(&synth).render());
         return Ok(());
     }
 
@@ -255,6 +259,30 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         let mut ctl = cc.controller.unwrap_or_default();
         ctl.epoch_us = s * 1_000_000;
         cc.controller = Some(ctl);
+    }
+    if let Some(name) = flags.get("topology") {
+        let hop_ms: f64 = flags.get_parsed::<f64>("hop-ms")?.unwrap_or(1.0);
+        if hop_ms < 0.0 {
+            bail!("--hop-ms must be >= 0");
+        }
+        cc.topology = Topology::parse(name, (hop_ms * 1000.0).round() as u64).ok_or_else(
+            || anyhow!("bad --topology {name:?} (flat|star|ring; matrix only via TOML)"),
+        )?;
+    } else if flags.has("hop-ms") {
+        bail!("--hop-ms requires --topology star|ring");
+    }
+    if let Some(rate) = flags.get_parsed::<f64>("churn-rate")? {
+        // Mean node failures per virtual hour; 0 disables churn.
+        if rate < 0.0 {
+            bail!("--churn-rate must be >= 0");
+        }
+        if rate == 0.0 {
+            cc.churn = None;
+        } else {
+            let mut churn = cc.churn.unwrap_or_default();
+            churn.mean_up_us = (3_600_000_000.0 / rate).round().max(1.0) as u64;
+            cc.churn = Some(churn);
+        }
     }
     cfg.cluster = Some(cc);
     cfg.validate()?;
@@ -311,6 +339,18 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
             r.small_node_moves,
             r.resplits,
             r.router.label()
+        );
+    }
+    if cfg.cluster.as_ref().is_some_and(|c| c.churn.is_some()) {
+        let live = r.live.iter().filter(|&&l| l).count();
+        println!(
+            "\nchurn: {} node downs / {} ups ({live}/{} live at end), \
+             {} warm containers lost, {} in-flight invocations rerouted",
+            r.report.node_downs,
+            r.report.node_ups,
+            r.live.len(),
+            r.report.overall.churn_evictions,
+            r.churn_reroutes
         );
     }
     Ok(())

@@ -15,6 +15,16 @@
 //! ([`RecordKind::Migrate`] carries the donor/recipient node ids).
 //! Single-node simulations never offload or migrate, so every pre-cluster
 //! metric is bit-for-bit unchanged.
+//!
+//! The churn extension adds node lifecycle events
+//! ([`RecordKind::NodeDown`] / [`RecordKind::NodeUp`], counted at the
+//! [`Report`] level — they carry no size class) and
+//! [`Counters::churn_evictions`]: warm (idle) containers destroyed when
+//! their node failed. A killed *in-flight* invocation is instead retried
+//! through the normal placement path and recorded again by whatever
+//! outcome the retry reaches, so under churn `total_accesses` counts
+//! retries on top of the trace's arrivals. With churn disabled every one
+//! of these stays zero and all prior metrics are bit-for-bit unchanged.
 
 use crate::trace::SizeClass;
 
@@ -34,6 +44,11 @@ pub struct Counters {
     /// warm-container migration (cluster extension). Zero on a single
     /// node and whenever migration is disabled.
     pub migrations: u64,
+    /// Warm (idle) containers destroyed because their node failed (churn
+    /// extension). Not an access — this tracks lost warm state, the
+    /// reason a recovering workload pays fresh cold starts. Zero whenever
+    /// churn is disabled.
+    pub churn_evictions: u64,
     /// Cumulative execution time (µs) of serviced invocations, excluding
     /// startup.
     pub exec_us: u64,
@@ -97,6 +112,7 @@ impl Counters {
         self.drops += other.drops;
         self.offloads += other.offloads;
         self.migrations += other.migrations;
+        self.churn_evictions += other.churn_evictions;
         self.exec_us += other.exec_us;
         self.startup_us += other.startup_us;
     }
@@ -119,6 +135,11 @@ pub struct Report {
     pub small: Counters,
     /// The large-container slice (at or above the KiSS size threshold).
     pub large: Counters,
+    /// Node failures observed ([`RecordKind::NodeDown`]). Lifecycle
+    /// events carry no size class, so they live at the report level.
+    pub node_downs: u64,
+    /// Node recoveries observed ([`RecordKind::NodeUp`]).
+    pub node_ups: u64,
 }
 
 impl Report {
@@ -141,6 +162,12 @@ impl Report {
         exec_us: u64,
         startup_us: u64,
     ) {
+        if matches!(kind, RecordKind::NodeDown { .. } | RecordKind::NodeUp { .. }) {
+            // Node lifecycle events have no class; record_node_event is
+            // the right entry point. Tolerate in release, flag in debug.
+            debug_assert!(false, "node events go through record_node_event");
+            return self.record_node_event(kind);
+        }
         for c in [&mut self.overall, match class {
             SizeClass::Small => &mut self.small,
             SizeClass::Large => &mut self.large,
@@ -151,11 +178,35 @@ impl Report {
                 RecordKind::Drop => c.drops += 1,
                 RecordKind::Offload => c.offloads += 1,
                 RecordKind::Migrate { .. } => c.migrations += 1,
+                RecordKind::NodeDown { .. } | RecordKind::NodeUp { .. } => {
+                    unreachable!("handled above")
+                }
             }
             if kind != RecordKind::Drop {
                 c.exec_us += exec_us;
                 c.startup_us += startup_us;
             }
+        }
+    }
+
+    /// Record one node lifecycle event ([`RecordKind::NodeDown`] /
+    /// [`RecordKind::NodeUp`]); other kinds are rejected in debug builds
+    /// and ignored in release.
+    pub fn record_node_event(&mut self, kind: RecordKind) {
+        match kind {
+            RecordKind::NodeDown { .. } => self.node_downs += 1,
+            RecordKind::NodeUp { .. } => self.node_ups += 1,
+            other => debug_assert!(false, "not a node event: {other:?}"),
+        }
+    }
+
+    /// Record one warm container destroyed by a node failure, in the
+    /// overall and per-class slices (churn extension).
+    pub fn record_churn_eviction(&mut self, class: SizeClass) {
+        self.overall.churn_evictions += 1;
+        match class {
+            SizeClass::Small => self.small.churn_evictions += 1,
+            SizeClass::Large => self.large.churn_evictions += 1,
         }
     }
 
@@ -183,12 +234,26 @@ pub enum RecordKind {
     /// Served warm on `recipient` after pulling an idle container of the
     /// same function from `donor` (cross-node warm-container migration,
     /// cluster extension). `startup_us` carries the warm dispatch plus
-    /// the configured migration cost.
+    /// the configured migration cost (and, with a non-flat topology, the
+    /// donor→recipient hop latency).
     Migrate {
         /// Node index the idle warm container was taken from.
         donor: usize,
         /// Node index that admitted the container and served the request.
         recipient: usize,
+    },
+    /// A node failed (churn extension): its warm pool is evicted and its
+    /// in-flight invocations are retried elsewhere. Counted at the
+    /// [`Report`] level via [`Report::record_node_event`].
+    NodeDown {
+        /// Index of the failed node.
+        node: usize,
+    },
+    /// A previously failed node rejoined the fleet with a cold, empty
+    /// warm pool (churn extension).
+    NodeUp {
+        /// Index of the recovered node.
+        node: usize,
     },
 }
 
@@ -283,6 +348,26 @@ mod tests {
         r.record(SizeClass::Small, RecordKind::Migrate { donor: 1, recipient: 0 }, 10, 10);
         r.record(SizeClass::Small, RecordKind::Hit, 10, 10);
         assert!((r.overall.failure_pct() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_events_and_churn_evictions() {
+        let mut r = Report::default();
+        r.record_node_event(RecordKind::NodeDown { node: 2 });
+        r.record_node_event(RecordKind::NodeUp { node: 2 });
+        r.record_node_event(RecordKind::NodeDown { node: 0 });
+        assert_eq!(r.node_downs, 2);
+        assert_eq!(r.node_ups, 1);
+        r.record_churn_eviction(SizeClass::Small);
+        r.record_churn_eviction(SizeClass::Large);
+        r.record_churn_eviction(SizeClass::Large);
+        assert!(r.is_consistent());
+        assert_eq!(r.overall.churn_evictions, 3);
+        assert_eq!(r.small.churn_evictions, 1);
+        assert_eq!(r.large.churn_evictions, 2);
+        // Lost warm state is not an access and not a failure.
+        assert_eq!(r.overall.total_accesses(), 0);
+        assert_eq!(r.overall.failure_pct(), 0.0);
     }
 
     #[test]

@@ -41,10 +41,27 @@
 //!   and reassigns the size-affinity `small_nodes` boundary and each
 //!   KiSS node's small/large split online, generalizing the single-node
 //!   [`crate::coordinator::adaptive`] hill-climbing logic to the fleet.
+//! * **Network topology** ([`Topology`]) — the fleet is no longer a flat
+//!   LAN: star, ring, and explicit per-edge latency matrices charge a
+//!   per-hop cost on every *cross-node* action — fallback retries,
+//!   warm-container migrations (added to the transfer cost), and rescue
+//!   redirections. Each function has a fixed *arrival node* (its home
+//!   gateway, `fxhash(function) % nodes`); the least-loaded routers break
+//!   exact load ties by hop distance from it, and the sticky router's
+//!   home node *is* it. Edge-serverless latency work (LaSS) shows
+//!   inter-node distance dominating edge behaviour — this models it.
+//! * **Churn injection** ([`ChurnConfig`]) — seeded, deterministic node
+//!   down/up events over virtual time. A failing node loses its warm
+//!   pool ([`Counters::churn_evictions`](crate::metrics::Counters)), its
+//!   in-flight invocations are retried through the normal
+//!   fallback/migration/offload path, and routers + controller only ever
+//!   consider live nodes. Recorded as [`RecordKind::NodeDown`] /
+//!   [`RecordKind::NodeUp`].
 //!
-//! With migration and the controller disabled (`None`, the default),
-//! every code path is identical to the static cluster: results are
-//! bit-for-bit unchanged (locked by `tests/integration_cluster.rs`).
+//! With migration, controller, and churn disabled and a flat topology
+//! (all the defaults), every code path is identical to the static
+//! cluster: results are bit-for-bit unchanged (locked by
+//! `tests/integration_cluster.rs`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -55,8 +72,9 @@ use crate::coordinator::{
     AdaptiveBalancer, AdaptiveConfig, Balancer, ContainerId, Dispatcher, Outcome,
 };
 use crate::metrics::{RecordKind, Report};
-use crate::trace::{FunctionProfile, Invocation, SizeClass, Trace};
+use crate::trace::{FunctionId, FunctionProfile, Invocation, SizeClass, Trace};
 use crate::util::fxhash::FxHasher;
+use crate::util::rng::Pcg64;
 
 use super::InitOccupancy;
 
@@ -214,6 +232,224 @@ pub struct CloudTier {
     pub rtt_us: u64,
 }
 
+/// Inter-node network topology of the edge fleet (`[cluster.topology]`):
+/// where the per-hop latency of cross-node actions comes from.
+///
+/// The latency is charged on every *cross-node* action — a fallback
+/// retry (primary → fallback), a warm-container migration (donor →
+/// recipient, added to the transfer cost), and a rescue redirection
+/// (primary → holder). [`Topology::Flat`] is the pre-topology model:
+/// zero latency everywhere, bit-for-bit identical to the historical
+/// cluster.
+///
+/// ```no_run
+/// // (no_run: doctest binaries miss the libstdc++ rpath in this image —
+/// // see util::prop; the same math executes in this module's tests)
+/// use kiss_faas::sim::cluster::Topology;
+///
+/// let n = 8; // fleet size
+/// assert_eq!(Topology::Flat.latency_us(0, 5, n), 0);
+/// // Star: every pair relays through the hub (node 0).
+/// let star = Topology::Star { hop_us: 2_000 };
+/// assert_eq!(star.latency_us(0, 5, n), 2_000); // hub is an endpoint
+/// assert_eq!(star.latency_us(3, 5, n), 4_000); // via the hub: 2 hops
+/// // Ring: shortest way around.
+/// let ring = Topology::Ring { hop_us: 2_000 };
+/// assert_eq!(ring.latency_us(0, 3, n), 6_000); // 3 hops forward
+/// assert_eq!(ring.latency_us(0, 6, n), 4_000); // 2 hops backward
+/// // Matrix: explicit per-edge latencies (µs), row-major by node index.
+/// let m = Topology::Matrix {
+///     lat_us: vec![vec![0, 500], vec![500, 0]],
+/// };
+/// assert_eq!(m.latency_us(1, 0, 2), 500);
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Zero-cost interconnect (the historical model; the default).
+    Flat,
+    /// Hub-and-spoke: node 0 is the hub; any other pair relays through
+    /// it (2 hops), pairs touching the hub pay 1.
+    Star {
+        /// Per-hop latency (µs).
+        hop_us: u64,
+    },
+    /// Nodes on a cycle in index order; latency is the shorter way
+    /// around.
+    Ring {
+        /// Per-hop latency (µs).
+        hop_us: u64,
+    },
+    /// Explicit per-edge latency matrix (µs): `lat_us[a][b]` is the cost
+    /// of forwarding from node `a` to node `b`. Must be square with a
+    /// zero diagonal ([`Topology::validate`]).
+    Matrix {
+        /// Per-edge latencies (µs), indexed `[from][to]`.
+        lat_us: Vec<Vec<u64>>,
+    },
+}
+
+impl Topology {
+    /// Forwarding latency (µs) from node `a` to node `b` in a fleet of
+    /// `n` nodes. Zero when `a == b` for every topology.
+    ///
+    /// The fabric is a static *price list*, not a simulated link layer:
+    /// latencies do not change when intermediate nodes churn (a star's
+    /// spoke↔spoke path keeps its 2-hop cost even while the hub is
+    /// down — model hub criticality with a `Matrix` if the distinction
+    /// matters).
+    pub fn latency_us(&self, a: usize, b: usize, n: usize) -> u64 {
+        if a == b {
+            return 0;
+        }
+        match self {
+            Topology::Flat => 0,
+            Topology::Star { hop_us } => {
+                if a == 0 || b == 0 {
+                    *hop_us
+                } else {
+                    2 * *hop_us
+                }
+            }
+            Topology::Ring { hop_us } => {
+                let d = a.abs_diff(b);
+                d.min(n - d) as u64 * *hop_us
+            }
+            Topology::Matrix { lat_us } => lat_us[a][b],
+        }
+    }
+
+    /// Short name of the topology (`flat`/`star`/`ring`/`matrix`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Star { .. } => "star",
+            Topology::Ring { .. } => "ring",
+            Topology::Matrix { .. } => "matrix",
+        }
+    }
+
+    /// Parse a topology name; `hop_us` parameterizes star/ring (and is
+    /// ignored for flat). Matrix topologies carry data and are built via
+    /// [`Topology::from_row_major`] / TOML instead.
+    pub fn parse(s: &str, hop_us: u64) -> Option<Self> {
+        match s {
+            "flat" => Some(Topology::Flat),
+            "star" => Some(Topology::Star { hop_us }),
+            "ring" => Some(Topology::Ring { hop_us }),
+            _ => None,
+        }
+    }
+
+    /// Build a [`Topology::Matrix`] from a row-major flat latency list
+    /// (µs) — the `[cluster.topology] lat_ms` TOML encoding, which
+    /// cannot nest arrays. The length must be a perfect square.
+    pub fn from_row_major(flat_us: Vec<u64>) -> Result<Self, String> {
+        let n = (flat_us.len() as f64).sqrt().round() as usize;
+        if n * n != flat_us.len() || n == 0 {
+            return Err(format!(
+                "matrix needs n*n entries for an n-node fleet, got {}",
+                flat_us.len()
+            ));
+        }
+        let lat_us = flat_us.chunks(n).map(|row| row.to_vec()).collect();
+        Ok(Topology::Matrix { lat_us })
+    }
+
+    /// Reject a topology that cannot describe an `n`-node fleet: a
+    /// matrix must be `n`×`n` with a zero diagonal (a node reaches
+    /// itself for free). Flat/star/ring fit any fleet.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if let Topology::Matrix { lat_us } = self {
+            if lat_us.len() != n {
+                return Err(format!("matrix has {} rows for {} nodes", lat_us.len(), n));
+            }
+            for (i, row) in lat_us.iter().enumerate() {
+                if row.len() != n {
+                    return Err(format!("matrix row {i} has {} entries for {n} nodes", row.len()));
+                }
+                if row[i] != 0 {
+                    return Err(format!("matrix diagonal [{i}][{i}] must be 0, got {}", row[i]));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Node churn injection (`[cluster.churn]`): seeded, deterministic
+/// down/up events over virtual time. Each node alternates between live
+/// dwells (exponential, mean `mean_up_us`) and outages (exponential,
+/// mean `mean_down_us`); the whole schedule is a pure function of
+/// `(seed, node count)`, so churn runs replay exactly.
+///
+/// When a node goes down it loses every resident container: idle warm
+/// state is destroyed (counted as
+/// [`Counters::churn_evictions`](crate::metrics::Counters)) and
+/// in-flight invocations are retried at the failure instant through the
+/// normal placement path (fallbacks, migration, offload) on the
+/// surviving nodes. A recovered node rejoins with an empty, cold pool
+/// but keeps its configuration (partition split, policies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnConfig {
+    /// Seed of the churn schedule (independent of the trace seed).
+    pub seed: u64,
+    /// Mean live dwell between failures (µs).
+    pub mean_up_us: u64,
+    /// Mean outage duration (µs).
+    pub mean_down_us: u64,
+}
+
+impl Default for ChurnConfig {
+    /// One failure per node per 10 virtual minutes, 30 s outages —
+    /// aggressive enough that a 30-minute sweep sees real churn.
+    fn default() -> Self {
+        Self { seed: 1, mean_up_us: 600_000_000, mean_down_us: 30_000_000 }
+    }
+}
+
+/// Exponential dwell with the given mean, floored at 1 µs so schedules
+/// always advance.
+fn dwell_us(rng: &mut Pcg64, mean_us: u64) -> u64 {
+    rng.exponential(1.0 / mean_us as f64).max(1.0) as u64
+}
+
+/// The running churn schedule: per-node RNG streams plus a queue of
+/// pending toggles, generated lazily so it works for any trace length.
+struct ChurnInjector {
+    cfg: ChurnConfig,
+    rngs: Vec<Pcg64>,
+    /// Pending toggles as `(virtual time, node)`; the node's current
+    /// live flag decides the direction.
+    queue: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl ChurnInjector {
+    fn new(cfg: ChurnConfig, n: usize) -> Self {
+        let mut root = Pcg64::new(cfg.seed);
+        let mut rngs: Vec<Pcg64> = (0..n).map(|i| root.fork(i as u64 + 1)).collect();
+        let mut queue = BinaryHeap::new();
+        for (i, rng) in rngs.iter_mut().enumerate() {
+            queue.push(Reverse((dwell_us(rng, cfg.mean_up_us), i)));
+        }
+        Self { cfg, rngs, queue }
+    }
+
+    /// The earliest pending toggle at or before `t`, if any.
+    fn peek_due(&self, t: u64) -> Option<(u64, usize)> {
+        self.queue.peek().map(|Reverse(x)| *x).filter(|&(tc, _)| tc <= t)
+    }
+
+    /// Consume the earliest toggle and schedule the node's next one:
+    /// a node going down comes back after a `mean_down_us` dwell, a node
+    /// coming up fails again after a `mean_up_us` dwell.
+    fn pop_and_reschedule(&mut self, going_down: bool) {
+        let Reverse((t, node)) = self.queue.pop().expect("peeked before pop");
+        let mean = if going_down { self.cfg.mean_down_us } else { self.cfg.mean_up_us };
+        let next = t.saturating_add(dwell_us(&mut self.rngs[node], mean));
+        self.queue.push(Reverse((next, node)));
+    }
+}
+
 /// Cross-node warm-container migration (`[cluster.migration]`).
 ///
 /// When the fallback scan fails (the invocation would offload or drop),
@@ -307,11 +543,16 @@ pub struct ClusterSpec {
     pub migration: Option<MigrationPolicy>,
     /// Online controller; `None` = disabled (the static cluster).
     pub controller: Option<ControllerConfig>,
+    /// Inter-node network topology; [`Topology::Flat`] = the zero-cost
+    /// interconnect (the historical model).
+    pub topology: Topology,
+    /// Node churn injection; `None` = nodes never fail.
+    pub churn: Option<ChurnConfig>,
 }
 
 impl ClusterSpec {
     /// N identical nodes of `mem_mb` each, round-robin, one fallback, no
-    /// cloud tier, migration and controller disabled.
+    /// cloud tier, migration/controller/churn disabled, flat topology.
     pub fn homogeneous(n: usize, mem_mb: u64, policy: NodePolicy) -> Self {
         Self {
             nodes: vec![NodeSpec { mem_mb, policy }; n],
@@ -321,6 +562,8 @@ impl ClusterSpec {
             init_occupancy: InitOccupancy::default(),
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         }
     }
 
@@ -360,6 +603,18 @@ impl ClusterSpec {
         self
     }
 
+    /// Replace the inter-node topology.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Enable node churn injection.
+    pub fn with_churn(mut self, cfg: ChurnConfig) -> Self {
+        self.churn = Some(cfg);
+        self
+    }
+
     /// Total fleet memory (MB).
     pub fn total_mem_mb(&self) -> u64 {
         self.nodes.iter().map(|n| n.mem_mb).sum()
@@ -392,7 +647,9 @@ pub enum ClusterOutcome {
 
 /// One pending completion; ordered by (end time, dispatch sequence) so
 /// simultaneous completions across *different nodes* release in dispatch
-/// order — the same tie-break the single-node engine uses.
+/// order — the same tie-break the single-node engine uses. Carries the
+/// invocation identity so a node failure can retry its killed in-flight
+/// work through the normal placement path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 struct Completion {
     end_us: u64,
@@ -400,6 +657,8 @@ struct Completion {
     node: usize,
     pool: usize,
     container: ContainerId,
+    func: FunctionId,
+    exec_us: u64,
 }
 
 /// Per-epoch observation window for the online controller. Class index:
@@ -466,6 +725,10 @@ pub struct Cluster {
     init_occupancy: InitOccupancy,
     migration: Option<MigrationPolicy>,
     controller: Option<ControllerConfig>,
+    topology: Topology,
+    churn: Option<ChurnInjector>,
+    /// Per-node liveness; always all-true without churn/injection.
+    live: Vec<bool>,
     window: ControllerWindow,
     next_epoch_us: u64,
     completions: BinaryHeap<Reverse<Completion>>,
@@ -489,15 +752,28 @@ pub struct Cluster {
     pub small_node_moves: u64,
     /// Controller decisions that live-resized a node's KiSS split.
     pub resplits: u64,
+    /// In-flight invocations killed by a node failure and retried
+    /// through the placement path (churn extension).
+    pub churn_reroutes: u64,
 }
 
 impl Cluster {
-    /// Build a cluster from its spec. Panics on an empty fleet or an
-    /// invalid controller config (the TOML path validates these in
-    /// [`crate::config::SimConfig::validate`]; programmatic specs are
-    /// checked here so a bad clamp fails at construction, not mid-run).
+    /// Build a cluster from its spec. Panics on an empty fleet, an
+    /// invalid controller config, a topology that does not fit the
+    /// fleet, or degenerate churn dwells (the TOML path validates these
+    /// in [`crate::config::SimConfig::validate`]; programmatic specs are
+    /// checked here so a bad spec fails at construction, not mid-run).
     pub fn new(spec: &ClusterSpec) -> Self {
         assert!(!spec.nodes.is_empty(), "cluster needs at least one node");
+        if let Err(e) = spec.topology.validate(spec.nodes.len()) {
+            panic!("invalid cluster topology: {e}");
+        }
+        if let Some(churn) = &spec.churn {
+            assert!(
+                churn.mean_up_us > 0 && churn.mean_down_us > 0,
+                "churn dwell means must be > 0"
+            );
+        }
         if let Some(ctl) = &spec.controller {
             assert!(ctl.epoch_us > 0, "controller epoch must be > 0");
             assert!(
@@ -527,6 +803,9 @@ impl Cluster {
             init_occupancy: spec.init_occupancy,
             migration: spec.migration,
             controller: spec.controller,
+            topology: spec.topology.clone(),
+            churn: spec.churn.map(|c| ChurnInjector::new(c, count)),
+            live: vec![true; count],
             window: ControllerWindow::new(count),
             next_epoch_us: spec.controller.map_or(u64::MAX, |c| c.epoch_us),
             completions: BinaryHeap::new(),
@@ -540,6 +819,7 @@ impl Cluster {
             rescues: 0,
             small_node_moves: 0,
             resplits: 0,
+            churn_reroutes: 0,
         }
     }
 
@@ -564,6 +844,12 @@ impl Cluster {
         self.router
     }
 
+    /// Whether node `idx` is currently live (churn extension; always
+    /// true without churn or injected failures).
+    pub fn is_live(&self, idx: usize) -> bool {
+        self.live[idx]
+    }
+
     /// Apply all completions due at or before `t`, cluster-wide.
     fn drain_completions(&mut self, t: u64) {
         while let Some(Reverse(c)) = self.completions.peek().copied() {
@@ -585,32 +871,73 @@ impl Cluster {
         (used_a as u128) * (self.caps[b] as u128) < (used_b as u128) * (self.caps[a] as u128)
     }
 
-    /// Least-loaded node in `[lo, hi)` by used/capacity fraction;
-    /// deterministic (strict improvement only, so ties keep the lowest
-    /// index). Allocation-free: uses [`Dispatcher::used_mb`].
-    fn least_loaded(&self, lo: usize, hi: usize) -> usize {
-        let mut best = lo;
-        let mut best_used = self.nodes[lo].used_mb();
-        for i in (lo + 1)..hi {
-            let used = self.nodes[i].used_mb();
-            if self.frac_less(i, used, best, best_used) {
-                best = i;
-                best_used = used;
-            }
-        }
-        best
+    /// Whether nodes `a` and `b` carry *exactly* equal used/capacity
+    /// fractions (same cross-multiplication as [`Cluster::frac_less`]) —
+    /// the tie the topology distance then breaks.
+    fn frac_eq(&self, a: usize, used_a: u64, b: usize, used_b: u64) -> bool {
+        (used_a as u128) * (self.caps[b] as u128) == (used_b as u128) * (self.caps[a] as u128)
     }
 
-    /// Primary node for `profile` under the configured router.
-    fn route(&mut self, profile: &FunctionProfile) -> usize {
+    /// Home/ingress node of `profile`'s function — the edge gateway its
+    /// devices connect to, `fxhash(function id) % nodes`. This is the
+    /// sticky router's target and the reference point for topology
+    /// tie-breaks (an invocation prefers warm capacity *near* where it
+    /// entered the fleet).
+    fn arrival_node(&self, profile: &FunctionProfile) -> usize {
+        let mut h = FxHasher::default();
+        h.write_u32(profile.id.0);
+        (h.finish() % self.nodes.len() as u64) as usize
+    }
+
+    /// Least-loaded *live* node in `[lo, hi)` by used/capacity fraction;
+    /// deterministic. Strict load improvement wins; exact load ties go
+    /// to the node closer (by topology latency) to `arrival`, then to
+    /// the lowest index. Under a flat topology every distance is 0, so
+    /// the selection reduces to the historical lowest-index tie-break.
+    /// Allocation-free: uses [`Dispatcher::used_mb`]. Returns `None`
+    /// when no node in the range is live.
+    fn least_loaded_live(&self, lo: usize, hi: usize, arrival: usize) -> Option<usize> {
         let n = self.nodes.len();
+        let mut best: Option<(usize, u64)> = None;
+        for i in lo..hi {
+            if !self.live[i] {
+                continue;
+            }
+            let used = self.nodes[i].used_mb();
+            let better = match best {
+                None => true,
+                Some((b, b_used)) => {
+                    self.frac_less(i, used, b, b_used)
+                        || (self.frac_eq(i, used, b, b_used)
+                            && self.topology.latency_us(arrival, i, n)
+                                < self.topology.latency_us(arrival, b, n))
+                }
+            };
+            if better {
+                best = Some((i, used));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Primary node for `profile` under the configured router,
+    /// considering only live nodes. `None` when the whole fleet is down
+    /// (the caller then offloads or drops).
+    fn route(&mut self, profile: &FunctionProfile) -> Option<usize> {
+        let n = self.nodes.len();
+        let arrival = self.arrival_node(profile);
         match self.router {
             RouterKind::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % n;
-                i
+                for _ in 0..n {
+                    let i = self.rr_next;
+                    self.rr_next = (self.rr_next + 1) % n;
+                    if self.live[i] {
+                        return Some(i);
+                    }
+                }
+                None
             }
-            RouterKind::LeastLoaded => self.least_loaded(0, n),
+            RouterKind::LeastLoaded => self.least_loaded_live(0, n, arrival),
             RouterKind::SizeAffinity { small_nodes } => {
                 let k = small_nodes.min(n);
                 let (lo, hi) = match profile.class {
@@ -619,17 +946,44 @@ impl Cluster {
                     // Degenerate split: the set would be empty, use all.
                     _ => (0, n),
                 };
-                self.least_loaded(lo, hi)
+                // A class set that is entirely down falls back to any
+                // live node (better a far placement than a failure).
+                self.least_loaded_live(lo, hi, arrival)
+                    .or_else(|| self.least_loaded_live(0, n, arrival))
             }
             RouterKind::Sticky => {
-                let mut h = FxHasher::default();
-                h.write_u32(profile.id.0);
-                (h.finish() % n as u64) as usize
+                if self.live[arrival] {
+                    return Some(arrival);
+                }
+                // Home gateway down: nearest live node by hop latency,
+                // ties to the lowest index.
+                let mut best: Option<(u64, usize)> = None;
+                for i in 0..n {
+                    if !self.live[i] {
+                        continue;
+                    }
+                    let d = self.topology.latency_us(arrival, i, n);
+                    let closer = match best {
+                        None => true,
+                        Some((bd, _)) => d < bd,
+                    };
+                    if closer {
+                        best = Some((d, i));
+                    }
+                }
+                best.map(|(_, i)| i)
             }
         }
     }
 
-    fn push_completion(&mut self, end_us: u64, node: usize, pool: usize, container: ContainerId) {
+    fn push_completion(
+        &mut self,
+        end_us: u64,
+        node: usize,
+        pool: usize,
+        container: ContainerId,
+        ev: Invocation,
+    ) {
         self.seq += 1;
         self.completions.push(Reverse(Completion {
             end_us,
@@ -637,6 +991,8 @@ impl Cluster {
             node,
             pool,
             container,
+            func: ev.func,
+            exec_us: ev.exec_us,
         }));
     }
 
@@ -665,15 +1021,26 @@ impl Cluster {
         // 1. Move the size-affinity boundary toward the class with the
         //    higher placement-failure rate (clamped so neither set
         //    empties). Mirrors the adaptive balancer's 1.5×-skew +
-        //    1%-absolute-floor decision rule.
+        //    1%-absolute-floor decision rule. The node changing sides
+        //    must be live: the controller never hands a class boundary
+        //    to a down node (it would re-learn the move on recovery
+        //    from a stale signal instead of real pressure).
         if cfg.reassign_small_nodes {
             if let RouterKind::SizeAffinity { small_nodes } = self.router {
                 let n = self.nodes.len();
                 let fs = rate(self.window.class_failures[0], self.window.class_arrivals[0]);
                 let fl = rate(self.window.class_failures[1], self.window.class_arrivals[1]);
-                let new_k = if fs > fl * 1.5 && fs > 0.01 && small_nodes + 1 < n {
+                let new_k = if fs > fl * 1.5
+                    && fs > 0.01
+                    && small_nodes + 1 < n
+                    && self.live[small_nodes]
+                {
                     small_nodes + 1
-                } else if fl > fs * 1.5 && fl > 0.01 && small_nodes > 1 {
+                } else if fl > fs * 1.5
+                    && fl > 0.01
+                    && small_nodes > 1
+                    && self.live[small_nodes - 1]
+                {
                     small_nodes - 1
                 } else {
                     small_nodes
@@ -686,10 +1053,15 @@ impl Cluster {
         }
 
         // 2. Shift each resizable node's KiSS split toward its locally
-        //    pressured class. Baseline nodes (`small_frac` = None) and
-        //    adaptive nodes (self-managing) are skipped.
+        //    pressured class. Baseline nodes (`small_frac` = None),
+        //    adaptive nodes (self-managing), and down nodes (their
+        //    window is stale and a resize would act on a dead pool) are
+        //    skipped.
         if cfg.resplit_nodes {
             for i in 0..self.nodes.len() {
+                if !self.live[i] {
+                    continue;
+                }
                 let Some(cur) = self.nodes[i].small_frac() else { continue };
                 let d = self.window.node_drops[i];
                 let a = self.window.node_dispatches[i];
@@ -720,30 +1092,36 @@ impl Cluster {
     }
 
     /// The warm-state rescue path, tried when the fallback scan failed.
-    /// Finds the least-loaded *holder* (a node with an idle warm
+    /// Finds the least-loaded live *holder* (a node with an idle warm
     /// container of `profile`'s function — always outside the tried set,
     /// since a tried holder would have served a Hit) and the least-loaded
-    /// admissible *non-holder*. If the non-holder is strictly less loaded
-    /// it pays `cost_us` to migrate the container there; otherwise it
-    /// serves the invocation on the holder for free (a rescue hit — never
-    /// pay to move warm state toward a hotter node, and never evict a
-    /// local warm copy to admit a transferred one). Returns `None` when
+    /// admissible live *non-holder*. If the non-holder is strictly less
+    /// loaded it pays the transfer cost — plus the donor→recipient hop
+    /// latency under a non-flat topology — to migrate the container
+    /// there; otherwise it serves the invocation on the holder (a rescue
+    /// hit, free except the primary→holder hop latency — never pay to
+    /// move warm state toward a hotter node, and never evict a local
+    /// warm copy to admit a transferred one). Returns `None` when
     /// migration is disabled or no warm state exists anywhere (the caller
     /// then offloads or drops as before).
     fn try_migrate(
         &mut self,
         profile: &FunctionProfile,
         ev: Invocation,
+        primary: Option<usize>,
     ) -> Option<ClusterOutcome> {
-        let cost_us = self.migration?.cost_us;
+        let base_cost_us = self.migration?.cost_us;
         let n = self.nodes.len();
         let class = class_idx(profile.class);
-        // One scan, two argmins (strict improvement, ties to the lowest
-        // index): least-loaded holder and least-loaded admissible
-        // non-holder.
+        // One scan over the live fleet, two argmins (strict improvement,
+        // ties to the lowest index): least-loaded holder and
+        // least-loaded admissible non-holder.
         let mut holder: Option<(usize, u64)> = None;
         let mut target: Option<(usize, u64)> = None;
         for i in 0..n {
+            if !self.live[i] {
+                continue;
+            }
             let used = self.nodes[i].used_mb();
             let slot = if self.nodes[i].has_idle(profile) {
                 &mut holder
@@ -761,6 +1139,8 @@ impl Cluster {
             }
         }
         let (holder, holder_used) = holder?; // no warm state anywhere
+        // A live holder exists, so the router found a live primary.
+        let primary = primary.expect("a live holder implies a routable fleet");
 
         if let Some((recipient, rec_used)) = target {
             if self.frac_less(recipient, rec_used, holder, holder_used) {
@@ -775,6 +1155,10 @@ impl Cluster {
                 if self.controller.is_some() {
                     self.window.node_dispatches[recipient][class] += 1;
                 }
+                // The transfer pays the donor→recipient hop latency on
+                // top of the checkpoint/restore cost.
+                let cost_us =
+                    base_cost_us + self.topology.latency_us(holder, recipient, n);
                 // The migrated container serves warm; under HoldsMemory
                 // the transfer occupies the container like init does.
                 let busy = match self.init_occupancy {
@@ -783,7 +1167,7 @@ impl Cluster {
                         profile.warm_start_us + cost_us + ev.exec_us
                     }
                 };
-                self.push_completion(ev.t_us + busy, recipient, pool, container);
+                self.push_completion(ev.t_us + busy, recipient, pool, container, ev);
                 self.record_served(
                     recipient,
                     profile.class,
@@ -795,23 +1179,31 @@ impl Cluster {
             }
         }
 
-        // Rescue hit: serve where the warm state already lives. The
-        // dispatch is guaranteed warm except on an adaptive node whose
+        // Rescue hit: serve where the warm state already lives, paying
+        // the primary→holder forwarding latency (0 under flat) as
+        // startup wait; the in-transit time occupies the container only
+        // under HoldsMemory, like cold init does. The dispatch is
+        // guaranteed warm except on an adaptive node whose
         // self-rebalance just resized the copy away — handle all
         // outcomes rather than assume.
+        let lat = self.topology.latency_us(primary, holder, n);
+        let held_lat = match self.init_occupancy {
+            InitOccupancy::LatencyOnly => 0,
+            InitOccupancy::HoldsMemory => lat,
+        };
         if self.controller.is_some() {
             self.window.node_dispatches[holder][class] += 1;
         }
         match self.nodes[holder].dispatch(profile, ev.t_us) {
             Outcome::Hit { pool, container } => {
-                let end = ev.t_us + profile.warm_start_us + ev.exec_us;
-                self.push_completion(end, holder, pool, container);
+                let end = ev.t_us + held_lat + profile.warm_start_us + ev.exec_us;
+                self.push_completion(end, holder, pool, container, ev);
                 self.record_served(
                     holder,
                     profile.class,
                     RecordKind::Hit,
                     ev.exec_us,
-                    profile.warm_start_us,
+                    profile.warm_start_us + lat,
                 );
                 self.rerouted += 1;
                 self.rescues += 1;
@@ -822,13 +1214,13 @@ impl Cluster {
                     InitOccupancy::LatencyOnly => ev.exec_us,
                     InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
                 };
-                self.push_completion(ev.t_us + busy, holder, pool, container);
+                self.push_completion(ev.t_us + held_lat + busy, holder, pool, container, ev);
                 self.record_served(
                     holder,
                     profile.class,
                     RecordKind::Miss,
                     ev.exec_us,
-                    profile.cold_start_us,
+                    profile.cold_start_us + lat,
                 );
                 self.rerouted += 1;
                 Some(ClusterOutcome::Placed { node: holder, cold: true })
@@ -842,62 +1234,68 @@ impl Cluster {
         }
     }
 
-    /// Process one arrival end-to-end: route, dispatch, fall back,
-    /// migrate, and (maybe) offload.
-    pub fn step(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
-        debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
-        self.now_us = ev.t_us;
-        self.drain_completions(ev.t_us);
-        self.maybe_epoch(ev.t_us); // no-op unless a controller is active
-
-        let profile = trace.profile(ev.func);
-        let class = class_idx(profile.class);
-        if self.controller.is_some() {
-            self.window.class_arrivals[class] += 1;
-        }
-        let primary = self.route(profile);
+    /// The edge placement loop: dispatch on the primary, then retry on
+    /// up to `max_fallbacks` other *live* nodes in ascending index
+    /// order, charging the primary→fallback forwarding latency on a
+    /// non-flat topology. `None` when every candidate dropped.
+    fn try_edge(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        class: usize,
+        primary: usize,
+    ) -> Option<ClusterOutcome> {
         let n = self.nodes.len();
-
         let mut cand = primary;
         let mut attempts = 0usize;
         let mut scan = 0usize; // next fallback index to consider
         loop {
+            // Forwarding latency from the primary (0 on the primary and
+            // under a flat topology). Always charged as startup wait;
+            // whether the in-transit time also occupies the container
+            // follows the init-occupancy model, exactly like cold-start
+            // init and the migration transfer cost.
+            let lat = self.topology.latency_us(primary, cand, n);
+            let held_lat = match self.init_occupancy {
+                InitOccupancy::LatencyOnly => 0,
+                InitOccupancy::HoldsMemory => lat,
+            };
             if self.controller.is_some() {
                 self.window.node_dispatches[cand][class] += 1;
             }
             match self.nodes[cand].dispatch(profile, ev.t_us) {
                 Outcome::Hit { pool, container } => {
-                    let end = ev.t_us + profile.warm_start_us + ev.exec_us;
-                    self.push_completion(end, cand, pool, container);
+                    let end = ev.t_us + held_lat + profile.warm_start_us + ev.exec_us;
+                    self.push_completion(end, cand, pool, container, ev);
                     self.record_served(
                         cand,
                         profile.class,
                         RecordKind::Hit,
                         ev.exec_us,
-                        profile.warm_start_us,
+                        profile.warm_start_us + lat,
                     );
                     if cand != primary {
                         self.rerouted += 1;
                     }
-                    return ClusterOutcome::Placed { node: cand, cold: false };
+                    return Some(ClusterOutcome::Placed { node: cand, cold: false });
                 }
                 Outcome::Cold { pool, container } => {
                     let busy = match self.init_occupancy {
                         InitOccupancy::LatencyOnly => ev.exec_us,
                         InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
                     };
-                    self.push_completion(ev.t_us + busy, cand, pool, container);
+                    self.push_completion(ev.t_us + held_lat + busy, cand, pool, container, ev);
                     self.record_served(
                         cand,
                         profile.class,
                         RecordKind::Miss,
                         ev.exec_us,
-                        profile.cold_start_us,
+                        profile.cold_start_us + lat,
                     );
                     if cand != primary {
                         self.rerouted += 1;
                     }
-                    return ClusterOutcome::Placed { node: cand, cold: true };
+                    return Some(ClusterOutcome::Placed { node: cand, cold: true });
                 }
                 Outcome::Drop => {
                     if self.controller.is_some() {
@@ -905,25 +1303,40 @@ impl Cluster {
                     }
                     attempts += 1;
                     if attempts > self.max_fallbacks {
-                        break;
+                        return None;
                     }
-                    // Next untried node in ascending index order.
-                    while scan < n && scan == primary {
+                    // Next untried live node in ascending index order.
+                    while scan < n && (scan == primary || !self.live[scan]) {
                         scan += 1;
                     }
                     if scan >= n {
-                        break;
+                        return None;
                     }
                     cand = scan;
                     scan += 1;
                 }
             }
         }
+    }
 
-        // Every candidate declined: migrate warm state if possible, then
-        // offload to the cloud tier, then drop. (`try_migrate` is an
-        // immediate no-op when migration is disabled.)
-        if let Some(outcome) = self.try_migrate(profile, ev) {
+    /// Place one invocation end-to-end: route, dispatch, fall back,
+    /// migrate, and (maybe) offload. Shared by trace arrivals
+    /// ([`Cluster::step`]) and churn retries of killed in-flight work.
+    fn place(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
+        let profile = trace.profile(ev.func);
+        let class = class_idx(profile.class);
+        let primary = self.route(profile);
+        if let Some(primary) = primary {
+            if let Some(outcome) = self.try_edge(profile, ev, class, primary) {
+                return outcome;
+            }
+        }
+
+        // Every candidate declined (or the whole fleet is down): migrate
+        // warm state if possible, then offload to the cloud tier, then
+        // drop. (`try_migrate` is an immediate no-op when migration is
+        // disabled.)
+        if let Some(outcome) = self.try_migrate(profile, ev, primary) {
             return outcome;
         }
         if self.controller.is_some() {
@@ -940,6 +1353,124 @@ impl Cluster {
                 ClusterOutcome::Dropped
             }
         }
+    }
+
+    /// Advance virtual time to `t`: apply completions and churn toggles
+    /// in global time order (a completion due before a failure releases
+    /// its container; one due after dies with the node).
+    fn advance(&mut self, trace: &Trace, t: u64) {
+        loop {
+            let Some((tc, node)) =
+                self.churn.as_ref().and_then(|c| c.peek_due(t))
+            else {
+                break;
+            };
+            self.drain_completions(tc);
+            let going_down = self.live[node];
+            self.churn
+                .as_mut()
+                .expect("peeked a churn event")
+                .pop_and_reschedule(going_down);
+            if going_down {
+                self.node_down(trace, node, tc);
+            } else {
+                self.node_up(node);
+            }
+        }
+        self.drain_completions(t);
+    }
+
+    /// Take a node down at virtual time `t_us`: evict its warm pool
+    /// (accounted as churn evictions), retire its pending completions,
+    /// and retry the killed in-flight invocations through the normal
+    /// placement path on the surviving fleet. No-op if already down.
+    fn node_down(&mut self, trace: &Trace, node: usize, t_us: u64) {
+        if !self.live[node] {
+            return;
+        }
+        self.live[node] = false;
+        self.report.record_node_event(RecordKind::NodeDown { node });
+
+        // 1. The warm pool dies with the node; the loss is accounted
+        //    both cluster-wide and on the node that suffered it.
+        for func in self.nodes[node].evict_all() {
+            let class = trace.profile(func).class;
+            self.report.record_churn_eviction(class);
+            self.per_node[node].record_churn_eviction(class);
+        }
+
+        // 2. Pending completions on the node are void; the invocations
+        //    they belonged to restart elsewhere, in deterministic
+        //    dispatch order.
+        let heap = std::mem::take(&mut self.completions);
+        let mut dead: Vec<Completion> = Vec::new();
+        let mut alive: Vec<Reverse<Completion>> = Vec::with_capacity(heap.len());
+        for Reverse(c) in heap.into_vec() {
+            if c.node == node {
+                dead.push(c);
+            } else {
+                alive.push(Reverse(c));
+            }
+        }
+        self.completions = BinaryHeap::from(alive);
+        dead.sort_unstable();
+        for c in dead {
+            self.churn_reroutes += 1;
+            let retry = Invocation { t_us, func: c.func, exec_us: c.exec_us };
+            if self.controller.is_some() {
+                let class = class_idx(trace.profile(c.func).class);
+                self.window.class_arrivals[class] += 1;
+            }
+            let _ = self.place(trace, retry);
+        }
+    }
+
+    /// Bring a node back: it rejoins with the empty pool the failure
+    /// left behind but keeps its configuration. No-op if already live.
+    fn node_up(&mut self, node: usize) {
+        if self.live[node] {
+            return;
+        }
+        self.live[node] = true;
+        self.report.record_node_event(RecordKind::NodeUp { node });
+    }
+
+    /// Scripted failure injection (tests, what-if experiments): take
+    /// `node` down at `t_us` exactly as the churn injector would —
+    /// warm-pool eviction, completion retirement, in-flight retries.
+    ///
+    /// Intended for clusters *without* `[cluster.churn]`: an armed
+    /// injector derives each queued toggle's direction from the live
+    /// flag at fire time, so a scripted failure would turn the node's
+    /// next scheduled failure into an early recovery (and vice versa).
+    /// Use one failure source per run.
+    pub fn inject_node_down(&mut self, trace: &Trace, node: usize, t_us: u64) {
+        self.now_us = self.now_us.max(t_us);
+        self.drain_completions(t_us);
+        self.node_down(trace, node, t_us);
+    }
+
+    /// Scripted recovery injection: bring `node` back at `t_us`.
+    pub fn inject_node_up(&mut self, node: usize, t_us: u64) {
+        self.now_us = self.now_us.max(t_us);
+        self.drain_completions(t_us);
+        self.node_up(node);
+    }
+
+    /// Process one arrival end-to-end: advance time (completions +
+    /// churn), run the controller epoch if due, then route, dispatch,
+    /// fall back, migrate, and (maybe) offload.
+    pub fn step(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
+        debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
+        self.now_us = ev.t_us;
+        self.advance(trace, ev.t_us);
+        self.maybe_epoch(ev.t_us); // no-op unless a controller is active
+
+        if self.controller.is_some() {
+            let class = class_idx(trace.profile(ev.func).class);
+            self.window.class_arrivals[class] += 1;
+        }
+        self.place(trace, ev)
     }
 
     /// Release everything still in flight (end-of-trace drain).
@@ -997,6 +1528,8 @@ impl Cluster {
             rescues: self.rescues,
             small_node_moves: self.small_node_moves,
             resplits: self.resplits,
+            churn_reroutes: self.churn_reroutes,
+            live: self.live,
         }
     }
 }
@@ -1019,6 +1552,12 @@ pub struct ClusterReport {
     pub small_node_moves: u64,
     /// Controller decisions that live-resized a node's KiSS split.
     pub resplits: u64,
+    /// In-flight invocations killed by node failures and retried
+    /// through the placement path (churn extension; also see
+    /// [`crate::metrics::Report::node_downs`] on `report`).
+    pub churn_reroutes: u64,
+    /// Per-node liveness at end of run (all-true without churn).
+    pub live: Vec<bool>,
     /// The router at end of run — the controller may have moved the
     /// size-affinity boundary from its configured starting point.
     pub router: RouterKind,
@@ -1103,6 +1642,8 @@ mod tests {
             init_occupancy: InitOccupancy::LatencyOnly,
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         };
         let cluster = run_cluster(&t, &spec);
         let mut single =
@@ -1195,6 +1736,8 @@ mod tests {
             init_occupancy: InitOccupancy::LatencyOnly,
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         };
         let r = run_cluster(&t, &spec);
         assert_eq!(r.report.overall.misses, 1);
@@ -1217,6 +1760,8 @@ mod tests {
             init_occupancy: InitOccupancy::LatencyOnly,
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         };
         let r = run_cluster(&t, &spec);
         assert_eq!(r.report.overall.drops, 1);
@@ -1256,6 +1801,13 @@ mod tests {
         assert_eq!(spec.max_fallbacks, 3);
         assert_eq!(spec.migration, Some(MigrationPolicy { cost_us: 15_000 }));
         assert_eq!(spec.controller.unwrap().epoch_us, 60_000_000);
+        assert_eq!(spec.topology, Topology::Flat, "flat is the default");
+        assert_eq!(spec.churn, None, "churn is off by default");
+        let spec = spec
+            .with_topology(Topology::Ring { hop_us: 2_000 })
+            .with_churn(ChurnConfig::default());
+        assert_eq!(spec.topology, Topology::Ring { hop_us: 2_000 });
+        assert_eq!(spec.churn.unwrap().mean_down_us, 30_000_000);
         assert_eq!(RouterKind::parse("ll", 0), Some(RouterKind::LeastLoaded));
         assert_eq!(
             RouterKind::parse("affinity", 2),
@@ -1285,6 +1837,8 @@ mod tests {
             init_occupancy: InitOccupancy::LatencyOnly,
             migration: Some(MigrationPolicy { cost_us: 15_000 }),
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         };
         let mut cluster = Cluster::new(&spec);
         assert_eq!(
@@ -1330,6 +1884,8 @@ mod tests {
             init_occupancy: InitOccupancy::LatencyOnly,
             migration: Some(MigrationPolicy { cost_us: 15_000 }),
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         };
         let mut cluster = Cluster::new(&spec);
         cluster.step(&t, t.events[0]);
@@ -1384,6 +1940,8 @@ mod tests {
                 epoch_us: 500_000,
                 ..ControllerConfig::default()
             }),
+            topology: Topology::Flat,
+            churn: None,
         };
         let r = run_cluster(&t, &spec);
         // The 563 MB large pool can never hold the 600 MB function: every
@@ -1408,6 +1966,8 @@ mod tests {
             init_occupancy: InitOccupancy::LatencyOnly,
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         };
         let r = run_cluster(&t, &spec);
         assert_eq!(r.report.overall.drops, 1);
@@ -1453,6 +2013,8 @@ mod tests {
                 epoch_us: 500_000,
                 ..ControllerConfig::default()
             }),
+            topology: Topology::Flat,
+            churn: None,
         };
         let r = run_cluster(&t, &spec);
         assert!(r.small_node_moves > 0, "controller must react: {r:?}");
@@ -1496,6 +2058,8 @@ mod tests {
                 step: 0.1,
                 ..ControllerConfig::default()
             }),
+            topology: Topology::Flat,
+            churn: None,
         };
         let r = run_cluster(&t, &spec);
         assert!(r.resplits > 0, "controller must resize the split: {r:?}");
@@ -1521,6 +2085,332 @@ mod tests {
                 ..ControllerConfig::default()
             });
         let _ = Cluster::new(&spec);
+    }
+
+    /// The test-side copy of [`Cluster::arrival_node`]'s hash, so tests
+    /// can predict a function's home gateway.
+    fn home_node(func_id: u32, n: usize) -> usize {
+        use std::hash::Hasher;
+        let mut h = FxHasher::default();
+        h.write_u32(func_id);
+        (h.finish() % n as u64) as usize
+    }
+
+    #[test]
+    fn topology_latency_math() {
+        let n = 6;
+        assert_eq!(Topology::Flat.latency_us(1, 4, n), 0);
+        let star = Topology::Star { hop_us: 10 };
+        assert_eq!(star.latency_us(2, 2, n), 0, "self-latency is always 0");
+        assert_eq!(star.latency_us(0, 4, n), 10, "hub is an endpoint");
+        assert_eq!(star.latency_us(4, 0, n), 10);
+        assert_eq!(star.latency_us(1, 5, n), 20, "spoke pairs relay via the hub");
+        let ring = Topology::Ring { hop_us: 10 };
+        assert_eq!(ring.latency_us(0, 1, n), 10);
+        assert_eq!(ring.latency_us(0, 5, n), 10, "wraps the short way");
+        assert_eq!(ring.latency_us(1, 4, n), 30);
+        let m = Topology::from_row_major(vec![0, 7, 9, 0]).unwrap();
+        assert_eq!(m.latency_us(0, 1, 2), 7, "matrix may be asymmetric");
+        assert_eq!(m.latency_us(1, 0, 2), 9);
+        assert!(m.validate(2).is_ok());
+        assert!(m.validate(3).is_err(), "wrong fleet size must be rejected");
+        assert!(Topology::from_row_major(vec![0, 1, 2]).is_err(), "not square");
+        assert!(
+            Topology::from_row_major(vec![1]).unwrap().validate(1).is_err(),
+            "nonzero diagonal must be rejected"
+        );
+        assert_eq!(Topology::parse("ring", 5), Some(Topology::Ring { hop_us: 5 }));
+        assert_eq!(Topology::parse("star", 5), Some(Topology::Star { hop_us: 5 }));
+        assert_eq!(Topology::parse("flat", 5), Some(Topology::Flat));
+        assert_eq!(Topology::parse("mesh", 5), None);
+        assert_eq!(Topology::Ring { hop_us: 5 }.label(), "ring");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid cluster topology")]
+    fn mismatched_matrix_topology_fails_fast() {
+        let spec = ClusterSpec::homogeneous(3, 1024, NodePolicy::kiss_default())
+            .with_topology(Topology::from_row_major(vec![0, 5, 5, 0]).unwrap());
+        let _ = Cluster::new(&spec);
+    }
+
+    #[test]
+    fn fallback_pays_hop_latency() {
+        // Same scenario as fallback_serves_on_second_node, on a 2-node
+        // ring with 1 ms hops: the fallback serve pays one hop on top of
+        // its cold start.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(100), baseline_node(1000)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: None,
+            topology: Topology::Ring { hop_us: 1_000 },
+            churn: None,
+        };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.misses, 1);
+        assert_eq!(r.report.overall.startup_us, 2_000, "cold 1000 + one hop 1000");
+        // A zero-cost ring is indistinguishable from flat.
+        let mut free = spec.clone();
+        free.topology = Topology::Ring { hop_us: 0 };
+        assert_eq!(run_cluster(&t, &free).report.overall.startup_us, 1_000);
+    }
+
+    #[test]
+    fn migration_pays_donor_to_recipient_hops() {
+        // migrate_records_donor_and_recipient on a star with 500 µs
+        // hops: donor node 0 is the hub, so the transfer to node 1 adds
+        // exactly one hop to the migration cost.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500), func(1, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 1, 500), inv(20_000, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(1000), baseline_node(100)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: Some(MigrationPolicy { cost_us: 15_000 }),
+            controller: None,
+            topology: Topology::Star { hop_us: 500 },
+            churn: None,
+        };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.migrations, 1);
+        // Startup: 2 colds (1000 each) + warm 100 + cost 15000 + hop 500.
+        assert_eq!(r.report.overall.startup_us, 2_000 + 100 + 15_000 + 500);
+    }
+
+    #[test]
+    fn rescue_pays_forwarding_latency() {
+        // rescue_hit_serves_on_holder... on a 3-ring with 1 ms hops: the
+        // third arrival routes to node 2, the rescue serves on holder
+        // node 0 — one hop away around the ring.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500), inv(20_000, 0, 500)],
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(400), baseline_node(100)],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: Some(MigrationPolicy { cost_us: 15_000 }),
+            controller: None,
+            topology: Topology::Ring { hop_us: 1_000 },
+            churn: None,
+        };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.rescues, 1);
+        assert_eq!(r.report.overall.migrations, 0);
+        // Startup: 2 colds (1000 each) + warm 100 + one hop 1000.
+        assert_eq!(r.report.overall.startup_us, 2_000 + 100 + 1_000);
+    }
+
+    #[test]
+    fn node_down_reroutes_in_flight_work() {
+        // f is mid-execution on node 0 when the node dies: the warm pool
+        // holds nothing idle (no churn evictions), but the in-flight
+        // invocation restarts on the survivor as a fresh cold start.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 100_000)],
+            events: vec![inv(0, 0, 100_000)],
+        };
+        let spec = ClusterSpec::homogeneous(
+            2,
+            1000,
+            NodePolicy::Baseline { policy: PolicyKind::Lru },
+        );
+        let mut cluster = Cluster::new(&spec);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            ClusterOutcome::Placed { node: 0, cold: true }
+        );
+        cluster.inject_node_down(&t, 0, 50_000);
+        assert!(!cluster.is_live(0));
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.report.node_downs, 1);
+        assert_eq!(cluster.churn_reroutes, 1);
+        assert_eq!(
+            cluster.report.overall.churn_evictions, 0,
+            "the container was busy, not idle warm state"
+        );
+        assert_eq!(cluster.report.overall.misses, 2, "original + retry");
+        assert_eq!(cluster.per_node[1].overall.misses, 1, "retry lands on the survivor");
+    }
+
+    #[test]
+    fn node_down_counts_idle_warm_loss_and_node_up_restores_service() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(
+            2,
+            1000,
+            NodePolicy::Baseline { policy: PolicyKind::Lru },
+        );
+        let mut cluster = Cluster::new(&spec);
+        cluster.step(&t, t.events[0]); // cold on node 0, done at t=500
+        cluster.inject_node_down(&t, 0, 10_000); // the idle copy dies
+        assert_eq!(cluster.report.overall.churn_evictions, 1);
+        assert_eq!(cluster.report.large.churn_evictions, 1, "300 MB is large-class");
+        assert_eq!(cluster.churn_reroutes, 0);
+        cluster.inject_node_up(0, 20_000);
+        assert!(cluster.is_live(0));
+        assert_eq!(cluster.report.node_ups, 1);
+        // Round-robin continues: node 1 next, then the recovered node 0,
+        // which must cold-start (its warm state is gone).
+        assert_eq!(
+            cluster.step(&t, inv(30_000, 0, 500)),
+            ClusterOutcome::Placed { node: 1, cold: true }
+        );
+        assert_eq!(
+            cluster.step(&t, inv(40_000, 0, 500)),
+            ClusterOutcome::Placed { node: 0, cold: true }
+        );
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sticky_redirects_to_nearest_live_node() {
+        let n = 4;
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(n, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_topology(Topology::Ring { hop_us: 1_000 });
+        let mut cluster = Cluster::new(&spec);
+        let home = home_node(0, n);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            ClusterOutcome::Placed { node: home, cold: true }
+        );
+        cluster.inject_node_down(&t, home, 5_000);
+        // The ring neighbours of home are one hop away; ties between
+        // equally close live nodes break to the lowest index.
+        let expected = ((home + n - 1) % n).min((home + 1) % n);
+        assert_eq!(
+            cluster.step(&t, t.events[1]),
+            ClusterOutcome::Placed { node: expected, cold: true }
+        );
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_toward_the_arrival_node() {
+        // An idle homogeneous fleet is all-tied on load; with hop costs,
+        // the tie resolves to the function's home gateway instead of
+        // node 0.
+        let n = 4;
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(n, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::LeastLoaded)
+            .with_topology(Topology::Ring { hop_us: 1_000 });
+        let r = run_cluster(&t, &spec);
+        let home = home_node(0, n);
+        assert_eq!(r.per_node[home].overall.misses, 1, "tie resolves to the home gateway");
+    }
+
+    #[test]
+    fn whole_fleet_down_offloads_or_drops() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(10, 0, 500)],
+        };
+        let with_cloud = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default())
+            .with_cloud(80_000);
+        let mut cluster = Cluster::new(&with_cloud);
+        cluster.inject_node_down(&t, 0, 0);
+        cluster.inject_node_down(&t, 1, 0);
+        assert_eq!(cluster.step(&t, t.events[0]), ClusterOutcome::Offloaded);
+
+        let cloudless = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default());
+        let mut cluster = Cluster::new(&cloudless);
+        cluster.inject_node_down(&t, 0, 0);
+        cluster.inject_node_down(&t, 1, 0);
+        assert_eq!(cluster.step(&t, t.events[0]), ClusterOutcome::Dropped);
+    }
+
+    #[test]
+    fn controller_boundary_never_moves_to_a_down_node() {
+        // The controller_shrinks_small_node_set_under_large_pressure
+        // scenario, but node 1 — the node the shrink would hand to the
+        // large set — is down: the boundary must stay put.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 2_000_000), func(1, 310, 1_000, 2_000_000)],
+            events: (0..40u64)
+                .map(|i| inv(i * 100_000, (i % 2) as u32, 2_000_000))
+                .collect(),
+        };
+        let spec = ClusterSpec {
+            nodes: vec![baseline_node(400), baseline_node(400), baseline_node(400)],
+            router: RouterKind::SizeAffinity { small_nodes: 2 },
+            max_fallbacks: 0,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: Some(ControllerConfig {
+                epoch_us: 500_000,
+                ..ControllerConfig::default()
+            }),
+            topology: Topology::Flat,
+            churn: None,
+        };
+        let mut cluster = Cluster::new(&spec);
+        cluster.inject_node_down(&t, 1, 0);
+        for &ev in &t.events {
+            cluster.step(&t, ev);
+        }
+        cluster.finish();
+        assert_eq!(cluster.small_node_moves, 0, "boundary must not move to a down node");
+        assert_eq!(cluster.router(), RouterKind::SizeAffinity { small_nodes: 2 });
+    }
+
+    #[test]
+    fn churn_injector_fires_and_recovers_deterministically() {
+        // Aggressive churn over a ~100 s arrival stream: failures and
+        // recoveries both happen, accounting stays consistent, and the
+        // run replays exactly.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: (0..400u64).map(|i| inv(i * 250_000, (i % 2) as u32, 500)).collect(),
+        };
+        let spec = ClusterSpec::homogeneous(3, 1000, NodePolicy::kiss_default())
+            .with_cloud(80_000)
+            .with_churn(ChurnConfig {
+                seed: 9,
+                mean_up_us: 10_000_000,
+                mean_down_us: 5_000_000,
+            });
+        let r = run_cluster(&t, &spec);
+        assert!(r.report.node_downs > 0, "churn must fire: {:?}", r.report);
+        assert!(r.report.node_ups > 0, "nodes must also recover: {:?}", r.report);
+        assert!(
+            r.report.node_ups <= r.report.node_downs,
+            "a recovery needs a preceding failure"
+        );
+        assert!(r.report.is_consistent());
+        assert_eq!(r.live.len(), 3);
+        let again = run_cluster(&t, &spec);
+        assert_eq!(r.report, again.report, "churn runs must replay exactly");
+        assert_eq!(r.churn_reroutes, again.churn_reroutes);
+        assert_eq!(r.live, again.live);
     }
 
     #[test]

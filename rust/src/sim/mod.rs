@@ -17,9 +17,10 @@
 //!
 //! [`cluster`] lifts the same event semantics to a multi-node edge
 //! cluster with pluggable routers, an edge→cloud offload path, optional
-//! cross-node warm-container migration, and an online small-nodes/split
-//! controller; a one-node cluster reduces bit-for-bit to
-//! [`run_trace_with`].
+//! cross-node warm-container migration, an online small-nodes/split
+//! controller, an inter-node network topology (per-hop latency on
+//! cross-node actions), and deterministic node churn injection; a
+//! one-node cluster reduces bit-for-bit to [`run_trace_with`].
 
 pub mod cluster;
 

@@ -22,11 +22,15 @@ pub struct FunctionId(pub u32);
 /// the *ground-truth* class for fairness accounting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SizeClass {
+    /// Small, frequently invoked containers (paper: 30–60 MB).
     Small,
+    /// Large, resource-intensive containers (paper: 300–400 MB).
     Large,
 }
 
 impl SizeClass {
+    /// Lower-case class name (`small`/`large`), as used in CSV and
+    /// report slices.
     pub fn label(self) -> &'static str {
         match self {
             SizeClass::Small => "small",
@@ -39,6 +43,7 @@ impl SizeClass {
 /// registration metadata + first executions.
 #[derive(Clone, Debug)]
 pub struct FunctionProfile {
+    /// Stable function identifier (index into [`Trace::functions`]).
     pub id: FunctionId,
     /// Application the function belongs to (Azure groups functions into
     /// apps; Eq. 1 of the paper estimates function memory from app memory).
@@ -63,6 +68,7 @@ pub struct FunctionProfile {
 pub struct Invocation {
     /// Arrival time in µs since trace start.
     pub t_us: u64,
+    /// The invoked function.
     pub func: FunctionId,
     /// Execution duration of this invocation (µs), excluding startup.
     pub exec_us: u64,
@@ -72,15 +78,20 @@ pub struct Invocation {
 /// stream.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// Function profiles, dense and indexed by [`FunctionId`].
     pub functions: Vec<FunctionProfile>,
+    /// Invocation arrivals, sorted by arrival time.
     pub events: Vec<Invocation>,
 }
 
 impl Trace {
+    /// The profile of function `f` (ids are dense indices by
+    /// construction).
     pub fn profile(&self, f: FunctionId) -> &FunctionProfile {
         &self.functions[f.0 as usize]
     }
 
+    /// Arrival time of the last event (µs); 0 for an empty trace.
     pub fn duration_us(&self) -> u64 {
         self.events.last().map(|e| e.t_us).unwrap_or(0)
     }

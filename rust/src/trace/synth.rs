@@ -47,7 +47,9 @@ impl Default for BurstConfig {
 /// another function at its completion time, up to `max_depth` links.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChainConfig {
+    /// Probability that an invocation triggers a child at completion.
     pub prob: f64,
+    /// Maximum chain length (links) from a root invocation.
     pub max_depth: u32,
 }
 
@@ -61,9 +63,11 @@ impl Default for ChainConfig {
 /// workload; experiments override `duration_us` / `rate_per_sec` / `seed`.
 #[derive(Clone, Debug)]
 pub struct SynthConfig {
+    /// PRNG seed: every derived stream forks from this.
     pub seed: u64,
-    /// Distinct small / large functions.
+    /// Distinct small functions.
     pub n_small: usize,
+    /// Distinct large functions.
     pub n_large: usize,
     /// Trace length (µs).
     pub duration_us: u64,
@@ -79,19 +83,26 @@ pub struct SynthConfig {
     pub burst: Option<BurstConfig>,
     /// Optional function-chaining overlay (§1.1).
     pub chains: Option<ChainConfig>,
-    /// Container memory ranges (MB), inclusive (§4.2 edge adaptation).
+    /// Small-container memory range (MB), inclusive (§4.2 edge
+    /// adaptation).
     pub small_mem_mb: (u32, u32),
+    /// Large-container memory range (MB), inclusive.
     pub large_mem_mb: (u32, u32),
     /// Functions per application (inclusive range) for Eq. 1 grouping.
     pub funcs_per_app: (u32, u32),
-    /// Cold-start lognormal (log-space mu, sigma) per class, seconds.
+    /// Small-class cold-start lognormal (log-space mu, sigma), seconds.
     pub small_cold_lognorm: (f64, f64),
+    /// Large-class cold-start lognormal (log-space mu, sigma), seconds.
     pub large_cold_lognorm: (f64, f64),
-    /// Cold-start clamp (s) so tails stay physical.
+    /// Small-class cold-start clamp (s) so tails stay physical.
     pub small_cold_cap_s: f64,
+    /// Large-class cold-start clamp (s).
     pub large_cold_cap_s: f64,
-    /// Execution-time lognormal (log-space mu, sigma), seconds.
+    /// Small-class execution-time lognormal (log-space mu, sigma),
+    /// seconds.
     pub small_exec_lognorm: (f64, f64),
+    /// Large-class execution-time lognormal (log-space mu, sigma),
+    /// seconds.
     pub large_exec_lognorm: (f64, f64),
     /// Per-invocation duration jitter sigma (lognormal around the mean).
     pub exec_jitter_sigma: f64,

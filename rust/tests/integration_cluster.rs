@@ -1,16 +1,19 @@
 //! Integration: the multi-node cluster engine — the determinism lock
 //! (N=1 reduces bit-for-bit to the single-node engine), offload
-//! accounting, router determinism, config-to-spec threading, and the
+//! accounting, router determinism, config-to-spec threading, the
 //! migration/controller extensions (disabled == PR-1 static path
 //! bit-for-bit; enabled strictly reduces placement failures on the
-//! stressed hetero workload).
+//! stressed hetero workload), and the topology/churn extensions (flat +
+//! no-churn == the prior cluster bit-for-bit; churn schedules are
+//! seed-deterministic; migration + fallbacks absorb churn).
 
 use kiss_faas::config::SimConfig;
 use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::coordinator::Balancer;
 use kiss_faas::experiments::paper_workload;
 use kiss_faas::sim::cluster::{
-    run_cluster, ClusterSpec, ControllerConfig, NodePolicy, NodeSpec, RouterKind,
+    run_cluster, ChurnConfig, ClusterSpec, ControllerConfig, NodePolicy, NodeSpec, RouterKind,
+    Topology,
 };
 use kiss_faas::sim::{run_trace_with, InitOccupancy};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
@@ -63,6 +66,8 @@ fn one_node_cluster_is_bit_identical_to_run_trace() {
                 init_occupancy: occ,
                 migration: None,
                 controller: None,
+                topology: Topology::Flat,
+                churn: None,
             };
             let got = run_cluster(&trace, &spec);
             assert_eq!(
@@ -105,6 +110,8 @@ fn cluster_runs_are_deterministic() {
         init_occupancy: InitOccupancy::HoldsMemory,
         migration: None,
         controller: None,
+        topology: Topology::Flat,
+        churn: None,
     }
     .with_cloud(80_000);
     let a = run_cluster(&trace, &spec);
@@ -131,6 +138,8 @@ fn offload_accounting_is_class_consistent() {
         init_occupancy: InitOccupancy::HoldsMemory,
         migration: None,
         controller: None,
+        topology: Topology::Flat,
+        churn: None,
     };
     let dropped = run_cluster(&trace, &base);
     assert!(
@@ -233,6 +242,8 @@ fn fallbacks_reduce_placement_failures() {
         init_occupancy: InitOccupancy::HoldsMemory,
         migration: None,
         controller: None,
+        topology: Topology::Flat,
+        churn: None,
     };
     let without = run_cluster(&trace, &tight);
     assert_eq!(without.rerouted, 0, "no fallbacks, no reroutes");
@@ -289,6 +300,8 @@ fn prop_migration_runs_are_seed_deterministic() {
             init_occupancy: InitOccupancy::HoldsMemory,
             migration: None,
             controller: None,
+            topology: Topology::Flat,
+            churn: None,
         }
         .with_cloud(80_000)
         .with_migration(15_000)
@@ -425,6 +438,200 @@ fn migration_experiment_reports_the_reduction() {
         both_fail < static_fail,
         "experiment must show the reduction: {both_fail} vs {static_fail}"
     );
+}
+
+/// The acceptance lock for the topology/churn layer: an explicit flat
+/// topology with churn disabled — whether spelled out in TOML (with an
+/// `enabled = false` kill switch) or set programmatically, and whether
+/// the fabric is flat or a star/ring with zero-cost hops — is
+/// bit-for-bit identical to the bare PR-2 cluster.
+#[test]
+fn flat_topology_and_disabled_churn_match_prior_cluster_bit_for_bit() {
+    let trace = synthesize(&workload(42));
+
+    let base_toml = "
+        [node]
+        mem_mb = 1024
+        [cluster]
+        nodes = 3
+        mem_mb = [1024, 768, 512]
+        router = \"least-loaded\"
+        fallbacks = 1
+        cloud_rtt_ms = 80
+        [cluster.migration]
+        cost_ms = 15
+    ";
+    let bare = SimConfig::from_toml_str(base_toml).unwrap();
+    let explicit = SimConfig::from_toml_str(&format!(
+        "{base_toml}\n[cluster.topology]\nkind = \"flat\"\n\
+         [cluster.churn]\nenabled = false\nmean_up_s = 60\nmean_down_s = 5"
+    ))
+    .unwrap();
+
+    let mut spec_bare = bare.build_cluster_spec();
+    spec_bare.init_occupancy = InitOccupancy::HoldsMemory;
+    let mut spec_explicit = explicit.build_cluster_spec();
+    spec_explicit.init_occupancy = InitOccupancy::HoldsMemory;
+    assert_eq!(spec_explicit.topology, Topology::Flat);
+    assert!(spec_explicit.churn.is_none());
+
+    let a = run_cluster(&trace, &spec_bare);
+    let b = run_cluster(&trace, &spec_explicit);
+    assert_eq!(a.report, b.report, "explicit flat/no-churn must equal the bare cluster");
+    assert_eq!(a.per_node, b.per_node);
+    assert_eq!(a.peak_used_mb, b.peak_used_mb);
+    assert_eq!(a.report.node_downs, 0);
+    assert_eq!(a.report.overall.churn_evictions, 0);
+    assert_eq!(b.churn_reroutes, 0);
+
+    // Zero-cost hops make every fabric indistinguishable from flat:
+    // all latencies and all tie-break distances are 0.
+    for topo in [Topology::Star { hop_us: 0 }, Topology::Ring { hop_us: 0 }] {
+        let mut spec = spec_bare.clone();
+        spec.topology = topo.clone();
+        let c = run_cluster(&trace, &spec);
+        assert_eq!(a.report, c.report, "{topo:?} with free hops diverged from flat");
+        assert_eq!(a.per_node, c.per_node);
+        assert_eq!(a.rerouted, c.rerouted);
+        assert_eq!(a.rescues, c.rescues);
+    }
+}
+
+/// Churn determinism (property): for any trace seed and churn seed, two
+/// runs of the same topology+churn+migration spec agree on every
+/// counter — the churn schedule, the evictions it causes, and the
+/// retries it triggers are pure functions of the config.
+#[test]
+fn prop_churn_schedules_are_seed_deterministic() {
+    forall("churn determinism", 10, |rng| {
+        let synth = SynthConfig {
+            seed: rng.below(1 << 20),
+            n_small: 40,
+            n_large: 10,
+            duration_us: 120_000_000, // 2 min
+            rate_per_sec: 40.0,
+            ..paper_workload()
+        };
+        let trace = synthesize(&synth);
+        let spec = ClusterSpec {
+            nodes: vec![kiss_node(1024), kiss_node(768), kiss_node(512)],
+            router: RouterKind::LeastLoaded,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::HoldsMemory,
+            migration: None,
+            controller: None,
+            topology: Topology::Flat,
+            churn: None,
+        }
+        .with_cloud(80_000)
+        .with_migration(15_000)
+        .with_topology(Topology::Ring { hop_us: 1_000 })
+        .with_churn(ChurnConfig {
+            seed: rng.below(1 << 16),
+            mean_up_us: 20_000_000, // aggressive: ~6 failures/node over 2 min
+            mean_down_us: 10_000_000,
+        });
+        let a = run_cluster(&trace, &spec);
+        let b = run_cluster(&trace, &spec);
+        if a.report != b.report {
+            return Err(format!("cluster reports diverged: {:?} vs {:?}", a.report, b.report));
+        }
+        if a.per_node != b.per_node {
+            return Err("per-node reports diverged".into());
+        }
+        if (a.report.node_downs, a.report.node_ups, a.report.overall.churn_evictions)
+            != (b.report.node_downs, b.report.node_ups, b.report.overall.churn_evictions)
+        {
+            return Err("churn schedules diverged".into());
+        }
+        if a.churn_reroutes != b.churn_reroutes || a.live != b.live {
+            return Err("churn reroutes / liveness diverged".into());
+        }
+        if a.report.node_downs == 0 {
+            return Err("churn this aggressive must fire within 2 minutes".into());
+        }
+        if !a.report.is_consistent() {
+            return Err(format!("inconsistent report: {:?}", a.report));
+        }
+        Ok(())
+    });
+}
+
+/// The churn acceptance lock: on the stressed hetero workload under
+/// real churn, warm-container migration + fallbacks absorb failures —
+/// strictly fewer drops+offloads than the same churn with migration
+/// disabled, with real node failures and real rescue traffic.
+#[test]
+fn migration_absorbs_churn_on_the_stressed_hetero_fleet() {
+    let trace = synthesize(&stressed_hetero_workload());
+    let churn = ChurnConfig {
+        seed: 2025,
+        mean_up_us: 120_000_000, // ~4 failures over the 8-minute trace
+        mean_down_us: 30_000_000,
+    };
+
+    let without = {
+        let mut spec = hetero_spec();
+        spec.churn = Some(churn);
+        run_cluster(&trace, &spec)
+    };
+    assert!(
+        without.report.node_downs > 0,
+        "churn must actually fire: {:?}",
+        without.report
+    );
+    let without_failures =
+        without.report.overall.drops + without.report.overall.offloads;
+    assert!(without_failures > 0, "churn must stress the fleet: {:?}", without.report);
+
+    let with = {
+        let mut spec = hetero_spec().with_migration(15_000);
+        spec.churn = Some(churn);
+        run_cluster(&trace, &spec)
+    };
+    let with_failures = with.report.overall.drops + with.report.overall.offloads;
+
+    assert_eq!(
+        with.report.node_downs, without.report.node_downs,
+        "the seeded churn schedule must not depend on the migration policy"
+    );
+    assert!(
+        with.report.overall.migrations + with.rescues > 0,
+        "the rescue path must fire under churn: {:?} (rescues {})",
+        with.report.overall,
+        with.rescues
+    );
+    assert!(
+        with_failures < without_failures,
+        "migration+fallbacks must absorb churn: {with_failures} vs {without_failures} \
+         (migrations {}, rescues {}, reroutes {})",
+        with.report.overall.migrations,
+        with.rescues,
+        with.churn_reroutes
+    );
+    assert!(with.report.is_consistent());
+}
+
+/// The cluster-churn experiment table reflects the same ordering on its
+/// own workload: at the highest failure rate, the migration series
+/// shows fewer placement failures than the static series.
+#[test]
+fn churn_experiment_reports_the_absorption() {
+    let sweep = kiss_faas::experiments::cluster::cluster_churn(&stressed_hetero_workload());
+    let top = *kiss_faas::experiments::cluster::CHURN_RATE_GRID_PER_HOUR
+        .last()
+        .unwrap();
+    let stat = sweep.value_at("static", top).unwrap();
+    let migr = sweep.value_at("migrate", top).unwrap();
+    assert!(
+        migr < stat,
+        "experiment must show migration absorbing churn: {migr} vs {stat}"
+    );
+    // With no churn the two series reduce to the PR-2 migration result.
+    let stat0 = sweep.value_at("static", 0.0).unwrap();
+    let migr0 = sweep.value_at("migrate", 0.0).unwrap();
+    assert!(migr0 <= stat0, "no-churn point must not regress: {migr0} vs {stat0}");
 }
 
 /// The cluster sweep experiments run end-to-end on a reduced workload
