@@ -7,7 +7,9 @@
 use kiss_faas::bench::{group, Bencher};
 use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::coordinator::Balancer;
-use kiss_faas::experiments::{fairness, paper_workload, policy_independence, stress, sweeps, workload};
+use kiss_faas::experiments::{
+    fairness, paper_workload, policy_independence, stress, sweeps, workload, Artifact, ExpParams,
+};
 use kiss_faas::sim::{run_trace_with, InitOccupancy};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::SizeClass;
@@ -38,10 +40,10 @@ fn main() {
     };
 
     group("figures: workload analysis (figs 2-5)");
-    one("exp/fig2", &|| workload::fig2(&w));
-    one("exp/fig3", &|| workload::fig3(&w));
-    one("exp/fig4", &|| workload::fig4(&w));
-    one("exp/fig5", &|| workload::fig5(&w));
+    one("exp/fig2", &|| workload::fig2(&w).render_text());
+    one("exp/fig3", &|| workload::fig3(&w).render_text());
+    one("exp/fig4", &|| workload::fig4(&w).render_text());
+    one("exp/fig5", &|| workload::fig5(&w).render_text());
 
     group("figures: cold-start / drop sweeps (figs 7-9)");
     one("exp/fig7 (6 configs x 11 mem points)", &|| sweeps::fig7(&w).render());
@@ -64,6 +66,18 @@ fn main() {
         let (k, b) = stress::stress(10, 0.02, 2025);
         stress::render(&k, &b)
     });
+
+    group("artifact rendering (fig8 sweep -> text/json/csv)");
+    {
+        let artifact = Artifact::Sweep(sweeps::fig8(&w));
+        let entry = kiss_faas::experiments::find("fig8").unwrap();
+        let params = ExpParams::default();
+        one("artifact/render_text", &|| artifact.render_text());
+        one("artifact/render_json", &|| {
+            entry.artifact_json(&params, &artifact).to_string_pretty()
+        });
+        one("artifact/render_csv", &|| artifact.render_csv());
+    }
 
     // ----------------------------------------------------------------- //
     group("ablation: size threshold sensitivity (KiSS 80-20, 4GB)");

@@ -1,0 +1,425 @@
+//! Typed experiment artifacts — the structured results every registry
+//! entry returns, renderable as text (bit-compatible with the historical
+//! hand-rolled tables), JSON (via [`crate::util::json`]), and CSV.
+//!
+//! Two shapes cover the whole evaluation:
+//!
+//! * [`Sweep`] — an x axis plus labeled series, the shape of every
+//!   figure-style experiment (Figs 7–16, `cluster-*`).
+//! * [`Table`] — free-form columns and typed cells, the shape of the
+//!   workload-analysis figures (Figs 2–5) and the §6.5 stress table,
+//!   which mix percentile curves, integer counts, and footnote lines.
+//!
+//! Text rendering is layout-exact: [`Column::width`] and
+//! [`Column::prec`] carry the historical `format!` widths, so the text
+//! form of every pre-existing experiment is byte-identical to what the
+//! string renderers produced before artifacts existed (locked by the
+//! golden tests in `tests/integration_experiments.rs`).
+
+use std::fmt::Write as _;
+
+use crate::util::json::{obj, Json};
+
+/// One labeled series over the sweep's x axis.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label (e.g. `"kiss-80-20"`, `"baseline"`).
+    pub label: String,
+    /// One value per x-axis point; `NaN` renders as `-` / JSON `null`.
+    pub values: Vec<f64>,
+}
+
+/// A figure: x axis + labeled series, printable as an aligned table (the
+/// textual equivalent of the paper's plot).
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    /// Table heading, printed as `## {title}`.
+    pub title: String,
+    /// x-axis name (first column header).
+    pub x_label: String,
+    /// y-axis name (what the series values measure).
+    pub y_label: String,
+    /// The x-axis points.
+    pub xs: Vec<f64>,
+    /// The labeled series, one column each.
+    pub series: Vec<Series>,
+}
+
+impl Sweep {
+    /// Look up a series by its legend label.
+    pub fn series_named(&self, label: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.label == label)
+    }
+
+    /// Value of series `label` at x-axis point `x` (exact match).
+    pub fn value_at(&self, label: &str, x: f64) -> Option<f64> {
+        let idx = self.xs.iter().position(|&v| (v - x).abs() < 1e-9)?;
+        self.series_named(label)?.values.get(idx).copied()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let _ = writeln!(out, "   ({} vs {})", self.y_label, self.x_label);
+        let _ = write!(out, "{:>10}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, "{:>14}", s.label);
+        }
+        let _ = writeln!(out);
+        for (i, x) in self.xs.iter().enumerate() {
+            let _ = write!(out, "{x:>10.0}");
+            for s in &self.series {
+                match s.values.get(i) {
+                    Some(v) if v.is_finite() => {
+                        let _ = write!(out, "{v:>14.2}");
+                    }
+                    _ => {
+                        let _ = write!(out, "{:>14}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// Layout + name of one [`Table`] column.
+#[derive(Clone, Debug)]
+pub struct Column {
+    /// Header text, right-aligned into `width`.
+    pub name: String,
+    /// Total column width in characters (includes inter-column padding).
+    pub width: usize,
+    /// Decimal places for [`Cell::Num`] values; `None` prints the float
+    /// with default formatting (integers and strings ignore this).
+    pub prec: Option<usize>,
+}
+
+impl Column {
+    /// Shorthand constructor.
+    pub fn new(name: &str, width: usize, prec: Option<usize>) -> Self {
+        Self { name: name.to_string(), width, prec }
+    }
+}
+
+/// One typed cell of a [`Table`] row.
+#[derive(Clone, Debug)]
+pub enum Cell {
+    /// Text (e.g. a configuration label).
+    Str(String),
+    /// Exact count (e.g. invocation volumes).
+    Int(u64),
+    /// Measurement; non-finite values render as `-` / JSON `null`.
+    Num(f64),
+}
+
+/// A free-form table: typed cells under layout-bearing columns, with
+/// optional free-text lines before the header (`preamble`) and after the
+/// rows (`notes`).
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Table heading, printed as `## {title}`.
+    pub title: String,
+    /// Free-text lines between the title and the column header.
+    pub preamble: Vec<String>,
+    /// Column names + layout.
+    pub columns: Vec<Column>,
+    /// Rows of cells; each row has one cell per column.
+    pub rows: Vec<Vec<Cell>>,
+    /// Free-text lines after the rows (e.g. summary footers).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    /// Render as an aligned text table (layout-exact; see module docs).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        for line in &self.preamble {
+            let _ = writeln!(out, "{line}");
+        }
+        for c in &self.columns {
+            let _ = write!(out, "{:>width$}", c.name, width = c.width);
+        }
+        let _ = writeln!(out);
+        for row in &self.rows {
+            for (cell, c) in row.iter().zip(&self.columns) {
+                let w = c.width;
+                match cell {
+                    Cell::Str(s) => {
+                        let _ = write!(out, "{s:>w$}");
+                    }
+                    Cell::Int(n) => {
+                        let _ = write!(out, "{n:>w$}");
+                    }
+                    Cell::Num(x) if x.is_finite() => match c.prec {
+                        Some(p) => {
+                            let _ = write!(out, "{x:>w$.p$}");
+                        }
+                        None => {
+                            let _ = write!(out, "{x:>w$}");
+                        }
+                    },
+                    Cell::Num(_) => {
+                        let _ = write!(out, "{:>w$}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        for line in &self.notes {
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+}
+
+/// A typed experiment result: what every registry entry's `run` returns.
+#[derive(Clone, Debug)]
+pub enum Artifact {
+    /// Figure-style result (x axis + labeled series).
+    Sweep(Sweep),
+    /// Free-form table result (typed cells, footnotes).
+    Table(Table),
+}
+
+impl Artifact {
+    /// The artifact's heading.
+    pub fn title(&self) -> &str {
+        match self {
+            Artifact::Sweep(s) => &s.title,
+            Artifact::Table(t) => &t.title,
+        }
+    }
+
+    /// Render as the historical aligned text table (byte-identical to the
+    /// pre-artifact string renderers; golden-locked).
+    pub fn render_text(&self) -> String {
+        match self {
+            Artifact::Sweep(s) => s.render(),
+            Artifact::Table(t) => t.render_text(),
+        }
+    }
+
+    /// Structured JSON form (data only — the registry wraps this with
+    /// experiment metadata; see `Experiment::artifact_json`). Non-finite
+    /// numbers map to `null` so output always parses as strict JSON.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Artifact::Sweep(s) => obj([
+                ("kind", Json::Str("sweep".into())),
+                ("title", Json::Str(s.title.clone())),
+                ("x_label", Json::Str(s.x_label.clone())),
+                ("y_label", Json::Str(s.y_label.clone())),
+                ("xs", Json::Arr(s.xs.iter().map(|&x| Json::num_or_null(x)).collect())),
+                (
+                    "series",
+                    Json::Arr(
+                        s.series
+                            .iter()
+                            .map(|sr| {
+                                obj([
+                                    ("label", Json::Str(sr.label.clone())),
+                                    (
+                                        "values",
+                                        Json::Arr(
+                                            sr.values
+                                                .iter()
+                                                .map(|&v| Json::num_or_null(v))
+                                                .collect(),
+                                        ),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Artifact::Table(t) => obj([
+                ("kind", Json::Str("table".into())),
+                ("title", Json::Str(t.title.clone())),
+                (
+                    "preamble",
+                    Json::Arr(t.preamble.iter().map(|l| Json::Str(l.clone())).collect()),
+                ),
+                (
+                    "columns",
+                    Json::Arr(t.columns.iter().map(|c| Json::Str(c.name.clone())).collect()),
+                ),
+                (
+                    "rows",
+                    Json::Arr(
+                        t.rows
+                            .iter()
+                            .map(|row| {
+                                Json::Arr(
+                                    row.iter()
+                                        .map(|cell| match cell {
+                                            Cell::Str(s) => Json::Str(s.clone()),
+                                            Cell::Int(n) => Json::Num(*n as f64),
+                                            Cell::Num(x) => Json::num_or_null(*x),
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("notes", Json::Arr(t.notes.iter().map(|l| Json::Str(l.clone())).collect())),
+            ]),
+        }
+    }
+
+    /// Render as plain CSV: a header row, then data rows. Sweeps emit
+    /// `x_label,label…`; tables emit their column names. Free-text
+    /// preamble/notes lines are dropped (use JSON for full fidelity);
+    /// non-finite numbers become empty fields.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        match self {
+            Artifact::Sweep(s) => {
+                let mut header = vec![csv_field(&s.x_label)];
+                header.extend(s.series.iter().map(|sr| csv_field(&sr.label)));
+                out.push_str(&header.join(","));
+                out.push('\n');
+                for (i, x) in s.xs.iter().enumerate() {
+                    let mut row = vec![csv_num(*x)];
+                    for sr in &s.series {
+                        row.push(sr.values.get(i).map(|&v| csv_num(v)).unwrap_or_default());
+                    }
+                    out.push_str(&row.join(","));
+                    out.push('\n');
+                }
+            }
+            Artifact::Table(t) => {
+                let header: Vec<String> =
+                    t.columns.iter().map(|c| csv_field(&c.name)).collect();
+                out.push_str(&header.join(","));
+                out.push('\n');
+                for row in &t.rows {
+                    let cells: Vec<String> = row
+                        .iter()
+                        .map(|cell| match cell {
+                            Cell::Str(s) => csv_field(s),
+                            Cell::Int(n) => n.to_string(),
+                            Cell::Num(x) => csv_num(*x),
+                        })
+                        .collect();
+                    out.push_str(&cells.join(","));
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Format one f64 CSV field: full `Display` precision, empty if
+/// non-finite (CSV has no NaN literal).
+fn csv_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        String::new()
+    }
+}
+
+/// Quote a CSV field when it contains a delimiter, quote, or newline.
+fn csv_field(s: &str) -> String {
+    if s.contains(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_lookup_and_render() {
+        let s = Sweep {
+            title: "t".into(),
+            x_label: "GB".into(),
+            y_label: "%".into(),
+            xs: vec![1.0, 2.0],
+            series: vec![
+                Series { label: "a".into(), values: vec![10.0, 5.0] },
+                Series { label: "b".into(), values: vec![20.0, f64::NAN] },
+            ],
+        };
+        assert_eq!(s.value_at("a", 2.0), Some(5.0));
+        assert_eq!(s.value_at("c", 2.0), None);
+        let r = s.render();
+        assert!(r.contains("10.00"), "{r}");
+        assert!(r.contains('-'), "NaN renders as dash: {r}");
+    }
+
+    #[test]
+    fn table_renders_layout_exact() {
+        // Widths/precisions reproduce hand-written format! layouts: a
+        // 6-wide prec-0 first column and 16-wide prec-2 data columns is
+        // exactly the historical render_curves layout.
+        let t = Table {
+            title: "T".into(),
+            preamble: vec!["lead".into()],
+            columns: vec![
+                Column::new("pctl", 6, Some(0)),
+                Column::new("app (MB)", 16, Some(2)),
+            ],
+            rows: vec![
+                vec![Cell::Num(50.0), Cell::Num(123.456)],
+                vec![Cell::Num(99.0), Cell::Num(f64::NAN)],
+            ],
+            notes: vec!["foot".into()],
+        };
+        let expect = "## T\nlead\n  pctl        app (MB)\n    50          123.46\n    99               -\nfoot\n";
+        assert_eq!(t.render_text(), expect);
+    }
+
+    #[test]
+    fn table_mixed_cells_render() {
+        let t = Table {
+            title: "S".into(),
+            preamble: vec![],
+            columns: vec![Column::new("config", 8, None), Column::new("n", 6, None)],
+            rows: vec![vec![Cell::Str("kiss".into()), Cell::Int(1234)]],
+            notes: vec![],
+        };
+        assert_eq!(t.render_text(), "## S\n  config     n\n    kiss  1234\n");
+    }
+
+    #[test]
+    fn sweep_json_is_null_safe_and_parses() {
+        let a = Artifact::Sweep(Sweep {
+            title: "t".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            xs: vec![1.0],
+            series: vec![Series { label: "a".into(), values: vec![f64::NAN] }],
+        });
+        let j = a.to_json();
+        let text = j.to_string_compact();
+        assert!(text.contains("null"), "{text}");
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let a = Artifact::Sweep(Sweep {
+            title: "t".into(),
+            x_label: "mem_GB".into(),
+            y_label: "%".into(),
+            xs: vec![1.0, 2.0],
+            series: vec![Series { label: "kiss,80".into(), values: vec![0.5, f64::NAN] }],
+        });
+        let csv = a.render_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("mem_GB,\"kiss,80\""));
+        assert_eq!(lines.next(), Some("1,0.5"));
+        assert_eq!(lines.next(), Some("2,"));
+    }
+}

@@ -410,29 +410,6 @@ pub fn cluster_churn(synth: &SynthConfig) -> Sweep {
     }
 }
 
-/// Default-workload entry points used by the CLI registry.
-pub fn cluster_scale_default() -> Sweep {
-    cluster_scale(&cluster_workload())
-}
-pub fn cluster_offload_default() -> Sweep {
-    cluster_offload(&cluster_workload())
-}
-pub fn cluster_hetero_default() -> Sweep {
-    cluster_hetero(&cluster_workload())
-}
-pub fn cluster_migration_default() -> Sweep {
-    cluster_migration(&cluster_workload())
-}
-pub fn cluster_controller_default() -> Sweep {
-    cluster_controller(&cluster_workload())
-}
-pub fn cluster_topology_default() -> Sweep {
-    cluster_topology(&cluster_workload())
-}
-pub fn cluster_churn_default() -> Sweep {
-    cluster_churn(&cluster_workload())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

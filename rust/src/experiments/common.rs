@@ -45,62 +45,11 @@ pub fn paper_workload() -> SynthConfig {
     }
 }
 
-/// One labeled series over the memory grid.
-#[derive(Clone, Debug)]
-pub struct Series {
-    pub label: String,
-    pub values: Vec<f64>,
-}
-
-/// A figure: x axis + labeled series, printable as an aligned table (the
-/// textual equivalent of the paper's plot).
-#[derive(Clone, Debug)]
-pub struct Sweep {
-    pub title: String,
-    pub x_label: String,
-    pub y_label: String,
-    pub xs: Vec<f64>,
-    pub series: Vec<Series>,
-}
-
-impl Sweep {
-    pub fn series_named(&self, label: &str) -> Option<&Series> {
-        self.series.iter().find(|s| s.label == label)
-    }
-
-    pub fn value_at(&self, label: &str, x: f64) -> Option<f64> {
-        let idx = self.xs.iter().position(|&v| (v - x).abs() < 1e-9)?;
-        self.series_named(label)?.values.get(idx).copied()
-    }
-
-    /// Render as an aligned text table.
-    pub fn render(&self) -> String {
-        use std::fmt::Write;
-        let mut out = String::new();
-        let _ = writeln!(out, "## {}", self.title);
-        let _ = writeln!(out, "   ({} vs {})", self.y_label, self.x_label);
-        let _ = write!(out, "{:>10}", self.x_label);
-        for s in &self.series {
-            let _ = write!(out, "{:>14}", s.label);
-        }
-        let _ = writeln!(out);
-        for (i, x) in self.xs.iter().enumerate() {
-            let _ = write!(out, "{x:>10.0}");
-            for s in &self.series {
-                match s.values.get(i) {
-                    Some(v) if v.is_finite() => {
-                        let _ = write!(out, "{v:>14.2}");
-                    }
-                    _ => {
-                        let _ = write!(out, "{:>14}", "-");
-                    }
-                }
-            }
-            let _ = writeln!(out);
-        }
-        out
-    }
-}
+// The historical home of `Series`/`Sweep`; they now live in
+// [`super::artifact`] as one of the two typed artifact shapes, and are
+// re-exported here so the experiment modules (and external callers of
+// `experiments::common`) keep their import paths.
+pub use super::artifact::{Series, Sweep};
 
 /// Run one config against a pre-synthesized trace.
 ///
@@ -156,25 +105,6 @@ pub fn baseline_cfg(synth: &SynthConfig, mem_gb: u64) -> SimConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn sweep_lookup_and_render() {
-        let s = Sweep {
-            title: "t".into(),
-            x_label: "GB".into(),
-            y_label: "%".into(),
-            xs: vec![1.0, 2.0],
-            series: vec![
-                Series { label: "a".into(), values: vec![10.0, 5.0] },
-                Series { label: "b".into(), values: vec![20.0, f64::NAN] },
-            ],
-        };
-        assert_eq!(s.value_at("a", 2.0), Some(5.0));
-        assert_eq!(s.value_at("c", 2.0), None);
-        let r = s.render();
-        assert!(r.contains("10.00"), "{r}");
-        assert!(r.contains('-'), "NaN renders as dash: {r}");
-    }
 
     #[test]
     fn run_single_smoke() {

@@ -1,13 +1,16 @@
 //! Figures 10–13 (fairness analysis, §4.4/§6.3): cold-start % and drop %
 //! broken out per size class, KiSS 80-20 vs baseline.
 
-use super::common::{baseline_cfg, kiss_cfg, paper_workload, run_on, Series, Sweep, MEM_GRID_GB};
+use super::common::{baseline_cfg, kiss_cfg, run_on, Series, Sweep, MEM_GRID_GB};
 use crate::trace::synth::{synthesize, SynthConfig};
 use crate::trace::SizeClass;
 
+/// Which per-class metric a fairness sweep reports.
 #[derive(Clone, Copy, Debug)]
 pub enum Metric {
+    /// Cold starts as a percentage of serviceable invocations.
     ColdStartPct,
+    /// Hard drops as a percentage of total invocations.
     DropPct,
 }
 
@@ -47,30 +50,21 @@ pub fn fairness_sweep(synth: &SynthConfig, class: SizeClass, metric: Metric) -> 
     }
 }
 
+/// Fig. 10: cold-start % for small containers.
 pub fn fig10(synth: &SynthConfig) -> Sweep {
     fairness_sweep(synth, SizeClass::Small, Metric::ColdStartPct)
 }
+/// Fig. 11: cold-start % for large containers.
 pub fn fig11(synth: &SynthConfig) -> Sweep {
     fairness_sweep(synth, SizeClass::Large, Metric::ColdStartPct)
 }
+/// Fig. 12: drop % for small containers.
 pub fn fig12(synth: &SynthConfig) -> Sweep {
     fairness_sweep(synth, SizeClass::Small, Metric::DropPct)
 }
+/// Fig. 13: drop % for large containers.
 pub fn fig13(synth: &SynthConfig) -> Sweep {
     fairness_sweep(synth, SizeClass::Large, Metric::DropPct)
-}
-
-pub fn fig10_default() -> Sweep {
-    fig10(&paper_workload())
-}
-pub fn fig11_default() -> Sweep {
-    fig11(&paper_workload())
-}
-pub fn fig12_default() -> Sweep {
-    fig12(&paper_workload())
-}
-pub fn fig13_default() -> Sweep {
-    fig13(&paper_workload())
 }
 
 #[cfg(test)]

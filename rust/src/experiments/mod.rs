@@ -1,5 +1,5 @@
-//! Every table and figure of the paper's evaluation as a runnable
-//! experiment (see DESIGN.md §4 for the full index):
+//! Every table and figure of the paper's evaluation as a typed,
+//! parameterizable experiment (see DESIGN.md §4 for the full index):
 //!
 //! | id        | paper artifact                              | module |
 //! |-----------|---------------------------------------------|--------|
@@ -10,58 +10,55 @@
 //! | stress    | 2 h, 4–5 M invocation stress test (§6.5)    | [`stress`] |
 //! | cluster-* | multi-node edge cluster + offload (beyond the paper) | [`cluster`] |
 //!
-//! `run_by_name` is the CLI entry: it renders the experiment's table(s)
-//! as text, which EXPERIMENTS.md records against the paper's numbers.
+//! The public API is the declarative registry ([`mod@registry`]): each
+//! entry pairs an
+//! [`ExperimentMeta`] (id, title, paper reference, group, knobs) with a
+//! typed runner `fn(&ExpParams) -> Artifact`. An [`Artifact`] renders to
+//! text (byte-identical to the historical tables, golden-locked), JSON
+//! (a schema-tagged envelope via [`crate::util::json`]), and CSV —
+//! `repro experiment <id|group|all> [--format text|json|csv] [--out DIR]
+//! [--jobs N]` is a thin shell over it. [`ALL_EXPERIMENTS`], the CLI
+//! usage text, and the `docs/EXPERIMENTS.md` index all derive from the
+//! same registry, so the three can never drift (tests enforce it).
+//!
+//! ```no_run
+//! use kiss_faas::experiments::{find, ExpParams};
+//!
+//! let fig8 = find("fig8").unwrap();
+//! let artifact = fig8.run(&ExpParams { seed: Some(7), scale: 0.1 });
+//! println!("{}", artifact.render_text());
+//! ```
 
+pub mod artifact;
 pub mod cluster;
 pub mod common;
 pub mod fairness;
 pub mod policy_independence;
+pub mod registry;
 pub mod stress;
 pub mod sweeps;
 pub mod workload;
 
-pub use common::{paper_workload, run_on, run_single, Series, Sweep, MEM_GRID_GB, SPLITS};
+pub use artifact::{Artifact, Cell, Column, Series, Sweep, Table};
+pub use common::{paper_workload, run_on, run_single, MEM_GRID_GB, SPLITS};
+pub use registry::{
+    apply_params, by_group, catalog_markdown, find, registry, usage_summary, ExpParams,
+    Experiment, ExperimentMeta, Group, ALL_EXPERIMENTS, ARTIFACT_SCHEMA, N_EXPERIMENTS,
+    REGISTRY,
+};
 
-/// All experiment names accepted by [`run_by_name`].
-pub const ALL_EXPERIMENTS: [&str; 21] = [
-    "fig2", "fig3", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "fig14", "fig15", "fig16", "cluster-scale", "cluster-offload",
-    "cluster-hetero", "cluster-migration", "cluster-controller", "cluster-topology",
-    "cluster-churn",
-];
-
-/// Run one experiment by its paper-figure name and render its output.
-/// `stress` takes a scale factor (1.0 = the paper's full 4–5 M volume).
+/// Run one experiment by its registry id and render its table as text —
+/// the historical string-keyed entry point, now a thin shim over
+/// [`find`] + [`Experiment::run`]. `stress_scale` scales the arrival
+/// rate of the `stress` experiment only (1.0 = the paper's full 4–5 M
+/// volume); all other experiments run at their defaults.
 pub fn run_by_name(name: &str, stress_scale: f64) -> Option<String> {
-    Some(match name {
-        "fig2" => workload::fig2_default(),
-        "fig3" => workload::fig3_default(),
-        "fig4" => workload::fig4_default(),
-        "fig5" => workload::fig5_default(),
-        "fig7" => sweeps::fig7_default().render(),
-        "fig8" => sweeps::fig8_default().render(),
-        "fig9" => sweeps::fig9_default().render(),
-        "fig10" => fairness::fig10_default().render(),
-        "fig11" => fairness::fig11_default().render(),
-        "fig12" => fairness::fig12_default().render(),
-        "fig13" => fairness::fig13_default().render(),
-        "fig14" => policy_independence::fig14_default().render(),
-        "fig15" => policy_independence::fig15_default().render(),
-        "fig16" => policy_independence::fig16_default().render(),
-        "cluster-scale" => cluster::cluster_scale_default().render(),
-        "cluster-offload" => cluster::cluster_offload_default().render(),
-        "cluster-hetero" => cluster::cluster_hetero_default().render(),
-        "cluster-migration" => cluster::cluster_migration_default().render(),
-        "cluster-controller" => cluster::cluster_controller_default().render(),
-        "cluster-topology" => cluster::cluster_topology_default().render(),
-        "cluster-churn" => cluster::cluster_churn_default().render(),
-        "stress" => {
-            let (k, b) = stress::stress(10, stress_scale, 2025);
-            stress::render(&k, &b)
-        }
-        _ => return None,
-    })
+    let e = find(name)?;
+    let params = ExpParams {
+        seed: None,
+        scale: if e.meta.id == "stress" { stress_scale } else { 1.0 },
+    };
+    Some(e.run(&params).render_text())
 }
 
 #[cfg(test)]
@@ -77,5 +74,19 @@ mod tests {
     fn registry_names_match_figures() {
         assert!(ALL_EXPERIMENTS.contains(&"fig7"));
         assert!(ALL_EXPERIMENTS.contains(&"fig16"));
+        assert!(ALL_EXPERIMENTS.contains(&"stress"));
+    }
+
+    #[test]
+    fn run_by_name_accepts_exactly_the_registry_ids() {
+        // Lookup must succeed for every registered id and nothing else;
+        // run_by_name is find() + run(), so checking find() checks the
+        // accepted name set without paying for full experiment runs.
+        for id in ALL_EXPERIMENTS {
+            assert!(find(id).is_some(), "registry id {id:?} not resolvable");
+        }
+        for bogus in ["fig1", "fig6", "fig17", "cluster", "all", ""] {
+            assert!(find(bogus).is_none(), "{bogus:?} should not resolve");
+        }
     }
 }

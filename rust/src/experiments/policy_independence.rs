@@ -3,16 +3,20 @@
 //! overall, and large containers. The paper's finding: the curves
 //! overlap — the partition, not the policy, carries the benefit.
 
-use super::common::{paper_workload, run_on, Series, Sweep, MEM_GRID_GB};
+use super::common::{run_on, Series, Sweep, MEM_GRID_GB};
 use crate::config::{Mode, SimConfig};
 use crate::coordinator::policy::PolicyKind;
 use crate::trace::synth::{synthesize, SynthConfig};
 use crate::trace::SizeClass;
 
+/// Which report slice a policy-independence sweep reads.
 #[derive(Clone, Copy, Debug)]
 pub enum Slice {
+    /// The small-container class only (Fig. 14).
     Small,
+    /// All invocations (Fig. 15).
     Overall,
+    /// The large-container class only (Fig. 16).
     Large,
 }
 
@@ -60,24 +64,17 @@ pub fn policy_sweep(synth: &SynthConfig, slice: Slice) -> Sweep {
     }
 }
 
+/// Fig. 14: cold-start % of the small slice per replacement policy.
 pub fn fig14(synth: &SynthConfig) -> Sweep {
     policy_sweep(synth, Slice::Small)
 }
+/// Fig. 15: overall cold-start % per replacement policy.
 pub fn fig15(synth: &SynthConfig) -> Sweep {
     policy_sweep(synth, Slice::Overall)
 }
+/// Fig. 16: cold-start % of the large slice per replacement policy.
 pub fn fig16(synth: &SynthConfig) -> Sweep {
     policy_sweep(synth, Slice::Large)
-}
-
-pub fn fig14_default() -> Sweep {
-    fig14(&paper_workload())
-}
-pub fn fig15_default() -> Sweep {
-    fig15(&paper_workload())
-}
-pub fn fig16_default() -> Sweep {
-    fig16(&paper_workload())
 }
 
 /// Quantify "independence": max over the grid of the spread (max-min)

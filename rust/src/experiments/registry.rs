@@ -1,0 +1,519 @@
+//! The declarative experiment registry — one table of typed
+//! [`Experiment`] entries from which everything else derives: the CLI's
+//! name resolution and usage text, `docs/EXPERIMENTS.md`'s index, the
+//! JSON artifact envelope, and [`ALL_EXPERIMENTS`]. Adding an experiment
+//! means adding one entry here; the drift tests in
+//! `tests/integration_experiments.rs` fail if any derived surface is
+//! hand-edited out of sync.
+
+use super::artifact::Artifact;
+use super::common::paper_workload;
+use super::{cluster, fairness, policy_independence, stress, sweeps, workload};
+use crate::trace::synth::SynthConfig;
+use crate::util::json::{obj, Json};
+
+/// Parameters every experiment accepts. The default value reproduces the
+/// historical `*_default()` behavior bit-for-bit (paper workloads,
+/// full volume).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpParams {
+    /// Workload seed override; `None` keeps the experiment's calibrated
+    /// default (2025 for the paper workloads).
+    pub seed: Option<u64>,
+    /// Volume scale, 1.0 = the paper's full volume. Scales the trace
+    /// *duration* for figure and cluster experiments and the *arrival
+    /// rate* for `stress` (whose duration is pinned to the paper's 2 h).
+    pub scale: f64,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        Self { seed: None, scale: 1.0 }
+    }
+}
+
+impl ExpParams {
+    /// JSON form recorded in every artifact envelope. Seeds above 2^53
+    /// are not exactly representable as JSON numbers (f64), so those are
+    /// recorded as strings rather than silently rounded; a non-finite
+    /// `scale` becomes `null` (the envelope must always be strict JSON).
+    pub fn to_json(&self) -> Json {
+        obj([
+            (
+                "seed",
+                match self.seed {
+                    Some(s) if s <= (1u64 << 53) => Json::Num(s as f64),
+                    Some(s) => Json::Str(s.to_string()),
+                    None => Json::Null,
+                },
+            ),
+            ("scale", Json::num_or_null(self.scale)),
+        ])
+    }
+}
+
+/// Apply [`ExpParams`] to an experiment's default workload: seed
+/// override, then duration scaling (`scale` 1.0 leaves the workload
+/// untouched, preserving the historical defaults byte-for-byte).
+pub fn apply_params(p: &ExpParams, mut synth: SynthConfig) -> SynthConfig {
+    if let Some(seed) = p.seed {
+        synth.seed = seed;
+    }
+    if p.scale != 1.0 {
+        synth.duration_us = ((synth.duration_us as f64 * p.scale).round() as u64).max(1);
+    }
+    synth
+}
+
+/// Experiment family, the unit of CLI group selection
+/// (`repro experiment <group>`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Group {
+    /// Figs 2–5: workload analysis (§2.5) — trace properties, no policy.
+    Workload,
+    /// Figs 7–9: cold-start / drop sweeps over the memory grid (§6.1–6.2).
+    Sweeps,
+    /// Figs 10–13: per-class fairness (§6.3).
+    Fairness,
+    /// Figs 14–16: replacement-policy independence (§6.4).
+    Policy,
+    /// Beyond the paper: the multi-node edge-cluster family.
+    Cluster,
+    /// §6.5: the full-volume stress comparison.
+    Stress,
+}
+
+impl Group {
+    /// Every group, in catalog order.
+    pub const ALL: [Group; 6] = [
+        Group::Workload,
+        Group::Sweeps,
+        Group::Fairness,
+        Group::Policy,
+        Group::Cluster,
+        Group::Stress,
+    ];
+
+    /// The CLI / catalog name of the group.
+    pub fn label(self) -> &'static str {
+        match self {
+            Group::Workload => "workload",
+            Group::Sweeps => "sweeps",
+            Group::Fairness => "fairness",
+            Group::Policy => "policy",
+            Group::Cluster => "cluster",
+            Group::Stress => "stress",
+        }
+    }
+
+    /// Parse a CLI group name.
+    pub fn parse(s: &str) -> Option<Group> {
+        Group::ALL.into_iter().find(|g| g.label() == s)
+    }
+}
+
+/// Static metadata describing one experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct ExperimentMeta {
+    /// Stable CLI / artifact-file identifier (e.g. `"fig8"`).
+    pub id: &'static str,
+    /// One-line description of what the experiment measures.
+    pub title: &'static str,
+    /// Where the result sits in the paper (or `"beyond the paper"`).
+    pub paper_ref: &'static str,
+    /// The family the experiment belongs to.
+    pub group: Group,
+    /// Which [`ExpParams`] knobs the experiment responds to, with the
+    /// knob's interpretation after a colon (e.g. `"scale:duration"`).
+    pub knobs: &'static [&'static str],
+}
+
+/// One registry entry: metadata plus the typed runner.
+#[derive(Clone, Copy)]
+pub struct Experiment {
+    /// The experiment's static metadata.
+    pub meta: ExperimentMeta,
+    runner: fn(&ExpParams) -> Artifact,
+}
+
+impl std::fmt::Debug for Experiment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Experiment").field("meta", &self.meta).finish_non_exhaustive()
+    }
+}
+
+impl Experiment {
+    /// Run the experiment with the given parameters.
+    pub fn run(&self, params: &ExpParams) -> Artifact {
+        (self.runner)(params)
+    }
+
+    /// Wrap an already-computed artifact in the full JSON envelope
+    /// (schema tag, metadata, parameters, data).
+    pub fn artifact_json(&self, params: &ExpParams, artifact: &Artifact) -> Json {
+        obj([
+            ("schema", Json::Str(ARTIFACT_SCHEMA.into())),
+            ("id", Json::Str(self.meta.id.into())),
+            ("title", Json::Str(self.meta.title.into())),
+            ("paper_ref", Json::Str(self.meta.paper_ref.into())),
+            ("group", Json::Str(self.meta.group.label().into())),
+            (
+                "knobs",
+                Json::Arr(self.meta.knobs.iter().map(|&k| Json::Str(k.into())).collect()),
+            ),
+            ("params", params.to_json()),
+            ("artifact", artifact.to_json()),
+        ])
+    }
+
+    /// Run the experiment and return the full JSON envelope.
+    pub fn run_json(&self, params: &ExpParams) -> Json {
+        let artifact = self.run(params);
+        self.artifact_json(params, &artifact)
+    }
+}
+
+/// Schema tag stamped into every JSON artifact envelope.
+pub const ARTIFACT_SCHEMA: &str = "kiss-faas/experiment-artifact/v1";
+
+/// Number of registered experiments.
+pub const N_EXPERIMENTS: usize = 22;
+
+/// Knob set of every duration-scaled experiment.
+const DURATION_KNOBS: &[&str] = &["seed", "scale:duration"];
+
+const fn exp(
+    id: &'static str,
+    title: &'static str,
+    paper_ref: &'static str,
+    group: Group,
+    knobs: &'static [&'static str],
+    runner: fn(&ExpParams) -> Artifact,
+) -> Experiment {
+    Experiment { meta: ExperimentMeta { id, title, paper_ref, group, knobs }, runner }
+}
+
+/// Paper workload shaped by `p` — the default for the §6 sweep families.
+fn sim_workload(p: &ExpParams) -> SynthConfig {
+    apply_params(p, paper_workload())
+}
+
+/// Analysis workload shaped by `p` (Figs 2–5; cloud-calibrated inits).
+fn analysis_wl(p: &ExpParams) -> SynthConfig {
+    apply_params(p, workload::analysis_workload())
+}
+
+/// Cluster workload shaped by `p` (30-minute trace).
+fn cluster_wl(p: &ExpParams) -> SynthConfig {
+    apply_params(p, cluster::cluster_workload())
+}
+
+const REGISTRY_INIT: [Experiment; N_EXPERIMENTS] = [
+    exp(
+        "fig2",
+        "Memory footprint percentiles (app + Eq. 1 function estimate)",
+        "§2.5, Fig. 2",
+        Group::Workload,
+        DURATION_KNOBS,
+        |p| Artifact::Table(workload::fig2(&analysis_wl(p))),
+    ),
+    exp(
+        "fig3",
+        "Normalized invocation trends per size class",
+        "§2.5, Fig. 3",
+        Group::Workload,
+        DURATION_KNOBS,
+        |p| Artifact::Table(workload::fig3(&analysis_wl(p))),
+    ),
+    exp(
+        "fig4",
+        "Inter-arrival-time percentiles per size class",
+        "§2.5, Fig. 4",
+        Group::Workload,
+        DURATION_KNOBS,
+        |p| Artifact::Table(workload::fig4(&analysis_wl(p))),
+    ),
+    exp(
+        "fig5",
+        "Cold-start latency percentiles per size class",
+        "§2.5, Fig. 5",
+        Group::Workload,
+        DURATION_KNOBS,
+        |p| Artifact::Table(workload::fig5(&analysis_wl(p))),
+    ),
+    exp(
+        "fig7",
+        "Cold-start % across split configurations vs baseline",
+        "§6.1, Fig. 7",
+        Group::Sweeps,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(sweeps::fig7(&sim_workload(p))),
+    ),
+    exp(
+        "fig8",
+        "Cold-start %: KiSS 80-20 vs baseline",
+        "§6.1, Fig. 8",
+        Group::Sweeps,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(sweeps::fig8(&sim_workload(p))),
+    ),
+    exp(
+        "fig9",
+        "Drop %: KiSS 80-20 vs baseline",
+        "§6.2, Fig. 9",
+        Group::Sweeps,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(sweeps::fig9(&sim_workload(p))),
+    ),
+    exp(
+        "fig10",
+        "Cold-start % for small containers",
+        "§6.3, Fig. 10",
+        Group::Fairness,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(fairness::fig10(&sim_workload(p))),
+    ),
+    exp(
+        "fig11",
+        "Cold-start % for large containers",
+        "§6.3, Fig. 11",
+        Group::Fairness,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(fairness::fig11(&sim_workload(p))),
+    ),
+    exp(
+        "fig12",
+        "Drop % for small containers",
+        "§6.3, Fig. 12",
+        Group::Fairness,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(fairness::fig12(&sim_workload(p))),
+    ),
+    exp(
+        "fig13",
+        "Drop % for large containers",
+        "§6.3, Fig. 13",
+        Group::Fairness,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(fairness::fig13(&sim_workload(p))),
+    ),
+    exp(
+        "fig14",
+        "Cold-start % (small slice) across LRU/GD/FREQ",
+        "§6.4, Fig. 14",
+        Group::Policy,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(policy_independence::fig14(&sim_workload(p))),
+    ),
+    exp(
+        "fig15",
+        "Cold-start % (overall) across LRU/GD/FREQ",
+        "§6.4, Fig. 15",
+        Group::Policy,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(policy_independence::fig15(&sim_workload(p))),
+    ),
+    exp(
+        "fig16",
+        "Cold-start % (large slice) across LRU/GD/FREQ",
+        "§6.4, Fig. 16",
+        Group::Policy,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(policy_independence::fig16(&sim_workload(p))),
+    ),
+    exp(
+        "cluster-scale",
+        "Cold-start % vs node count, per router",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_scale(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-offload",
+        "Offload % vs node count, per router",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_offload(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-hetero",
+        "Heterogeneous fleet vs cloud RTT",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_hetero(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-migration",
+        "Placement-failure % vs warm-transfer cost",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_migration(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-controller",
+        "Placement-failure % vs controller epoch",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_controller(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-topology",
+        "Mean startup wait vs per-hop latency",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_topology(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-churn",
+        "Placement-failure % vs node-failure rate",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_churn(&cluster_wl(p))),
+    ),
+    exp(
+        "stress",
+        "2 h full-volume stress: KiSS vs baseline",
+        "§6.5",
+        Group::Stress,
+        &["seed", "scale:rate"],
+        |p| {
+            let (kiss, base) = stress::stress(10, p.scale, p.seed.unwrap_or(2025));
+            Artifact::Table(stress::table(&kiss, &base))
+        },
+    ),
+];
+
+/// The experiment registry, in catalog (and `experiment all`) order.
+pub static REGISTRY: [Experiment; N_EXPERIMENTS] = REGISTRY_INIT;
+
+/// Every registered experiment id, derived from [`REGISTRY`] at compile
+/// time — there is no second hand-maintained list to drift.
+pub const ALL_EXPERIMENTS: [&str; N_EXPERIMENTS] = {
+    let mut ids = [""; N_EXPERIMENTS];
+    let mut i = 0;
+    while i < N_EXPERIMENTS {
+        ids[i] = REGISTRY_INIT[i].meta.id;
+        i += 1;
+    }
+    ids
+};
+
+/// The full registry as a slice.
+pub fn registry() -> &'static [Experiment] {
+    &REGISTRY
+}
+
+/// Look up one experiment by id.
+pub fn find(id: &str) -> Option<&'static Experiment> {
+    REGISTRY.iter().find(|e| e.meta.id == id)
+}
+
+/// All experiments in `group`, in registry order.
+pub fn by_group(group: Group) -> Vec<&'static Experiment> {
+    REGISTRY.iter().filter(|e| e.meta.group == group).collect()
+}
+
+/// The markdown index table for `docs/EXPERIMENTS.md`, generated from
+/// the registry (print with `repro experiment index`; a drift test pins
+/// the committed doc to this exact output).
+pub fn catalog_markdown() -> String {
+    let mut out = String::from(
+        "| id | group | paper ref | knobs | measures |\n|---|---|---|---|---|\n",
+    );
+    for e in registry() {
+        out.push_str(&format!(
+            "| `{}` | {} | {} | `{}` | {} |\n",
+            e.meta.id,
+            e.meta.group.label(),
+            e.meta.paper_ref,
+            e.meta.knobs.join("`, `"),
+            e.meta.title,
+        ));
+    }
+    out
+}
+
+/// Compact per-group id listing for the CLI usage text.
+pub fn usage_summary() -> String {
+    let mut out = String::new();
+    for g in Group::ALL {
+        let ids: Vec<&str> = by_group(g).iter().map(|e| e.meta.id).collect();
+        out.push_str(&format!("  {:<10} {}\n", g.label(), ids.join(" ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_match_registry() {
+        assert_eq!(ALL_EXPERIMENTS.len(), registry().len());
+        for (id, e) in ALL_EXPERIMENTS.iter().zip(registry()) {
+            assert_eq!(*id, e.meta.id);
+        }
+        let mut sorted = ALL_EXPERIMENTS.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), N_EXPERIMENTS, "duplicate experiment ids");
+    }
+
+    #[test]
+    fn stress_is_registered() {
+        // The historical bug: `stress` ran via run_by_name but was
+        // missing from ALL_EXPERIMENTS, so `experiment all` skipped it.
+        assert!(find("stress").is_some());
+        assert!(ALL_EXPERIMENTS.contains(&"stress"));
+    }
+
+    #[test]
+    fn groups_partition_the_registry() {
+        let total: usize = Group::ALL.iter().map(|&g| by_group(g).len()).sum();
+        assert_eq!(total, N_EXPERIMENTS);
+        for g in Group::ALL {
+            assert_eq!(Group::parse(g.label()), Some(g));
+        }
+        assert_eq!(Group::parse("nope"), None);
+    }
+
+    #[test]
+    fn catalog_lists_every_id() {
+        let md = catalog_markdown();
+        let usage = usage_summary();
+        for id in ALL_EXPERIMENTS {
+            assert!(md.contains(&format!("| `{id}` |")), "{id} missing from catalog");
+            assert!(usage.contains(id), "{id} missing from usage");
+        }
+    }
+
+    #[test]
+    fn params_json_guards_unrepresentable_values() {
+        let p = ExpParams { seed: Some(u64::MAX), scale: f64::NAN };
+        let j = p.to_json();
+        assert_eq!(j.get("seed").and_then(Json::as_str), Some("18446744073709551615"));
+        assert_eq!(j.get("scale"), Some(&Json::Null));
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+    }
+
+    #[test]
+    fn apply_params_default_is_identity() {
+        let base = paper_workload();
+        let shaped = apply_params(&ExpParams::default(), paper_workload());
+        assert_eq!(shaped.seed, base.seed);
+        assert_eq!(shaped.duration_us, base.duration_us);
+        let shaped = apply_params(
+            &ExpParams { seed: Some(9), scale: 0.5 },
+            paper_workload(),
+        );
+        assert_eq!(shaped.seed, 9);
+        assert_eq!(shaped.duration_us, base.duration_us / 2);
+    }
+}

@@ -2,6 +2,7 @@
 //! invocations against a 10 GB pool; KiSS vs baseline on serviced volume
 //! and warm hit rate.
 
+use super::artifact::{Cell, Column, Table};
 use crate::config::SimConfig;
 use crate::metrics::Report;
 use crate::sim::run_trace;
@@ -10,12 +11,19 @@ use crate::trace::synth::{synthesize, SynthConfig};
 /// Stress-test outcome for one configuration.
 #[derive(Clone, Debug)]
 pub struct StressResult {
+    /// Configuration label (`"kiss-80-20"` or `"baseline"`).
     pub label: String,
+    /// Total trace arrivals seen by the node.
     pub total_invocations: u64,
+    /// Invocations actually served (hits + cold starts).
     pub serviced: u64,
+    /// Warm-pool hits.
     pub hits: u64,
+    /// Warm hit rate over serviceable traffic, in percent.
     pub hit_rate_pct: f64,
+    /// Cold starts over serviceable traffic, in percent.
     pub cold_start_pct: f64,
+    /// Hard drops over total traffic, in percent.
     pub drop_pct: f64,
 }
 
@@ -60,21 +68,41 @@ pub fn stress(mem_gb: u64, scale: f64, seed: u64) -> (StressResult, StressResult
     )
 }
 
-/// Render the §6.5 comparison table.
-pub fn render(kiss: &StressResult, base: &StressResult) -> String {
-    let mut out = String::new();
-    out.push_str("## §6.5 Stress test (2 h trace, 10 GB pool)\n");
-    out.push_str(&format!(
-        "{:>12} {:>14} {:>12} {:>12} {:>12} {:>10}\n",
-        "config", "invocations", "serviced", "hit-rate%", "coldstart%", "drop%"
-    ));
-    for r in [kiss, base] {
-        out.push_str(&format!(
-            "{:>12} {:>14} {:>12} {:>12.2} {:>12.2} {:>10.2}\n",
-            r.label, r.total_invocations, r.serviced, r.hit_rate_pct, r.cold_start_pct, r.drop_pct
-        ));
+/// The §6.5 comparison as a typed [`Table`] (column widths reproduce the
+/// historical `{:>12} {:>14} …` layout byte-for-byte).
+pub fn table(kiss: &StressResult, base: &StressResult) -> Table {
+    let rows = [kiss, base]
+        .iter()
+        .map(|r| {
+            vec![
+                Cell::Str(r.label.clone()),
+                Cell::Int(r.total_invocations),
+                Cell::Int(r.serviced),
+                Cell::Num(r.hit_rate_pct),
+                Cell::Num(r.cold_start_pct),
+                Cell::Num(r.drop_pct),
+            ]
+        })
+        .collect();
+    Table {
+        title: "§6.5 Stress test (2 h trace, 10 GB pool)".into(),
+        preamble: Vec::new(),
+        columns: vec![
+            Column::new("config", 12, None),
+            Column::new("invocations", 15, None),
+            Column::new("serviced", 13, None),
+            Column::new("hit-rate%", 13, Some(2)),
+            Column::new("coldstart%", 13, Some(2)),
+            Column::new("drop%", 11, Some(2)),
+        ],
+        rows,
+        notes: Vec::new(),
     }
-    out
+}
+
+/// Render the §6.5 comparison table as text.
+pub fn render(kiss: &StressResult, base: &StressResult) -> String {
+    table(kiss, base).render_text()
 }
 
 #[cfg(test)]

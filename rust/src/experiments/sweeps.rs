@@ -5,9 +5,7 @@
 //! * Fig. 8 — the 80-20 split vs baseline (the headline comparison).
 //! * Fig. 9 — drop % for KiSS 80-20 vs baseline.
 
-use super::common::{
-    baseline_cfg, kiss_cfg, paper_workload, run_on, Series, Sweep, MEM_GRID_GB, SPLITS,
-};
+use super::common::{baseline_cfg, kiss_cfg, run_on, Series, Sweep, MEM_GRID_GB, SPLITS};
 use crate::trace::synth::{synthesize, SynthConfig};
 
 fn split_label(frac: f64) -> String {
@@ -83,17 +81,6 @@ pub fn fig9(synth: &SynthConfig) -> Sweep {
             Series { label: "baseline".into(), values: base },
         ],
     }
-}
-
-/// Default-workload entry points used by the CLI.
-pub fn fig7_default() -> Sweep {
-    fig7(&paper_workload())
-}
-pub fn fig8_default() -> Sweep {
-    fig8(&paper_workload())
-}
-pub fn fig9_default() -> Sweep {
-    fig9(&paper_workload())
 }
 
 #[cfg(test)]

@@ -1,6 +1,10 @@
-//! Figures 2–5: the workload-analysis study (§2.5), rendered as tables.
-//! Thin wrappers over [`crate::analysis`] against the experiment workload.
+//! Figures 2–5: the workload-analysis study (§2.5) as typed
+//! [`Table`] artifacts. Thin wrappers over [`crate::analysis`] against
+//! the experiment workload; text rendering is byte-identical to the
+//! historical string renderers (golden-locked in
+//! `tests/integration_experiments.rs`).
 
+use super::artifact::{Cell, Column, Table};
 use super::common::paper_workload;
 use crate::analysis::{
     coldstart_percentiles, footprint_percentiles, iat_percentiles, invocation_trends, Curve,
@@ -23,99 +27,93 @@ pub fn analysis_workload() -> SynthConfig {
     }
 }
 
-fn render_curves(title: &str, unit: &str, named: &[(&str, &Curve)]) -> String {
-    use std::fmt::Write;
-    let mut out = String::new();
-    let _ = writeln!(out, "## {title}");
-    let _ = write!(out, "{:>6}", "pctl");
+/// Percentile-curve table: a 6-wide `pctl` column plus one 16-wide
+/// prec-2 column per named curve — the layout of the historical
+/// `render_curves` string renderer.
+fn curves_table(title: &str, unit: &str, named: &[(&str, &Curve)]) -> Table {
+    let mut columns = vec![Column::new("pctl", 6, Some(0))];
     for (name, _) in named {
-        let _ = write!(out, "{:>16}", format!("{name} ({unit})"));
+        columns.push(Column { name: format!("{name} ({unit})"), width: 16, prec: Some(2) });
     }
-    let _ = writeln!(out);
     let n = named.first().map(|(_, c)| c.len()).unwrap_or(0);
+    let mut rows = Vec::with_capacity(n);
     for i in 0..n {
-        let _ = write!(out, "{:>6.0}", named[0].1[i].0);
+        let mut row = vec![Cell::Num(named[0].1[i].0)];
         for (_, c) in named {
-            let _ = write!(out, "{:>16.2}", c[i].1);
+            row.push(Cell::Num(c[i].1));
         }
-        let _ = writeln!(out);
+        rows.push(row);
     }
-    out
+    Table { title: title.into(), preamble: Vec::new(), columns, rows, notes: Vec::new() }
 }
 
 /// Fig. 2: memory footprint percentiles (app + Eq. 1 function estimate).
-pub fn fig2(synth: &SynthConfig) -> String {
+pub fn fig2(synth: &SynthConfig) -> Table {
     let t = synthesize(synth);
     let d = footprint_percentiles(&t, 225.0);
-    let mut out = render_curves(
+    let mut table = curves_table(
         "Fig 2: Percentile distribution of memory footprints",
         "MB",
         &[("app", &d.app_mb), ("function(Eq.1)", &d.func_mb)],
     );
-    out.push_str(&format!(
-        "functions at or below {} MB: {:.1}%\n",
+    table.notes.push(format!(
+        "functions at or below {} MB: {:.1}%",
         d.small_cutoff_mb,
         d.frac_below_cutoff * 100.0
     ));
-    out
+    table
 }
 
 /// Fig. 3: normalized invocation trends, minute-binned, plus the
 /// small:large ratio the paper reports as 4–6.5×.
-pub fn fig3(synth: &SynthConfig) -> String {
-    use std::fmt::Write;
+pub fn fig3(synth: &SynthConfig) -> Table {
     let t = synthesize(synth);
     let d = invocation_trends(&t);
-    let mut out = String::new();
-    let _ = writeln!(out, "## Fig 3: Normalized invocation trends (small vs large)");
-    let _ = writeln!(out, "mean small:large invocation ratio = {:.2}x", d.mean_ratio);
-    // Print a coarse time series (every ~1/12 of the trace).
+    // Coarse time series (every ~1/12 of the trace); the 11-wide data
+    // columns reproduce the historical `{:>8} {:>10.3} {:>10.3}` rows.
     let step = (d.small.len() / 12).max(1);
-    let _ = writeln!(out, "{:>8} {:>10} {:>10}", "minute", "small", "large");
+    let mut rows = Vec::new();
     for i in (0..d.small.len()).step_by(step) {
-        let _ = writeln!(out, "{:>8} {:>10.3} {:>10.3}", i, d.small[i], d.large[i]);
+        rows.push(vec![Cell::Int(i as u64), Cell::Num(d.small[i]), Cell::Num(d.large[i])]);
     }
-    out
+    Table {
+        title: "Fig 3: Normalized invocation trends (small vs large)".into(),
+        preamble: vec![format!(
+            "mean small:large invocation ratio = {:.2}x",
+            d.mean_ratio
+        )],
+        columns: vec![
+            Column::new("minute", 8, None),
+            Column::new("small", 11, Some(3)),
+            Column::new("large", 11, Some(3)),
+        ],
+        rows,
+        notes: Vec::new(),
+    }
 }
 
 /// Fig. 4: IAT percentiles (sliding windows, z-score filtered).
-pub fn fig4(synth: &SynthConfig) -> String {
+pub fn fig4(synth: &SynthConfig) -> Table {
     let t = synthesize(synth);
     let d = iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 3.0);
-    let mut out = render_curves(
+    let mut table = curves_table(
         "Fig 4: Percentile distribution of inter-arrival times",
         "s",
         &[("small", &d.small_s), ("large", &d.large_s)],
     );
-    out.push_str(&format!(
-        "windows={} samples_kept={}\n",
-        d.windows, d.samples_kept
-    ));
-    out
+    table.notes.push(format!("windows={} samples_kept={}", d.windows, d.samples_kept));
+    table
 }
 
 /// Fig. 5: cold-start latency percentiles per class.
-pub fn fig5(synth: &SynthConfig) -> String {
+pub fn fig5(synth: &SynthConfig) -> Table {
     let t = synthesize(synth);
     let d = coldstart_percentiles(&t);
-    render_curves(
+    curves_table(
         "Fig 5: Percentile distribution of cold start latency",
         "s",
         &[("small", &d.small_s), ("large", &d.large_s)],
     )
-}
-
-pub fn fig2_default() -> String {
-    fig2(&analysis_workload())
-}
-pub fn fig3_default() -> String {
-    fig3(&analysis_workload())
-}
-pub fn fig4_default() -> String {
-    fig4(&analysis_workload())
-}
-pub fn fig5_default() -> String {
-    fig5(&analysis_workload())
 }
 
 #[cfg(test)]
@@ -135,10 +133,10 @@ mod tests {
     #[test]
     fn all_workload_figures_render() {
         for (name, text) in [
-            ("fig2", fig2(&fast())),
-            ("fig3", fig3(&fast())),
-            ("fig4", fig4(&fast())),
-            ("fig5", fig5(&fast())),
+            ("fig2", fig2(&fast()).render_text()),
+            ("fig3", fig3(&fast()).render_text()),
+            ("fig4", fig4(&fast()).render_text()),
+            ("fig5", fig5(&fast()).render_text()),
         ] {
             assert!(text.contains("##"), "{name} missing header:\n{text}");
             assert!(text.lines().count() > 5, "{name} too short:\n{text}");
@@ -147,7 +145,7 @@ mod tests {
 
     #[test]
     fn fig3_reports_ratio_in_band() {
-        let text = fig3(&fast());
+        let text = fig3(&fast()).render_text();
         let line = text.lines().find(|l| l.contains("ratio")).unwrap();
         let x: f64 = line
             .split('=')
@@ -158,5 +156,14 @@ mod tests {
             .parse()
             .unwrap();
         assert!((3.0..=8.0).contains(&x), "{x}");
+    }
+
+    #[test]
+    fn fig2_note_survives_in_every_format() {
+        let t = fig2(&fast());
+        assert_eq!(t.notes.len(), 1);
+        assert!(t.render_text().contains("functions at or below 225 MB"));
+        let json = super::super::Artifact::Table(t).to_json().to_string_compact();
+        assert!(json.contains("functions at or below 225 MB"), "{json}");
     }
 }

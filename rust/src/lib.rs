@@ -14,8 +14,9 @@
 //!   FaaS simulator it is evaluated on ([`sim`]), the multi-node
 //!   edge-cluster layer over it ([`sim::cluster`]), the Azure-2019-style
 //!   trace synthesizer ([`trace`]), the offline workload analyzer
-//!   ([`analysis`]), every paper figure as a runnable experiment
-//!   ([`experiments`]), and a live serving path ([`serve`]) that executes
+//!   ([`analysis`]), every paper figure as a typed experiment in a
+//!   declarative registry with text/JSON/CSV artifacts
+//!   ([`mod@experiments::registry`]), and a live serving path ([`serve`]) that executes
 //!   real AOT-compiled function payloads through PJRT ([`runtime`],
 //!   behind the `pjrt` feature).
 //! * **Layer 2** — JAX payload models (`python/compile/model.py`), lowered
@@ -103,14 +104,14 @@
 // Public-API documentation is enforced (`missing_docs`) module by
 // module; the modules below with an `allow` predate the lint and will be
 // brought into scope in follow-up documentation passes. `sim`, `config`,
-// `metrics`, `trace`, and all of `coordinator` are fully documented.
+// `metrics`, `trace`, `experiments`, and all of `coordinator` are fully
+// documented.
 #[allow(missing_docs)]
 pub mod analysis;
 #[allow(missing_docs)]
 pub mod bench;
 pub mod config;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod experiments;
 pub mod metrics;
 #[allow(missing_docs)]

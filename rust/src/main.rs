@@ -1,7 +1,8 @@
 //! `repro` — the kiss-faas launcher.
 //!
 //! ```text
-//! repro experiment <fig2..fig16|cluster-*|stress|all> [--stress-scale F]
+//! repro experiment <id|group|all|list|index> [--format text|json|csv]
+//!                [--out DIR] [--jobs N] [--seed N] [--scale F] [--stress-scale F]
 //! repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F]
 //!                [--policy lru|gd|freq] [--seed N]
 //! repro cluster  [--config FILE] [--nodes N] [--router R] [--small-nodes N]
@@ -26,7 +27,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use kiss_faas::config::{Mode, SimConfig};
 use kiss_faas::coordinator::policy::PolicyKind;
-use kiss_faas::experiments::{self, run_single};
+use kiss_faas::experiments::{self, run_single, ExpParams, Experiment, Group};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
 use kiss_faas::sim::cluster::{run_cluster, MigrationPolicy, RouterKind, Topology};
@@ -69,13 +70,16 @@ fn run(args: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "kiss-faas repro — KiSS: Keep it Separated Serverless (paper reproduction)\n\n\
-         USAGE:\n  repro experiment <fig2..fig16|cluster-*|stress|all> [--stress-scale F]\n  \
+         USAGE:\n  repro experiment <id|group|all|list|index> [--format text|json|csv] [--out DIR]\n                \
+         [--jobs N] [--seed N] [--scale F] [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
          repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
-         repro selfcheck [--artifacts DIR]"
+         repro selfcheck [--artifacts DIR]\n\n\
+         EXPERIMENTS (from the registry — `repro experiment list` for details):\n{}",
+        experiments::usage_summary()
     );
 }
 
@@ -130,23 +134,152 @@ impl Flags {
     }
 }
 
+/// Output format of `repro experiment`.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ArtifactFormat {
+    Text,
+    Json,
+    Csv,
+}
+
+impl ArtifactFormat {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "text" => Some(Self::Text),
+            "json" => Some(Self::Json),
+            "csv" => Some(Self::Csv),
+            _ => None,
+        }
+    }
+
+    fn extension(self) -> &'static str {
+        match self {
+            Self::Text => "txt",
+            Self::Json => "json",
+            Self::Csv => "csv",
+        }
+    }
+}
+
+/// Resolve an `experiment` selector to registry entries: an id, a group
+/// label, or `all` (everything, in registry order — stress included).
+fn select_experiments(name: &str) -> Result<Vec<&'static Experiment>> {
+    if name == "all" {
+        return Ok(experiments::registry().iter().collect());
+    }
+    if let Some(group) = Group::parse(name) {
+        return Ok(experiments::by_group(group));
+    }
+    match experiments::find(name) {
+        Some(e) => Ok(vec![e]),
+        None => bail!(
+            "unknown experiment {name:?} (ids: {}; groups: {})",
+            experiments::ALL_EXPERIMENTS.join(", "),
+            Group::ALL.map(Group::label).join(", ")
+        ),
+    }
+}
+
 fn cmd_experiment(flags: &Flags) -> Result<()> {
-    let name = flags
-        .positional
-        .first()
-        .ok_or_else(|| anyhow!("experiment name required (fig2..fig16, cluster-*, stress, all)"))?;
-    let scale: f64 = flags.get_parsed("stress-scale")?.unwrap_or(1.0);
-    let names: Vec<&str> = if name == "all" {
-        let mut v: Vec<&str> = experiments::ALL_EXPERIMENTS.to_vec();
-        v.push("stress");
-        v
-    } else {
-        vec![name.as_str()]
+    let name = flags.positional.first().ok_or_else(|| {
+        anyhow!("experiment selector required (an id, a group, all, list, or index)")
+    })?;
+    match name.as_str() {
+        // `list`: one tab-separated line per registry entry (stable
+        // machine-readable surface — CI counts artifacts against it).
+        "list" => {
+            for e in experiments::registry() {
+                let m = &e.meta;
+                println!("{}\t{}\t{}\t{}", m.id, m.group.label(), m.paper_ref, m.title);
+            }
+            return Ok(());
+        }
+        // `index`: the generated markdown catalog for docs/EXPERIMENTS.md.
+        "index" => {
+            print!("{}", experiments::catalog_markdown());
+            return Ok(());
+        }
+        _ => {}
+    }
+    let selected = select_experiments(name)?;
+
+    let format = match flags.get("format") {
+        None => ArtifactFormat::Text,
+        Some(f) => ArtifactFormat::parse(f)
+            .ok_or_else(|| anyhow!("bad --format {f:?} (text|json|csv)"))?,
     };
-    for n in names {
-        let out = experiments::run_by_name(n, scale)
-            .ok_or_else(|| anyhow!("unknown experiment {n:?}"))?;
-        println!("{out}");
+    let out_dir = flags.get("out").map(PathBuf::from);
+    let jobs: usize = flags.get_parsed("jobs")?.unwrap_or(1);
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let seed = flags.get_parsed::<u64>("seed")?;
+    let scale: f64 = flags.get_parsed("scale")?.unwrap_or(1.0);
+    if scale <= 0.0 || !scale.is_finite() {
+        bail!("--scale must be a positive finite factor");
+    }
+    // Back-compat: --stress-scale scales the stress experiment only.
+    let stress_scale: Option<f64> = flags.get_parsed("stress-scale")?;
+    if stress_scale.is_some_and(|s| s <= 0.0 || !s.is_finite()) {
+        bail!("--stress-scale must be a positive finite factor");
+    }
+
+    let params_for = |e: &Experiment| ExpParams {
+        seed,
+        scale: match stress_scale {
+            Some(s) if e.meta.id == "stress" => s,
+            _ => scale,
+        },
+    };
+    let render = |e: &Experiment| -> String {
+        let params = params_for(e);
+        let artifact = e.run(&params);
+        match format {
+            ArtifactFormat::Text => artifact.render_text(),
+            ArtifactFormat::Json => e.artifact_json(&params, &artifact).to_string_pretty(),
+            ArtifactFormat::Csv => artifact.render_csv(),
+        }
+    };
+
+    // Fan the runs out over a worker pool (compute only — files and
+    // stdout are written afterwards, in registry order, so output and
+    // error behavior are deterministic regardless of --jobs).
+    let rendered: Vec<String> = if jobs == 1 || selected.len() == 1 {
+        selected.iter().map(|e| render(e)).collect()
+    } else {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Mutex;
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<String>>> =
+            selected.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs.min(selected.len()) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(e) = selected.get(i) else { break };
+                    let out = render(e);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    };
+
+    if let Some(dir) = &out_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating --out {}", dir.display()))?;
+        for (e, out) in selected.iter().zip(&rendered) {
+            let path = dir.join(format!("{}.{}", e.meta.id, format.extension()));
+            std::fs::write(&path, out).with_context(|| format!("writing {}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+    } else {
+        for out in &rendered {
+            println!("{out}");
+        }
     }
     Ok(())
 }
@@ -370,7 +503,7 @@ fn cmd_analyze(flags: &Flags) -> Result<()> {
         experiments::workload::fig4(&synth),
         experiments::workload::fig5(&synth),
     ] {
-        println!("{f}");
+        println!("{}", f.render_text());
     }
     Ok(())
 }

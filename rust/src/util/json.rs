@@ -88,11 +88,66 @@ impl Json {
         }
     }
 
+    /// A finite number, or `null` for NaN/±inf — JSON has no non-finite
+    /// literals, and emitting `NaN` would make the output unparseable.
+    /// Experiment artifacts use this for every measured value.
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
     /// Serialize compactly (deterministic key order).
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// Serialize with 2-space indentation (deterministic key order) — the
+    /// format `repro experiment --format json` writes to artifact files.
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    push_indent(out, indent + 1);
+                    x.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    push_indent(out, indent + 1);
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+            // Scalars and empty containers render as in the compact form.
+            other => other.write(out),
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -137,6 +192,12 @@ impl Json {
 /// Convenience builder: `obj([("a", Json::Num(1.0))])`.
 pub fn obj<I: IntoIterator<Item = (&'static str, Json)>>(items: I) -> Json {
     Json::Obj(items.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
 }
 
 fn write_escaped(s: &str, out: &mut String) {
@@ -413,6 +474,24 @@ mod tests {
             .map(|x| x.as_u64().unwrap())
             .collect();
         assert_eq!(shape, vec![1, 64]);
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_is_indented() {
+        let src = r#"{"arr":[1,2.5,"s"],"b":false,"empty":[],"n":null,"o":{"k":1}}"#;
+        let v = Json::parse(src).unwrap();
+        let pretty = v.to_string_pretty();
+        assert!(pretty.contains("\n  \"arr\": [\n"), "{pretty}");
+        assert!(pretty.contains("\"empty\": []"), "{pretty}");
+        assert!(pretty.ends_with("}\n"), "{pretty}");
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn num_or_null_guards_non_finite() {
+        assert_eq!(Json::num_or_null(1.5), Json::Num(1.5));
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(f64::INFINITY), Json::Null);
     }
 
     #[test]

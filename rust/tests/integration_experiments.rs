@@ -1,7 +1,290 @@
-//! Integration: the experiment registry end-to-end (reduced scales) and
-//! the CLI binary surface.
+//! Integration: the typed experiment registry end-to-end — legacy
+//! byte-compat goldens, seed-determinism of JSON artifacts, doc/CLI
+//! drift locks — plus the CLI binary surface.
 
-use kiss_faas::experiments::{self, stress};
+use kiss_faas::analysis::{
+    coldstart_percentiles, footprint_percentiles, iat_percentiles, invocation_trends, Curve,
+};
+use kiss_faas::experiments::{self, stress, workload, ExpParams, Group, Sweep};
+use kiss_faas::trace::synth::{synthesize, SynthConfig};
+use kiss_faas::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Legacy renderers (verbatim copies of the pre-registry string
+// formatters). The typed artifacts must reproduce these byte-for-byte —
+// the golden lock behind the `--format text` compatibility promise.
+// ---------------------------------------------------------------------
+mod legacy {
+    use super::*;
+    use std::fmt::Write;
+
+    pub fn render_curves(title: &str, unit: &str, named: &[(&str, &Curve)]) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {title}");
+        let _ = write!(out, "{:>6}", "pctl");
+        for (name, _) in named {
+            let _ = write!(out, "{:>16}", format!("{name} ({unit})"));
+        }
+        let _ = writeln!(out);
+        let n = named.first().map(|(_, c)| c.len()).unwrap_or(0);
+        for i in 0..n {
+            let _ = write!(out, "{:>6.0}", named[0].1[i].0);
+            for (_, c) in named {
+                let _ = write!(out, "{:>16.2}", c[i].1);
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    pub fn fig2(synth: &SynthConfig) -> String {
+        let t = synthesize(synth);
+        let d = footprint_percentiles(&t, 225.0);
+        let mut out = render_curves(
+            "Fig 2: Percentile distribution of memory footprints",
+            "MB",
+            &[("app", &d.app_mb), ("function(Eq.1)", &d.func_mb)],
+        );
+        out.push_str(&format!(
+            "functions at or below {} MB: {:.1}%\n",
+            d.small_cutoff_mb,
+            d.frac_below_cutoff * 100.0
+        ));
+        out
+    }
+
+    pub fn fig3(synth: &SynthConfig) -> String {
+        let t = synthesize(synth);
+        let d = invocation_trends(&t);
+        let mut out = String::new();
+        let _ = writeln!(out, "## Fig 3: Normalized invocation trends (small vs large)");
+        let _ = writeln!(out, "mean small:large invocation ratio = {:.2}x", d.mean_ratio);
+        let step = (d.small.len() / 12).max(1);
+        let _ = writeln!(out, "{:>8} {:>10} {:>10}", "minute", "small", "large");
+        for i in (0..d.small.len()).step_by(step) {
+            let _ = writeln!(out, "{:>8} {:>10.3} {:>10.3}", i, d.small[i], d.large[i]);
+        }
+        out
+    }
+
+    pub fn fig4(synth: &SynthConfig) -> String {
+        let t = synthesize(synth);
+        let d = iat_percentiles(&t, 3_600_000_000, 1_800_000_000, 3.0);
+        let mut out = render_curves(
+            "Fig 4: Percentile distribution of inter-arrival times",
+            "s",
+            &[("small", &d.small_s), ("large", &d.large_s)],
+        );
+        out.push_str(&format!("windows={} samples_kept={}\n", d.windows, d.samples_kept));
+        out
+    }
+
+    pub fn fig5(synth: &SynthConfig) -> String {
+        let t = synthesize(synth);
+        let d = coldstart_percentiles(&t);
+        render_curves(
+            "Fig 5: Percentile distribution of cold start latency",
+            "s",
+            &[("small", &d.small_s), ("large", &d.large_s)],
+        )
+    }
+
+    pub fn stress_render(kiss: &stress::StressResult, base: &stress::StressResult) -> String {
+        let mut out = String::new();
+        out.push_str("## §6.5 Stress test (2 h trace, 10 GB pool)\n");
+        out.push_str(&format!(
+            "{:>12} {:>14} {:>12} {:>12} {:>12} {:>10}\n",
+            "config", "invocations", "serviced", "hit-rate%", "coldstart%", "drop%"
+        ));
+        for r in [kiss, base] {
+            out.push_str(&format!(
+                "{:>12} {:>14} {:>12} {:>12.2} {:>12.2} {:>10.2}\n",
+                r.label,
+                r.total_invocations,
+                r.serviced,
+                r.hit_rate_pct,
+                r.cold_start_pct,
+                r.drop_pct
+            ));
+        }
+        out
+    }
+
+    pub fn sweep_render(s: &Sweep) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", s.title);
+        let _ = writeln!(out, "   ({} vs {})", s.y_label, s.x_label);
+        let _ = write!(out, "{:>10}", s.x_label);
+        for series in &s.series {
+            let _ = write!(out, "{:>14}", series.label);
+        }
+        let _ = writeln!(out);
+        for (i, x) in s.xs.iter().enumerate() {
+            let _ = write!(out, "{x:>10.0}");
+            for series in &s.series {
+                match series.values.get(i) {
+                    Some(v) if v.is_finite() => {
+                        let _ = write!(out, "{v:>14.2}");
+                    }
+                    _ => {
+                        let _ = write!(out, "{:>14}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// Cheap analysis-shaped workload for the byte-compat goldens.
+fn fast_analysis() -> SynthConfig {
+    SynthConfig {
+        n_small: 50,
+        n_large: 14,
+        duration_us: 1_800_000_000, // 30 min
+        rate_per_sec: 30.0,
+        ..SynthConfig::default()
+    }
+}
+
+#[test]
+fn table_artifacts_render_byte_identical_to_legacy() {
+    let w = fast_analysis();
+    assert_eq!(workload::fig2(&w).render_text(), legacy::fig2(&w), "fig2 text drifted");
+    assert_eq!(workload::fig3(&w).render_text(), legacy::fig3(&w), "fig3 text drifted");
+    assert_eq!(workload::fig4(&w).render_text(), legacy::fig4(&w), "fig4 text drifted");
+    assert_eq!(workload::fig5(&w).render_text(), legacy::fig5(&w), "fig5 text drifted");
+    let (kiss, base) = stress::stress(10, 0.005, 12);
+    assert_eq!(
+        stress::render(&kiss, &base),
+        legacy::stress_render(&kiss, &base),
+        "stress text drifted"
+    );
+}
+
+#[test]
+fn sweep_artifacts_render_byte_identical_to_legacy() {
+    // Synthetic sweep covering the NaN-dash path…
+    let synthetic = Sweep {
+        title: "t".into(),
+        x_label: "GB".into(),
+        y_label: "%".into(),
+        xs: vec![1.0, 2.0],
+        series: vec![
+            experiments::Series { label: "a".into(), values: vec![10.0, f64::NAN] },
+            experiments::Series { label: "b".into(), values: vec![20.0, 5.0] },
+        ],
+    };
+    assert_eq!(synthetic.render(), legacy::sweep_render(&synthetic));
+    // …and a real figure at reduced scale.
+    let real = experiments::sweeps::fig8(&experiments::apply_params(
+        &ExpParams { seed: Some(7), scale: 0.02 },
+        experiments::paper_workload(),
+    ));
+    assert_eq!(real.render(), legacy::sweep_render(&real));
+}
+
+// ---------------------------------------------------------------------
+// Seed determinism + JSON round-trip, per registry group (split so the
+// test harness can run the groups in parallel).
+// ---------------------------------------------------------------------
+
+/// Same `ExpParams` ⇒ byte-identical JSON envelope; the envelope parses
+/// back through `util::json` to the identical value and carries the
+/// registry metadata.
+fn assert_group_deterministic(group: Group) {
+    let params = ExpParams { seed: Some(11), scale: 0.01 };
+    let entries = experiments::by_group(group);
+    assert!(!entries.is_empty(), "group {group:?} has no experiments");
+    for e in entries {
+        let first = e.run_json(&params).to_string_compact();
+        let second = e.run_json(&params).to_string_compact();
+        assert_eq!(first, second, "{} is not seed-deterministic", e.meta.id);
+        let parsed = Json::parse(&first)
+            .unwrap_or_else(|err| panic!("{} artifact is not valid JSON: {err}", e.meta.id));
+        assert_eq!(
+            parsed.to_string_compact(),
+            first,
+            "{} JSON does not round-trip through util::json",
+            e.meta.id
+        );
+        assert_eq!(parsed.get("id").and_then(Json::as_str), Some(e.meta.id));
+        assert_eq!(
+            parsed.get("schema").and_then(Json::as_str),
+            Some(experiments::ARTIFACT_SCHEMA)
+        );
+        assert_eq!(
+            parsed.get("group").and_then(Json::as_str),
+            Some(e.meta.group.label())
+        );
+        assert_eq!(
+            parsed.get("params").and_then(|p| p.get("seed")).and_then(Json::as_u64),
+            Some(11)
+        );
+        let kind = parsed
+            .get("artifact")
+            .and_then(|a| a.get("kind"))
+            .and_then(Json::as_str)
+            .unwrap();
+        assert!(kind == "sweep" || kind == "table", "{}: bad kind {kind}", e.meta.id);
+    }
+}
+
+#[test]
+fn workload_group_is_seed_deterministic() {
+    assert_group_deterministic(Group::Workload);
+}
+
+#[test]
+fn sweeps_group_is_seed_deterministic() {
+    assert_group_deterministic(Group::Sweeps);
+}
+
+#[test]
+fn fairness_group_is_seed_deterministic() {
+    assert_group_deterministic(Group::Fairness);
+}
+
+#[test]
+fn policy_group_is_seed_deterministic() {
+    assert_group_deterministic(Group::Policy);
+}
+
+#[test]
+fn cluster_group_is_seed_deterministic() {
+    assert_group_deterministic(Group::Cluster);
+}
+
+#[test]
+fn stress_group_is_seed_deterministic() {
+    assert_group_deterministic(Group::Stress);
+}
+
+// ---------------------------------------------------------------------
+// Drift locks: the committed docs index and the CLI name set both derive
+// from the registry.
+// ---------------------------------------------------------------------
+
+#[test]
+fn experiments_doc_index_matches_registry() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/EXPERIMENTS.md");
+    let doc = std::fs::read_to_string(path).expect("docs/EXPERIMENTS.md readable");
+    let begin = "<!-- BEGIN GENERATED EXPERIMENT INDEX -->";
+    let end = "<!-- END GENERATED EXPERIMENT INDEX -->";
+    let start = doc.find(begin).expect("begin marker present") + begin.len();
+    let stop = doc.find(end).expect("end marker present");
+    assert_eq!(
+        &doc[start..stop],
+        format!("\n{}", experiments::catalog_markdown()),
+        "docs/EXPERIMENTS.md index drifted from the registry — \
+         regenerate it with `repro experiment index` and paste between the markers"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Pre-existing registry/CLI surface tests.
+// ---------------------------------------------------------------------
 
 #[test]
 fn stress_reduced_scale_matches_paper_shape() {
@@ -69,12 +352,93 @@ fn cli_binary_simulate_and_trace() {
 }
 
 #[test]
+fn cli_binary_experiment_artifacts() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let dir = std::env::temp_dir().join(format!("kiss-artifacts-{}", std::process::id()));
+
+    // JSON artifact file for one figure at reduced scale.
+    let out = std::process::Command::new(exe)
+        .args([
+            "experiment", "fig8", "--format", "json", "--out",
+            dir.to_str().unwrap(), "--scale", "0.02", "--seed", "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(dir.join("fig8.json")).unwrap();
+    let parsed = Json::parse(&text).expect("emitted artifact parses as JSON");
+    assert_eq!(parsed.get("id").and_then(Json::as_str), Some("fig8"));
+    assert_eq!(
+        parsed.get("params").and_then(|p| p.get("scale")).and_then(Json::as_f64),
+        Some(0.02)
+    );
+
+    // Group selector fans out over the worker pool; one file per entry.
+    let out = std::process::Command::new(exe)
+        .args([
+            "experiment", "workload", "--out", dir.to_str().unwrap(), "--jobs", "2",
+            "--scale", "0.02",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for id in ["fig2", "fig3", "fig4", "fig5"] {
+        assert!(dir.join(format!("{id}.txt")).exists(), "{id}.txt missing");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // CSV on stdout, with the legacy --stress-scale knob still honored.
+    let out = std::process::Command::new(exe)
+        .args(["experiment", "stress", "--format", "csv", "--stress-scale", "0.005"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.starts_with("config,invocations,serviced,hit-rate%,coldstart%,drop%"),
+        "{stdout}"
+    );
+    assert!(stdout.contains("kiss-80-20"), "{stdout}");
+}
+
+#[test]
+fn cli_binary_experiment_list_covers_registry() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe).args(["experiment", "list"]).output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), experiments::N_EXPERIMENTS);
+    for (line, id) in lines.iter().zip(experiments::ALL_EXPERIMENTS) {
+        assert_eq!(line.split('\t').next(), Some(id));
+    }
+
+    let out = std::process::Command::new(exe).args(["experiment", "index"]).output().unwrap();
+    assert!(out.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&out.stdout),
+        experiments::catalog_markdown(),
+        "`experiment index` must emit exactly the registry catalog"
+    );
+}
+
+#[test]
 fn cli_binary_rejects_garbage() {
     let exe = env!("CARGO_BIN_EXE_repro");
     let out = std::process::Command::new(exe).args(["frobnicate"]).output().unwrap();
     assert!(!out.status.success());
     let out = std::process::Command::new(exe)
         .args(["experiment", "fig99"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe)
+        .args(["experiment", "fig8", "--format", "yaml"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(exe)
+        .args(["experiment", "all", "--jobs", "0"])
         .output()
         .unwrap();
     assert!(!out.status.success());
