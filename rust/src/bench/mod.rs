@@ -9,6 +9,8 @@
 //! println!("{r}");
 //! ```
 
+pub mod wallclock;
+
 use std::fmt;
 use std::time::{Duration, Instant};
 

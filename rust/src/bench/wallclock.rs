@@ -1,0 +1,143 @@
+//! Wall-clock macro-benchmark — the perf-trajectory harness behind
+//! `repro bench-json`.
+//!
+//! Unlike the micro-benchmarks under `benches/` (auto-calibrated,
+//! per-iteration latency sketches), this harness answers one blunt
+//! question per release: *how long does a whole simulation take on this
+//! machine right now?* It times N trials of the two end-to-end hot
+//! paths — the single-node engine (`run_trace`) and the heterogeneous
+//! cluster (`run_cluster`) — at fixed seeds, and renders a
+//! schema-tagged JSON document (`BENCH_SCHEMA`) that `repro bench-json`
+//! writes to `BENCH_<pr>.json` at the repository root, starting the
+//! before/after record the kernel refactors compare against. Virtual
+//! workloads are seed-deterministic; only the wall-clock readings vary
+//! by host.
+
+use std::time::Instant;
+
+use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::Balancer;
+use crate::experiments::cluster::{cluster_workload, hetero_spec};
+use crate::experiments::paper_workload;
+use crate::sim::cluster::run_cluster;
+use crate::sim::{run_trace_with, InitOccupancy};
+use crate::trace::synth::{synthesize, SynthConfig};
+use crate::util::json::{obj, Json};
+
+/// Schema tag of the `repro bench-json` document.
+pub const BENCH_SCHEMA: &str = "kiss-faas/bench/v1";
+
+/// One timed case: a named workload plus its per-trial wall times.
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    /// Stable case name (`run_trace/...` or `run_cluster/...`).
+    pub name: String,
+    /// Trace events driven per trial.
+    pub events: usize,
+    /// Wall-clock duration of each trial (ms).
+    pub trial_ms: Vec<f64>,
+}
+
+impl BenchCase {
+    fn json(&self) -> Json {
+        let mean = self.trial_ms.iter().sum::<f64>() / self.trial_ms.len().max(1) as f64;
+        let min = self.trial_ms.iter().copied().fold(f64::INFINITY, f64::min);
+        obj([
+            ("name", Json::Str(self.name.clone())),
+            ("events", Json::Num(self.events as f64)),
+            (
+                "trial_ms",
+                Json::Arr(self.trial_ms.iter().map(|&t| Json::num_or_null(t)).collect()),
+            ),
+            ("mean_ms", Json::num_or_null(mean)),
+            ("min_ms", Json::num_or_null(min)),
+        ])
+    }
+}
+
+fn scaled(mut synth: SynthConfig, scale: f64) -> SynthConfig {
+    synth.duration_us = ((synth.duration_us as f64 * scale).round() as u64).max(1);
+    synth
+}
+
+fn time_trials(trials: usize, mut f: impl FnMut()) -> Vec<f64> {
+    (0..trials)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect()
+}
+
+/// Run the wall-clock suite: `trials` timed runs per case at workload
+/// volume `scale` (1.0 = the full paper/cluster workloads). Returns the
+/// schema-tagged JSON document.
+pub fn run(trials: usize, scale: f64) -> Json {
+    assert!(trials > 0, "need at least one trial");
+    assert!(scale > 0.0 && scale.is_finite(), "scale must be positive");
+    let mut cases: Vec<BenchCase> = Vec::new();
+
+    // Case 1: the single-node engine on the paper workload, KiSS 80-20
+    // on an 8 GB edge node (the headline configuration of Fig. 8).
+    let trace = synthesize(&scaled(paper_workload(), scale));
+    let trial_ms = time_trials(trials, || {
+        let mut d = Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        std::hint::black_box(run_trace_with(&trace, &mut d, InitOccupancy::HoldsMemory));
+    });
+    cases.push(BenchCase {
+        name: "run_trace/kiss-80-20-8gb".into(),
+        events: trace.events.len(),
+        trial_ms,
+    });
+
+    // Case 2: the hetero cluster with migration — the cluster engine's
+    // full placement pipeline (route → fallback → migrate → offload).
+    let trace = synthesize(&scaled(cluster_workload(), scale));
+    let spec = hetero_spec().with_migration(15_000);
+    let trial_ms = time_trials(trials, || {
+        std::hint::black_box(run_cluster(&trace, &spec));
+    });
+    cases.push(BenchCase {
+        name: "run_cluster/hetero-4node-migrate".into(),
+        events: trace.events.len(),
+        trial_ms,
+    });
+
+    obj([
+        ("schema", Json::Str(BENCH_SCHEMA.into())),
+        (
+            "params",
+            obj([
+                ("trials", Json::Num(trials as f64)),
+                ("scale", Json::num_or_null(scale)),
+            ]),
+        ),
+        ("cases", Json::Arr(cases.iter().map(BenchCase::json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_is_schema_tagged_and_parses() {
+        // Tiny scale: ~a dozen virtual seconds per case.
+        let doc = run(1, 0.002);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+        let cases = doc.get("cases").and_then(Json::as_arr).unwrap();
+        assert_eq!(cases.len(), 2);
+        for case in cases {
+            let name = case.get("name").and_then(Json::as_str).unwrap();
+            assert!(name.starts_with("run_trace/") || name.starts_with("run_cluster/"));
+            assert!(case.get("events").and_then(Json::as_u64).unwrap() > 0);
+            let trials = case.get("trial_ms").and_then(Json::as_arr).unwrap();
+            assert_eq!(trials.len(), 1);
+            assert!(case.get("mean_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+        // The document round-trips through the in-repo JSON substrate.
+        let text = doc.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+}

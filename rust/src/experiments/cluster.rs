@@ -78,21 +78,37 @@ fn scale_spec(n: usize, router: RouterKind) -> ClusterSpec {
 /// Run the node-count × router grid **once** and derive both scale
 /// sweeps from it (cold-start % and offload %) — callers that want both
 /// tables must not pay for the grid twice.
+///
+/// Since the latency-histogram extension (artifact schema v2), the scale
+/// sweep also carries three end-to-end latency percentile columns
+/// (`ll-p50ms`/`ll-p95ms`/`ll-p99ms`) for the least-loaded router — the
+/// response-time distribution behind the cold-start curve, from
+/// [`crate::metrics::latency`].
 pub fn cluster_scale_and_offload(synth: &SynthConfig) -> (Sweep, Sweep) {
     let trace = synthesize(synth);
     let mut cold_series: Vec<Series> = Vec::new();
     let mut offl_series: Vec<Series> = Vec::new();
+    let mut lat = [Vec::new(), Vec::new(), Vec::new()]; // p50/p95/p99 (ms)
     for (r_idx, label) in RouterKind::ALL_LABELS.iter().enumerate() {
         let mut cold = Vec::new();
         let mut offl = Vec::new();
         for &n in &NODE_GRID {
             let spec = scale_spec(n, routers(n)[r_idx]);
-            let overall = run_cluster(&trace, &spec).report.overall;
-            cold.push(overall.cold_start_pct());
-            offl.push(overall.offload_pct());
+            let report = run_cluster(&trace, &spec).report;
+            cold.push(report.overall.cold_start_pct());
+            offl.push(report.overall.offload_pct());
+            if *label == "least-loaded" {
+                let (p50, p95, p99) = report.latency().e2e.percentiles_ms();
+                lat[0].push(p50);
+                lat[1].push(p95);
+                lat[2].push(p99);
+            }
         }
         cold_series.push(Series { label: (*label).to_string(), values: cold });
         offl_series.push(Series { label: (*label).to_string(), values: offl });
+    }
+    for (name, values) in ["ll-p50ms", "ll-p95ms", "ll-p99ms"].iter().zip(lat) {
+        cold_series.push(Series { label: (*name).to_string(), values });
     }
     let xs: Vec<f64> = NODE_GRID.iter().map(|&n| n as f64).collect();
     (
@@ -427,13 +443,25 @@ mod tests {
 
     #[test]
     fn scale_sweep_covers_grid_and_routers() {
-        let s = cluster_scale(&tiny());
+        // One grid run yields both tables — never pay for it twice.
+        let (s, o) = cluster_scale_and_offload(&tiny());
         assert_eq!(s.xs.len(), NODE_GRID.len());
-        assert_eq!(s.series.len(), RouterKind::ALL_LABELS.len());
+        // Four router columns + the three least-loaded latency
+        // percentile columns (schema v2).
+        assert_eq!(s.series.len(), RouterKind::ALL_LABELS.len() + 3);
         for series in &s.series {
             assert_eq!(series.values.len(), NODE_GRID.len());
             assert!(series.values.iter().all(|v| v.is_finite()));
         }
+        // Percentiles are ordered by construction.
+        for i in 0..NODE_GRID.len() {
+            let p50 = s.series_named("ll-p50ms").unwrap().values[i];
+            let p95 = s.series_named("ll-p95ms").unwrap().values[i];
+            let p99 = s.series_named("ll-p99ms").unwrap().values[i];
+            assert!(p50 <= p95 && p95 <= p99, "p50 {p50} p95 {p95} p99 {p99}");
+        }
+        // The offload companion keeps the plain four-router shape.
+        assert_eq!(o.series.len(), RouterKind::ALL_LABELS.len());
     }
 
     #[test]

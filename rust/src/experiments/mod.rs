@@ -14,7 +14,9 @@
 //! entry pairs an
 //! [`ExperimentMeta`] (id, title, paper reference, group, knobs) with a
 //! typed runner `fn(&ExpParams) -> Artifact`. An [`Artifact`] renders to
-//! text (byte-identical to the historical tables, golden-locked), JSON
+//! text (the renderer is golden-locked byte-for-byte against the legacy
+//! formatters; `fig8`/`cluster-scale` additionally carry latency
+//! percentile columns since schema v2), JSON
 //! (a schema-tagged envelope via [`crate::util::json`]), and CSV —
 //! `repro experiment <id|group|all> [--format text|json|csv] [--out DIR]
 //! [--jobs N]` is a thin shell over it. [`ALL_EXPERIMENTS`], the CLI

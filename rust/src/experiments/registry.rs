@@ -174,7 +174,17 @@ impl Experiment {
 }
 
 /// Schema tag stamped into every JSON artifact envelope.
-pub const ARTIFACT_SCHEMA: &str = "kiss-faas/experiment-artifact/v1";
+///
+/// **v2 is a strict superset of v1**: the envelope layout (`schema`,
+/// `id`, `title`, `paper_ref`, `group`, `knobs`, `params`, `artifact`)
+/// and both artifact kinds are unchanged; v2 only *adds* latency
+/// percentile columns (`…-p50ms`/`…-p95ms`/`…-p99ms` series, from
+/// [`crate::metrics::latency`]) to the simulation-backed artifacts
+/// (`fig8`, `cluster-scale`). Consumers that iterate series/columns by
+/// name keep working; consumers that assumed a fixed column count must
+/// filter on the `…ms` suffix. See `docs/EXPERIMENTS.md` for the
+/// migration note.
+pub const ARTIFACT_SCHEMA: &str = "kiss-faas/experiment-artifact/v2";
 
 /// Number of registered experiments.
 pub const N_EXPERIMENTS: usize = 22;

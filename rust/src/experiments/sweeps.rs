@@ -38,25 +38,44 @@ pub fn fig7(synth: &SynthConfig) -> Sweep {
 }
 
 /// Fig. 8: the 80-20 split vs the baseline.
+///
+/// Since the latency-histogram extension (artifact schema v2), the sweep
+/// also carries end-to-end latency percentile columns per configuration
+/// (`kiss-p50ms` … `base-p99ms`): the cold-start curve says how *often*
+/// initialization bites, the percentiles say what it does to the
+/// response-time distribution.
 pub fn fig8(synth: &SynthConfig) -> Sweep {
     let trace = synthesize(synth);
-    let kiss = MEM_GRID_GB
-        .iter()
-        .map(|&gb| run_on(&trace, &kiss_cfg(synth, gb, 0.8)).overall.cold_start_pct())
-        .collect();
-    let base = MEM_GRID_GB
-        .iter()
-        .map(|&gb| run_on(&trace, &baseline_cfg(synth, gb)).overall.cold_start_pct())
-        .collect();
+    let mut kiss = Vec::new();
+    let mut base = Vec::new();
+    // kiss p50/p95/p99, then base p50/p95/p99 (ms).
+    let mut lat: [Vec<f64>; 6] = std::array::from_fn(|_| Vec::new());
+    for &gb in &MEM_GRID_GB {
+        let rk = run_on(&trace, &kiss_cfg(synth, gb, 0.8));
+        let rb = run_on(&trace, &baseline_cfg(synth, gb));
+        kiss.push(rk.overall.cold_start_pct());
+        base.push(rb.overall.cold_start_pct());
+        let (k50, k95, k99) = rk.latency().e2e.percentiles_ms();
+        let (b50, b95, b99) = rb.latency().e2e.percentiles_ms();
+        for (slot, v) in lat.iter_mut().zip([k50, k95, k99, b50, b95, b99]) {
+            slot.push(v);
+        }
+    }
+    let mut series = vec![
+        Series { label: "kiss-80-20".into(), values: kiss },
+        Series { label: "baseline".into(), values: base },
+    ];
+    let labels = ["kiss-p50ms", "kiss-p95ms", "kiss-p99ms", "base-p50ms", "base-p95ms",
+        "base-p99ms"];
+    for (label, values) in labels.iter().zip(lat) {
+        series.push(Series { label: (*label).to_string(), values });
+    }
     Sweep {
         title: "Fig 8: 80-20 split vs baseline (cold-start %)".into(),
         x_label: "mem_GB".into(),
         y_label: "cold-start %".into(),
         xs: MEM_GRID_GB.iter().map(|&g| g as f64).collect(),
-        series: vec![
-            Series { label: "kiss-80-20".into(), values: kiss },
-            Series { label: "baseline".into(), values: base },
-        ],
+        series,
     }
 }
 
@@ -121,6 +140,25 @@ mod tests {
         let k = s.value_at("kiss-80-20", 24.0).unwrap();
         let b = s.value_at("baseline", 24.0).unwrap();
         assert!(k < 10.0 && b < 10.0, "k={k} b={b}\n{}", s.render());
+    }
+
+    #[test]
+    fn fig8_carries_latency_percentile_columns() {
+        let s = fig8(&fast_workload());
+        for label in [
+            "kiss-p50ms", "kiss-p95ms", "kiss-p99ms", "base-p50ms", "base-p95ms",
+            "base-p99ms",
+        ] {
+            let series = s.series_named(label).expect(label);
+            assert_eq!(series.values.len(), MEM_GRID_GB.len());
+            assert!(series.values.iter().all(|v| v.is_finite() && *v >= 0.0), "{label}");
+        }
+        // Percentiles are ordered at every grid point.
+        for i in 0..MEM_GRID_GB.len() {
+            let p50 = s.series_named("kiss-p50ms").unwrap().values[i];
+            let p99 = s.series_named("kiss-p99ms").unwrap().values[i];
+            assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        }
     }
 
     #[test]

@@ -104,8 +104,8 @@
 // Public-API documentation is enforced (`missing_docs`) module by
 // module; the modules below with an `allow` predate the lint and will be
 // brought into scope in follow-up documentation passes. `sim`, `config`,
-// `metrics`, `trace`, `experiments`, and all of `coordinator` are fully
-// documented.
+// `metrics`, `trace`, `experiments`, `util`, and all of `coordinator`
+// are fully documented.
 #[allow(missing_docs)]
 pub mod analysis;
 #[allow(missing_docs)]
@@ -120,7 +120,6 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod trace;
-#[allow(missing_docs)]
 pub mod util;
 
 pub use config::SimConfig;

@@ -14,6 +14,7 @@
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
 //! repro selfcheck [--artifacts DIR]               # load + verify payloads
+//! repro bench-json [--out FILE] [--trials N] [--scale F]  # perf record
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap offline — see crate docs);
@@ -33,6 +34,7 @@ use kiss_faas::serve::server::Server;
 use kiss_faas::sim::cluster::{run_cluster, MigrationPolicy, RouterKind, Topology};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
+use kiss_faas::util::json::Json;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -59,6 +61,7 @@ fn run(args: &[String]) -> Result<()> {
         "trace" => cmd_trace(&flags),
         "serve" => cmd_serve(&flags),
         "selfcheck" => cmd_selfcheck(&flags),
+        "bench-json" => cmd_bench_json(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -77,7 +80,8 @@ fn print_usage() {
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
-         repro selfcheck [--artifacts DIR]\n\n\
+         repro selfcheck [--artifacts DIR]\n  \
+         repro bench-json [--out FILE] [--trials N] [--scale F]\n\n\
          EXPERIMENTS (from the registry — `repro experiment list` for details):\n{}",
         experiments::usage_summary()
     );
@@ -337,6 +341,38 @@ fn cmd_simulate(flags: &Flags) -> Result<()> {
             c.drop_pct()
         );
     }
+    println!("\nlatency ms (p50/p95/p99): {}", r.latency().summary_ms());
+    Ok(())
+}
+
+/// `repro bench-json` — wall-clock timing of the two end-to-end hot
+/// paths (`run_trace` + `run_cluster`) at fixed seeds, written as a
+/// schema-tagged JSON perf record. Defaults to `BENCH_5.json` in the
+/// working directory (run from the repository root to start the perf
+/// trajectory there); CI's perf-smoke step runs it at reduced scale.
+fn cmd_bench_json(flags: &Flags) -> Result<()> {
+    let trials: usize = flags.get_parsed("trials")?.unwrap_or(3);
+    if trials == 0 {
+        bail!("--trials must be >= 1");
+    }
+    let scale: f64 = flags.get_parsed("scale")?.unwrap_or(1.0);
+    if scale <= 0.0 || !scale.is_finite() {
+        bail!("--scale must be a positive finite factor");
+    }
+    let out = PathBuf::from(flags.get("out").unwrap_or("BENCH_5.json"));
+    let doc = kiss_faas::bench::wallclock::run(trials, scale);
+    if let Some(cases) = doc.get("cases").and_then(Json::as_arr) {
+        for case in cases {
+            let name = case.get("name").and_then(Json::as_str);
+            let mean = case.get("mean_ms").and_then(Json::as_f64);
+            if let (Some(name), Some(mean)) = (name, mean) {
+                println!("{name:<40} mean {mean:>10.2} ms over {trials} trial(s)");
+            }
+        }
+    }
+    std::fs::write(&out, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 
@@ -449,6 +485,8 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
             c.migration_pct()
         );
     }
+    println!("\nlatency ms (p50/p95/p99): {}", r.report.latency().summary_ms());
+
     println!("\nper-node ({} invocations rerouted to fallbacks):", r.rerouted);
     for (i, node) in r.per_node.iter().enumerate() {
         println!(

@@ -1,0 +1,298 @@
+//! Deterministic per-invocation latency histograms — the response-time
+//! distributions the counter-only report could not answer (LaSS, Wang et
+//! al. 2021 evaluates edge policies on latency *distributions*, not just
+//! counts; §5 of the paper reports drops/cold starts, this module adds
+//! the p50/p95/p99 view on top).
+//!
+//! [`LatencyHistogram`] is a fixed-bin log-scale sketch over integer
+//! microseconds: values bucket into power-of-two octaves with
+//! [`SUB_BINS`] linear sub-bins each (HDR-histogram style). Everything
+//! is integer arithmetic on `u64` counts — no floats touch the recording
+//! path — so two runs of the same seed produce bit-identical histograms,
+//! and merging (overall = small + large) is exact bin-wise addition.
+//! Quantiles are read back as the midpoint of the first bin whose
+//! cumulative count reaches the target rank: a deterministic value with
+//! bounded relative error (one sub-bin, ≤ ~25% of the octave width).
+//!
+//! [`LatencyStats`] groups three histograms per counter slice:
+//!
+//! * **cold** — startup wait of cold starts (container init, plus any
+//!   forwarding hop latency).
+//! * **warm** — startup wait of warm serves: hits and migrations (warm
+//!   dispatch, plus transfer cost / hop latency where applicable).
+//! * **e2e** — end-to-end response time (startup + execution) of every
+//!   served invocation, offloads included (their cloud RTT is the
+//!   startup). Drops serve nothing and record nothing.
+
+/// Linear sub-bins per power-of-two octave (resolution of the sketch).
+pub const SUB_BINS: u64 = 4;
+
+/// Number of octaves covered: `[1, 2^40)` µs, i.e. up to ~12.7 virtual
+/// days — far beyond any simulated response time. Larger values clamp
+/// into the last bin.
+pub const OCTAVES: u64 = 40;
+
+/// Total bin count of a [`LatencyHistogram`].
+pub const N_BINS: usize = (OCTAVES * SUB_BINS) as usize;
+
+/// A fixed-bin log-scale histogram of latencies in integer microseconds
+/// (see the module docs for the binning scheme and determinism
+/// guarantees).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHistogram {
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { bins: vec![0; N_BINS], count: 0 }
+    }
+}
+
+/// Bin index of a latency value (µs). Zero shares the first bin with
+/// 1 µs (sub-microsecond waits are below the sketch's resolution).
+fn bin_index(v_us: u64) -> usize {
+    let v = v_us.max(1);
+    let octave = v.ilog2() as u64;
+    if octave >= OCTAVES {
+        return N_BINS - 1;
+    }
+    let base = 1u64 << octave;
+    // Linear position of v within its octave, in sub-bin units.
+    let sub = ((v - base) * SUB_BINS) >> octave;
+    (octave * SUB_BINS + sub) as usize
+}
+
+/// Deterministic representative value (µs) of a bin: the integer
+/// midpoint of its `[lo, hi)` range. The bounds invert [`bin_index`]'s
+/// truncating division exactly (ceil), so the midpoint always re-bins to
+/// its own bin — including in the first octaves, whose width is below
+/// [`SUB_BINS`] and where some sub-bins are empty by construction.
+fn bin_mid_us(idx: usize) -> u64 {
+    let octave = idx as u64 / SUB_BINS;
+    let sub = idx as u64 % SUB_BINS;
+    let base = 1u64 << octave;
+    let lo = base + (sub * base).div_ceil(SUB_BINS);
+    let hi = (base + ((sub + 1) * base).div_ceil(SUB_BINS)).max(lo + 1);
+    lo + (hi - lo) / 2
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency observation (µs).
+    pub fn record(&mut self, v_us: u64) {
+        self.bins[bin_index(v_us)] += 1;
+        self.count += 1;
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Bin-wise accumulate `other` into `self` (exact; used by the
+    /// overall = small + large consistency invariant).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// The `q`-quantile (`0 < q <= 100`) in µs: the midpoint of the
+    /// first bin whose cumulative count reaches `ceil(q% · count)`.
+    /// `NaN` when the histogram is empty (renders as `-` / JSON `null`
+    /// downstream).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        assert!(q > 0.0 && q <= 100.0, "quantile out of range: {q}");
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        // ceil without floats: rank in [1, count].
+        let target = ((q * self.count as f64) / 100.0).ceil().max(1.0) as u64;
+        let target = target.min(self.count);
+        let mut acc = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bin_mid_us(i) as f64;
+            }
+        }
+        unreachable!("cumulative count reaches self.count");
+    }
+
+    /// Median latency (µs); `NaN` when empty.
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(50.0)
+    }
+
+    /// 95th-percentile latency (µs); `NaN` when empty.
+    pub fn p95_us(&self) -> f64 {
+        self.quantile_us(95.0)
+    }
+
+    /// 99th-percentile latency (µs); `NaN` when empty.
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(99.0)
+    }
+
+    /// `(p50, p95, p99)` in milliseconds — the shape experiment columns
+    /// and CLI summary lines report. `NaN` entries when empty.
+    pub fn percentiles_ms(&self) -> (f64, f64, f64) {
+        (self.p50_us() / 1000.0, self.p95_us() / 1000.0, self.p99_us() / 1000.0)
+    }
+}
+
+/// The three per-slice latency histograms (see the module docs for what
+/// each class records).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Startup wait of cold starts.
+    pub cold: LatencyHistogram,
+    /// Startup wait of warm serves (hits + migrations).
+    pub warm: LatencyHistogram,
+    /// End-to-end response time (startup + execution) of every served
+    /// invocation, offloads included.
+    pub e2e: LatencyHistogram,
+}
+
+impl LatencyStats {
+    /// Histogram-wise accumulate `other` into `self`.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.cold.merge(&other.cold);
+        self.warm.merge(&other.warm);
+        self.e2e.merge(&other.e2e);
+    }
+
+    /// One-line `p50/p95/p99` (ms) summary for CLI reports, e.g.
+    /// `cold 1.2/4.8/7.6 | warm 0.1/0.1/0.1 | e2e 350.5/910.0/1213.0`.
+    /// Empty histograms render as `-`.
+    pub fn summary_ms(&self) -> String {
+        fn fmt(h: &LatencyHistogram) -> String {
+            if h.is_empty() {
+                return "-".to_string();
+            }
+            let (p50, p95, p99) = h.percentiles_ms();
+            format!("{p50:.1}/{p95:.1}/{p99:.1}")
+        }
+        format!(
+            "cold {} | warm {} | e2e {}",
+            fmt(&self.cold),
+            fmt(&self.warm),
+            fmt(&self.e2e)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_are_monotone_and_cover_the_range() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 100, 1_000, 1_000_000, u64::MAX] {
+            let idx = bin_index(v);
+            assert!(idx >= last, "bin index must not decrease: {v} -> {idx}");
+            assert!(idx < N_BINS);
+            last = idx;
+        }
+        assert_eq!(bin_index(0), bin_index(1), "zero shares the first bin");
+        assert_eq!(bin_index(u64::MAX), N_BINS - 1, "huge values clamp");
+    }
+
+    #[test]
+    fn bin_mid_is_inside_the_bin() {
+        for v in [1u64, 2, 3, 5, 63, 64, 65, 999, 4096, 1_000_000] {
+            let idx = bin_index(v);
+            let mid = bin_mid_us(idx);
+            assert_eq!(bin_index(mid), idx, "midpoint of {v}'s bin re-bins to itself");
+        }
+    }
+
+    #[test]
+    fn quantiles_bounded_relative_error() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10_000);
+        for (q, exact) in [(50.0, 5_000.0), (95.0, 9_500.0), (99.0, 9_900.0)] {
+            let got = h.quantile_us(q);
+            let rel = (got - exact).abs() / exact;
+            assert!(rel < 0.25, "q{q}: got {got}, exact {exact} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_nan_and_dashes() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.p50_us().is_nan());
+        let s = LatencyStats::default();
+        assert_eq!(s.summary_ms(), "cold - | warm - | e2e -");
+    }
+
+    #[test]
+    fn single_observation_is_every_quantile() {
+        let mut h = LatencyHistogram::new();
+        h.record(80_000); // an 80 ms cloud RTT
+        let (p50, p95, p99) = h.percentiles_ms();
+        assert_eq!(p50, p95);
+        assert_eq!(p95, p99);
+        assert!((p50 - 80.0).abs() / 80.0 < 0.25, "p50 {p50}");
+    }
+
+    #[test]
+    fn merge_is_exact_binwise_addition() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut whole = LatencyHistogram::new();
+        for v in [3u64, 700, 700, 15_000, 2_000_000] {
+            a.record(v);
+            whole.record(v);
+        }
+        for v in [1u64, 80_000, 80_000] {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge must equal recording the union");
+        assert_eq!(a.count(), 8);
+    }
+
+    #[test]
+    fn determinism_same_inputs_same_bits() {
+        let build = || {
+            let mut h = LatencyHistogram::new();
+            for i in 0..5_000u64 {
+                h.record((i * 37) % 90_000);
+            }
+            h
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn summary_formats_percentiles() {
+        let mut s = LatencyStats::default();
+        s.cold.record(1_200_000);
+        s.warm.record(100);
+        s.e2e.record(1_200_500);
+        let line = s.summary_ms();
+        assert!(line.starts_with("cold "), "{line}");
+        assert!(line.contains(" | warm "), "{line}");
+        assert!(line.contains(" | e2e "), "{line}");
+        assert!(!line.contains('-'), "nothing empty here: {line}");
+    }
+}

@@ -25,6 +25,19 @@
 //! outcome the retry reaches, so under churn `total_accesses` counts
 //! retries on top of the trace's arrivals. With churn disabled every one
 //! of these stays zero and all prior metrics are bit-for-bit unchanged.
+//!
+//! Beyond the counters, every slice carries [`Counters::latency`]: three
+//! deterministic log-scale histograms ([`latency::LatencyStats`]) of the
+//! cold-start wait, the warm-serve wait, and the end-to-end response
+//! time, with p50/p95/p99 accessors — the distribution view (LaSS-style)
+//! that sums of durations cannot answer. Recording is integer-only and
+//! happens inside [`Report::record`], so both the single-node engine and
+//! the cluster get it for free and seed-identical runs produce
+//! bit-identical histograms.
+
+pub mod latency;
+
+pub use latency::{LatencyHistogram, LatencyStats};
 
 use crate::trace::SizeClass;
 
@@ -56,6 +69,9 @@ pub struct Counters {
     /// initialization for misses, cloud RTT for offloads, warm dispatch
     /// plus transfer cost for migrations.
     pub startup_us: u64,
+    /// Per-invocation latency distributions (cold / warm / end-to-end),
+    /// recorded alongside the counters; see [`latency`].
+    pub latency: LatencyStats,
 }
 
 impl Counters {
@@ -115,6 +131,7 @@ impl Counters {
         self.churn_evictions += other.churn_evictions;
         self.exec_us += other.exec_us;
         self.startup_us += other.startup_us;
+        self.latency.merge(&other.latency);
     }
 }
 
@@ -151,10 +168,19 @@ impl Report {
         }
     }
 
+    /// Overall latency distributions (shorthand for
+    /// `self.overall.latency`; per-class slices carry their own).
+    pub fn latency(&self) -> &LatencyStats {
+        &self.overall.latency
+    }
+
     /// Record one invocation outcome into the overall and per-class
     /// slices. `startup_us` is the wait before execution began (warm
     /// dispatch, cold init, cloud RTT, or migration transfer); drops
-    /// accumulate no durations.
+    /// accumulate no durations and no latency samples. Latency
+    /// histograms update alongside the counters: cold records the miss
+    /// startup, warm records hit/migration startup, and e2e records
+    /// `startup + exec` of every served invocation.
     pub fn record(
         &mut self,
         class: SizeClass,
@@ -173,11 +199,20 @@ impl Report {
             SizeClass::Large => &mut self.large,
         }] {
             match kind {
-                RecordKind::Hit => c.hits += 1,
-                RecordKind::Miss => c.misses += 1,
+                RecordKind::Hit => {
+                    c.hits += 1;
+                    c.latency.warm.record(startup_us);
+                }
+                RecordKind::Miss => {
+                    c.misses += 1;
+                    c.latency.cold.record(startup_us);
+                }
                 RecordKind::Drop => c.drops += 1,
                 RecordKind::Offload => c.offloads += 1,
-                RecordKind::Migrate { .. } => c.migrations += 1,
+                RecordKind::Migrate { .. } => {
+                    c.migrations += 1;
+                    c.latency.warm.record(startup_us);
+                }
                 RecordKind::NodeDown { .. } | RecordKind::NodeUp { .. } => {
                     unreachable!("handled above")
                 }
@@ -185,6 +220,7 @@ impl Report {
             if kind != RecordKind::Drop {
                 c.exec_us += exec_us;
                 c.startup_us += startup_us;
+                c.latency.e2e.record(startup_us + exec_us);
             }
         }
     }
@@ -368,6 +404,28 @@ mod tests {
         // Lost warm state is not an access and not a failure.
         assert_eq!(r.overall.total_accesses(), 0);
         assert_eq!(r.overall.failure_pct(), 0.0);
+    }
+
+    #[test]
+    fn latency_histograms_ride_along_with_counters() {
+        let mut r = Report::default();
+        r.record(SizeClass::Small, RecordKind::Hit, 500, 100);
+        r.record(SizeClass::Small, RecordKind::Miss, 500, 1_200_000);
+        r.record(SizeClass::Large, RecordKind::Offload, 2_000, 80_000);
+        r.record(SizeClass::Large, RecordKind::Migrate { donor: 1, recipient: 0 }, 400, 15_100);
+        r.record(SizeClass::Large, RecordKind::Drop, 0, 0);
+        assert!(r.is_consistent(), "latency merges must stay class-consistent");
+        let lat = r.latency();
+        assert_eq!(lat.cold.count(), 1, "one miss");
+        assert_eq!(lat.warm.count(), 2, "hit + migration");
+        assert_eq!(lat.e2e.count(), 4, "everything served, drop excluded");
+        // The cold p50 is the miss's 1.2 s init, within bin resolution.
+        let p50 = lat.cold.p50_us();
+        assert!((p50 - 1_200_000.0).abs() / 1_200_000.0 < 0.25, "{p50}");
+        // Per-class slices carry their own distributions.
+        assert_eq!(r.small.latency.cold.count(), 1);
+        assert_eq!(r.large.latency.cold.count(), 0);
+        assert_eq!(r.large.latency.e2e.count(), 2);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Node failure injection — seeded churn as pre-scheduled kernel
+//! events, plus node teardown/recovery and scripted injection.
+//!
+//! The legacy injector kept its own `(time, node)` heap and derived each
+//! toggle's *direction* from the node's live flag at fire time, scanned
+//! on every arrival. On the event kernel the schedule is typed instead:
+//! `ChurnScheduler::arm` pre-schedules every node's first
+//! [`Event::NodeDown`], and each fired toggle schedules its complement
+//! (`ChurnScheduler::reschedule`) — consuming exactly one dwell from
+//! the node's RNG stream per fire, so the toggle *times* are the same
+//! pure function of `(seed, node count)` the legacy injector produced
+//! (property-locked in `tests/integration_cluster.rs`). Typed directions
+//! also make scripted injection compose: a scripted failure no longer
+//! inverts the meaning of the node's next scheduled toggle — an
+//! already-down node absorbs a scheduled `NodeDown` as a no-op and still
+//! recovers on schedule.
+//!
+//! Same-instant ordering is the kernel's class ranking: a completion due
+//! at the failure instant releases its container *before* the node dies;
+//! two toggles at the same microsecond fire in scheduling order (the
+//! legacy heap broke that tie by node index — with exponential
+//! microsecond dwells the collision is measure-zero, and both rules are
+//! deterministic).
+
+use crate::metrics::RecordKind;
+use crate::sim::event::{Event, EventQueue};
+use crate::trace::{Invocation, Trace};
+use crate::util::rng::Pcg64;
+
+use super::Cluster;
+
+/// Node churn injection (`[cluster.churn]`): seeded, deterministic
+/// down/up events over virtual time. Each node alternates between live
+/// dwells (exponential, mean `mean_up_us`) and outages (exponential,
+/// mean `mean_down_us`); the whole schedule is a pure function of
+/// `(seed, node count)`, so churn runs replay exactly.
+///
+/// When a node goes down it loses every resident container: idle warm
+/// state is destroyed (counted as
+/// [`Counters::churn_evictions`](crate::metrics::Counters)) and
+/// in-flight invocations are retried at the failure instant through the
+/// normal placement path (fallbacks, migration, offload) on the
+/// surviving nodes. A recovered node rejoins with an empty, cold pool
+/// but keeps its configuration (partition split, policies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnConfig {
+    /// Seed of the churn schedule (independent of the trace seed).
+    pub seed: u64,
+    /// Mean live dwell between failures (µs).
+    pub mean_up_us: u64,
+    /// Mean outage duration (µs).
+    pub mean_down_us: u64,
+}
+
+impl Default for ChurnConfig {
+    /// One failure per node per 10 virtual minutes, 30 s outages —
+    /// aggressive enough that a 30-minute sweep sees real churn.
+    fn default() -> Self {
+        Self { seed: 1, mean_up_us: 600_000_000, mean_down_us: 30_000_000 }
+    }
+}
+
+/// Exponential dwell with the given mean, floored at 1 µs so schedules
+/// always advance.
+fn dwell_us(rng: &mut Pcg64, mean_us: u64) -> u64 {
+    rng.exponential(1.0 / mean_us as f64).max(1.0) as u64
+}
+
+/// The running churn schedule: per-node RNG streams whose dwells become
+/// pre-scheduled [`Event::NodeDown`]/[`Event::NodeUp`] kernel events,
+/// generated lazily (one outstanding toggle per node) so it works for
+/// any trace length.
+pub(super) struct ChurnScheduler {
+    cfg: ChurnConfig,
+    rngs: Vec<Pcg64>,
+}
+
+impl ChurnScheduler {
+    /// Fork one RNG stream per node from the seed and pre-schedule
+    /// every node's first failure (in node order — simultaneous initial
+    /// toggles therefore fire by node index, like the legacy heap).
+    pub(super) fn arm(cfg: ChurnConfig, n: usize, events: &mut EventQueue) -> Self {
+        let mut root = Pcg64::new(cfg.seed);
+        let mut rngs: Vec<Pcg64> = (0..n).map(|i| root.fork(i as u64 + 1)).collect();
+        for (i, rng) in rngs.iter_mut().enumerate() {
+            events.schedule(dwell_us(rng, cfg.mean_up_us), Event::NodeDown { node: i });
+        }
+        Self { cfg, rngs }
+    }
+
+    /// A toggle for `node` fired at `at_us`: schedule its complement —
+    /// a failure is followed by a recovery after a `mean_down_us` dwell,
+    /// a recovery by the next failure after a `mean_up_us` dwell. Each
+    /// fire consumes exactly one dwell of the node's stream, keeping the
+    /// toggle times identical to the legacy injector's.
+    pub(super) fn reschedule(
+        &mut self,
+        node: usize,
+        fired_down: bool,
+        at_us: u64,
+        events: &mut EventQueue,
+    ) {
+        let (mean, next) = if fired_down {
+            (self.cfg.mean_down_us, Event::NodeUp { node })
+        } else {
+            (self.cfg.mean_up_us, Event::NodeDown { node })
+        };
+        let t = at_us.saturating_add(dwell_us(&mut self.rngs[node], mean));
+        events.schedule(t, next);
+    }
+}
+
+impl Cluster {
+    /// Take a node down at virtual time `t_us`: evict its warm pool
+    /// (accounted as churn evictions), retire its pending completions,
+    /// and retry the killed in-flight invocations through the normal
+    /// placement path on the surviving fleet. No-op if already down.
+    pub(super) fn node_down(&mut self, trace: &Trace, node: usize, t_us: u64) {
+        if !self.live[node] {
+            return;
+        }
+        self.live[node] = false;
+        self.report.record_node_event(RecordKind::NodeDown { node });
+
+        // 1. The warm pool dies with the node; the loss is accounted
+        //    both cluster-wide and on the node that suffered it.
+        for func in self.nodes[node].evict_all() {
+            let class = trace.profile(func).class;
+            self.report.record_churn_eviction(class);
+            self.per_node[node].record_churn_eviction(class);
+        }
+
+        // 2. Pending completions on the node are void; the invocations
+        //    they belonged to restart elsewhere, in deterministic
+        //    dispatch order (the kernel hands them back `(time, seq)`
+        //    sorted).
+        for (_, c) in self.events.extract_node_completions(node) {
+            self.churn_reroutes += 1;
+            let retry = Invocation { t_us, func: c.func, exec_us: c.exec_us };
+            self.note_class_arrival(trace.profile(c.func).class);
+            let _ = self.place(trace, retry);
+        }
+    }
+
+    /// Bring a node back: it rejoins with the empty pool the failure
+    /// left behind but keeps its configuration. No-op if already live.
+    pub(super) fn node_up(&mut self, node: usize) {
+        if self.live[node] {
+            return;
+        }
+        self.live[node] = true;
+        self.report.record_node_event(RecordKind::NodeUp { node });
+    }
+
+    /// Scripted failure injection (tests, what-if experiments): take
+    /// `node` down at `t_us` exactly as a scheduled churn event would —
+    /// warm-pool eviction, completion retirement, in-flight retries.
+    /// Time first advances to `t_us`, applying everything already due.
+    ///
+    /// Unlike the pre-kernel injector — whose queued toggles derived
+    /// their direction from the live flag at fire time, so a scripted
+    /// failure silently inverted the node's next scheduled toggle —
+    /// typed [`Event::NodeDown`]/[`Event::NodeUp`] events compose with
+    /// scripted injection: a redundant toggle is a no-op and the
+    /// schedule keeps its meaning.
+    pub fn inject_node_down(&mut self, trace: &Trace, node: usize, t_us: u64) {
+        self.now_us = self.now_us.max(t_us);
+        self.advance(trace, t_us);
+        self.node_down(trace, node, t_us);
+    }
+
+    /// Scripted recovery injection: bring `node` back at `t_us`.
+    pub fn inject_node_up(&mut self, trace: &Trace, node: usize, t_us: u64) {
+        self.now_us = self.now_us.max(t_us);
+        self.advance(trace, t_us);
+        self.node_up(node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, Cluster, ClusterOutcome, ClusterSpec, NodePolicy};
+    use super::*;
+    use crate::trace::Trace;
+
+    #[test]
+    fn node_down_reroutes_in_flight_work() {
+        // f is mid-execution on node 0 when the node dies: the warm pool
+        // holds nothing idle (no churn evictions), but the in-flight
+        // invocation restarts on the survivor as a fresh cold start.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 100_000)],
+            events: vec![inv(0, 0, 100_000)],
+        };
+        let spec = ClusterSpec::homogeneous(
+            2,
+            1000,
+            NodePolicy::Baseline { policy: crate::coordinator::policy::PolicyKind::Lru },
+        );
+        let mut cluster = Cluster::new(&spec);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            ClusterOutcome::Placed { node: 0, cold: true }
+        );
+        cluster.inject_node_down(&t, 0, 50_000);
+        assert!(!cluster.is_live(0));
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.report.node_downs, 1);
+        assert_eq!(cluster.churn_reroutes, 1);
+        assert_eq!(
+            cluster.report.overall.churn_evictions, 0,
+            "the container was busy, not idle warm state"
+        );
+        assert_eq!(cluster.report.overall.misses, 2, "original + retry");
+        assert_eq!(cluster.per_node[1].overall.misses, 1, "retry lands on the survivor");
+    }
+
+    #[test]
+    fn node_down_counts_idle_warm_loss_and_node_up_restores_service() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(
+            2,
+            1000,
+            NodePolicy::Baseline { policy: crate::coordinator::policy::PolicyKind::Lru },
+        );
+        let mut cluster = Cluster::new(&spec);
+        cluster.step(&t, t.events[0]); // cold on node 0, done at t=500
+        cluster.inject_node_down(&t, 0, 10_000); // the idle copy dies
+        assert_eq!(cluster.report.overall.churn_evictions, 1);
+        assert_eq!(cluster.report.large.churn_evictions, 1, "300 MB is large-class");
+        assert_eq!(cluster.churn_reroutes, 0);
+        cluster.inject_node_up(&t, 0, 20_000);
+        assert!(cluster.is_live(0));
+        assert_eq!(cluster.report.node_ups, 1);
+        // Round-robin continues: node 1 next, then the recovered node 0,
+        // which must cold-start (its warm state is gone).
+        assert_eq!(
+            cluster.step(&t, inv(30_000, 0, 500)),
+            ClusterOutcome::Placed { node: 1, cold: true }
+        );
+        assert_eq!(
+            cluster.step(&t, inv(40_000, 0, 500)),
+            ClusterOutcome::Placed { node: 0, cold: true }
+        );
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn churn_injector_fires_and_recovers_deterministically() {
+        // Aggressive churn over a ~100 s arrival stream: failures and
+        // recoveries both happen, accounting stays consistent, and the
+        // run replays exactly.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: (0..400u64).map(|i| inv(i * 250_000, (i % 2) as u32, 500)).collect(),
+        };
+        let spec = ClusterSpec::homogeneous(3, 1000, NodePolicy::kiss_default())
+            .with_cloud(80_000)
+            .with_churn(ChurnConfig {
+                seed: 9,
+                mean_up_us: 10_000_000,
+                mean_down_us: 5_000_000,
+            });
+        let r = run_cluster(&t, &spec);
+        assert!(r.report.node_downs > 0, "churn must fire: {:?}", r.report);
+        assert!(r.report.node_ups > 0, "nodes must also recover: {:?}", r.report);
+        assert!(
+            r.report.node_ups <= r.report.node_downs,
+            "a recovery needs a preceding failure"
+        );
+        assert!(r.report.is_consistent());
+        assert_eq!(r.live.len(), 3);
+        let again = run_cluster(&t, &spec);
+        assert_eq!(r.report, again.report, "churn runs must replay exactly");
+        assert_eq!(r.churn_reroutes, again.churn_reroutes);
+        assert_eq!(r.live, again.live);
+    }
+
+    /// The typed-event composition promise: a scripted failure before a
+    /// node's first *scheduled* failure no longer inverts the schedule —
+    /// the scheduled `NodeDown` lands on an already-down node as a no-op
+    /// and the node still recovers at its scheduled `NodeUp`.
+    #[test]
+    fn scripted_injection_composes_with_scheduled_churn() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: (0..2_000u64).map(|i| inv(i * 100_000, 0, 500)).collect(), // 200 s
+        };
+        let spec = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default())
+            .with_cloud(80_000)
+            .with_churn(ChurnConfig {
+                seed: 3,
+                mean_up_us: 40_000_000,
+                mean_down_us: 10_000_000,
+            });
+        let mut cluster = Cluster::new(&spec);
+        cluster.inject_node_down(&t, 0, 0); // scripted, before any schedule fires
+        for &ev in &t.events {
+            cluster.step(&t, ev);
+        }
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        // The scripted down plus the scheduled stream both count; the
+        // node recovers (ups > 0) rather than being wedged by an
+        // inverted toggle.
+        assert!(cluster.report.node_downs >= 1);
+        assert!(cluster.report.node_ups >= 1, "{:?}", cluster.report);
+    }
+}

@@ -1,0 +1,422 @@
+//! The online cluster controller — epoch decisions as pre-scheduled
+//! kernel events, plus the observation window they read.
+//!
+//! ## Epoch timing: event-scheduled, arrival-anchored
+//!
+//! Epochs are [`Event::ControllerEpoch`](crate::sim::event::Event)
+//! entries in the kernel queue (the first at `epoch_us`, each firing
+//! scheduling its successor) — `step()` no longer compares the clock on
+//! every arrival. Popping the event only *flags* the decision
+//! (`Cluster::epoch_due`); the decision itself applies at the
+//! timestamp of the arrival that advanced time past it, and the next
+//! epoch is anchored at that arrival's time plus `epoch_us`. This
+//! reproduces the historical per-arrival scan exactly (`next_epoch =
+//! arrival_time + epoch_us`, one decision per arrival at most, decisions
+//! observing every completion up to the arrival instant) — locked by the
+//! anchoring test below and the equivalence suite in
+//! `tests/integration_cluster.rs`. A free-running decision timer
+//! (anchored at the scheduled instant) would drift ahead of the arrival
+//! stream and re-split pools before their completions landed.
+
+use crate::trace::SizeClass;
+
+use super::spec::RouterKind;
+use super::{class_idx, Cluster};
+use crate::sim::event::Event;
+
+/// The cluster-level online controller (`[cluster.controller]`): a
+/// periodic loop over *virtual* time that observes per-node and
+/// per-class pressure and re-provisions the fleet, generalizing the
+/// single-node [`crate::coordinator::adaptive`] logic:
+///
+/// * **`small_nodes` reassignment** — with a size-affinity router, the
+///   boundary between the small-class and large-class node sets moves
+///   toward the class with the higher placement-failure rate.
+/// * **Per-node re-splitting** — each two-pool KiSS node whose local
+///   drop pressure is skewed toward one class gets its small/large split
+///   shifted by `step` (clamped to `[min_frac, max_frac]`), via
+///   [`Dispatcher::try_set_split`](crate::coordinator::Dispatcher::try_set_split).
+///   Baseline nodes (no split) and adaptive nodes (self-managing) are
+///   left alone.
+///
+/// All decisions are deterministic functions of the observed window, so
+/// controller runs replay exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControllerConfig {
+    /// Epoch length in virtual time (µs) between control decisions.
+    pub epoch_us: u64,
+    /// Per-node split capacity shifted per decision (fraction of node
+    /// memory).
+    pub step: f64,
+    /// Lower clamp for a re-split node's small-pool share.
+    pub min_frac: f64,
+    /// Upper clamp for a re-split node's small-pool share.
+    pub max_frac: f64,
+    /// Whether the controller may move the size-affinity boundary.
+    pub reassign_small_nodes: bool,
+    /// Whether the controller may resize per-node KiSS splits.
+    pub resplit_nodes: bool,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            epoch_us: 60_000_000, // one decision per virtual minute
+            step: 0.05,
+            min_frac: 0.5,
+            max_frac: 0.95,
+            reassign_small_nodes: true,
+            resplit_nodes: true,
+        }
+    }
+}
+
+/// Per-epoch observation window for the online controller. Class index:
+/// 0 = small, 1 = large.
+#[derive(Clone, Debug, Default)]
+pub(super) struct ControllerWindow {
+    /// Cluster-level placement failures (offload or drop) per class.
+    class_failures: [u64; 2],
+    /// Cluster-level arrivals per class.
+    class_arrivals: [u64; 2],
+    /// Dispatch-level drops per node, per class.
+    node_drops: Vec<[u64; 2]>,
+    /// Dispatch attempts per node, per class.
+    node_dispatches: Vec<[u64; 2]>,
+}
+
+impl ControllerWindow {
+    pub(super) fn new(nodes: usize) -> Self {
+        Self {
+            class_failures: [0; 2],
+            class_arrivals: [0; 2],
+            node_drops: vec![[0; 2]; nodes],
+            node_dispatches: vec![[0; 2]; nodes],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.class_failures = [0; 2];
+        self.class_arrivals = [0; 2];
+        for d in &mut self.node_drops {
+            *d = [0; 2];
+        }
+        for d in &mut self.node_dispatches {
+            *d = [0; 2];
+        }
+    }
+}
+
+fn rate(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+impl Cluster {
+    /// Window hook: one dispatch attempt on `node`. No-op without a
+    /// controller (the window is never read).
+    pub(super) fn note_dispatch(&mut self, node: usize, class: SizeClass) {
+        if self.controller.is_some() {
+            self.window.node_dispatches[node][class_idx(class)] += 1;
+        }
+    }
+
+    /// Window hook: a dispatch-level drop on `node`.
+    pub(super) fn note_drop(&mut self, node: usize, class: SizeClass) {
+        if self.controller.is_some() {
+            self.window.node_drops[node][class_idx(class)] += 1;
+        }
+    }
+
+    /// Window hook: one cluster-level arrival (trace event or churn
+    /// retry).
+    pub(super) fn note_class_arrival(&mut self, class: SizeClass) {
+        if self.controller.is_some() {
+            self.window.class_arrivals[class_idx(class)] += 1;
+        }
+    }
+
+    /// Window hook: a cluster-level placement failure (offload or drop).
+    pub(super) fn note_class_failure(&mut self, class: SizeClass) {
+        if self.controller.is_some() {
+            self.window.class_failures[class_idx(class)] += 1;
+        }
+    }
+
+    /// Apply a flagged epoch decision at virtual time `now_us` (the
+    /// timestamp of the arrival that advanced past the scheduled epoch
+    /// event) and schedule the next epoch at `now_us + epoch_us` — the
+    /// arrival-anchored cadence described in the module docs. No-op
+    /// unless [`Cluster::advance`] popped a due epoch event.
+    pub(super) fn fire_epoch_if_due(&mut self, now_us: u64) {
+        if !self.epoch_due {
+            return;
+        }
+        self.epoch_due = false;
+        let Some(cfg) = self.controller else { return };
+        self.run_epoch(cfg);
+        self.events
+            .schedule(now_us.saturating_add(cfg.epoch_us), Event::ControllerEpoch);
+    }
+
+    /// One epoch decision: move the size-affinity boundary toward the
+    /// pressured class, then shift per-node KiSS splits toward their
+    /// locally pressured class, then reset the observation window.
+    fn run_epoch(&mut self, cfg: ControllerConfig) {
+        // 1. Move the size-affinity boundary toward the class with the
+        //    higher placement-failure rate (clamped so neither set
+        //    empties). Mirrors the adaptive balancer's 1.5×-skew +
+        //    1%-absolute-floor decision rule. The node changing sides
+        //    must be live: the controller never hands a class boundary
+        //    to a down node (it would re-learn the move on recovery
+        //    from a stale signal instead of real pressure).
+        if cfg.reassign_small_nodes {
+            if let RouterKind::SizeAffinity { small_nodes } = self.router {
+                let n = self.nodes.len();
+                let fs = rate(self.window.class_failures[0], self.window.class_arrivals[0]);
+                let fl = rate(self.window.class_failures[1], self.window.class_arrivals[1]);
+                let new_k = if fs > fl * 1.5
+                    && fs > 0.01
+                    && small_nodes + 1 < n
+                    && self.live[small_nodes]
+                {
+                    small_nodes + 1
+                } else if fl > fs * 1.5
+                    && fl > 0.01
+                    && small_nodes > 1
+                    && self.live[small_nodes - 1]
+                {
+                    small_nodes - 1
+                } else {
+                    small_nodes
+                };
+                if new_k != small_nodes {
+                    self.router = RouterKind::SizeAffinity { small_nodes: new_k };
+                    self.small_node_moves += 1;
+                }
+            }
+        }
+
+        // 2. Shift each resizable node's KiSS split toward its locally
+        //    pressured class. Baseline nodes (`small_frac` = None),
+        //    adaptive nodes (self-managing), and down nodes (their
+        //    window is stale and a resize would act on a dead pool) are
+        //    skipped.
+        if cfg.resplit_nodes {
+            for i in 0..self.nodes.len() {
+                if !self.live[i] {
+                    continue;
+                }
+                let Some(cur) = self.nodes[i].small_frac() else { continue };
+                let d = self.window.node_drops[i];
+                let a = self.window.node_dispatches[i];
+                let rs = rate(d[0], a[0]);
+                let rl = rate(d[1], a[1]);
+                let delta = if rl > rs * 1.5 && rl > 0.01 {
+                    -cfg.step // large pool is starving: give it capacity
+                } else if rs > rl * 1.5 && rs > 0.01 {
+                    cfg.step
+                } else {
+                    continue;
+                };
+                let new_frac = (cur + delta).clamp(cfg.min_frac, cfg.max_frac);
+                // The clamp can reverse the direction of travel when the
+                // configured split starts outside [min_frac, max_frac];
+                // never move against the pressure signal.
+                let moved = new_frac - cur;
+                if moved.abs() > 1e-9
+                    && moved.signum() == delta.signum()
+                    && self.nodes[i].try_set_split(new_frac)
+                {
+                    self.resplits += 1;
+                }
+            }
+        }
+
+        self.window.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, Cluster, NodePolicy, NodeSpec, RouterKind};
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::trace::Trace;
+
+    fn controller(epoch_us: u64) -> ControllerConfig {
+        ControllerConfig { epoch_us, ..ControllerConfig::default() }
+    }
+
+    #[test]
+    fn controller_shrinks_small_node_set_under_large_pressure() {
+        // 3 baseline nodes behind size-affinity with 2 small nodes; the
+        // workload is all-large and node 2 (the only large node, 400 MB)
+        // saturates -> large-class failures dominate every epoch and the
+        // controller hands node 1 to the large set.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 2_000_000), func(1, 310, 1_000, 2_000_000)],
+            events: (0..40u64)
+                .map(|i| inv(i * 100_000, (i % 2) as u32, 2_000_000))
+                .collect(),
+        };
+        let mut spec = static_spec(
+            vec![baseline_node(400), baseline_node(400), baseline_node(400)],
+            0,
+        );
+        spec.router = RouterKind::SizeAffinity { small_nodes: 2 };
+        spec.controller = Some(controller(500_000));
+        let r = run_cluster(&t, &spec);
+        assert!(r.small_node_moves > 0, "controller must react: {r:?}");
+        assert_eq!(
+            r.router,
+            RouterKind::SizeAffinity { small_nodes: 1 },
+            "boundary clamps at one small node"
+        );
+        // With nodes 1 and 2 serving the large class, capacity doubled.
+        assert!(r.per_node[1].large.total_accesses() > 0);
+    }
+
+    #[test]
+    fn controller_resplits_a_starving_kiss_node() {
+        // One KiSS 90-10 node (1 GB): its 102 MB large pool drops every
+        // 350 MB invocation. The controller shifts capacity to the large
+        // pool (mirroring the adaptive balancer, but driven from the
+        // cluster level).
+        let t = Trace {
+            functions: vec![func(0, 350, 1_000, 100)],
+            events: (0..60u64).map(|i| inv(i * 100_000, 0, 100)).collect(),
+        };
+        let node = NodeSpec {
+            mem_mb: 1024,
+            policy: NodePolicy::Kiss {
+                small_frac: 0.9,
+                threshold_mb: 200,
+                small_policy: PolicyKind::Lru,
+                large_policy: PolicyKind::Lru,
+            },
+        };
+        let mut spec = static_spec(vec![node], 0);
+        spec.controller = Some(ControllerConfig {
+            epoch_us: 500_000,
+            step: 0.1,
+            ..ControllerConfig::default()
+        });
+        let r = run_cluster(&t, &spec);
+        assert!(r.resplits > 0, "controller must resize the split: {r:?}");
+        // Once the large pool holds >= 350 MB the drops stop.
+        assert!(
+            r.report.overall.misses + r.report.overall.hits > 0,
+            "large fn eventually serves: {:?}",
+            r.report.overall
+        );
+        assert!(r.report.overall.drops < 60, "{:?}", r.report.overall);
+    }
+
+    #[test]
+    fn resplit_never_moves_against_the_pressure_signal() {
+        // A node configured at small_frac 0.45 sits below the controller's
+        // min_frac clamp (0.5). Large-class pressure asks for an even
+        // smaller small pool; the clamp would *raise* it to 0.5 — the
+        // wrong direction — so the controller must skip the move.
+        let t = Trace {
+            functions: vec![func(0, 600, 1_000, 100)],
+            events: (0..20u64).map(|i| inv(i * 100_000, 0, 100)).collect(),
+        };
+        let node = NodeSpec {
+            mem_mb: 1024,
+            policy: NodePolicy::Kiss {
+                small_frac: 0.45,
+                threshold_mb: 200,
+                small_policy: PolicyKind::Lru,
+                large_policy: PolicyKind::Lru,
+            },
+        };
+        let mut spec = static_spec(vec![node], 0);
+        spec.controller = Some(controller(500_000));
+        let r = run_cluster(&t, &spec);
+        // The 563 MB large pool can never hold the 600 MB function: every
+        // epoch sees pure large-class pressure, yet no resplit happens.
+        assert_eq!(r.resplits, 0, "{r:?}");
+        assert_eq!(r.report.overall.drops, 20);
+    }
+
+    #[test]
+    fn controller_boundary_never_moves_to_a_down_node() {
+        // The controller_shrinks_small_node_set_under_large_pressure
+        // scenario, but node 1 — the node the shrink would hand to the
+        // large set — is down: the boundary must stay put.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 2_000_000), func(1, 310, 1_000, 2_000_000)],
+            events: (0..40u64)
+                .map(|i| inv(i * 100_000, (i % 2) as u32, 2_000_000))
+                .collect(),
+        };
+        let mut spec = static_spec(
+            vec![baseline_node(400), baseline_node(400), baseline_node(400)],
+            0,
+        );
+        spec.router = RouterKind::SizeAffinity { small_nodes: 2 };
+        spec.controller = Some(controller(500_000));
+        let mut cluster = Cluster::new(&spec);
+        cluster.inject_node_down(&t, 1, 0);
+        for &ev in &t.events {
+            cluster.step(&t, ev);
+        }
+        cluster.finish();
+        assert_eq!(cluster.small_node_moves, 0, "boundary must not move to a down node");
+        assert_eq!(cluster.router(), RouterKind::SizeAffinity { small_nodes: 2 });
+    }
+
+    /// The legacy-scan anchoring lock: the next epoch is `epoch_us`
+    /// after the arrival that APPLIED the previous one, not after its
+    /// scheduled instant. With a 1 s epoch and arrivals at 1.5 s, 2.3 s,
+    /// 3.6 s, 4.8 s of a permanently-dropping workload:
+    ///
+    /// * arrival-anchored (legacy + this kernel): decisions at 1.5 s
+    ///   (empty window, no resplit), 3.6 s (resplit #1, window holds the
+    ///   1.5 s and 2.3 s drops), 4.8 s (resplit #2) — the 2.3 s arrival
+    ///   sits inside the 1.5 s + 1 s quiet period.
+    /// * schedule-anchored (the drift this test guards against): the
+    ///   2.3 s arrival would also decide (scheduled 2.0 s), yielding 3
+    ///   resplits.
+    #[test]
+    fn epoch_rescheduling_anchors_to_the_applying_arrival() {
+        let t = Trace {
+            functions: vec![func(0, 350, 1_000, 100)],
+            events: vec![
+                inv(1_500_000, 0, 100),
+                inv(2_300_000, 0, 100),
+                inv(3_600_000, 0, 100),
+                inv(4_800_000, 0, 100),
+            ],
+        };
+        // KiSS 90-10 on 1 GB: the 102 MB large pool drops every 350 MB
+        // arrival, so every non-empty window carries pure large-class
+        // pressure and every applied epoch resplits by `step`.
+        let node = NodeSpec {
+            mem_mb: 1024,
+            policy: NodePolicy::Kiss {
+                small_frac: 0.9,
+                threshold_mb: 200,
+                small_policy: PolicyKind::Lru,
+                large_policy: PolicyKind::Lru,
+            },
+        };
+        let mut spec = static_spec(vec![node], 0);
+        spec.controller = Some(ControllerConfig {
+            epoch_us: 1_000_000,
+            step: 0.05,
+            ..ControllerConfig::default()
+        });
+        let r = run_cluster(&t, &spec);
+        assert_eq!(
+            r.resplits, 2,
+            "decisions must anchor at the applying arrival (legacy scan semantics): {r:?}"
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! The warm-state rescue path — stage three of the placement pipeline:
+//! cross-node warm-container migration and in-place rescue hits.
+
+use crate::metrics::RecordKind;
+use crate::sim::InitOccupancy;
+use crate::trace::{FunctionProfile, Invocation};
+
+use super::spec::ClusterOutcome;
+use super::Cluster;
+
+/// Cross-node warm-container migration (`[cluster.migration]`).
+///
+/// When the fallback scan fails (the invocation would offload or drop),
+/// the cluster becomes warm-state-aware: it finds the least-loaded
+/// *holder* node with an idle warm container of the same function (any
+/// node the fallback scan tried would have served a warm hit instead of
+/// dropping, so holders are always outside the tried set) and the
+/// least-loaded admissible *non-holder*. If the non-holder is strictly
+/// less loaded, the container is torn down on the holder (the donor),
+/// re-admitted warm on the recipient, and the invocation is served there
+/// — paying `cost_us` on top of the warm dispatch time instead of a cold
+/// start or a cloud round trip; recorded as [`RecordKind::Migrate`] with
+/// both node ids. Otherwise the invocation is served *on* the holder for
+/// free (a rescue hit, counted in [`Cluster::rescues`]): the engine
+/// never pays to move warm state toward a hotter node, and never evicts
+/// a local warm copy to admit a transferred one.
+///
+/// All selections are deterministic (strict load improvement, ties to
+/// the lowest node index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigrationPolicy {
+    /// One-time cost (µs) of moving a warm container between nodes,
+    /// charged as startup wait of the migrated invocation (checkpoint +
+    /// transfer + restore; CRIU-style live migration lands in the
+    /// 10–100 ms range on edge links).
+    pub cost_us: u64,
+}
+
+impl Cluster {
+    /// The warm-state rescue path, tried when the fallback scan failed.
+    /// Finds the least-loaded live *holder* (a node with an idle warm
+    /// container of `profile`'s function — always outside the tried set,
+    /// since a tried holder would have served a Hit) and the least-loaded
+    /// admissible live *non-holder*. If the non-holder is strictly less
+    /// loaded it pays the transfer cost — plus the donor→recipient hop
+    /// latency under a non-flat topology — to migrate the container
+    /// there; otherwise it serves the invocation on the holder (a rescue
+    /// hit, free except the primary→holder hop latency — never pay to
+    /// move warm state toward a hotter node, and never evict a local
+    /// warm copy to admit a transferred one). Returns `None` when
+    /// migration is disabled or no warm state exists anywhere (the caller
+    /// then offloads or drops as before).
+    pub(super) fn try_migrate(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        primary: Option<usize>,
+    ) -> Option<ClusterOutcome> {
+        let base_cost_us = self.migration?.cost_us;
+        let n = self.nodes.len();
+        // One scan over the live fleet, two argmins (strict improvement,
+        // ties to the lowest index): least-loaded holder and
+        // least-loaded admissible non-holder.
+        let mut holder: Option<(usize, u64)> = None;
+        let mut target: Option<(usize, u64)> = None;
+        for i in 0..n {
+            if !self.live[i] {
+                continue;
+            }
+            let used = self.nodes[i].used_mb();
+            let slot = if self.nodes[i].has_idle(profile) {
+                &mut holder
+            } else if self.nodes[i].can_admit(profile) {
+                &mut target
+            } else {
+                continue;
+            };
+            let better = match *slot {
+                None => true,
+                Some((b, b_used)) => self.frac_less(i, used, b, b_used),
+            };
+            if better {
+                *slot = Some((i, used));
+            }
+        }
+        let (holder, holder_used) = holder?; // no warm state anywhere
+        // A live holder exists, so the router found a live primary.
+        let primary = primary.expect("a live holder implies a routable fleet");
+
+        if let Some((recipient, rec_used)) = target {
+            if self.frac_less(recipient, rec_used, holder, holder_used) {
+                return Some(self.migrate_to(profile, ev, holder, recipient, base_cost_us));
+            }
+        }
+        self.rescue_on_holder(profile, ev, primary, holder)
+    }
+
+    /// Execute a migration: tear the idle container down on the donor,
+    /// admit it warm (born busy) on the recipient, and serve there at
+    /// the transfer cost plus the donor→recipient hop latency.
+    fn migrate_to(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        donor: usize,
+        recipient: usize,
+        base_cost_us: u64,
+    ) -> ClusterOutcome {
+        let n = self.nodes.len();
+        let took = self.nodes[donor].take_idle(profile);
+        debug_assert!(took, "holder certified an idle container");
+        let (pool, container) = self.nodes[recipient]
+            .admit_migrated(profile, ev.t_us)
+            .expect("can_admit certified admission");
+        // Count the serve toward the recipient's dispatch window (as the
+        // rescue branch does for the holder) so the controller's
+        // per-node drop rates see migration traffic.
+        self.note_dispatch(recipient, profile.class);
+        // The transfer pays the donor→recipient hop latency on top of
+        // the checkpoint/restore cost.
+        let cost_us = base_cost_us + self.topology.latency_us(donor, recipient, n);
+        // The migrated container serves warm; under HoldsMemory the
+        // transfer occupies the container like init does.
+        let busy = match self.init_occupancy {
+            InitOccupancy::LatencyOnly => profile.warm_start_us + ev.exec_us,
+            InitOccupancy::HoldsMemory => profile.warm_start_us + cost_us + ev.exec_us,
+        };
+        self.push_completion(ev.t_us + busy, recipient, pool, container, ev);
+        self.record_served(
+            recipient,
+            profile.class,
+            RecordKind::Migrate { donor, recipient },
+            ev.exec_us,
+            profile.warm_start_us + cost_us,
+        );
+        ClusterOutcome::Migrated { donor, recipient }
+    }
+
+    /// Rescue hit: serve where the warm state already lives, paying the
+    /// primary→holder forwarding latency (0 under flat) as startup wait.
+    /// The dispatch is guaranteed warm except on an adaptive node whose
+    /// self-rebalance just resized the copy away — handled by the shared
+    /// [`Cluster::dispatch_on`] rather than assumed.
+    fn rescue_on_holder(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        primary: usize,
+        holder: usize,
+    ) -> Option<ClusterOutcome> {
+        let lat = self.topology.latency_us(primary, holder, self.nodes.len());
+        let outcome = self.dispatch_on(holder, profile, ev, lat)?;
+        self.rerouted += 1;
+        if matches!(outcome, ClusterOutcome::Placed { cold: false, .. }) {
+            self.rescues += 1;
+        }
+        Some(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, Cluster, ClusterOutcome, ClusterSpec, NodePolicy, Topology};
+    use super::*;
+    use crate::trace::{FunctionId, Trace};
+
+    #[test]
+    fn migrate_records_donor_and_recipient() {
+        // Fleet [400, 1000, 100] MB, round-robin, no fallback, no cloud.
+        // f (300 MB) cold-starts on node 0 (leaving it 75% full with the
+        // idle copy); a small function g lands on node 1 (4% full). The
+        // third arrival of f routes to node 2 (too small -> Drop); the
+        // migration path finds holder = node 0, and node 1 — strictly
+        // less loaded with plenty of headroom — becomes the recipient.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500), func(1, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 1, 500), inv(20_000, 0, 500)],
+        };
+        let mut spec =
+            static_spec(vec![baseline_node(400), baseline_node(1000), baseline_node(100)], 0);
+        spec.migration = Some(MigrationPolicy { cost_us: 15_000 });
+        let mut cluster = Cluster::new(&spec);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            ClusterOutcome::Placed { node: 0, cold: true }
+        );
+        assert_eq!(
+            cluster.step(&t, t.events[1]),
+            ClusterOutcome::Placed { node: 1, cold: true }
+        );
+        let profile = t.profile(FunctionId(0));
+        assert!(cluster.node(0).has_idle(profile));
+        assert_eq!(
+            cluster.step(&t, t.events[2]),
+            ClusterOutcome::Migrated { donor: 0, recipient: 1 }
+        );
+        assert!(!cluster.node(0).has_idle(profile), "donor gave up its container");
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.report.overall.migrations, 1);
+        assert_eq!(cluster.report.overall.drops, 0);
+        assert_eq!(cluster.rescues, 0);
+        assert_eq!(cluster.per_node[1].overall.migrations, 1, "recorded on recipient");
+        // Startup: 2 cold (1000 each) + warm dispatch 100 + cost 15000.
+        assert_eq!(cluster.report.overall.startup_us, 2_000 + 100 + 15_000);
+    }
+
+    #[test]
+    fn rescue_hit_serves_on_holder_instead_of_paying_migration() {
+        // Fleet [400, 400, 100]: after two cold starts of f, both holders
+        // are equally loaded and no less-loaded node can admit f — the
+        // rescue path must serve the third arrival warm ON a holder for
+        // free rather than evict node 1's own copy to admit a transfer.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500), inv(20_000, 0, 500)],
+        };
+        let mut spec =
+            static_spec(vec![baseline_node(400), baseline_node(400), baseline_node(100)], 0);
+        spec.migration = Some(MigrationPolicy { cost_us: 15_000 });
+        let mut cluster = Cluster::new(&spec);
+        cluster.step(&t, t.events[0]);
+        cluster.step(&t, t.events[1]);
+        // Ties break to the lowest index: the rescue hit lands on node 0.
+        assert_eq!(
+            cluster.step(&t, t.events[2]),
+            ClusterOutcome::Placed { node: 0, cold: false }
+        );
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.rescues, 1);
+        assert_eq!(cluster.rerouted, 1);
+        assert_eq!(cluster.report.overall.migrations, 0, "no transfer was paid");
+        assert_eq!(cluster.report.overall.hits, 1);
+        assert_eq!(cluster.report.overall.drops, 0);
+        // Both warm copies survive (no self-eviction on node 1).
+        let profile = t.profile(FunctionId(0));
+        assert!(cluster.node(0).has_idle(profile));
+        assert!(cluster.node(1).has_idle(profile));
+        // Startup: 2 cold (1000 each) + one plain warm dispatch (100).
+        assert_eq!(cluster.report.overall.startup_us, 2_100);
+    }
+
+    #[test]
+    fn migration_disabled_still_drops() {
+        // Same scenario as above with migration off: the third arrival
+        // is a hard drop (the static path).
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500), inv(20_000, 0, 500)],
+        };
+        let spec =
+            static_spec(vec![baseline_node(400), baseline_node(400), baseline_node(100)], 0);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.drops, 1);
+        assert_eq!(r.report.overall.migrations, 0);
+    }
+
+    #[test]
+    fn migration_without_donor_falls_through_to_offload() {
+        // No warm copy of f exists anywhere: migration cannot help and
+        // the invocation offloads exactly as without migration.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(
+            2,
+            100,
+            NodePolicy::Baseline { policy: crate::coordinator::policy::PolicyKind::Lru },
+        )
+        .with_cloud(80_000)
+        .with_migration(15_000);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.offloads, 1);
+        assert_eq!(r.report.overall.migrations, 0);
+    }
+
+    #[test]
+    fn migration_pays_donor_to_recipient_hops() {
+        // migrate_records_donor_and_recipient on a star with 500 µs
+        // hops: donor node 0 is the hub, so the transfer to node 1 adds
+        // exactly one hop to the migration cost.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500), func(1, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 1, 500), inv(20_000, 0, 500)],
+        };
+        let mut spec =
+            static_spec(vec![baseline_node(400), baseline_node(1000), baseline_node(100)], 0);
+        spec.migration = Some(MigrationPolicy { cost_us: 15_000 });
+        spec.topology = Topology::Star { hop_us: 500 };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.migrations, 1);
+        // Startup: 2 colds (1000 each) + warm 100 + cost 15000 + hop 500.
+        assert_eq!(r.report.overall.startup_us, 2_000 + 100 + 15_000 + 500);
+    }
+
+    #[test]
+    fn rescue_pays_forwarding_latency() {
+        // rescue_hit_serves_on_holder... on a 3-ring with 1 ms hops: the
+        // third arrival routes to node 2, the rescue serves on holder
+        // node 0 — one hop away around the ring.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500), inv(20_000, 0, 500)],
+        };
+        let mut spec =
+            static_spec(vec![baseline_node(400), baseline_node(400), baseline_node(100)], 0);
+        spec.migration = Some(MigrationPolicy { cost_us: 15_000 });
+        spec.topology = Topology::Ring { hop_us: 1_000 };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.rescues, 1);
+        assert_eq!(r.report.overall.migrations, 0);
+        // Startup: 2 colds (1000 each) + warm 100 + one hop 1000.
+        assert_eq!(r.report.overall.startup_us, 2_000 + 100 + 1_000);
+    }
+}

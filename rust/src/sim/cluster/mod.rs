@@ -1,0 +1,507 @@
+//! Multi-node edge-cluster simulation — the edge-cloud continuum layer.
+//!
+//! The single-node engine ([`super::Engine`]) evaluates the *memory
+//! policy* in isolation; real edge deployments run fleets of small,
+//! heterogeneous nodes behind a cluster-level router, and an invocation
+//! that no edge node can place is not lost — it is offloaded to a cloud
+//! region at a latency cost (LaSS, Fifer). This module adds exactly that
+//! layer on identical event semantics, built on the shared typed event
+//! kernel ([`crate::sim::event`]): completions, churn toggles, and
+//! controller epochs all live in **one** time-ordered
+//! [`EventQueue`](crate::sim::event::EventQueue), consumed in
+//! deterministic `(time, class rank, seq)` order, with trace arrivals
+//! merged in as the pre-sorted external stream.
+//!
+//! The module is split by concern; each submodule owns one stage of the
+//! placement pipeline or one fleet mechanism:
+//!
+//! * [`spec`] — the cluster description: [`NodeSpec`]/[`NodePolicy`],
+//!   [`RouterKind`], [`CloudTier`], the inter-node [`Topology`], and
+//!   [`ClusterSpec`] with its builders.
+//! * [`route`] — primary-node selection: the four routers, the
+//!   load-fraction compare, and topology-aware tie-breaking.
+//! * [`offload`] — the edge placement loop (primary dispatch + fallback
+//!   retries) and the terminal offload-or-drop stage.
+//! * [`migrate`] — the warm-state rescue path: cross-node
+//!   warm-container migration and in-place rescue hits.
+//! * [`churn`] — node failure injection: the seeded schedule becomes
+//!   pre-scheduled [`Event::NodeDown`]/[`Event::NodeUp`] events; node
+//!   teardown/recovery and scripted injection live here too.
+//! * [`controller`] — the online epoch controller: pre-scheduled
+//!   [`Event::ControllerEpoch`] events, the observation window, and the
+//!   boundary/resplit decision logic.
+//! * [`report`] — [`ClusterReport`] and the cross-slice invariants.
+//!
+//! An invocation flows through a pipeline of small functions:
+//! `route` → `try_edge` (primary + fallbacks) → `try_migrate`
+//! (migration / rescue hit) → `offload_or_drop`. Every stage is
+//! deterministic; ties break to the lowest node index (after the
+//! topology distance, where one applies).
+//!
+//! With migration, controller, and churn disabled and a flat topology
+//! (all the defaults), every code path is identical to the static
+//! cluster: results are bit-for-bit unchanged (locked by
+//! `tests/integration_cluster.rs`), and a one-node cluster reduces
+//! bit-for-bit to [`super::run_trace_with`].
+
+pub mod churn;
+pub mod controller;
+pub mod migrate;
+pub mod offload;
+pub mod report;
+pub mod route;
+pub mod spec;
+
+pub use churn::ChurnConfig;
+pub use controller::ControllerConfig;
+pub use migrate::MigrationPolicy;
+pub use report::ClusterReport;
+pub use spec::{
+    CloudTier, ClusterOutcome, ClusterSpec, NodePolicy, NodeSpec, RouterKind, Topology,
+};
+
+use crate::coordinator::{ContainerId, Dispatcher};
+use crate::metrics::{RecordKind, Report};
+use crate::sim::event::{Completion, Event, EventQueue};
+use crate::trace::{Invocation, SizeClass, Trace};
+
+use super::InitOccupancy;
+use churn::ChurnScheduler;
+use controller::ControllerWindow;
+
+/// Index of a size class into the controller's per-class windows
+/// (0 = small, 1 = large).
+pub(super) fn class_idx(class: SizeClass) -> usize {
+    match class {
+        SizeClass::Small => 0,
+        SizeClass::Large => 1,
+    }
+}
+
+/// The cluster engine: N dispatchers behind one router, one virtual
+/// clock, one typed event queue, with optional migration, online
+/// controller, topology, and churn extensions.
+pub struct Cluster {
+    pub(super) nodes: Vec<Box<dyn Dispatcher>>,
+    /// Total capacity per node, cached at construction (constant: live
+    /// resizes move capacity between pools, never across nodes).
+    pub(super) caps: Vec<u64>,
+    pub(super) router: RouterKind,
+    pub(super) max_fallbacks: usize,
+    pub(super) cloud: Option<CloudTier>,
+    pub(super) init_occupancy: InitOccupancy,
+    pub(super) migration: Option<MigrationPolicy>,
+    pub(super) controller: Option<ControllerConfig>,
+    pub(super) topology: Topology,
+    /// Generates the next churn toggle whenever one fires; `None`
+    /// without `[cluster.churn]`.
+    pub(super) churn: Option<ChurnScheduler>,
+    /// Per-node liveness; always all-true without churn/injection.
+    pub(super) live: Vec<bool>,
+    pub(super) window: ControllerWindow,
+    /// Set when a pre-scheduled [`Event::ControllerEpoch`] has popped;
+    /// the decision applies at the next arrival's timestamp — exactly
+    /// the historical per-arrival scan semantics (see [`controller`]).
+    pub(super) epoch_due: bool,
+    /// The typed event kernel: completions + churn toggles + epochs.
+    pub(super) events: EventQueue,
+    pub(super) now_us: u64,
+    pub(super) rr_next: usize,
+    /// Cluster-wide metrics (offloads and drops live only here).
+    pub report: Report,
+    /// What each node actually served (no drops/offloads: those are
+    /// cluster-level outcomes; migrations are recorded on the recipient).
+    pub per_node: Vec<Report>,
+    /// Peak occupancy per node (MB).
+    pub peak_used_mb: Vec<u64>,
+    /// Invocations served by a fallback node after the primary dropped.
+    pub rerouted: u64,
+    /// Would-be failures served warm *in place* on a holder node (the
+    /// migration path decided moving the state was not worth it). Also
+    /// counted in `rerouted`.
+    pub rescues: u64,
+    /// Controller decisions that moved the size-affinity boundary.
+    pub small_node_moves: u64,
+    /// Controller decisions that live-resized a node's KiSS split.
+    pub resplits: u64,
+    /// In-flight invocations killed by a node failure and retried
+    /// through the placement path (churn extension).
+    pub churn_reroutes: u64,
+}
+
+impl Cluster {
+    /// Build a cluster from its spec. Panics on an empty fleet, an
+    /// invalid controller config, a topology that does not fit the
+    /// fleet, or degenerate churn dwells (the TOML path validates these
+    /// in [`crate::config::SimConfig::validate`]; programmatic specs are
+    /// checked here so a bad spec fails at construction, not mid-run).
+    pub fn new(spec: &ClusterSpec) -> Self {
+        assert!(!spec.nodes.is_empty(), "cluster needs at least one node");
+        if let Err(e) = spec.topology.validate(spec.nodes.len()) {
+            panic!("invalid cluster topology: {e}");
+        }
+        if let Some(churn) = &spec.churn {
+            assert!(
+                churn.mean_up_us > 0 && churn.mean_down_us > 0,
+                "churn dwell means must be > 0"
+            );
+        }
+        if let Some(ctl) = &spec.controller {
+            assert!(ctl.epoch_us > 0, "controller epoch must be > 0");
+            assert!(
+                ctl.step > 0.0 && ctl.step < 1.0,
+                "controller step must be in (0, 1), got {}",
+                ctl.step
+            );
+            assert!(
+                ctl.min_frac > 0.0 && ctl.min_frac <= ctl.max_frac && ctl.max_frac < 1.0,
+                "controller needs 0 < min_frac <= max_frac < 1, got {}..{}",
+                ctl.min_frac,
+                ctl.max_frac
+            );
+        }
+        let nodes: Vec<Box<dyn Dispatcher>> = spec.nodes.iter().map(|n| n.build()).collect();
+        let caps: Vec<u64> = nodes
+            .iter()
+            .map(|n| n.occupancy().iter().map(|&(_, c)| c).sum())
+            .collect();
+        let count = nodes.len();
+        let mut events = EventQueue::new();
+        // Pre-schedule the event sources: the first controller epoch and
+        // every node's first failure. From here on each fired event
+        // schedules its own successor.
+        if let Some(ctl) = &spec.controller {
+            events.schedule(ctl.epoch_us, Event::ControllerEpoch);
+        }
+        let churn = spec.churn.map(|c| ChurnScheduler::arm(c, count, &mut events));
+        Self {
+            nodes,
+            caps,
+            router: spec.router,
+            max_fallbacks: spec.max_fallbacks,
+            cloud: spec.cloud,
+            init_occupancy: spec.init_occupancy,
+            migration: spec.migration,
+            controller: spec.controller,
+            topology: spec.topology.clone(),
+            churn,
+            live: vec![true; count],
+            window: ControllerWindow::new(count),
+            epoch_due: false,
+            events,
+            now_us: 0,
+            rr_next: 0,
+            report: Report::default(),
+            per_node: vec![Report::default(); count],
+            peak_used_mb: vec![0; count],
+            rerouted: 0,
+            rescues: 0,
+            small_node_moves: 0,
+            resplits: 0,
+            churn_reroutes: 0,
+        }
+    }
+
+    /// Number of nodes in the fleet.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Current virtual time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Borrow one node's dispatcher (inspection in tests/benches).
+    pub fn node(&self, idx: usize) -> &dyn Dispatcher {
+        self.nodes[idx].as_ref()
+    }
+
+    /// The router as currently configured — the controller may have moved
+    /// the size-affinity boundary since construction.
+    pub fn router(&self) -> RouterKind {
+        self.router
+    }
+
+    /// Whether node `idx` is currently live (churn extension; always
+    /// true without churn or injected failures).
+    pub fn is_live(&self, idx: usize) -> bool {
+        self.live[idx]
+    }
+
+    /// Advance virtual time to `t`: pop every queued event due at or
+    /// before `t` in `(time, class rank, seq)` order. Completions
+    /// release their containers, churn toggles tear down / revive nodes
+    /// (each scheduling its successor), and a due controller epoch is
+    /// *flagged* — its decision applies at the arrival that triggered
+    /// the advance, reproducing the historical per-arrival scan (see
+    /// [`controller`]). A completion due at the instant of a failure
+    /// releases before the node dies — the kernel's class ranking, not
+    /// scattered drain calls, now guarantees it.
+    pub(super) fn advance(&mut self, trace: &Trace, t: u64) {
+        while let Some((time, ev)) = self.events.pop_due(t) {
+            match ev {
+                Event::Completion(c) => {
+                    self.nodes[c.node].release(c.pool, c.container, time);
+                }
+                Event::NodeDown { node } => {
+                    if let Some(ch) = self.churn.as_mut() {
+                        ch.reschedule(node, true, time, &mut self.events);
+                    }
+                    self.node_down(trace, node, time);
+                }
+                Event::NodeUp { node } => {
+                    if let Some(ch) = self.churn.as_mut() {
+                        ch.reschedule(node, false, time, &mut self.events);
+                    }
+                    self.node_up(node);
+                }
+                Event::ControllerEpoch => self.epoch_due = true,
+                Event::Arrival(_) => {
+                    unreachable!("arrivals are the external trace stream, never queued")
+                }
+            }
+        }
+    }
+
+    pub(super) fn push_completion(
+        &mut self,
+        end_us: u64,
+        node: usize,
+        pool: usize,
+        container: ContainerId,
+        ev: Invocation,
+    ) {
+        self.events.schedule(
+            end_us,
+            Event::Completion(Completion {
+                node,
+                pool,
+                container,
+                func: ev.func,
+                exec_us: ev.exec_us,
+            }),
+        );
+    }
+
+    pub(super) fn record_served(
+        &mut self,
+        node: usize,
+        class: SizeClass,
+        kind: RecordKind,
+        exec_us: u64,
+        startup_us: u64,
+    ) {
+        self.report.record(class, kind, exec_us, startup_us);
+        self.per_node[node].record(class, kind, exec_us, startup_us);
+        self.peak_used_mb[node] = self.peak_used_mb[node].max(self.nodes[node].used_mb());
+    }
+
+    /// Place one invocation end-to-end through the pipeline:
+    /// `route` → `try_edge` → `try_migrate` → `offload_or_drop`. Shared
+    /// by trace arrivals ([`Cluster::step`]) and churn retries of killed
+    /// in-flight work.
+    pub(super) fn place(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
+        let profile = trace.profile(ev.func);
+        let primary = self.route(profile);
+        if let Some(primary) = primary {
+            if let Some(outcome) = self.try_edge(profile, ev, primary) {
+                return outcome;
+            }
+        }
+        // Every candidate declined (or the whole fleet is down): migrate
+        // warm state if possible, then offload to the cloud tier, then
+        // drop. (`try_migrate` is an immediate no-op when migration is
+        // disabled.)
+        if let Some(outcome) = self.try_migrate(profile, ev, primary) {
+            return outcome;
+        }
+        self.offload_or_drop(profile, ev)
+    }
+
+    /// Process one arrival end-to-end: advance time (completions +
+    /// churn), apply a due controller epoch, then run the placement
+    /// pipeline.
+    pub fn step(&mut self, trace: &Trace, ev: Invocation) -> ClusterOutcome {
+        debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
+        self.now_us = ev.t_us;
+        self.advance(trace, ev.t_us);
+        self.fire_epoch_if_due(ev.t_us); // no-op unless an epoch popped
+        self.note_class_arrival(trace.profile(ev.func).class);
+        self.place(trace, ev)
+    }
+
+    /// Release everything still in flight (end-of-trace drain). Pending
+    /// churn toggles and controller epochs beyond the trace are
+    /// discarded — the run is over.
+    pub fn finish(&mut self) {
+        while let Some((time, ev)) = self.events.pop() {
+            if let Event::Completion(c) = ev {
+                self.nodes[c.node].release(c.pool, c.container, time);
+            }
+        }
+    }
+}
+
+/// Run a whole trace through a cluster and return the full report.
+///
+/// ```no_run
+/// // (no_run: doctest binaries miss the libstdc++ rpath in this image —
+/// // see util::prop; the same flow executes in this module's tests and
+/// // tests/integration_cluster.rs)
+/// use kiss_faas::sim::cluster::{run_cluster, ClusterSpec, NodePolicy};
+/// use kiss_faas::trace::synth::{synthesize, SynthConfig};
+///
+/// let trace = synthesize(&SynthConfig {
+///     duration_us: 60_000_000, // 1 virtual minute
+///     ..SynthConfig::default()
+/// });
+/// let spec = ClusterSpec::homogeneous(4, 2048, NodePolicy::kiss_default())
+///     .with_cloud(80_000)      // 80 ms cloud RTT
+///     .with_migration(15_000); // 15 ms warm-container transfer
+/// let result = run_cluster(&trace, &spec);
+/// assert!(result.report.is_consistent());
+/// assert_eq!(result.per_node.len(), 4);
+/// ```
+pub fn run_cluster(trace: &Trace, spec: &ClusterSpec) -> ClusterReport {
+    debug_assert!(trace.is_sorted());
+    let mut cluster = Cluster::new(spec);
+    for &ev in &trace.events {
+        cluster.step(trace, ev);
+    }
+    cluster.finish();
+    debug_assert!(cluster.check_invariants().is_ok());
+    cluster.into_report()
+}
+
+/// Shared scaffolding for the submodule test suites.
+#[cfg(test)]
+pub(super) mod testutil {
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::trace::{FunctionId, FunctionProfile, SizeClass};
+
+    pub fn func(id: u32, mem: u32, cold_us: u64, exec_us: u64) -> FunctionProfile {
+        FunctionProfile {
+            id: FunctionId(id),
+            app_id: id,
+            mem_mb: mem,
+            app_mem_mb: mem,
+            cold_start_us: cold_us,
+            warm_start_us: 100,
+            exec_us_mean: exec_us,
+            class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+        }
+    }
+
+    pub fn inv(t: u64, f: u32, exec: u64) -> Invocation {
+        Invocation { t_us: t, func: FunctionId(f), exec_us: exec }
+    }
+
+    pub fn kiss_node(mem_mb: u64) -> NodeSpec {
+        NodeSpec { mem_mb, policy: NodePolicy::kiss_default() }
+    }
+
+    pub fn baseline_node(mem_mb: u64) -> NodeSpec {
+        NodeSpec { mem_mb, policy: NodePolicy::Baseline { policy: PolicyKind::Lru } }
+    }
+
+    /// A flat, static spec over `nodes` with round-robin routing and no
+    /// extensions — the base most scenario tests perturb.
+    pub fn static_spec(nodes: Vec<NodeSpec>, max_fallbacks: usize) -> ClusterSpec {
+        ClusterSpec {
+            nodes,
+            router: RouterKind::RoundRobin,
+            max_fallbacks,
+            cloud: None,
+            init_occupancy: InitOccupancy::LatencyOnly,
+            migration: None,
+            controller: None,
+            topology: Topology::Flat,
+            churn: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::coordinator::policy::PolicyKind;
+    use crate::coordinator::Balancer;
+    use crate::sim::run_trace_with;
+
+    #[test]
+    fn single_node_matches_engine_exactly() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: vec![inv(0, 0, 500), inv(10, 1, 2_000), inv(20_000, 0, 500)],
+        };
+        let mut spec = static_spec(vec![kiss_node(2000)], 1);
+        spec.router = RouterKind::LeastLoaded;
+        let cluster = run_cluster(&t, &spec);
+        let mut single = Balancer::kiss(2000, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let want = run_trace_with(&t, &mut single, InitOccupancy::LatencyOnly);
+        assert_eq!(cluster.report, want, "N=1 must reduce to the single-node engine");
+        assert_eq!(cluster.per_node[0], want);
+    }
+
+    #[test]
+    fn disabled_extensions_do_not_change_results() {
+        // A controller that never fires (epoch beyond the trace) and no
+        // migration must be bit-for-bit identical to the plain cluster.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: vec![inv(0, 0, 500), inv(10, 1, 2_000), inv(20_000, 0, 500)],
+        };
+        let plain = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default());
+        let instrumented = plain
+            .clone()
+            .with_controller(ControllerConfig { epoch_us: u64::MAX, ..Default::default() });
+        let a = run_cluster(&t, &plain);
+        let b = run_cluster(&t, &instrumented);
+        assert_eq!(a.report, b.report);
+        assert_eq!(a.per_node, b.per_node);
+        assert_eq!(a.peak_used_mb, b.peak_used_mb);
+    }
+
+    #[test]
+    fn completion_at_arrival_instant_releases_first() {
+        // The kernel's class ranking in action: an arrival exactly at a
+        // completion instant (cold start at t=0 finishes at t=500 under
+        // LatencyOnly) reuses the released container — completions rank
+        // before arrivals at the same microsecond, the same rule as the
+        // single-node engine.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(500, 0, 500)],
+        };
+        let spec = static_spec(vec![baseline_node(1000)], 0);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.hits, 1);
+        assert_eq!(r.report.overall.misses, 1);
+    }
+
+    #[test]
+    fn latency_histograms_surface_through_cluster_report() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10, 0, 500)],
+        };
+        // Both nodes far too small: everything offloads at 80 ms RTT.
+        let spec = ClusterSpec::homogeneous(
+            2,
+            100,
+            NodePolicy::Baseline { policy: PolicyKind::Lru },
+        )
+        .with_cloud(80_000);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.offloads, 2);
+        let lat = r.report.latency();
+        assert!(lat.cold.is_empty() && lat.warm.is_empty(), "nothing served on-edge");
+        assert_eq!(lat.e2e.count(), 2, "offloads still finish end-to-end");
+        // 80 ms RTT + 0.5 ms exec ≈ 80.5 ms, within one log-bin.
+        let p50 = lat.e2e.p50_us();
+        assert!((p50 - 80_500.0).abs() / 80_500.0 < 0.25, "{p50}");
+    }
+}

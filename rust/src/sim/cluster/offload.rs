@@ -1,0 +1,251 @@
+//! The edge placement loop and the terminal offload-or-drop stage —
+//! stages two and four of the placement pipeline.
+//!
+//! `Cluster::try_edge` dispatches on the routed primary and retries on
+//! up to `max_fallbacks` other live nodes (ascending index,
+//! deterministic), charging the primary→candidate forwarding latency on
+//! a non-flat topology. `Cluster::offload_or_drop` is where an
+//! invocation no edge node could serve ends up: the modeled cloud tier
+//! (RTT as startup wait, [`RecordKind::Offload`]) or a hard drop.
+
+use crate::coordinator::Outcome;
+use crate::metrics::RecordKind;
+use crate::sim::InitOccupancy;
+use crate::trace::{FunctionProfile, Invocation};
+
+use super::spec::ClusterOutcome;
+use super::Cluster;
+
+impl Cluster {
+    /// Dispatch `ev` on `node`, charging `lat_us` forwarding latency as
+    /// startup wait (and, under [`InitOccupancy::HoldsMemory`], as
+    /// container busy time — exactly like cold-start init). Shared by
+    /// the primary/fallback loop and the rescue path. `None` = the node
+    /// dropped (noted in the controller window).
+    pub(super) fn dispatch_on(
+        &mut self,
+        node: usize,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        lat_us: u64,
+    ) -> Option<ClusterOutcome> {
+        let held_lat = match self.init_occupancy {
+            InitOccupancy::LatencyOnly => 0,
+            InitOccupancy::HoldsMemory => lat_us,
+        };
+        self.note_dispatch(node, profile.class);
+        match self.nodes[node].dispatch(profile, ev.t_us) {
+            Outcome::Hit { pool, container } => {
+                let end = ev.t_us + held_lat + profile.warm_start_us + ev.exec_us;
+                self.push_completion(end, node, pool, container, ev);
+                self.record_served(
+                    node,
+                    profile.class,
+                    RecordKind::Hit,
+                    ev.exec_us,
+                    profile.warm_start_us + lat_us,
+                );
+                Some(ClusterOutcome::Placed { node, cold: false })
+            }
+            Outcome::Cold { pool, container } => {
+                let busy = match self.init_occupancy {
+                    InitOccupancy::LatencyOnly => ev.exec_us,
+                    InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
+                };
+                self.push_completion(ev.t_us + held_lat + busy, node, pool, container, ev);
+                self.record_served(
+                    node,
+                    profile.class,
+                    RecordKind::Miss,
+                    ev.exec_us,
+                    profile.cold_start_us + lat_us,
+                );
+                Some(ClusterOutcome::Placed { node, cold: true })
+            }
+            Outcome::Drop => {
+                self.note_drop(node, profile.class);
+                None
+            }
+        }
+    }
+
+    /// The edge placement loop: dispatch on the primary, then retry on
+    /// up to `max_fallbacks` other *live* nodes in ascending index
+    /// order, charging the primary→fallback forwarding latency on a
+    /// non-flat topology. `None` when every candidate dropped.
+    pub(super) fn try_edge(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        primary: usize,
+    ) -> Option<ClusterOutcome> {
+        let n = self.nodes.len();
+        let mut cand = primary;
+        let mut attempts = 0usize;
+        let mut scan = 0usize; // next fallback index to consider
+        loop {
+            let lat = self.topology.latency_us(primary, cand, n);
+            if let Some(outcome) = self.dispatch_on(cand, profile, ev, lat) {
+                if cand != primary {
+                    self.rerouted += 1;
+                }
+                return Some(outcome);
+            }
+            attempts += 1;
+            if attempts > self.max_fallbacks {
+                return None;
+            }
+            // Next untried live node in ascending index order.
+            while scan < n && (scan == primary || !self.live[scan]) {
+                scan += 1;
+            }
+            if scan >= n {
+                return None;
+            }
+            cand = scan;
+            scan += 1;
+        }
+    }
+
+    /// The terminal stage: the edge declined everywhere (and migration
+    /// could not rescue), so the invocation goes to the cloud tier —
+    /// paying the RTT as startup wait — or is lost.
+    pub(super) fn offload_or_drop(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+    ) -> ClusterOutcome {
+        self.note_class_failure(profile.class);
+        match self.cloud {
+            Some(cloud) => {
+                self.report
+                    .record(profile.class, RecordKind::Offload, ev.exec_us, cloud.rtt_us);
+                ClusterOutcome::Offloaded
+            }
+            None => {
+                self.report.record(profile.class, RecordKind::Drop, 0, 0);
+                ClusterOutcome::Dropped
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, ClusterSpec, NodePolicy, RouterKind, Topology};
+    use crate::coordinator::policy::PolicyKind;
+    use crate::trace::Trace;
+
+    #[test]
+    fn fallback_serves_on_second_node() {
+        // Node 0 too small for the function; round-robin sends it there
+        // first, the fallback places it on node 1.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = static_spec(vec![baseline_node(100), baseline_node(1000)], 1);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.misses, 1);
+        assert_eq!(r.report.overall.drops, 0);
+        assert_eq!(r.per_node[1].overall.misses, 1);
+        assert_eq!(r.rerouted, 1);
+    }
+
+    #[test]
+    fn no_fallback_drops_instead() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = static_spec(vec![baseline_node(100), baseline_node(1000)], 0);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.drops, 1);
+        assert_eq!(r.rerouted, 0);
+    }
+
+    #[test]
+    fn cloud_tier_absorbs_cluster_drops() {
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10, 0, 500)],
+        };
+        // Both nodes far too small: everything offloads.
+        let spec = ClusterSpec::homogeneous(
+            2,
+            100,
+            NodePolicy::Baseline { policy: PolicyKind::Lru },
+        )
+        .with_cloud(80_000);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.offloads, 2);
+        assert_eq!(r.report.overall.drops, 0);
+        assert_eq!(r.report.large.offloads, 2, "offloads keep class slices");
+        // Cloud RTT paid as startup, execution still accounted.
+        assert_eq!(r.report.overall.startup_us, 160_000);
+        assert_eq!(r.report.overall.exec_us, 1_000);
+        assert!(r.report.is_consistent());
+    }
+
+    #[test]
+    fn fallback_pays_hop_latency() {
+        // Same scenario as fallback_serves_on_second_node, on a 2-node
+        // ring with 1 ms hops: the fallback serve pays one hop on top of
+        // its cold start.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let mut spec = static_spec(vec![baseline_node(100), baseline_node(1000)], 1);
+        spec.topology = Topology::Ring { hop_us: 1_000 };
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.misses, 1);
+        assert_eq!(r.report.overall.startup_us, 2_000, "cold 1000 + one hop 1000");
+        // A zero-cost ring is indistinguishable from flat.
+        let mut free = spec.clone();
+        free.topology = Topology::Ring { hop_us: 0 };
+        assert_eq!(run_cluster(&t, &free).report.overall.startup_us, 1_000);
+    }
+
+    #[test]
+    fn whole_fleet_down_offloads_or_drops() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(10, 0, 500)],
+        };
+        let with_cloud = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default())
+            .with_cloud(80_000);
+        let mut cluster = super::super::Cluster::new(&with_cloud);
+        cluster.inject_node_down(&t, 0, 0);
+        cluster.inject_node_down(&t, 1, 0);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            super::super::ClusterOutcome::Offloaded
+        );
+
+        let cloudless = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default());
+        let mut cluster = super::super::Cluster::new(&cloudless);
+        cluster.inject_node_down(&t, 0, 0);
+        cluster.inject_node_down(&t, 1, 0);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            super::super::ClusterOutcome::Dropped
+        );
+    }
+
+    #[test]
+    fn fallbacks_do_not_consult_the_router() {
+        // RouterKind only picks the primary; the fallback scan is index
+        // order. With least-loaded routing and node 0 saturated, the
+        // fallback lands on node 1 regardless of its load rank.
+        let t = Trace {
+            functions: vec![func(0, 300, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let mut spec = static_spec(vec![baseline_node(100), baseline_node(1000)], 1);
+        spec.router = RouterKind::LeastLoaded;
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.per_node[1].overall.misses, 1);
+    }
+}

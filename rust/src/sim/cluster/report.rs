@@ -1,0 +1,107 @@
+//! What a cluster run produces: [`ClusterReport`] and the cross-slice
+//! accounting invariants the property/integration suites check.
+
+use crate::metrics::Report;
+
+use super::spec::RouterKind;
+use super::Cluster;
+
+/// Everything a cluster run produces.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Cluster-wide metrics (includes offloads/drops/migrations, plus
+    /// the per-invocation latency histograms via
+    /// [`Report::latency`](crate::metrics::Report::latency)).
+    pub report: Report,
+    /// What each node served (migrations appear on their recipient).
+    pub per_node: Vec<Report>,
+    /// Peak occupancy per node (MB).
+    pub peak_used_mb: Vec<u64>,
+    /// Invocations served by a fallback node after the primary dropped.
+    pub rerouted: u64,
+    /// Would-be failures served warm in place on a holder node (also
+    /// counted in `rerouted`).
+    pub rescues: u64,
+    /// Controller decisions that moved the size-affinity boundary.
+    pub small_node_moves: u64,
+    /// Controller decisions that live-resized a node's KiSS split.
+    pub resplits: u64,
+    /// In-flight invocations killed by node failures and retried
+    /// through the placement path (churn extension; also see
+    /// [`crate::metrics::Report::node_downs`] on `report`).
+    pub churn_reroutes: u64,
+    /// Per-node liveness at end of run (all-true without churn).
+    pub live: Vec<bool>,
+    /// The router at end of run — the controller may have moved the
+    /// size-affinity boundary from its configured starting point.
+    pub router: RouterKind,
+    /// One [`Dispatcher::describe`](crate::coordinator::Dispatcher::describe)
+    /// line per node (post-run state, so adaptive/re-split nodes show
+    /// their final split).
+    pub descriptions: Vec<String>,
+}
+
+impl Cluster {
+    /// Per-node invariant check (property/integration suites).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // Cluster-wide hits/misses/migrations must equal the per-node
+        // sum; drops and offloads are cluster-level outcomes and appear
+        // nowhere per-node.
+        let mut served = Report::default();
+        for r in &self.per_node {
+            served.overall.merge(&r.overall);
+            served.small.merge(&r.small);
+            served.large.merge(&r.large);
+            if !r.is_consistent() {
+                return Err("per-node report inconsistent".into());
+            }
+            if r.overall.drops != 0 || r.overall.offloads != 0 {
+                return Err("per-node reports must not carry drops/offloads".into());
+            }
+        }
+        if served.overall.hits != self.report.overall.hits
+            || served.overall.misses != self.report.overall.misses
+            || served.overall.migrations != self.report.overall.migrations
+        {
+            return Err(format!(
+                "per-node sum (h{} m{} g{}) != cluster (h{} m{} g{})",
+                served.overall.hits,
+                served.overall.misses,
+                served.overall.migrations,
+                self.report.overall.hits,
+                self.report.overall.misses,
+                self.report.overall.migrations
+            ));
+        }
+        // The edge-served latency samples must also sum: the cluster's
+        // cold/warm histogram counts equal the per-node totals (e2e
+        // additionally counts offloads, which are cluster-level only).
+        let lat = self.report.latency();
+        let node_lat = served.latency();
+        if lat.cold.count() != node_lat.cold.count()
+            || lat.warm.count() != node_lat.warm.count()
+        {
+            return Err("per-node latency samples != cluster latency samples".into());
+        }
+        if !self.report.is_consistent() {
+            return Err("cluster report inconsistent".into());
+        }
+        Ok(())
+    }
+
+    pub(super) fn into_report(self) -> ClusterReport {
+        ClusterReport {
+            descriptions: self.nodes.iter().map(|n| n.describe()).collect(),
+            router: self.router,
+            report: self.report,
+            per_node: self.per_node,
+            peak_used_mb: self.peak_used_mb,
+            rerouted: self.rerouted,
+            rescues: self.rescues,
+            small_node_moves: self.small_node_moves,
+            resplits: self.resplits,
+            churn_reroutes: self.churn_reroutes,
+            live: self.live,
+        }
+    }
+}

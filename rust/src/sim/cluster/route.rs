@@ -1,0 +1,268 @@
+//! Primary-node selection — the first stage of the placement pipeline.
+//!
+//! Every router is a deterministic function of the fleet's state: load
+//! fractions compare by integer cross-multiplication (no float drift),
+//! exact load ties break by topology distance from the function's home
+//! gateway, and remaining ties go to the lowest node index. Routers only
+//! ever consider *live* nodes (churn extension).
+
+use std::hash::Hasher;
+
+use crate::trace::{FunctionProfile, SizeClass};
+use crate::util::fxhash::FxHasher;
+
+use super::spec::RouterKind;
+use super::Cluster;
+
+impl Cluster {
+    /// Whether node `a` (at `used_a` MB) is strictly less loaded than
+    /// node `b` (at `used_b` MB) by used/capacity fraction —
+    /// `used_a/cap_a < used_b/cap_b` via u128 cross-multiplication, so
+    /// there is no float drift and ties compare false (callers keep the
+    /// lowest index). The single load metric shared by the router, the
+    /// migration holder/target scan, and the migrate-vs-rescue decision.
+    pub(super) fn frac_less(&self, a: usize, used_a: u64, b: usize, used_b: u64) -> bool {
+        (used_a as u128) * (self.caps[b] as u128) < (used_b as u128) * (self.caps[a] as u128)
+    }
+
+    /// Whether nodes `a` and `b` carry *exactly* equal used/capacity
+    /// fractions (same cross-multiplication as [`Cluster::frac_less`]) —
+    /// the tie the topology distance then breaks.
+    pub(super) fn frac_eq(&self, a: usize, used_a: u64, b: usize, used_b: u64) -> bool {
+        (used_a as u128) * (self.caps[b] as u128) == (used_b as u128) * (self.caps[a] as u128)
+    }
+
+    /// Home/ingress node of `profile`'s function — the edge gateway its
+    /// devices connect to, `fxhash(function id) % nodes`. This is the
+    /// sticky router's target and the reference point for topology
+    /// tie-breaks (an invocation prefers warm capacity *near* where it
+    /// entered the fleet).
+    pub(super) fn arrival_node(&self, profile: &FunctionProfile) -> usize {
+        let mut h = FxHasher::default();
+        h.write_u32(profile.id.0);
+        (h.finish() % self.nodes.len() as u64) as usize
+    }
+
+    /// Least-loaded *live* node in `[lo, hi)` by used/capacity fraction;
+    /// deterministic. Strict load improvement wins; exact load ties go
+    /// to the node closer (by topology latency) to `arrival`, then to
+    /// the lowest index. Under a flat topology every distance is 0, so
+    /// the selection reduces to the historical lowest-index tie-break.
+    /// Allocation-free: uses [`crate::coordinator::Dispatcher::used_mb`].
+    /// Returns `None` when no node in the range is live.
+    pub(super) fn least_loaded_live(&self, lo: usize, hi: usize, arrival: usize) -> Option<usize> {
+        let n = self.nodes.len();
+        let mut best: Option<(usize, u64)> = None;
+        for i in lo..hi {
+            if !self.live[i] {
+                continue;
+            }
+            let used = self.nodes[i].used_mb();
+            let better = match best {
+                None => true,
+                Some((b, b_used)) => {
+                    self.frac_less(i, used, b, b_used)
+                        || (self.frac_eq(i, used, b, b_used)
+                            && self.topology.latency_us(arrival, i, n)
+                                < self.topology.latency_us(arrival, b, n))
+                }
+            };
+            if better {
+                best = Some((i, used));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Primary node for `profile` under the configured router,
+    /// considering only live nodes. `None` when the whole fleet is down
+    /// (the caller then offloads or drops).
+    pub(super) fn route(&mut self, profile: &FunctionProfile) -> Option<usize> {
+        let n = self.nodes.len();
+        let arrival = self.arrival_node(profile);
+        match self.router {
+            RouterKind::RoundRobin => {
+                for _ in 0..n {
+                    let i = self.rr_next;
+                    self.rr_next = (self.rr_next + 1) % n;
+                    if self.live[i] {
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            RouterKind::LeastLoaded => self.least_loaded_live(0, n, arrival),
+            RouterKind::SizeAffinity { small_nodes } => {
+                let k = small_nodes.min(n);
+                let (lo, hi) = match profile.class {
+                    SizeClass::Small if k > 0 => (0, k),
+                    SizeClass::Large if k < n => (k, n),
+                    // Degenerate split: the set would be empty, use all.
+                    _ => (0, n),
+                };
+                // A class set that is entirely down falls back to any
+                // live node (better a far placement than a failure).
+                self.least_loaded_live(lo, hi, arrival)
+                    .or_else(|| self.least_loaded_live(0, n, arrival))
+            }
+            RouterKind::Sticky => {
+                if self.live[arrival] {
+                    return Some(arrival);
+                }
+                // Home gateway down: nearest live node by hop latency,
+                // ties to the lowest index.
+                let mut best: Option<(u64, usize)> = None;
+                for i in 0..n {
+                    if !self.live[i] {
+                        continue;
+                    }
+                    let d = self.topology.latency_us(arrival, i, n);
+                    let closer = match best {
+                        None => true,
+                        Some((bd, _)) => d < bd,
+                    };
+                    if closer {
+                        best = Some((d, i));
+                    }
+                }
+                best.map(|(_, i)| i)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, Cluster, ClusterOutcome, ClusterSpec, NodePolicy, Topology};
+    use super::*;
+    use crate::trace::Trace;
+
+    /// The test-side copy of [`Cluster::arrival_node`]'s hash, so tests
+    /// can predict a function's home gateway.
+    fn home_node(func_id: u32, n: usize) -> usize {
+        let mut h = FxHasher::default();
+        h.write_u32(func_id);
+        (h.finish() % n as u64) as usize
+    }
+
+    #[test]
+    fn round_robin_cycles_nodes() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 1_000_000)],
+            events: vec![inv(0, 0, 1_000_000), inv(10, 0, 1_000_000), inv(20, 0, 1_000_000)],
+        };
+        let spec = ClusterSpec::homogeneous(3, 1000, NodePolicy::kiss_default());
+        let r = run_cluster(&t, &spec);
+        for (i, node) in r.per_node.iter().enumerate() {
+            assert_eq!(node.overall.total_accesses(), 1, "node {i}: {node:?}");
+        }
+    }
+
+    #[test]
+    fn least_loaded_ties_break_to_lowest_index() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 1_000_000)],
+            events: vec![inv(0, 0, 1_000_000)],
+        };
+        let spec = ClusterSpec::homogeneous(3, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::LeastLoaded);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.per_node[0].overall.misses, 1, "empty cluster routes to node 0");
+        assert_eq!(r.per_node[1].overall.total_accesses(), 0);
+    }
+
+    #[test]
+    fn sticky_keeps_function_on_one_node() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 50, 1_000, 500)],
+            events: (0..20u64).map(|i| inv(i * 100_000, (i % 2) as u32, 500)).collect(),
+        };
+        let spec = ClusterSpec::homogeneous(4, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_fallbacks(0);
+        let r = run_cluster(&t, &spec);
+        // Each function hashes to exactly one node: at most 2 nodes serve
+        // traffic, and each sees either all-of-f0 or all-of-f1 (10 each).
+        let busy: Vec<u64> = r
+            .per_node
+            .iter()
+            .map(|n| n.overall.total_accesses())
+            .filter(|&c| c > 0)
+            .collect();
+        assert!(busy.len() <= 2, "{busy:?}");
+        assert_eq!(busy.iter().sum::<u64>(), 20);
+        for c in busy {
+            assert_eq!(c % 10, 0, "a function's stream must not split");
+        }
+    }
+
+    #[test]
+    fn size_affinity_separates_classes() {
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 500)],
+            events: vec![
+                inv(0, 0, 500),
+                inv(10, 1, 500),
+                inv(100_000, 0, 500),
+                inv(100_010, 1, 500),
+            ],
+        };
+        let spec = ClusterSpec::homogeneous(
+            2,
+            1000,
+            NodePolicy::Baseline { policy: crate::coordinator::policy::PolicyKind::Lru },
+        )
+        .with_router(RouterKind::SizeAffinity { small_nodes: 1 })
+        .with_fallbacks(0);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.per_node[0].large.total_accesses(), 0, "small node got a large fn");
+        assert_eq!(r.per_node[1].small.total_accesses(), 0, "large node got a small fn");
+        assert_eq!(r.per_node[0].small.total_accesses(), 2);
+        assert_eq!(r.per_node[1].large.total_accesses(), 2);
+    }
+
+    #[test]
+    fn sticky_redirects_to_nearest_live_node() {
+        let n = 4;
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500), inv(10_000, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(n, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_topology(Topology::Ring { hop_us: 1_000 });
+        let mut cluster = Cluster::new(&spec);
+        let home = home_node(0, n);
+        assert_eq!(
+            cluster.step(&t, t.events[0]),
+            ClusterOutcome::Placed { node: home, cold: true }
+        );
+        cluster.inject_node_down(&t, home, 5_000);
+        // The ring neighbours of home are one hop away; ties between
+        // equally close live nodes break to the lowest index.
+        let expected = ((home + n - 1) % n).min((home + 1) % n);
+        assert_eq!(
+            cluster.step(&t, t.events[1]),
+            ClusterOutcome::Placed { node: expected, cold: true }
+        );
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_toward_the_arrival_node() {
+        // An idle homogeneous fleet is all-tied on load; with hop costs,
+        // the tie resolves to the function's home gateway instead of
+        // node 0.
+        let n = 4;
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500)],
+            events: vec![inv(0, 0, 500)],
+        };
+        let spec = ClusterSpec::homogeneous(n, 1000, NodePolicy::kiss_default())
+            .with_router(RouterKind::LeastLoaded)
+            .with_topology(Topology::Ring { hop_us: 1_000 });
+        let r = run_cluster(&t, &spec);
+        let home = home_node(0, n);
+        assert_eq!(r.per_node[home].overall.misses, 1, "tie resolves to the home gateway");
+    }
+}

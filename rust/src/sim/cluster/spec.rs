@@ -1,0 +1,520 @@
+//! The cluster description: node specs and policies, routers, the cloud
+//! tier, the inter-node topology, and [`ClusterSpec`] — everything
+//! [`Cluster::new`](super::Cluster::new) consumes. Pure data and pure
+//! math; no simulation state lives here.
+
+use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::{AdaptiveBalancer, AdaptiveConfig, Balancer, Dispatcher};
+use crate::sim::InitOccupancy;
+
+use super::churn::ChurnConfig;
+use super::controller::ControllerConfig;
+use super::migrate::MigrationPolicy;
+
+/// Memory-management policy of one node (what [`NodeSpec::build`] turns
+/// into a [`Dispatcher`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodePolicy {
+    /// Unified warm pool (the paper's baseline).
+    Baseline {
+        /// Replacement policy of the unified pool.
+        policy: PolicyKind,
+    },
+    /// KiSS size-aware partitioning.
+    Kiss {
+        /// Small-pool share of node memory (the paper's "80-20" = 0.8).
+        small_frac: f64,
+        /// Size threshold (MB) separating the classes.
+        threshold_mb: u32,
+        /// Replacement policy of the small pool.
+        small_policy: PolicyKind,
+        /// Replacement policy of the large pool.
+        large_policy: PolicyKind,
+    },
+    /// KiSS with the adaptive split (§7.3 extension).
+    Adaptive {
+        /// Rebalancing configuration of the node-local adaptive loop.
+        cfg: AdaptiveConfig,
+        /// Replacement policy of the small pool.
+        small_policy: PolicyKind,
+        /// Replacement policy of the large pool.
+        large_policy: PolicyKind,
+    },
+}
+
+impl NodePolicy {
+    /// The paper's default edge policy: KiSS 80-20, LRU both pools.
+    pub fn kiss_default() -> Self {
+        NodePolicy::Kiss {
+            small_frac: crate::config::DEFAULT_SMALL_FRAC,
+            threshold_mb: crate::config::DEFAULT_THRESHOLD_MB,
+            small_policy: PolicyKind::Lru,
+            large_policy: PolicyKind::Lru,
+        }
+    }
+
+    /// Short name of the policy family (`baseline`/`kiss`/`adaptive`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodePolicy::Baseline { .. } => "baseline",
+            NodePolicy::Kiss { .. } => "kiss",
+            NodePolicy::Adaptive { .. } => "adaptive",
+        }
+    }
+}
+
+/// One edge node of the cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeSpec {
+    /// Node memory (MB). Must be > 0.
+    pub mem_mb: u64,
+    /// Memory-management policy the node runs.
+    pub policy: NodePolicy,
+}
+
+impl NodeSpec {
+    /// Build the node's dispatcher. Panics when `mem_mb` is 0.
+    pub fn build(&self) -> Box<dyn Dispatcher> {
+        assert!(self.mem_mb > 0, "node memory must be > 0");
+        match self.policy {
+            NodePolicy::Baseline { policy } => Box::new(Balancer::baseline(self.mem_mb, policy)),
+            NodePolicy::Kiss {
+                small_frac,
+                threshold_mb,
+                small_policy,
+                large_policy,
+            } => Box::new(Balancer::kiss(
+                self.mem_mb,
+                small_frac,
+                threshold_mb,
+                small_policy,
+                large_policy,
+            )),
+            NodePolicy::Adaptive {
+                cfg,
+                small_policy,
+                large_policy,
+            } => Box::new(AdaptiveBalancer::new(
+                self.mem_mb,
+                cfg,
+                small_policy,
+                large_policy,
+            )),
+        }
+    }
+}
+
+/// Cluster-level routing policy: which node an invocation is *first*
+/// offered to. Every router is deterministic (ties break to the lowest
+/// node index), so whole-cluster runs replay exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Cycle through nodes in index order.
+    RoundRobin,
+    /// Node with the smallest used/capacity fraction (integer
+    /// cross-multiplication — no float drift, ties to lowest index).
+    LeastLoaded,
+    /// Small functions on nodes `[0, small_nodes)`, large on the rest
+    /// (disjoint sets — KiSS partitioning lifted to the cluster), least
+    /// loaded within each set. A set that would be empty (`small_nodes`
+    /// 0 or ≥ the node count) falls back to all nodes.
+    SizeAffinity {
+        /// Number of nodes (prefix of the index space) reserved for the
+        /// small size class.
+        small_nodes: usize,
+    },
+    /// `fxhash(function id) % nodes` — a function always lands on the
+    /// same node, concentrating its warm state.
+    Sticky,
+}
+
+impl RouterKind {
+    /// Short name of the router (`round-robin`/`least-loaded`/…).
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::SizeAffinity { .. } => "size-affinity",
+            RouterKind::Sticky => "sticky",
+        }
+    }
+
+    /// Parse a router name; `small_nodes` seeds the size-affinity split.
+    pub fn parse(s: &str, small_nodes: usize) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(RouterKind::RoundRobin),
+            "least-loaded" | "ll" => Some(RouterKind::LeastLoaded),
+            "size-affinity" | "affinity" => Some(RouterKind::SizeAffinity { small_nodes }),
+            "sticky" | "hash" => Some(RouterKind::Sticky),
+            _ => None,
+        }
+    }
+
+    /// Canonical names of the four routers, in sweep order.
+    pub const ALL_LABELS: [&'static str; 4] =
+        ["round-robin", "least-loaded", "size-affinity", "sticky"];
+}
+
+/// The modeled cloud region invocations are offloaded to when no edge
+/// node can place them. Capacity is effectively infinite (the cloud
+/// autoscales); the cost is the round trip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CloudTier {
+    /// Edge→cloud round-trip latency (µs), recorded as startup wait of
+    /// every offloaded invocation.
+    pub rtt_us: u64,
+}
+
+/// Inter-node network topology of the edge fleet (`[cluster.topology]`):
+/// where the per-hop latency of cross-node actions comes from.
+///
+/// The latency is charged on every *cross-node* action — a fallback
+/// retry (primary → fallback), a warm-container migration (donor →
+/// recipient, added to the transfer cost), and a rescue redirection
+/// (primary → holder). [`Topology::Flat`] is the pre-topology model:
+/// zero latency everywhere, bit-for-bit identical to the historical
+/// cluster.
+///
+/// ```no_run
+/// // (no_run: doctest binaries miss the libstdc++ rpath in this image —
+/// // see util::prop; the same math executes in this module's tests)
+/// use kiss_faas::sim::cluster::Topology;
+///
+/// let n = 8; // fleet size
+/// assert_eq!(Topology::Flat.latency_us(0, 5, n), 0);
+/// // Star: every pair relays through the hub (node 0).
+/// let star = Topology::Star { hop_us: 2_000 };
+/// assert_eq!(star.latency_us(0, 5, n), 2_000); // hub is an endpoint
+/// assert_eq!(star.latency_us(3, 5, n), 4_000); // via the hub: 2 hops
+/// // Ring: shortest way around.
+/// let ring = Topology::Ring { hop_us: 2_000 };
+/// assert_eq!(ring.latency_us(0, 3, n), 6_000); // 3 hops forward
+/// assert_eq!(ring.latency_us(0, 6, n), 4_000); // 2 hops backward
+/// // Matrix: explicit per-edge latencies (µs), row-major by node index.
+/// let m = Topology::Matrix {
+///     lat_us: vec![vec![0, 500], vec![500, 0]],
+/// };
+/// assert_eq!(m.latency_us(1, 0, 2), 500);
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Zero-cost interconnect (the historical model; the default).
+    Flat,
+    /// Hub-and-spoke: node 0 is the hub; any other pair relays through
+    /// it (2 hops), pairs touching the hub pay 1.
+    Star {
+        /// Per-hop latency (µs).
+        hop_us: u64,
+    },
+    /// Nodes on a cycle in index order; latency is the shorter way
+    /// around.
+    Ring {
+        /// Per-hop latency (µs).
+        hop_us: u64,
+    },
+    /// Explicit per-edge latency matrix (µs): `lat_us[a][b]` is the cost
+    /// of forwarding from node `a` to node `b`. Must be square with a
+    /// zero diagonal ([`Topology::validate`]).
+    Matrix {
+        /// Per-edge latencies (µs), indexed `[from][to]`.
+        lat_us: Vec<Vec<u64>>,
+    },
+}
+
+impl Topology {
+    /// Forwarding latency (µs) from node `a` to node `b` in a fleet of
+    /// `n` nodes. Zero when `a == b` for every topology.
+    ///
+    /// The fabric is a static *price list*, not a simulated link layer:
+    /// latencies do not change when intermediate nodes churn (a star's
+    /// spoke↔spoke path keeps its 2-hop cost even while the hub is
+    /// down — model hub criticality with a `Matrix` if the distinction
+    /// matters).
+    pub fn latency_us(&self, a: usize, b: usize, n: usize) -> u64 {
+        if a == b {
+            return 0;
+        }
+        match self {
+            Topology::Flat => 0,
+            Topology::Star { hop_us } => {
+                if a == 0 || b == 0 {
+                    *hop_us
+                } else {
+                    2 * *hop_us
+                }
+            }
+            Topology::Ring { hop_us } => {
+                let d = a.abs_diff(b);
+                d.min(n - d) as u64 * *hop_us
+            }
+            Topology::Matrix { lat_us } => lat_us[a][b],
+        }
+    }
+
+    /// Short name of the topology (`flat`/`star`/`ring`/`matrix`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Star { .. } => "star",
+            Topology::Ring { .. } => "ring",
+            Topology::Matrix { .. } => "matrix",
+        }
+    }
+
+    /// Parse a topology name; `hop_us` parameterizes star/ring (and is
+    /// ignored for flat). Matrix topologies carry data and are built via
+    /// [`Topology::from_row_major`] / TOML instead.
+    pub fn parse(s: &str, hop_us: u64) -> Option<Self> {
+        match s {
+            "flat" => Some(Topology::Flat),
+            "star" => Some(Topology::Star { hop_us }),
+            "ring" => Some(Topology::Ring { hop_us }),
+            _ => None,
+        }
+    }
+
+    /// Build a [`Topology::Matrix`] from a row-major flat latency list
+    /// (µs) — the `[cluster.topology] lat_ms` TOML encoding, which
+    /// cannot nest arrays. The length must be a perfect square.
+    pub fn from_row_major(flat_us: Vec<u64>) -> Result<Self, String> {
+        let n = (flat_us.len() as f64).sqrt().round() as usize;
+        if n * n != flat_us.len() || n == 0 {
+            return Err(format!(
+                "matrix needs n*n entries for an n-node fleet, got {}",
+                flat_us.len()
+            ));
+        }
+        let lat_us = flat_us.chunks(n).map(|row| row.to_vec()).collect();
+        Ok(Topology::Matrix { lat_us })
+    }
+
+    /// Reject a topology that cannot describe an `n`-node fleet: a
+    /// matrix must be `n`×`n` with a zero diagonal (a node reaches
+    /// itself for free). Flat/star/ring fit any fleet.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if let Topology::Matrix { lat_us } = self {
+            if lat_us.len() != n {
+                return Err(format!("matrix has {} rows for {} nodes", lat_us.len(), n));
+            }
+            for (i, row) in lat_us.iter().enumerate() {
+                if row.len() != n {
+                    return Err(format!("matrix row {i} has {} entries for {n} nodes", row.len()));
+                }
+                if row[i] != 0 {
+                    return Err(format!("matrix diagonal [{i}][{i}] must be 0, got {}", row[i]));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Complete cluster description: nodes + router + offload path +
+/// (optional) migration, online-controller, topology, and churn
+/// extensions.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// The edge fleet, in node-index order.
+    pub nodes: Vec<NodeSpec>,
+    /// Cluster-level routing policy.
+    pub router: RouterKind,
+    /// How many *additional* nodes to try (ascending index, skipping the
+    /// primary) when the routed node drops. 0 = no retry.
+    pub max_fallbacks: usize,
+    /// `None` = a cluster-wide placement failure is a hard drop.
+    pub cloud: Option<CloudTier>,
+    /// How container initialization interacts with memory occupancy.
+    pub init_occupancy: InitOccupancy,
+    /// Warm-container migration; `None` = disabled (the static cluster).
+    pub migration: Option<MigrationPolicy>,
+    /// Online controller; `None` = disabled (the static cluster).
+    pub controller: Option<ControllerConfig>,
+    /// Inter-node network topology; [`Topology::Flat`] = the zero-cost
+    /// interconnect (the historical model).
+    pub topology: Topology,
+    /// Node churn injection; `None` = nodes never fail.
+    pub churn: Option<ChurnConfig>,
+}
+
+impl ClusterSpec {
+    /// N identical nodes of `mem_mb` each, round-robin, one fallback, no
+    /// cloud tier, migration/controller/churn disabled, flat topology.
+    pub fn homogeneous(n: usize, mem_mb: u64, policy: NodePolicy) -> Self {
+        Self {
+            nodes: vec![NodeSpec { mem_mb, policy }; n],
+            router: RouterKind::RoundRobin,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::default(),
+            migration: None,
+            controller: None,
+            topology: Topology::Flat,
+            churn: None,
+        }
+    }
+
+    /// Replace the router.
+    pub fn with_router(mut self, router: RouterKind) -> Self {
+        self.router = router;
+        self
+    }
+
+    /// Attach a cloud tier with the given round-trip latency (µs).
+    pub fn with_cloud(mut self, rtt_us: u64) -> Self {
+        self.cloud = Some(CloudTier { rtt_us });
+        self
+    }
+
+    /// Set the fallback-retry budget.
+    pub fn with_fallbacks(mut self, n: usize) -> Self {
+        self.max_fallbacks = n;
+        self
+    }
+
+    /// Set the init-occupancy model.
+    pub fn with_init_occupancy(mut self, occ: InitOccupancy) -> Self {
+        self.init_occupancy = occ;
+        self
+    }
+
+    /// Enable warm-container migration at the given transfer cost (µs).
+    pub fn with_migration(mut self, cost_us: u64) -> Self {
+        self.migration = Some(MigrationPolicy { cost_us });
+        self
+    }
+
+    /// Enable the online controller.
+    pub fn with_controller(mut self, cfg: ControllerConfig) -> Self {
+        self.controller = Some(cfg);
+        self
+    }
+
+    /// Replace the inter-node topology.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Enable node churn injection.
+    pub fn with_churn(mut self, cfg: ChurnConfig) -> Self {
+        self.churn = Some(cfg);
+        self
+    }
+
+    /// Total fleet memory (MB).
+    pub fn total_mem_mb(&self) -> u64 {
+        self.nodes.iter().map(|n| n.mem_mb).sum()
+    }
+}
+
+/// Where one invocation ended up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterOutcome {
+    /// Served on an edge node (`cold` = required initialization).
+    Placed {
+        /// Node index that served the invocation.
+        node: usize,
+        /// Whether the node had to cold-start a container.
+        cold: bool,
+    },
+    /// Served warm on `recipient` after migrating an idle container of
+    /// the same function from `donor`.
+    Migrated {
+        /// Node the idle warm container was taken from.
+        donor: usize,
+        /// Node that admitted the container and served the invocation.
+        recipient: usize,
+    },
+    /// Served by the cloud tier after the edge declined.
+    Offloaded,
+    /// No edge capacity and no cloud tier: lost.
+    Dropped,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_latency_math() {
+        let n = 6;
+        assert_eq!(Topology::Flat.latency_us(1, 4, n), 0);
+        let star = Topology::Star { hop_us: 10 };
+        assert_eq!(star.latency_us(2, 2, n), 0, "self-latency is always 0");
+        assert_eq!(star.latency_us(0, 4, n), 10, "hub is an endpoint");
+        assert_eq!(star.latency_us(4, 0, n), 10);
+        assert_eq!(star.latency_us(1, 5, n), 20, "spoke pairs relay via the hub");
+        let ring = Topology::Ring { hop_us: 10 };
+        assert_eq!(ring.latency_us(0, 1, n), 10);
+        assert_eq!(ring.latency_us(0, 5, n), 10, "wraps the short way");
+        assert_eq!(ring.latency_us(1, 4, n), 30);
+        let m = Topology::from_row_major(vec![0, 7, 9, 0]).unwrap();
+        assert_eq!(m.latency_us(0, 1, 2), 7, "matrix may be asymmetric");
+        assert_eq!(m.latency_us(1, 0, 2), 9);
+        assert!(m.validate(2).is_ok());
+        assert!(m.validate(3).is_err(), "wrong fleet size must be rejected");
+        assert!(Topology::from_row_major(vec![0, 1, 2]).is_err(), "not square");
+        assert!(
+            Topology::from_row_major(vec![1]).unwrap().validate(1).is_err(),
+            "nonzero diagonal must be rejected"
+        );
+        assert_eq!(Topology::parse("ring", 5), Some(Topology::Ring { hop_us: 5 }));
+        assert_eq!(Topology::parse("star", 5), Some(Topology::Star { hop_us: 5 }));
+        assert_eq!(Topology::parse("flat", 5), Some(Topology::Flat));
+        assert_eq!(Topology::parse("mesh", 5), None);
+        assert_eq!(Topology::Ring { hop_us: 5 }.label(), "ring");
+    }
+
+    #[test]
+    fn cluster_spec_helpers() {
+        let spec = ClusterSpec::homogeneous(4, 2048, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_cloud(50_000)
+            .with_fallbacks(3)
+            .with_init_occupancy(InitOccupancy::HoldsMemory)
+            .with_migration(15_000)
+            .with_controller(ControllerConfig::default());
+        assert_eq!(spec.total_mem_mb(), 4 * 2048);
+        assert_eq!(spec.cloud, Some(CloudTier { rtt_us: 50_000 }));
+        assert_eq!(spec.max_fallbacks, 3);
+        assert_eq!(spec.migration, Some(MigrationPolicy { cost_us: 15_000 }));
+        assert_eq!(spec.controller.unwrap().epoch_us, 60_000_000);
+        assert_eq!(spec.topology, Topology::Flat, "flat is the default");
+        assert_eq!(spec.churn, None, "churn is off by default");
+        let spec = spec
+            .with_topology(Topology::Ring { hop_us: 2_000 })
+            .with_churn(ChurnConfig::default());
+        assert_eq!(spec.topology, Topology::Ring { hop_us: 2_000 });
+        assert_eq!(spec.churn.unwrap().mean_down_us, 30_000_000);
+        assert_eq!(RouterKind::parse("ll", 0), Some(RouterKind::LeastLoaded));
+        assert_eq!(
+            RouterKind::parse("affinity", 2),
+            Some(RouterKind::SizeAffinity { small_nodes: 2 })
+        );
+        assert_eq!(RouterKind::parse("bogus", 0), None);
+        assert_eq!(NodePolicy::kiss_default().label(), "kiss");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid cluster topology")]
+    fn mismatched_matrix_topology_fails_fast() {
+        let spec = ClusterSpec::homogeneous(3, 1024, NodePolicy::kiss_default())
+            .with_topology(Topology::from_row_major(vec![0, 5, 5, 0]).unwrap());
+        let _ = super::super::Cluster::new(&spec);
+    }
+
+    #[test]
+    #[should_panic(expected = "controller needs")]
+    fn invalid_controller_config_fails_fast_at_construction() {
+        // Programmatic specs bypass SimConfig::validate; the constructor
+        // must reject an inverted clamp instead of panicking mid-run
+        // inside f64::clamp.
+        let spec = ClusterSpec::homogeneous(2, 1024, NodePolicy::kiss_default())
+            .with_controller(ControllerConfig {
+                min_frac: 0.9,
+                max_frac: 0.5,
+                ..ControllerConfig::default()
+            });
+        let _ = super::super::Cluster::new(&spec);
+    }
+}

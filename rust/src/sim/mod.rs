@@ -15,6 +15,14 @@
 //! intends. Everything is deterministic: the virtual clock is `u64`
 //! microseconds and the only state is the dispatcher's.
 //!
+//! Both this engine and the cluster run on the shared typed event kernel
+//! ([`event`]): one time-ordered [`event::EventQueue`] with a
+//! deterministic `(time, class rank, seq)` contract. Here only
+//! completions are ever queued — arrivals are the trace's pre-sorted
+//! external stream, merged against the queue instead of heaped — while
+//! the cluster additionally pre-schedules churn toggles and controller
+//! epochs into the same queue.
+//!
 //! [`cluster`] lifts the same event semantics to a multi-node edge
 //! cluster with pluggable routers, an edge→cloud offload path, optional
 //! cross-node warm-container migration, an online small-nodes/split
@@ -23,24 +31,13 @@
 //! one-node cluster reduces bit-for-bit to [`run_trace_with`].
 
 pub mod cluster;
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+pub mod event;
 
 use crate::coordinator::{ContainerId, Dispatcher, Outcome};
 use crate::metrics::{RecordKind, Report};
 use crate::trace::Trace;
 
-/// One pending completion in the event queue.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-struct Completion {
-    end_us: u64,
-    /// Tie-breaker: completions at the same instant release in dispatch
-    /// order (deterministic).
-    seq: u64,
-    pool: usize,
-    container: ContainerId,
-}
+use event::{Completion, Event, EventQueue};
 
 /// How container initialization interacts with memory occupancy.
 ///
@@ -66,8 +63,9 @@ pub enum InitOccupancy {
 /// Simulation engine: drives a trace through a dispatcher.
 pub struct Engine<'a, D: Dispatcher + ?Sized> {
     dispatcher: &'a mut D,
-    completions: BinaryHeap<Reverse<Completion>>,
-    seq: u64,
+    /// The typed event kernel; on a single node only completions are
+    /// ever scheduled (see [`event`]).
+    events: EventQueue,
     now_us: u64,
     init_occupancy: InitOccupancy,
     /// Metrics accumulated so far (hits/misses/drops + durations).
@@ -86,8 +84,7 @@ impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
     pub fn with_options(dispatcher: &'a mut D, init_occupancy: InitOccupancy) -> Self {
         Self {
             dispatcher,
-            completions: BinaryHeap::new(),
-            seq: 0,
+            events: EventQueue::new(),
             now_us: 0,
             init_occupancy,
             report: Report::default(),
@@ -100,14 +97,14 @@ impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
         self.now_us
     }
 
-    /// Apply all completions due at or before `t`.
+    /// Apply all completions due at or before `t`, in `(time, seq)`
+    /// order — simultaneous completions release in dispatch order.
     fn drain_completions(&mut self, t: u64) {
-        while let Some(Reverse(c)) = self.completions.peek().copied() {
-            if c.end_us > t {
-                break;
+        while let Some((end_us, ev)) = self.events.pop_due(t) {
+            match ev {
+                Event::Completion(c) => self.dispatcher.release(c.pool, c.container, end_us),
+                other => unreachable!("single-node queue holds completions only: {other:?}"),
             }
-            self.completions.pop();
-            self.dispatcher.release(c.pool, c.container, c.end_us);
         }
     }
 
@@ -122,7 +119,7 @@ impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
         match outcome {
             Outcome::Hit { pool, container } => {
                 let end = ev.t_us + profile.warm_start_us + ev.exec_us;
-                self.push_completion(end, pool, container);
+                self.push_completion(end, pool, container, ev);
                 self.report.record(
                     profile.class,
                     RecordKind::Hit,
@@ -136,7 +133,7 @@ impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
                     InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
                 };
                 let end = ev.t_us + busy;
-                self.push_completion(end, pool, container);
+                self.push_completion(end, pool, container, ev);
                 self.report.record(
                     profile.class,
                     RecordKind::Miss,
@@ -153,20 +150,31 @@ impl<'a, D: Dispatcher + ?Sized> Engine<'a, D> {
         outcome
     }
 
-    fn push_completion(&mut self, end_us: u64, pool: usize, container: ContainerId) {
-        self.seq += 1;
-        self.completions.push(Reverse(Completion {
+    fn push_completion(
+        &mut self,
+        end_us: u64,
+        pool: usize,
+        container: ContainerId,
+        ev: crate::trace::Invocation,
+    ) {
+        self.events.schedule(
             end_us,
-            seq: self.seq,
-            pool,
-            container,
-        }));
+            Event::Completion(Completion {
+                node: 0,
+                pool,
+                container,
+                func: ev.func,
+                exec_us: ev.exec_us,
+            }),
+        );
     }
 
     /// Release everything still in flight (end-of-trace drain).
     pub fn finish(&mut self) {
-        while let Some(Reverse(c)) = self.completions.pop() {
-            self.dispatcher.release(c.pool, c.container, c.end_us);
+        while let Some((end_us, ev)) = self.events.pop() {
+            if let Event::Completion(c) = ev {
+                self.dispatcher.release(c.pool, c.container, end_us);
+            }
         }
     }
 }

@@ -64,7 +64,7 @@ pub struct FunctionProfile {
 }
 
 /// One invocation arrival.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Invocation {
     /// Arrival time in µs since trace start.
     pub t_us: u64,

@@ -10,6 +10,8 @@ use std::hash::{BuildHasherDefault, Hasher};
 /// The rustc/Firefox "Fx" mixing constant (64-bit golden-ratio-ish).
 const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
 
+/// The Fx multiply-rotate hasher state (see the module docs for when —
+/// and when not — to use it).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FxHasher {
     hash: u64,
@@ -58,8 +60,11 @@ impl Hasher for FxHasher {
     }
 }
 
+/// `BuildHasher` plugging [`FxHasher`] into std collections.
 pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+/// A `HashMap` keyed by the fast, non-DoS-resistant Fx hash.
 pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+/// A `HashSet` keyed by the fast, non-DoS-resistant Fx hash.
 pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
 
 #[cfg(test)]

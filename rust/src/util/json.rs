@@ -13,17 +13,27 @@ use std::fmt::Write as _;
 /// deterministic — important for golden-file tests.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// The `null` literal.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number. Stored as f64 — integers beyond 2^53 are not exactly
+    /// representable (callers guard those; see `ExpParams::to_json`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object; keys are sorted, so serialization is deterministic.
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure, with the byte position it was detected at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub pos: usize,
+    /// Human-readable description of what was expected.
     pub msg: String,
 }
 
@@ -36,6 +46,7 @@ impl std::fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -49,6 +60,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Object field lookup; `None` for non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -56,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -63,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -70,10 +84,13 @@ impl Json {
         }
     }
 
+    /// The numeric value as an unsigned integer; fractions and negative
+    /// numbers are `None`, not rounded.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as u64)
     }
 
+    /// The element slice, if this is a [`Json::Arr`].
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -81,6 +98,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

@@ -43,6 +43,7 @@ impl Pcg64 {
         Self::new(s)
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self
@@ -98,6 +99,7 @@ impl Pcg64 {
         lo + (hi - lo) * self.f64()
     }
 
+    /// Coin flip: `true` with probability `p`.
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -165,6 +167,8 @@ pub struct ZipfTable {
 }
 
 impl ZipfTable {
+    /// Precompute the normalized CDF for ranks `1..=n` with exponent
+    /// `s`.
     pub fn new(n: usize, s: f64) -> Self {
         assert!(n > 0);
         let mut cdf = Vec::with_capacity(n);
@@ -192,10 +196,13 @@ impl ZipfTable {
         }
     }
 
+    /// Number of ranks the table covers.
     pub fn len(&self) -> usize {
         self.cdf.len()
     }
 
+    /// Whether the table covers no ranks (never true: `new` requires
+    /// `n > 0`).
     pub fn is_empty(&self) -> bool {
         self.cdf.is_empty()
     }

@@ -53,10 +53,12 @@ pub struct Moments {
 }
 
 impl Moments {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in (Welford update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -66,10 +68,12 @@ impl Moments {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sample mean (0 before any sample).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -79,14 +83,17 @@ impl Moments {
         if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen (`+inf` before any sample).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen (`-inf` before any sample).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -102,11 +109,15 @@ pub struct Ewma {
 }
 
 impl Ewma {
+    /// An empty average with smoothing factor `alpha` (1.0 = latest
+    /// sample only).
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         Self { alpha, value: None }
     }
 
+    /// Fold one sample in and return the updated average (the first
+    /// sample initializes it).
     pub fn push(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -116,6 +127,7 @@ impl Ewma {
         v
     }
 
+    /// Current average; `None` before any sample.
     pub fn get(&self) -> Option<f64> {
         self.value
     }
@@ -154,11 +166,13 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram of `nbins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
         Self { lo, hi, bins: vec![0; nbins], count: 0 }
     }
 
+    /// Count one sample (out-of-range values clamp to the edge bins).
     pub fn push(&mut self, x: f64) {
         let n = self.bins.len();
         let idx = if x <= self.lo {
@@ -172,10 +186,12 @@ impl Histogram {
         self.count += 1;
     }
 
+    /// Total samples counted.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// The raw per-bin counts.
     pub fn bins(&self) -> &[u64] {
         &self.bins
     }

@@ -3,9 +3,11 @@
 //! accounting, router determinism, config-to-spec threading, the
 //! migration/controller extensions (disabled == PR-1 static path
 //! bit-for-bit; enabled strictly reduces placement failures on the
-//! stressed hetero workload), and the topology/churn extensions (flat +
+//! stressed hetero workload), the topology/churn extensions (flat +
 //! no-churn == the prior cluster bit-for-bit; churn schedules are
-//! seed-deterministic; migration + fallbacks absorb churn).
+//! seed-deterministic; migration + fallbacks absorb churn), and the
+//! event-kernel equivalence locks (pre-scheduled churn toggles and
+//! controller epochs reproduce the legacy per-arrival-scan behaviour).
 
 use kiss_faas::config::SimConfig;
 use kiss_faas::coordinator::policy::PolicyKind;
@@ -632,6 +634,112 @@ fn churn_experiment_reports_the_absorption() {
     let stat0 = sweep.value_at("static", 0.0).unwrap();
     let migr0 = sweep.value_at("migrate", 0.0).unwrap();
     assert!(migr0 <= stat0, "no-churn point must not regress: {migr0} vs {stat0}");
+}
+
+/// Recompute the legacy churn injector's schedule as the pure function
+/// of `(seed, node count)` it always was: one forked PCG64 stream per
+/// node, alternating exponential dwells (mean-up, mean-down, …), each
+/// floored at 1 µs and anchored at the previous toggle's time. Returns
+/// `(downs, ups, live_at_end)` counting only toggles due at or before
+/// `horizon_us` — exactly the set the per-arrival scan would have
+/// applied by the last arrival.
+fn legacy_churn_schedule(
+    cfg: &ChurnConfig,
+    n: usize,
+    horizon_us: u64,
+) -> (u64, u64, Vec<bool>) {
+    use kiss_faas::util::rng::Pcg64;
+    let mut root = Pcg64::new(cfg.seed);
+    let mut rngs: Vec<Pcg64> = (0..n).map(|i| root.fork(i as u64 + 1)).collect();
+    let (mut downs, mut ups) = (0u64, 0u64);
+    let mut live = vec![true; n];
+    for (i, rng) in rngs.iter_mut().enumerate() {
+        let mut t = 0u64;
+        let mut up = true;
+        loop {
+            let mean = if up { cfg.mean_up_us } else { cfg.mean_down_us };
+            let dwell = rng.exponential(1.0 / mean as f64).max(1.0) as u64;
+            t = t.saturating_add(dwell);
+            if t > horizon_us {
+                break;
+            }
+            up = !up;
+            if up {
+                ups += 1;
+            } else {
+                downs += 1;
+            }
+        }
+        live[i] = up;
+    }
+    (downs, ups, live)
+}
+
+/// The event-kernel churn equivalence lock: the pre-scheduled
+/// `NodeDown`/`NodeUp` events reproduce the legacy per-arrival-scan
+/// injector bit-for-bit — same toggle times (one dwell consumed per
+/// fire from the same per-node streams), same application rule (due at
+/// or before the arrival that advances time), same end-of-run liveness.
+#[test]
+fn event_kernel_reproduces_legacy_churn_schedule() {
+    let churn = ChurnConfig {
+        seed: 2025,
+        mean_up_us: 60_000_000,  // ~10 failures/node over the horizon
+        mean_down_us: 20_000_000,
+    };
+    let horizon_us = 600_000_000; // 10 virtual minutes
+    let trace = {
+        let synth = workload(42);
+        let mut t = synthesize(&synth);
+        // Pin the last arrival exactly at the horizon so "due by the
+        // last arrival" and "due by the horizon" coincide.
+        t.events.retain(|e| e.t_us < horizon_us);
+        let f = t.events[0].func;
+        t.events.push(kiss_faas::trace::Invocation { t_us: horizon_us, func: f, exec_us: 1 });
+        t
+    };
+    let spec = ClusterSpec::homogeneous(4, 2 * 1024, NodePolicy::kiss_default())
+        .with_cloud(80_000)
+        .with_churn(churn);
+    let r = run_cluster(&trace, &spec);
+    let (downs, ups, live) = legacy_churn_schedule(&churn, 4, horizon_us);
+    assert!(downs > 0, "the reference schedule must fire within the horizon");
+    assert_eq!(r.report.node_downs, downs, "toggle times drifted from the legacy schedule");
+    assert_eq!(r.report.node_ups, ups);
+    assert_eq!(r.live, live, "end-of-run liveness drifted from the legacy schedule");
+}
+
+/// The same equivalence on the stressed hetero fleet with churn AND the
+/// controller active: pre-scheduled epochs + toggles change nothing
+/// about the churn schedule, the run replays exactly, and accounting
+/// stays consistent — the event-driven scheduling reproduces the old
+/// per-arrival-scan behaviour where it is observable.
+#[test]
+fn event_kernel_scheduling_is_equivalent_on_the_stressed_hetero_fleet() {
+    let trace = synthesize(&stressed_hetero_workload());
+    let horizon_us = trace.events.last().unwrap().t_us;
+    let churn = ChurnConfig {
+        seed: 2025,
+        mean_up_us: 120_000_000,
+        mean_down_us: 30_000_000,
+    };
+    let mut spec = hetero_spec()
+        .with_migration(15_000)
+        .with_controller(ControllerConfig::default());
+    spec.churn = Some(churn);
+    let a = run_cluster(&trace, &spec);
+    let (downs, ups, live) = legacy_churn_schedule(&churn, spec.nodes.len(), horizon_us);
+    assert_eq!(a.report.node_downs, downs, "controller must not perturb the churn schedule");
+    assert_eq!(a.report.node_ups, ups);
+    assert_eq!(a.live, live);
+    assert!(a.report.is_consistent());
+    let b = run_cluster(&trace, &spec);
+    assert_eq!(a.report, b.report, "event-driven scheduling must replay exactly");
+    assert_eq!(a.per_node, b.per_node);
+    assert_eq!(
+        (a.small_node_moves, a.resplits, a.churn_reroutes),
+        (b.small_node_moves, b.resplits, b.churn_reroutes)
+    );
 }
 
 /// The cluster sweep experiments run end-to-end on a reduced workload
