@@ -6,10 +6,14 @@
 //! question per release: *how long does a whole simulation take on this
 //! machine right now?* It times N trials of the two end-to-end hot
 //! paths — the single-node engine (`run_trace`) and the heterogeneous
-//! cluster (`run_cluster`) — at fixed seeds, and renders a
-//! schema-tagged JSON document (`BENCH_SCHEMA`) that `repro bench-json`
-//! writes to `BENCH_<pr>.json` at the repository root, starting the
-//! before/after record the kernel refactors compare against. Virtual
+//! cluster (`run_cluster`) — at fixed seeds, each in a materialized
+//! (pre-synthesized `Trace`) and a streamed (`SynthSource` pulled
+//! lazily) variant, and renders a schema-tagged JSON document
+//! (`BENCH_SCHEMA`) that `repro bench-json` writes to `BENCH_<pr>.json`
+//! at the repository root, continuing the before/after record the
+//! kernel refactors compare against. The materialized/streamed pairs
+//! drive bit-identical arrival sequences, so their delta is exactly the
+//! streaming front end's overhead (expected within noise). Virtual
 //! workloads are seed-deterministic; only the wall-clock readings vary
 //! by host.
 
@@ -19,8 +23,9 @@ use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::Balancer;
 use crate::experiments::cluster::{cluster_workload, hetero_spec};
 use crate::experiments::paper_workload;
-use crate::sim::cluster::run_cluster;
-use crate::sim::{run_trace_with, InitOccupancy};
+use crate::sim::cluster::{run_cluster, run_cluster_source};
+use crate::sim::{run_source_with, run_trace_with, InitOccupancy};
+use crate::trace::source::SynthSource;
 use crate::trace::synth::{synthesize, SynthConfig};
 use crate::util::json::{obj, Json};
 
@@ -80,7 +85,8 @@ pub fn run(trials: usize, scale: f64) -> Json {
 
     // Case 1: the single-node engine on the paper workload, KiSS 80-20
     // on an 8 GB edge node (the headline configuration of Fig. 8).
-    let trace = synthesize(&scaled(paper_workload(), scale));
+    let engine_synth = scaled(paper_workload(), scale);
+    let trace = synthesize(&engine_synth);
     let trial_ms = time_trials(trials, || {
         let mut d = Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
         std::hint::black_box(run_trace_with(&trace, &mut d, InitOccupancy::HoldsMemory));
@@ -91,9 +97,28 @@ pub fn run(trials: usize, scale: f64) -> Json {
         trial_ms,
     });
 
-    // Case 2: the hetero cluster with migration — the cluster engine's
+    // Case 2: case 1 with arrivals pulled lazily from the streaming
+    // synth source instead of a pre-materialized trace — the same
+    // arrival sequence bit-for-bit, so the delta vs case 1 is the
+    // streaming front end's overhead (generator draws per trial included,
+    // since that work replaces the synthesize step the materialized
+    // trial gets for free outside its timer).
+    let engine_events = trace.events.len();
+    let trial_ms = time_trials(trials, || {
+        let mut d = Balancer::kiss(8 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let mut source = SynthSource::new(&engine_synth);
+        std::hint::black_box(run_source_with(&mut source, &mut d, InitOccupancy::HoldsMemory));
+    });
+    cases.push(BenchCase {
+        name: "run_trace/kiss-80-20-8gb-streamed".into(),
+        events: engine_events,
+        trial_ms,
+    });
+
+    // Case 3: the hetero cluster with migration — the cluster engine's
     // full placement pipeline (route → fallback → migrate → offload).
-    let trace = synthesize(&scaled(cluster_workload(), scale));
+    let cluster_synth = scaled(cluster_workload(), scale);
+    let trace = synthesize(&cluster_synth);
     let spec = hetero_spec().with_migration(15_000);
     let trial_ms = time_trials(trials, || {
         std::hint::black_box(run_cluster(&trace, &spec));
@@ -101,6 +126,18 @@ pub fn run(trials: usize, scale: f64) -> Json {
     cases.push(BenchCase {
         name: "run_cluster/hetero-4node-migrate".into(),
         events: trace.events.len(),
+        trial_ms,
+    });
+
+    // Case 4: case 3 through the streaming pump.
+    let cluster_events = trace.events.len();
+    let trial_ms = time_trials(trials, || {
+        let mut source = SynthSource::new(&cluster_synth);
+        std::hint::black_box(run_cluster_source(&mut source, &spec));
+    });
+    cases.push(BenchCase {
+        name: "run_cluster/hetero-4node-migrate-streamed".into(),
+        events: cluster_events,
         trial_ms,
     });
 
@@ -127,7 +164,7 @@ mod tests {
         let doc = run(1, 0.002);
         assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
         let cases = doc.get("cases").and_then(Json::as_arr).unwrap();
-        assert_eq!(cases.len(), 2);
+        assert_eq!(cases.len(), 4);
         for case in cases {
             let name = case.get("name").and_then(Json::as_str).unwrap();
             assert!(name.starts_with("run_trace/") || name.starts_with("run_cluster/"));

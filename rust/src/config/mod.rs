@@ -21,6 +21,12 @@
 //! duration_s = 3600
 //! rate_per_sec = 50.0
 //!
+//! [workload]                          # absent = streamed synth arrivals
+//! source = "synth"                    # synth|replay|closed-loop
+//! trace = "examples/sample-trace"     # replay: CSV stem (see trace::loader)
+//! clients = 64                        # closed-loop population
+//! think_ms = 1000                     # closed-loop mean think time
+//!
 //! [cluster]
 //! nodes = 4
 //! mem_mb = [4096, 4096, 2048, 2048]   # or a single value; omit to
@@ -71,6 +77,7 @@ use crate::sim::cluster::{
     ChurnConfig, CloudTier, ClusterSpec, ControllerConfig, MigrationPolicy, NodePolicy, NodeSpec,
     RouterKind, Topology,
 };
+use crate::trace::source::{ArrivalSource, ClosedLoopSource, ReplaySource, SynthSource};
 use crate::trace::synth::{BurstConfig, SynthConfig};
 
 /// Partitioning mode under test.
@@ -111,6 +118,48 @@ impl NodePolicyKind {
             "adaptive" => Some(Self::Adaptive),
             _ => None,
         }
+    }
+}
+
+/// Which streaming arrival source drives the run (`workload.source`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkloadSourceKind {
+    /// The incremental synthesizer
+    /// ([`crate::trace::source::SynthSource`]) over the `[trace]`
+    /// parameters — the default, bit-for-bit identical to the legacy
+    /// materialized path.
+    Synth,
+    /// Stream a saved CSV trace from disk
+    /// ([`crate::trace::source::ReplaySource`]); the value is the file
+    /// stem passed to the loader schema
+    /// (`<stem>.functions.csv` + `<stem>.events.csv`).
+    Replay {
+        /// Path stem of the trace to replay.
+        trace: String,
+    },
+    /// A closed-loop client population
+    /// ([`crate::trace::source::ClosedLoopSource`]) over the `[trace]`
+    /// function table: `workload.clients` users re-issuing after
+    /// completion with mean think time `workload.think_ms`.
+    ClosedLoop,
+}
+
+/// `[workload]` section: which [`ArrivalSource`] feeds the simulator.
+/// Absent = streamed synth arrivals (the legacy behaviour, unchanged
+/// bit-for-bit).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkloadConfig {
+    /// The arrival-source kind.
+    pub source: WorkloadSourceKind,
+    /// Closed-loop client population size.
+    pub clients: usize,
+    /// Closed-loop mean think time between completion and re-issue (ms).
+    pub think_ms: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self { source: WorkloadSourceKind::Synth, clients: 64, think_ms: 1000 }
     }
 }
 
@@ -177,6 +226,9 @@ pub struct SimConfig {
     pub large_policy: PolicyKind,
     /// Workload synthesizer parameters.
     pub synth: SynthConfig,
+    /// Arrival-source selection (`[workload]`): synth stream, CSV
+    /// replay, or closed-loop clients.
+    pub workload: WorkloadConfig,
     /// Multi-node cluster layer; `None` = single node.
     pub cluster: Option<ClusterConfig>,
 }
@@ -212,6 +264,7 @@ impl SimConfig {
             small_policy: PolicyKind::Lru,
             large_policy: PolicyKind::Lru,
             synth: SynthConfig::default(),
+            workload: WorkloadConfig::default(),
             cluster: None,
         }
     }
@@ -342,11 +395,41 @@ impl SimConfig {
         }
     }
 
+    /// Build the streaming [`ArrivalSource`] the `[workload]` section
+    /// describes: the incremental synthesizer over `[trace]` (default),
+    /// a CSV replay stream, or a closed-loop client population. Boxed so
+    /// drivers are source-agnostic; errors only on an unreadable replay
+    /// trace.
+    pub fn build_arrival_source(&self) -> Result<Box<dyn ArrivalSource>> {
+        match &self.workload.source {
+            WorkloadSourceKind::Synth => Ok(Box::new(SynthSource::new(&self.synth))),
+            WorkloadSourceKind::Replay { trace } => {
+                Ok(Box::new(ReplaySource::open(Path::new(trace))?))
+            }
+            WorkloadSourceKind::ClosedLoop => Ok(Box::new(ClosedLoopSource::new(
+                &self.synth,
+                self.workload.clients,
+                self.workload.think_ms * 1_000,
+            ))),
+        }
+    }
+
     /// Reject configurations the simulator cannot run (zero memory,
     /// degenerate splits, arity mismatches, invalid controller bounds).
     pub fn validate(&self) -> Result<()> {
         if self.node_mem_mb == 0 {
             bail!("node.mem_mb must be > 0");
+        }
+        if self.workload.clients == 0 {
+            bail!("workload.clients must be > 0");
+        }
+        if self.workload.think_ms == 0 {
+            bail!("workload.think_ms must be > 0");
+        }
+        if let WorkloadSourceKind::Replay { trace } = &self.workload.source {
+            if trace.is_empty() {
+                bail!("workload.trace must be a non-empty path stem");
+            }
         }
         if let Some(c) = &self.cluster {
             if let Some(ctl) = &c.controller {
@@ -520,6 +603,56 @@ impl SimConfig {
                 }
             }
             cfg.synth.burst = Some(b);
+        }
+
+        if let Some(section) = doc.section("workload") {
+            let mut w = WorkloadConfig::default();
+            let mut source_name: Option<String> = None;
+            let mut trace_stem: Option<String> = None;
+            for (key, v) in section {
+                match key.as_str() {
+                    "source" => {
+                        source_name = Some(
+                            v.as_str()
+                                .ok_or_else(|| anyhow!("workload.source must be a string"))?
+                                .to_string(),
+                        )
+                    }
+                    "trace" => {
+                        trace_stem = Some(
+                            v.as_str()
+                                .ok_or_else(|| anyhow!("workload.trace must be a string"))?
+                                .to_string(),
+                        )
+                    }
+                    "clients" => {
+                        w.clients =
+                            v.as_u64().ok_or_else(|| anyhow!("workload.clients"))? as usize
+                    }
+                    "think_ms" => {
+                        w.think_ms = v.as_u64().ok_or_else(|| anyhow!("workload.think_ms"))?
+                    }
+                    other => bail!("unknown workload key: {other}"),
+                }
+            }
+            w.source = match (source_name.as_deref(), trace_stem) {
+                (None, None) | (Some("synth"), None) => WorkloadSourceKind::Synth,
+                // A trace stem without an explicit source implies replay.
+                (Some("replay"), Some(t)) | (None, Some(t)) => {
+                    WorkloadSourceKind::Replay { trace: t }
+                }
+                (Some("replay"), None) => {
+                    bail!("workload.source = \"replay\" needs workload.trace")
+                }
+                (Some("closed-loop"), None) => WorkloadSourceKind::ClosedLoop,
+                (Some(name @ ("synth" | "closed-loop")), Some(_)) => {
+                    bail!("workload.trace only applies to the replay source, not {name:?}")
+                }
+                (Some(other), _) => {
+                    bail!("unknown workload.source {other:?} (synth|replay|closed-loop)")
+                }
+            };
+            cfg.workload = w;
         }
 
         if let Some(section) = doc.section("cluster") {
@@ -818,8 +951,18 @@ impl SimConfig {
                 self.large_policy.label()
             ),
         };
-        let base =
-            format!("{} | node {} MB | seed {}", mode, self.node_mem_mb, self.synth.seed);
+        let workload = match &self.workload.source {
+            WorkloadSourceKind::Synth => String::new(),
+            WorkloadSourceKind::Replay { trace } => format!(" | replay {trace}"),
+            WorkloadSourceKind::ClosedLoop => format!(
+                " | closed-loop {} clients think {}ms",
+                self.workload.clients, self.workload.think_ms
+            ),
+        };
+        let base = format!(
+            "{} | node {} MB | seed {}{workload}",
+            mode, self.node_mem_mb, self.synth.seed
+        );
         match &self.cluster {
             Some(c) => {
                 let mut extras = String::new();
@@ -1179,6 +1322,50 @@ mod tests {
             "[cluster]\nnodes = 2\n[cluster.churn]\nmean_up_s = 0",
             "[cluster]\nnodes = 2\n[cluster.churn]\nmean_down_s = -3",
             "[cluster]\nnodes = 2\n[cluster.churn]\nbogus = 1",
+        ] {
+            assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn workload_toml_roundtrip() {
+        // Default: synth stream.
+        let cfg = SimConfig::from_toml_str("[node]\nmem_mb = 8192").unwrap();
+        assert_eq!(cfg.workload, WorkloadConfig::default());
+
+        // Replay, with the source implied by the trace stem.
+        let cfg =
+            SimConfig::from_toml_str("[workload]\ntrace = \"examples/sample-trace\"").unwrap();
+        assert_eq!(
+            cfg.workload.source,
+            WorkloadSourceKind::Replay { trace: "examples/sample-trace".into() }
+        );
+        assert!(cfg.describe().contains("replay examples/sample-trace"));
+
+        // Closed loop with an explicit population.
+        let cfg = SimConfig::from_toml_str(
+            "[workload]\nsource = \"closed-loop\"\nclients = 128\nthink_ms = 250",
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.source, WorkloadSourceKind::ClosedLoop);
+        assert_eq!(cfg.workload.clients, 128);
+        assert_eq!(cfg.workload.think_ms, 250);
+        let d = cfg.describe();
+        assert!(d.contains("closed-loop 128 clients"), "{d}");
+        let mut src = cfg.build_arrival_source().unwrap();
+        assert!(src.wants_feedback());
+        assert!(src.next_arrival().is_some());
+    }
+
+    #[test]
+    fn rejects_bad_workload_configs() {
+        for bad in [
+            "[workload]\nsource = \"replay\"",
+            "[workload]\nsource = \"firehose\"",
+            "[workload]\nsource = \"synth\"\ntrace = \"x\"",
+            "[workload]\nsource = \"closed-loop\"\nclients = 0",
+            "[workload]\nthink_ms = 0",
+            "[workload]\nbogus = 1",
         ] {
             assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
         }

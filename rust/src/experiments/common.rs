@@ -87,6 +87,7 @@ pub fn kiss_cfg(synth: &SynthConfig, mem_gb: u64, small_frac: f64) -> SimConfig 
         large_policy: PolicyKind::Lru,
         synth: synth.clone(),
         cluster: None,
+        workload: Default::default(),
     }
 }
 
@@ -99,6 +100,7 @@ pub fn baseline_cfg(synth: &SynthConfig, mem_gb: u64) -> SimConfig {
         large_policy: PolicyKind::Lru,
         synth: synth.clone(),
         cluster: None,
+        workload: Default::default(),
     }
 }
 

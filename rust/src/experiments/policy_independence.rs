@@ -39,6 +39,7 @@ pub fn policy_sweep(synth: &SynthConfig, slice: Slice) -> Sweep {
                     large_policy: kind,
                     synth: synth.clone(),
                     cluster: None,
+                    workload: Default::default(),
                 };
                 let r = run_on(&trace, &cfg);
                 match slice {

@@ -187,7 +187,7 @@ impl Experiment {
 pub const ARTIFACT_SCHEMA: &str = "kiss-faas/experiment-artifact/v2";
 
 /// Number of registered experiments.
-pub const N_EXPERIMENTS: usize = 22;
+pub const N_EXPERIMENTS: usize = 23;
 
 /// Knob set of every duration-scaled experiment.
 const DURATION_KNOBS: &[&str] = &["seed", "scale:duration"];
@@ -216,6 +216,12 @@ fn analysis_wl(p: &ExpParams) -> SynthConfig {
 /// Cluster workload shaped by `p` (30-minute trace).
 fn cluster_wl(p: &ExpParams) -> SynthConfig {
     apply_params(p, cluster::cluster_workload())
+}
+
+/// Sustained-throughput workload shaped by `p` (~10^8 arrivals at scale
+/// 1.0; `scale` shortens the horizon for CI-sized runs).
+fn sustained_wl(p: &ExpParams) -> SynthConfig {
+    apply_params(p, cluster::sustained_workload())
 }
 
 const REGISTRY_INIT: [Experiment; N_EXPERIMENTS] = [
@@ -386,6 +392,14 @@ const REGISTRY_INIT: [Experiment; N_EXPERIMENTS] = [
         Group::Cluster,
         DURATION_KNOBS,
         |p| Artifact::Sweep(cluster::cluster_churn(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-sustained",
+        "10^8 streamed invocations through a 100-node fleet",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Table(cluster::cluster_sustained(&sustained_wl(p))),
     ),
     exp(
         "stress",

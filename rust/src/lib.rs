@@ -13,7 +13,10 @@
 //!   partitioned warm-pool policy ([`coordinator`]), the discrete-event
 //!   FaaS simulator it is evaluated on ([`sim`]), the multi-node
 //!   edge-cluster layer over it ([`sim::cluster`]), the Azure-2019-style
-//!   trace synthesizer ([`trace`]), the offline workload analyzer
+//!   trace synthesizer and the streaming arrival-source API over it
+//!   ([`trace`], [`trace::source`] — constant-memory synth generation,
+//!   trace replay from disk, and closed-loop clients), the offline
+//!   workload analyzer
 //!   ([`analysis`]), every paper figure as a typed experiment in a
 //!   declarative registry with text/JSON/CSV artifacts
 //!   ([`mod@experiments::registry`]), and a live serving path ([`serve`]) that executes
@@ -104,8 +107,8 @@
 // Public-API documentation is enforced (`missing_docs`) module by
 // module; the modules below with an `allow` predate the lint and will be
 // brought into scope in follow-up documentation passes. `sim`, `config`,
-// `metrics`, `trace`, `experiments`, `util`, and all of `coordinator`
-// are fully documented.
+// `metrics`, `trace`, `experiments`, `runtime`, `serve`, `util`, and all
+// of `coordinator` are fully documented.
 #[allow(missing_docs)]
 pub mod analysis;
 #[allow(missing_docs)]
@@ -114,9 +117,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
-#[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod serve;
 pub mod sim;
 pub mod trace;

@@ -10,6 +10,8 @@
 //!                [--migration-cost-ms F] [--controller-epoch-s N]
 //!                [--topology flat|star|ring] [--hop-ms F]
 //!                [--churn-rate F] [--sweep]
+//!                [--source synth|replay|closed-loop] [--trace STEM]
+//!                [--clients N] [--think-ms N]
 //! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
@@ -26,12 +28,12 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use kiss_faas::config::{Mode, SimConfig};
+use kiss_faas::config::{Mode, SimConfig, WorkloadSourceKind};
 use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::experiments::{self, run_single, ExpParams, Experiment, Group};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
-use kiss_faas::sim::cluster::{run_cluster, MigrationPolicy, RouterKind, Topology};
+use kiss_faas::sim::cluster::{run_cluster_source, MigrationPolicy, RouterKind, Topology};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
 use kiss_faas::util::json::Json;
@@ -76,7 +78,7 @@ fn print_usage() {
          USAGE:\n  repro experiment <id|group|all|list|index> [--format text|json|csv] [--out DIR]\n                \
          [--jobs N] [--seed N] [--scale F] [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
-         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -347,7 +349,7 @@ fn cmd_simulate(flags: &Flags) -> Result<()> {
 
 /// `repro bench-json` — wall-clock timing of the two end-to-end hot
 /// paths (`run_trace` + `run_cluster`) at fixed seeds, written as a
-/// schema-tagged JSON perf record. Defaults to `BENCH_5.json` in the
+/// schema-tagged JSON perf record. Defaults to `BENCH_6.json` in the
 /// working directory (run from the repository root to start the perf
 /// trajectory there); CI's perf-smoke step runs it at reduced scale.
 fn cmd_bench_json(flags: &Flags) -> Result<()> {
@@ -359,7 +361,7 @@ fn cmd_bench_json(flags: &Flags) -> Result<()> {
     if scale <= 0.0 || !scale.is_finite() {
         bail!("--scale must be a positive finite factor");
     }
-    let out = PathBuf::from(flags.get("out").unwrap_or("BENCH_5.json"));
+    let out = PathBuf::from(flags.get("out").unwrap_or("BENCH_6.json"));
     let doc = kiss_faas::bench::wallclock::run(trials, scale);
     if let Some(cases) = doc.get("cases").and_then(Json::as_arr) {
         for case in cases {
@@ -453,15 +455,35 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
             cc.churn = Some(churn);
         }
     }
+    if let Some(stem) = flags.get("trace") {
+        cfg.workload.source = WorkloadSourceKind::Replay { trace: stem.to_string() };
+    }
+    if let Some(s) = flags.get("source") {
+        cfg.workload.source = match s {
+            "synth" => WorkloadSourceKind::Synth,
+            "closed-loop" => WorkloadSourceKind::ClosedLoop,
+            "replay" => match flags.get("trace") {
+                Some(stem) => WorkloadSourceKind::Replay { trace: stem.to_string() },
+                None => bail!("--source replay needs --trace STEM"),
+            },
+            other => bail!("bad --source {other:?} (synth|replay|closed-loop)"),
+        };
+    }
+    if let Some(c) = flags.get_parsed::<usize>("clients")? {
+        cfg.workload.clients = c;
+    }
+    if let Some(ms) = flags.get_parsed::<u64>("think-ms")? {
+        cfg.workload.think_ms = ms;
+    }
     cfg.cluster = Some(cc);
     cfg.validate()?;
     println!("# {}", cfg.describe());
 
-    let trace = synthesize(&cfg.synth);
+    let mut source = cfg.build_arrival_source()?;
     // build_cluster_spec already applies the experiment-harness
     // init-occupancy convention (HoldsMemory / KISS_INIT_LATENCY_ONLY).
     let spec = cfg.build_cluster_spec();
-    let r = run_cluster(&trace, &spec);
+    let r = run_cluster_source(source.as_mut(), &spec);
 
     println!(
         "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12} {:>8} {:>10} {:>8}",

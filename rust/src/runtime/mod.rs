@@ -32,20 +32,33 @@ pub use engine::{Engine, LoadedPayload};
 /// Manifest entry for one compiled payload.
 #[derive(Clone, Debug)]
 pub struct PayloadSpec {
+    /// Payload name (e.g. `iot_mlp_b8`), the key the serve layer and
+    /// [`Engine::get`] address it by.
     pub name: String,
+    /// Path of the AOT HLO-text artifact, resolved against the
+    /// manifest's directory.
     pub hlo_file: PathBuf,
+    /// Logical input shape (first axis is the batch dimension).
     pub input_shape: Vec<usize>,
+    /// Logical output shape.
     pub output_shape: Vec<usize>,
+    /// Golden input binary (raw little-endian f32) used for load-time
+    /// self-verification.
     pub golden_input_file: PathBuf,
+    /// Golden output binary the payload must reproduce at load time.
     pub golden_output_file: PathBuf,
+    /// Mean of the golden output, double-checked against the recomputed
+    /// output mean (a cheap whole-tensor checksum).
     pub golden_output_mean: f64,
 }
 
 impl PayloadSpec {
+    /// Flat element count of the input tensor.
     pub fn input_len(&self) -> usize {
         self.input_shape.iter().product()
     }
 
+    /// Flat element count of the output tensor.
     pub fn output_len(&self) -> usize {
         self.output_shape.iter().product()
     }
@@ -126,6 +139,7 @@ mod engine {
 
     /// A compiled, verified payload executable.
     pub struct LoadedPayload {
+        /// The manifest entry this executable was compiled from.
         pub spec: PayloadSpec,
         exe: xla::PjRtLoadedExecutable,
         /// Wall time spent compiling the HLO (the *real* cold-start cost
@@ -177,6 +191,7 @@ mod engine {
             Ok(Self { client, payloads: HashMap::new() })
         }
 
+        /// Name of the PJRT platform backing the client (e.g. `cpu`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -219,10 +234,12 @@ mod engine {
             Ok(names)
         }
 
+        /// Look up a loaded payload by manifest name.
         pub fn get(&self, name: &str) -> Option<&LoadedPayload> {
             self.payloads.get(name)
         }
 
+        /// Names of every loaded payload, sorted.
         pub fn names(&self) -> Vec<&str> {
             let mut v: Vec<&str> = self.payloads.keys().map(|s| s.as_str()).collect();
             v.sort_unstable();
@@ -288,11 +305,14 @@ mod engine {
 
     /// Stub of the compiled payload; never constructed.
     pub struct LoadedPayload {
+        /// The manifest entry (mirrors the real engine's field).
         pub spec: PayloadSpec,
+        /// Always zero in the stub (mirrors the real engine's field).
         pub compile_time: Duration,
     }
 
     impl LoadedPayload {
+        /// Always fails: the PJRT runtime is not compiled in.
         pub fn run(&self, _input: &[f32]) -> Result<Vec<f32>> {
             bail!(NO_PJRT)
         }
@@ -304,33 +324,40 @@ mod engine {
     }
 
     impl Engine {
+        /// Always fails with the missing-feature message.
         pub fn cpu() -> Result<Self> {
             bail!(NO_PJRT)
         }
 
+        /// Reports that no PJRT platform is available.
         pub fn platform(&self) -> String {
             "unavailable (built without `pjrt`)".to_string()
         }
 
+        /// Always fails with the missing-feature message.
         pub fn compile_fresh(&self, _spec: &PayloadSpec) -> Result<LoadedPayload> {
             bail!(NO_PJRT)
         }
 
+        /// Always fails with the missing-feature message.
         pub fn load(&mut self, _spec: &PayloadSpec) -> Result<&LoadedPayload> {
             bail!(NO_PJRT)
         }
 
+        /// Parses the manifest (that still works without PJRT), then
+        /// fails with the missing-feature message so the caller sees the
+        /// real blocker rather than a bogus manifest error.
         pub fn load_all(&mut self, artifacts_dir: &Path) -> Result<Vec<String>> {
-            // Manifest parsing still works without PJRT; fail afterwards
-            // so the caller sees the real blocker.
             let _ = load_manifest(artifacts_dir)?;
             bail!(NO_PJRT)
         }
 
+        /// Always `None` — nothing can be loaded without PJRT.
         pub fn get(&self, name: &str) -> Option<&LoadedPayload> {
             self.payloads.get(name)
         }
 
+        /// Always empty — nothing can be loaded without PJRT.
         pub fn names(&self) -> Vec<&str> {
             let mut v: Vec<&str> = self.payloads.keys().map(|s| s.as_str()).collect();
             v.sort_unstable();

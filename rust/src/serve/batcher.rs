@@ -51,14 +51,17 @@ impl Batcher {
         Self { sizes, pending: Vec::new(), high_watermark: high }
     }
 
+    /// Queue one request's flat input.
     pub fn push(&mut self, input: Vec<f32>) {
         self.pending.push(input);
     }
 
+    /// Number of queued requests.
     pub fn len(&self) -> usize {
         self.pending.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }

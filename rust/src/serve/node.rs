@@ -28,6 +28,7 @@ use crate::trace::{FunctionId, FunctionProfile};
 /// A deployed function: platform profile + which AOT payload it runs.
 #[derive(Clone, Debug)]
 pub struct LiveFunction {
+    /// Platform profile (declared memory, size class, dense id).
     pub profile: FunctionProfile,
     /// Payload name in the artifact manifest (batch-1 variant).
     pub payload: String,
@@ -36,6 +37,7 @@ pub struct LiveFunction {
 /// One invocation's result.
 #[derive(Debug)]
 pub struct InvokeResult {
+    /// How the request was served ([`RecordKind::Hit`] / `Miss` / `Drop`).
     pub outcome_kind: RecordKind,
     /// End-to-end latency (cold compile + execute, or execute only).
     pub latency: Duration,
@@ -55,6 +57,7 @@ pub struct EdgeNode {
     functions: Vec<LiveFunction>,
     containers: HashMap<ContainerId, LiveContainer>,
     epoch: Instant,
+    /// Rolling serve metrics, same shape as a simulation [`Report`].
     pub report: Report,
 }
 
@@ -93,22 +96,28 @@ impl EdgeNode {
         Ok(id)
     }
 
+    /// Look up a deployed function by id.
     pub fn function(&self, id: FunctionId) -> Option<&LiveFunction> {
         self.functions.get(id.0 as usize)
     }
 
+    /// Every deployed function, in deployment (= id) order.
     pub fn functions(&self) -> &[LiveFunction] {
         &self.functions
     }
 
+    /// Microseconds since the node started — the live clock fed to the
+    /// balancer in place of the simulator's virtual time.
     pub fn now_us(&self) -> u64 {
         self.epoch.elapsed().as_micros() as u64
     }
 
+    /// Per-pool `(used_mb, capacity_mb)` pairs from the balancer.
     pub fn occupancy(&self) -> Vec<(u64, u64)> {
         self.balancer.occupancy()
     }
 
+    /// One-line description of the balancer configuration.
     pub fn describe(&self) -> String {
         self.balancer.describe()
     }

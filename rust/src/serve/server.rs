@@ -151,10 +151,13 @@ impl Server {
         })
     }
 
+    /// The bound listen address (useful with port 0 = ephemeral).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// Stop accepting, shut the node thread down, and join both threads.
+    /// Idempotent; also called on drop.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         let _ = self.node_tx.send(Request::Shutdown);

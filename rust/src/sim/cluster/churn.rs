@@ -133,8 +133,13 @@ impl Cluster {
         // 2. Pending completions on the node are void; the invocations
         //    they belonged to restart elsewhere, in deterministic
         //    dispatch order (the kernel hands them back `(time, seq)`
-        //    sorted).
+        //    sorted). Each extracted completion leaves flight until the
+        //    retry re-admits it (a successful placement re-schedules a
+        //    completion; on the closed-loop path an offload/drop
+        //    schedules a departure instead — the client is still
+        //    waiting either way).
         for (_, c) in self.events.extract_node_completions(node) {
+            self.in_flight = self.in_flight.saturating_sub(1);
             self.churn_reroutes += 1;
             let retry = Invocation { t_us, func: c.func, exec_us: c.exec_us };
             self.note_class_arrival(trace.profile(c.func).class);

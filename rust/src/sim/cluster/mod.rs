@@ -9,8 +9,16 @@
 //! kernel ([`crate::sim::event`]): completions, churn toggles, and
 //! controller epochs all live in **one** time-ordered
 //! [`EventQueue`](crate::sim::event::EventQueue), consumed in
-//! deterministic `(time, class rank, seq)` order, with trace arrivals
-//! merged in as the pre-sorted external stream.
+//! deterministic `(time, class rank, seq)` order, with arrivals pulled
+//! lazily from a streaming
+//! [`ArrivalSource`](crate::trace::source::ArrivalSource) and merged in
+//! as the external stream ([`run_cluster_source`]) — so sustained
+//! workloads of any length (the 10^8-invocation `cluster-sustained`
+//! experiment) run in constant memory. A source that `wants_feedback`
+//! (the closed-loop client population) is notified as each invocation
+//! retires: completions on release, and offloads/drops via gated
+//! [`Event::Departure`] markers that exist only on the closed-loop
+//! path.
 //!
 //! The module is split by concern; each submodule owns one stage of the
 //! placement pipeline or one fleet mechanism:
@@ -63,6 +71,7 @@ pub use spec::{
 use crate::coordinator::{ContainerId, Dispatcher};
 use crate::metrics::{RecordKind, Report};
 use crate::sim::event::{Completion, Event, EventQueue};
+use crate::trace::source::{ArrivalSource, TraceSource};
 use crate::trace::{Invocation, SizeClass, Trace};
 
 use super::InitOccupancy;
@@ -103,10 +112,20 @@ pub struct Cluster {
     /// the decision applies at the next arrival's timestamp — exactly
     /// the historical per-arrival scan semantics (see [`controller`]).
     pub(super) epoch_due: bool,
-    /// The typed event kernel: completions + churn toggles + epochs.
+    /// The typed event kernel: completions + churn toggles + epochs
+    /// (+ departures on the closed-loop path).
     pub(super) events: EventQueue,
     pub(super) now_us: u64,
     pub(super) rr_next: usize,
+    /// Whether the driving [`ArrivalSource`] wants completion feedback
+    /// (closed-loop). Gates [`Event::Departure`] scheduling so the
+    /// open-loop event stream stays bit-for-bit unchanged.
+    pub(super) feedback: bool,
+    /// Invocations admitted but not yet retired (completion or
+    /// departure). Only meaningful — and only consulted — on the
+    /// closed-loop path, where the driver must keep pumping events past
+    /// source exhaustion until this reaches zero.
+    pub(super) in_flight: u64,
     /// Cluster-wide metrics (offloads and drops live only here).
     pub report: Report,
     /// What each node actually served (no drops/offloads: those are
@@ -191,6 +210,8 @@ impl Cluster {
             events,
             now_us: 0,
             rr_next: 0,
+            feedback: false,
+            in_flight: 0,
             report: Report::default(),
             per_node: vec![Report::default(); count],
             peak_used_mb: vec![0; count],
@@ -242,7 +263,16 @@ impl Cluster {
         while let Some((time, ev)) = self.events.pop_due(t) {
             match ev {
                 Event::Completion(c) => {
+                    self.in_flight = self.in_flight.saturating_sub(1);
                     self.nodes[c.node].release(c.pool, c.container, time);
+                }
+                Event::Departure { .. } => {
+                    // Closed-loop retirement marker. The streaming pump
+                    // ([`run_cluster_source`]) pops these itself to
+                    // notify the source; they reach here only from
+                    // scripted drivers stepping a feedback cluster by
+                    // hand.
+                    self.in_flight = self.in_flight.saturating_sub(1);
                 }
                 Event::NodeDown { node } => {
                     if let Some(ch) = self.churn.as_mut() {
@@ -272,6 +302,7 @@ impl Cluster {
         container: ContainerId,
         ev: Invocation,
     ) {
+        self.in_flight += 1;
         self.events.schedule(
             end_us,
             Event::Completion(Completion {
@@ -340,6 +371,7 @@ impl Cluster {
                 self.nodes[c.node].release(c.pool, c.container, time);
             }
         }
+        self.in_flight = 0;
     }
 }
 
@@ -365,9 +397,91 @@ impl Cluster {
 /// ```
 pub fn run_cluster(trace: &Trace, spec: &ClusterSpec) -> ClusterReport {
     debug_assert!(trace.is_sorted());
+    run_cluster_source(&mut TraceSource::new(trace), spec)
+}
+
+/// The streaming cluster driver: pull arrivals lazily from `source` and
+/// interleave them with queued events (completions, churn toggles,
+/// controller epochs) in kernel order, never materializing the trace —
+/// this is what lets `cluster-sustained` push ≥10^8 invocations through
+/// a 100-node fleet in constant memory. At an arrival/event time tie the
+/// queued event applies first, matching the legacy inclusive
+/// `advance(t)` semantics, so [`run_cluster`] through this path is
+/// bit-for-bit identical to stepping the materialized trace.
+///
+/// When the source `wants_feedback` (closed-loop), every invocation's
+/// retirement is reported back through
+/// [`ArrivalSource::on_completion`]: completions at their release
+/// instant, offloads when they return from the cloud tier, drops at the
+/// drop instant (the latter two via gated [`Event::Departure`] markers).
+/// The pump then keeps full event semantics past source exhaustion —
+/// a completion may re-arm a client — until nothing is in flight.
+/// Open-loop sources end exactly like the legacy driver: remaining
+/// completions release, pending toggles and epochs are discarded.
+pub fn run_cluster_source<S: ArrivalSource + ?Sized>(
+    source: &mut S,
+    spec: &ClusterSpec,
+) -> ClusterReport {
+    let view = Trace { functions: source.functions().to_vec(), events: Vec::new() };
     let mut cluster = Cluster::new(spec);
-    for &ev in &trace.events {
-        cluster.step(trace, ev);
+    cluster.feedback = source.wants_feedback();
+    loop {
+        let ta = source.peek_time();
+        let te = cluster.events.peek_time();
+        let take_arrival = match (ta, te) {
+            (None, None) => break,
+            (Some(a), Some(t)) => a < t,
+            (Some(_), None) => true,
+            (None, Some(_)) => {
+                // Source exhausted. Open-loop: end-of-trace — stop here
+                // and let `finish()` drain, identical to the legacy
+                // driver. Closed-loop: the tail keeps full event
+                // semantics (a completion may mint the next arrival)
+                // until every admitted invocation has retired.
+                if !cluster.feedback || cluster.in_flight == 0 {
+                    break;
+                }
+                false
+            }
+        };
+        if take_arrival {
+            let ev = source.next_arrival().expect("peek promised an arrival");
+            cluster.step(&view, ev);
+        } else {
+            let (time, ev) = cluster.events.pop().expect("queue non-empty here");
+            cluster.now_us = cluster.now_us.max(time);
+            match ev {
+                Event::Completion(c) => {
+                    cluster.in_flight = cluster.in_flight.saturating_sub(1);
+                    cluster.nodes[c.node].release(c.pool, c.container, time);
+                    if cluster.feedback {
+                        source.on_completion(c.func, time);
+                    }
+                }
+                Event::Departure { func } => {
+                    cluster.in_flight = cluster.in_flight.saturating_sub(1);
+                    if cluster.feedback {
+                        source.on_completion(func, time);
+                    }
+                }
+                Event::NodeDown { node } => {
+                    if let Some(ch) = cluster.churn.as_mut() {
+                        ch.reschedule(node, true, time, &mut cluster.events);
+                    }
+                    cluster.node_down(&view, node, time);
+                }
+                Event::NodeUp { node } => {
+                    if let Some(ch) = cluster.churn.as_mut() {
+                        ch.reschedule(node, false, time, &mut cluster.events);
+                    }
+                    cluster.node_up(node);
+                }
+                Event::ControllerEpoch => cluster.epoch_due = true,
+                Event::Arrival(_) => {
+                    unreachable!("arrivals are the external stream, never queued")
+                }
+            }
+        }
     }
     cluster.finish();
     debug_assert!(cluster.check_invariants().is_ok());

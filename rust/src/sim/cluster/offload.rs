@@ -10,6 +10,7 @@
 
 use crate::coordinator::Outcome;
 use crate::metrics::RecordKind;
+use crate::sim::event::Event;
 use crate::sim::InitOccupancy;
 use crate::trace::{FunctionProfile, Invocation};
 
@@ -110,6 +111,12 @@ impl Cluster {
     /// The terminal stage: the edge declined everywhere (and migration
     /// could not rescue), so the invocation goes to the cloud tier —
     /// paying the RTT as startup wait — or is lost.
+    ///
+    /// On the closed-loop path (`self.feedback`) the invocation still
+    /// has a waiting client, so a gated [`Event::Departure`] marks its
+    /// retirement: an offload returns from the cloud after RTT + exec,
+    /// a drop is final at the arrival instant. Open-loop runs schedule
+    /// nothing here — their event streams are bit-for-bit unchanged.
     pub(super) fn offload_or_drop(
         &mut self,
         profile: &FunctionProfile,
@@ -120,10 +127,21 @@ impl Cluster {
             Some(cloud) => {
                 self.report
                     .record(profile.class, RecordKind::Offload, ev.exec_us, cloud.rtt_us);
+                if self.feedback {
+                    self.in_flight += 1;
+                    self.events.schedule(
+                        ev.t_us + cloud.rtt_us + ev.exec_us,
+                        Event::Departure { func: ev.func },
+                    );
+                }
                 ClusterOutcome::Offloaded
             }
             None => {
                 self.report.record(profile.class, RecordKind::Drop, 0, 0);
+                if self.feedback {
+                    self.in_flight += 1;
+                    self.events.schedule(ev.t_us, Event::Departure { func: ev.func });
+                }
                 ClusterOutcome::Dropped
             }
         }

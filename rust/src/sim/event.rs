@@ -22,6 +22,10 @@
 //! * [`Event::ControllerEpoch`] — the online controller's periodic
 //!   decision point, pre-scheduled instead of re-checked on every
 //!   arrival.
+//! * [`Event::Departure`] — an invocation leaves without a container to
+//!   release (cloud offload return, final drop). Scheduled only when a
+//!   closed-loop arrival source asked for completion feedback; it ranks
+//!   with completions so feedback fires in finish-time order.
 //!
 //! ## Ordering contract
 //!
@@ -89,6 +93,16 @@ pub enum Event {
     /// reproducing the historical per-arrival scan bit-for-bit (see
     /// `sim::cluster::controller`).
     ControllerEpoch,
+    /// An invocation leaves the system without a container to release —
+    /// an offloaded invocation returning from the cloud tier, or a drop
+    /// becoming final. Only scheduled when a closed-loop
+    /// [`ArrivalSource`](crate::trace::source::ArrivalSource) asked for
+    /// completion feedback; open-loop (trace/synth) runs never queue one,
+    /// so their event streams are bit-for-bit unchanged.
+    Departure {
+        /// Function of the departing invocation.
+        func: FunctionId,
+    },
 }
 
 impl Event {
@@ -96,7 +110,7 @@ impl Event {
     /// ranks apply first when times are equal.
     fn rank(&self) -> u8 {
         match self {
-            Event::Completion(_) => 0,
+            Event::Completion(_) | Event::Departure { .. } => 0,
             Event::NodeDown { .. } | Event::NodeUp { .. } => 1,
             Event::ControllerEpoch => 2,
             Event::Arrival(_) => 3,
@@ -317,6 +331,7 @@ mod tests {
             Event::Arrival(inv) => Some(inv.exec_us),
             Event::Completion(c) => Some(c.exec_us),
             Event::NodeDown { node } | Event::NodeUp { node } => Some(*node as u64),
+            Event::Departure { func } => Some(func.0 as u64),
             Event::ControllerEpoch => None,
         }
     }
@@ -333,7 +348,7 @@ mod tests {
             for seq in 0..n {
                 // A tiny time range forces heavy same-timestamp traffic.
                 let t = rng.below(8);
-                let event = match rng.below(5) {
+                let event = match rng.below(6) {
                     0 => Event::Arrival(Invocation {
                         t_us: t,
                         func: FunctionId(0),
@@ -348,6 +363,7 @@ mod tests {
                     }),
                     2 => Event::NodeDown { node: seq as usize },
                     3 => Event::NodeUp { node: seq as usize },
+                    4 => Event::Departure { func: FunctionId(seq as u32) },
                     _ => Event::ControllerEpoch,
                 };
                 scheduled.push((t, event.rank(), seq, tag_of(&event)));

@@ -18,10 +18,14 @@
 //! Both this engine and the cluster run on the shared typed event kernel
 //! ([`event`]): one time-ordered [`event::EventQueue`] with a
 //! deterministic `(time, class rank, seq)` contract. Here only
-//! completions are ever queued — arrivals are the trace's pre-sorted
-//! external stream, merged against the queue instead of heaped — while
-//! the cluster additionally pre-schedules churn toggles and controller
-//! epochs into the same queue.
+//! completions are ever queued — arrivals are *pulled* lazily from a
+//! streaming [`ArrivalSource`] and merged against the queue instead of
+//! heaped, so workloads of any length run in constant memory
+//! ([`run_source_with`]). A source that `wants_feedback` (the
+//! closed-loop client population) additionally receives one
+//! `on_completion` call per invocation as it retires, and may mint new
+//! arrivals from it. The cluster additionally pre-schedules churn
+//! toggles and controller epochs into the same queue.
 //!
 //! [`cluster`] lifts the same event semantics to a multi-node edge
 //! cluster with pluggable routers, an edge→cloud offload path, optional
@@ -35,6 +39,7 @@ pub mod event;
 
 use crate::coordinator::{ContainerId, Dispatcher, Outcome};
 use crate::metrics::{RecordKind, Report};
+use crate::trace::source::{ArrivalSource, TraceSource};
 use crate::trace::Trace;
 
 use event::{Completion, Event, EventQueue};
@@ -185,16 +190,77 @@ pub fn run_trace<D: Dispatcher + ?Sized>(trace: &Trace, dispatcher: &mut D) -> R
 }
 
 /// [`run_trace`] with an explicit init-occupancy model (ablation).
+/// Funnels through [`run_source_with`] via a [`TraceSource`] cursor —
+/// bit-for-bit identical to stepping the events directly.
 pub fn run_trace_with<D: Dispatcher + ?Sized>(
     trace: &Trace,
     dispatcher: &mut D,
     init_occupancy: InitOccupancy,
 ) -> Report {
     debug_assert!(trace.is_sorted());
+    run_source_with(&mut TraceSource::new(trace), dispatcher, init_occupancy)
+}
+
+/// Pull a streaming [`ArrivalSource`] through `dispatcher` with the
+/// default init-occupancy model.
+pub fn run_source<S, D>(source: &mut S, dispatcher: &mut D) -> Report
+where
+    S: ArrivalSource + ?Sized,
+    D: Dispatcher + ?Sized,
+{
+    run_source_with(source, dispatcher, InitOccupancy::default())
+}
+
+/// The streaming driver: interleave pulled arrivals with queued
+/// completions in time order, never materializing the trace. At an
+/// arrival/completion tie the completion applies first, matching the
+/// legacy inclusive drain semantics. When the source `wants_feedback`,
+/// every invocation's retirement (completion release, or the drop
+/// itself at the arrival instant) is reported back through
+/// [`ArrivalSource::on_completion`], which may mint new arrivals —
+/// that is the closed-loop path.
+pub fn run_source_with<S, D>(
+    source: &mut S,
+    dispatcher: &mut D,
+    init_occupancy: InitOccupancy,
+) -> Report
+where
+    S: ArrivalSource + ?Sized,
+    D: Dispatcher + ?Sized,
+{
+    let view = Trace { functions: source.functions().to_vec(), events: Vec::new() };
+    let feedback = source.wants_feedback();
     let mut engine = Engine::with_options(dispatcher, init_occupancy);
-    for &ev in &trace.events {
-        engine.step(trace, ev);
+    loop {
+        let ta = source.peek_time();
+        let te = engine.events.peek_time();
+        match (ta, te) {
+            (None, None) => break,
+            (Some(a), te) if te.map_or(true, |t| a < t) => {
+                let ev = source.next_arrival().expect("peek promised an arrival");
+                let outcome = engine.step(&view, ev);
+                if feedback && matches!(outcome, Outcome::Drop) {
+                    // A dropped invocation leaves the system at once;
+                    // its client un-blocks at the arrival instant.
+                    source.on_completion(ev.func, ev.t_us);
+                }
+            }
+            _ => {
+                // Next due event is a completion (or the source is, at
+                // least momentarily, exhausted): retire it.
+                let (end_us, ev) = engine.events.pop().expect("queue non-empty here");
+                let Event::Completion(c) = ev else {
+                    unreachable!("single-node queue holds completions only: {ev:?}")
+                };
+                engine.now_us = engine.now_us.max(end_us);
+                engine.dispatcher.release(c.pool, c.container, end_us);
+                if feedback {
+                    source.on_completion(c.func, end_us);
+                }
+            }
+        }
     }
+    // Both streams drained through the loop; nothing left in flight.
     engine.finish();
     engine.report
 }

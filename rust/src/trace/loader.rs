@@ -50,10 +50,11 @@ pub fn save(trace: &Trace, stem: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a trace previously written by [`save`] (or converted from Azure).
-pub fn load(stem: &Path) -> Result<Trace> {
-    let fpath = stem.with_extension("functions.csv");
-    let ftext = fs::read_to_string(&fpath)
+/// Load and validate `<fpath>`'s function-profile table. Shared by
+/// [`load`] and the streaming replay source (which loads the small
+/// function table up front but never materializes the event stream).
+pub(crate) fn load_functions(fpath: &Path) -> Result<Vec<FunctionProfile>> {
+    let ftext = fs::read_to_string(fpath)
         .with_context(|| format!("reading {}", fpath.display()))?;
     let mut functions = Vec::new();
     for (lineno, line) in ftext.lines().enumerate().skip(1) {
@@ -86,6 +87,31 @@ pub fn load(stem: &Path) -> Result<Trace> {
             bail!("function table not dense at row {i} (id {})", f.id.0);
         }
     }
+    Ok(functions)
+}
+
+/// Parse one `t_us,func_id,exec_us` event row, checking the function id
+/// against a table of `n_functions` dense profiles. Shared by [`load`]
+/// and the streaming replay source.
+pub(crate) fn parse_event_line(line: &str, n_functions: usize) -> Result<Invocation> {
+    let cols: Vec<&str> = line.split(',').collect();
+    if cols.len() != 3 {
+        bail!("expected 3 columns, got {}", cols.len());
+    }
+    let func = FunctionId(cols[1].trim().parse()?);
+    if func.0 as usize >= n_functions {
+        bail!("unknown function id {}", func.0);
+    }
+    Ok(Invocation {
+        t_us: cols[0].trim().parse()?,
+        func,
+        exec_us: cols[2].trim().parse()?,
+    })
+}
+
+/// Load a trace previously written by [`save`] (or converted from Azure).
+pub fn load(stem: &Path) -> Result<Trace> {
+    let functions = load_functions(&stem.with_extension("functions.csv"))?;
 
     let epath = stem.with_extension("events.csv");
     let etext = fs::read_to_string(&epath)
@@ -95,19 +121,9 @@ pub fn load(stem: &Path) -> Result<Trace> {
         if line.trim().is_empty() {
             continue;
         }
-        let cols: Vec<&str> = line.split(',').collect();
-        if cols.len() != 3 {
-            bail!("{}:{}: expected 3 columns", epath.display(), lineno + 1);
-        }
-        let func = FunctionId(cols[1].trim().parse()?);
-        if func.0 as usize >= functions.len() {
-            bail!("{}:{}: unknown function id {}", epath.display(), lineno + 1, func.0);
-        }
-        events.push(Invocation {
-            t_us: cols[0].trim().parse()?,
-            func,
-            exec_us: cols[2].trim().parse()?,
-        });
+        let ev = parse_event_line(line, functions.len())
+            .with_context(|| format!("{}:{}", epath.display(), lineno + 1))?;
+        events.push(ev);
     }
     let trace = Trace { functions, events };
     if !trace.is_sorted() {

@@ -9,8 +9,16 @@
 //! paper's own workload analysis (Figures 2–5); [`loader`] reads/writes a
 //! CSV schema compatible with the Azure release so real traces drop in.
 //! The substitution is documented in DESIGN.md §2.
+//!
+//! Workloads *enter* the simulator through the streaming [`source`] API:
+//! a pull-based [`source::ArrivalSource`] trait that yields time-ordered
+//! [`Invocation`]s in constant memory at any trace length. Materialized
+//! [`Trace`]s remain the interchange format (CSV persistence, analysis),
+//! but the engines pull from sources, and `synthesize` is now a thin
+//! `.collect()` over [`source::SynthSource`].
 
 pub mod loader;
+pub mod source;
 pub mod synth;
 
 /// Stable identifier of a function (index into the trace's profile table).

@@ -16,8 +16,14 @@
 //!   "bursty traffic patterns").
 //!
 //! Arrivals are a non-homogeneous Poisson process per function, generated
-//! by thinning, then merge-sorted into one stream. Everything is
+//! by thinning, then merged into one time-sorted stream. Everything is
 //! deterministic in `(config, seed)`.
+//!
+//! Since the streaming-arrival redesign the *generator* lives in
+//! [`crate::trace::source::SynthSource`]: a constant-memory k-way merge
+//! over per-function lazy streams. [`synthesize`] is a thin `.collect()`
+//! adapter over it, and [`materialize`] (the legacy one-shot path) is
+//! kept as the chains fallback and the bit-for-bit comparator.
 
 use super::{FunctionId, FunctionProfile, Invocation, SizeClass, Trace};
 use crate::util::rng::Pcg64;
@@ -152,7 +158,27 @@ impl SynthConfig {
 }
 
 /// Generate a trace. Deterministic in `cfg` (including `cfg.seed`).
+///
+/// This is now a thin adapter: it drains the streaming
+/// [`SynthSource`](crate::trace::source::SynthSource) into a `Vec`, so
+/// the materialized and streamed paths are the same generator by
+/// construction (the equivalence is additionally locked against
+/// [`materialize`] by tests).
 pub fn synthesize(cfg: &SynthConfig) -> Trace {
+    crate::trace::source::SynthSource::new(cfg).collect_trace()
+}
+
+/// The legacy one-shot materializer: generate every per-function arrival
+/// run, concatenate, and stable-sort by arrival time. Kept as the chains
+/// fallback (chain children are emitted out of time order and need the
+/// full event list) and as the comparator the streamed path is locked
+/// against.
+///
+/// The sort is *stable* (it was `sort_unstable_by_key` before the
+/// streaming redesign): same-microsecond events keep concatenation
+/// order — ascending function id, generation order within a function —
+/// which is exactly the order the streaming k-way merge produces.
+pub(crate) fn materialize(cfg: &SynthConfig) -> Trace {
     assert!(cfg.n_small > 0 && cfg.n_large > 0, "need both classes");
     assert!(cfg.rate_per_sec > 0.0 && cfg.duration_us > 0);
     let mut root = Pcg64::new(cfg.seed);
@@ -172,7 +198,7 @@ pub fn synthesize(cfg: &SynthConfig) -> Trace {
         let mut rng = root.fork(0xC4A1);
         add_chains(cfg, chain, &functions, &mut rng, &mut events);
     }
-    events.sort_unstable_by_key(|e| e.t_us);
+    events.sort_by_key(|e| e.t_us);
     Trace { functions, events }
 }
 
@@ -220,7 +246,7 @@ fn add_chains(
     }
 }
 
-fn make_functions(cfg: &SynthConfig, rng: &mut Pcg64) -> Vec<FunctionProfile> {
+pub(crate) fn make_functions(cfg: &SynthConfig, rng: &mut Pcg64) -> Vec<FunctionProfile> {
     let total = cfg.n_small + cfg.n_large;
     let mut out = Vec::with_capacity(total);
     let mut app_id = 0u32;
@@ -302,7 +328,7 @@ pub fn per_function_rates(cfg: &SynthConfig) -> Vec<f64> {
 }
 
 /// Precomputed MMPP state intervals: sorted (start_us, is_burst).
-fn burst_schedule(cfg: &SynthConfig, rng: &mut Pcg64) -> Vec<(u64, bool)> {
+pub(crate) fn burst_schedule(cfg: &SynthConfig, rng: &mut Pcg64) -> Vec<(u64, bool)> {
     let Some(b) = cfg.burst else { return vec![(0, false)] };
     let mut sched = Vec::new();
     let mut t = 0u64;
@@ -331,7 +357,7 @@ fn burst_factor_at(sched: &[(u64, bool)], factor: f64, t: u64) -> f64 {
 const DAY_US: f64 = 86_400_000_000.0;
 
 /// Instantaneous rate multiplier at time t (diurnal × burst overlay).
-fn rate_modulation(cfg: &SynthConfig, sched: &[(u64, bool)], t: u64) -> f64 {
+pub(crate) fn rate_modulation(cfg: &SynthConfig, sched: &[(u64, bool)], t: u64) -> f64 {
     let diurnal = 1.0
         + cfg.diurnal_amplitude
             * (2.0 * std::f64::consts::PI * (t as f64) / DAY_US).sin();
@@ -387,6 +413,34 @@ mod tests {
             duration_us: 600_000_000, // 10 min
             rate_per_sec: 30.0,
             ..SynthConfig::default()
+        }
+    }
+
+    #[test]
+    fn streamed_collect_matches_legacy_materializer_bit_for_bit() {
+        // `synthesize` drains the streaming SynthSource; `materialize` is
+        // the legacy Vec path. They must agree exactly — events AND
+        // function tables — on plain, diurnal-free, and bursty configs.
+        let configs = [
+            small_cfg(),
+            SynthConfig { diurnal_amplitude: 0.0, ..small_cfg() },
+            SynthConfig { burst: Some(BurstConfig::default()), ..small_cfg() },
+            SynthConfig { seed: 7, n_small: 3, n_large: 1, ..small_cfg() },
+        ];
+        for cfg in configs {
+            let streamed = synthesize(&cfg);
+            let legacy = materialize(&cfg);
+            assert_eq!(streamed.events.len(), legacy.events.len());
+            for (a, b) in streamed.events.iter().zip(&legacy.events) {
+                assert_eq!(a, b);
+            }
+            assert_eq!(streamed.functions.len(), legacy.functions.len());
+            for (a, b) in streamed.functions.iter().zip(&legacy.functions) {
+                assert_eq!(
+                    (a.id, a.mem_mb, a.cold_start_us, a.warm_start_us, a.exec_us_mean),
+                    (b.id, b.mem_mb, b.cold_start_us, b.warm_start_us, b.exec_us_mean)
+                );
+            }
         }
     }
 

@@ -14,10 +14,11 @@ use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::coordinator::Balancer;
 use kiss_faas::experiments::paper_workload;
 use kiss_faas::sim::cluster::{
-    run_cluster, ChurnConfig, ClusterSpec, ControllerConfig, NodePolicy, NodeSpec, RouterKind,
-    Topology,
+    run_cluster, run_cluster_source, ChurnConfig, ClusterSpec, ControllerConfig, NodePolicy,
+    NodeSpec, RouterKind, Topology,
 };
 use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::trace::source::{ClosedLoopSource, SynthSource};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::util::prop::forall;
 
@@ -740,6 +741,83 @@ fn event_kernel_scheduling_is_equivalent_on_the_stressed_hetero_fleet() {
         (a.small_node_moves, a.resplits, a.churn_reroutes),
         (b.small_node_moves, b.resplits, b.churn_reroutes)
     );
+}
+
+/// The streaming-API acceptance lock (cluster side): pumping arrivals
+/// lazily from a [`SynthSource`] reproduces `run_cluster` on the
+/// materialized trace bit-for-bit, on a full-featured spec (cloud tier,
+/// migration, controller, churn, ring topology) — the trace is never
+/// built, yet every counter, per-node report, and peak matches.
+#[test]
+fn streamed_cluster_matches_materialized_bit_for_bit() {
+    let synth = workload(42);
+    let trace = synthesize(&synth);
+    let mut spec = ClusterSpec {
+        nodes: vec![kiss_node(1024), kiss_node(768), kiss_node(512)],
+        router: RouterKind::LeastLoaded,
+        max_fallbacks: 1,
+        cloud: None,
+        init_occupancy: InitOccupancy::HoldsMemory,
+        migration: None,
+        controller: None,
+        topology: Topology::Flat,
+        churn: None,
+    }
+    .with_cloud(80_000)
+    .with_migration(15_000)
+    .with_controller(ControllerConfig::default())
+    .with_topology(Topology::Ring { hop_us: 1_000 });
+    spec.churn = Some(ChurnConfig {
+        seed: 2025,
+        mean_up_us: 120_000_000,
+        mean_down_us: 30_000_000,
+    });
+    let want = run_cluster(&trace, &spec);
+
+    let mut source = SynthSource::new(&synth);
+    assert!(!source.is_materialized(), "no chains: the source must stream");
+    let got = run_cluster_source(&mut source, &spec);
+    assert_eq!(got.report, want.report, "streamed arrivals diverged from the trace");
+    assert_eq!(got.per_node, want.per_node);
+    assert_eq!(got.peak_used_mb, want.peak_used_mb);
+    assert_eq!(got.rerouted, want.rerouted);
+    assert_eq!(got.rescues, want.rescues);
+    assert_eq!(got.churn_reroutes, want.churn_reroutes);
+}
+
+/// The closed-loop lock: with a fixed client population pumping through
+/// the cluster, every issued invocation is recorded exactly once
+/// (conservation: total accesses == issues the source handed out), the
+/// run terminates with no client left in flight, and two runs of the
+/// same seed replay exactly.
+#[test]
+fn closed_loop_cluster_conserves_the_client_population() {
+    let synth = workload(17);
+    let spec = ClusterSpec::homogeneous(3, 1024, NodePolicy::kiss_default())
+        .with_router(RouterKind::LeastLoaded)
+        .with_init_occupancy(InitOccupancy::HoldsMemory)
+        .with_cloud(80_000);
+
+    let mut source = ClosedLoopSource::new(&synth, 32, 500_000);
+    let a = run_cluster_source(&mut source, &spec);
+    assert!(a.report.is_consistent());
+    assert!(
+        source.issued() > 32,
+        "clients must re-issue after completions: {}",
+        source.issued()
+    );
+    assert_eq!(
+        a.report.overall.total_accesses(),
+        source.issued(),
+        "every issue must be recorded exactly once"
+    );
+    assert_eq!(source.thinking(), 0, "all clients retire at the horizon");
+
+    let mut source2 = ClosedLoopSource::new(&synth, 32, 500_000);
+    let b = run_cluster_source(&mut source2, &spec);
+    assert_eq!(a.report, b.report, "closed-loop runs must be seed-deterministic");
+    assert_eq!(a.per_node, b.per_node);
+    assert_eq!(source.issued(), source2.issued());
 }
 
 /// The cluster sweep experiments run end-to-end on a reduced workload

@@ -6,7 +6,8 @@ use kiss_faas::config::SimConfig;
 use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::coordinator::Balancer;
 use kiss_faas::experiments::paper_workload;
-use kiss_faas::sim::{run_trace_with, InitOccupancy};
+use kiss_faas::sim::{run_source_with, run_trace_with, InitOccupancy};
+use kiss_faas::trace::source::SynthSource;
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 
 fn workload() -> SynthConfig {
@@ -98,6 +99,26 @@ fn kiss_beats_baseline_on_the_edge_node() {
         rk.overall.cold_start_pct(),
         rb.overall.cold_start_pct()
     );
+}
+
+/// The streaming-API acceptance lock (engine side): pumping arrivals
+/// lazily from a [`SynthSource`] reproduces `run_trace_with` on the
+/// materialized trace exactly, in both init-occupancy models — same
+/// counters, same cumulative times, same latency histograms.
+#[test]
+fn streamed_engine_run_matches_materialized_bit_for_bit() {
+    let cfg = workload();
+    let t = synthesize(&cfg);
+    for occ in [InitOccupancy::LatencyOnly, InitOccupancy::HoldsMemory] {
+        let mut b = Balancer::kiss(4 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let want = run_trace_with(&t, &mut b, occ);
+
+        let mut source = SynthSource::new(&cfg);
+        assert!(!source.is_materialized(), "no chains: the source must stream");
+        let mut b = Balancer::kiss(4 * 1024, 0.8, 200, PolicyKind::Lru, PolicyKind::Lru);
+        let got = run_source_with(&mut source, &mut b, occ);
+        assert_eq!(got, want, "streamed engine run diverged under {occ:?}");
+    }
 }
 
 #[test]

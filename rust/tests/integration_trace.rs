@@ -1,6 +1,10 @@
-//! Integration: trace synthesis ⊕ persistence ⊕ analysis at realistic scale.
+//! Integration: trace synthesis ⊕ persistence ⊕ analysis at realistic
+//! scale, plus the streaming arrival-source locks (streamed synth ==
+//! materialized synth at hour scale, bounded buffering, closed-loop
+//! determinism).
 
 use kiss_faas::analysis;
+use kiss_faas::trace::source::{ArrivalSource, ClosedLoopSource, SynthSource};
 use kiss_faas::trace::synth::{synthesize, BurstConfig, SynthConfig};
 use kiss_faas::trace::{loader, SizeClass};
 
@@ -103,6 +107,83 @@ fn bursty_trace_has_higher_peak_to_mean() {
         peak_mean(&bursty),
         peak_mean(&calm)
     );
+}
+
+/// The streaming equivalence lock at hour scale: draining a
+/// [`SynthSource`] yields the materialized trace event-for-event
+/// (times, function ids, exec durations — bit-for-bit), while the
+/// source's internal buffer never exceeds one pending arrival per
+/// function regardless of the ~288k events that flow through it.
+#[test]
+fn streamed_synth_matches_materialized_at_hour_scale() {
+    let cfg = workload();
+    let want = synthesize(&cfg);
+    let mut source = SynthSource::new(&cfg);
+    assert!(!source.is_materialized(), "no chains: the source must stream");
+    assert_eq!(source.functions().len(), want.functions.len());
+    let bound = cfg.n_small + cfg.n_large;
+    let mut n = 0usize;
+    while let Some(ev) = {
+        assert!(source.buffered_events() <= bound, "buffer grew past the function count");
+        source.next_arrival()
+    } {
+        assert_eq!(ev, want.events[n], "event {n} diverged");
+        n += 1;
+    }
+    assert_eq!(n, want.events.len(), "stream ended early");
+    assert!(n > 150_000, "the lock must run at scale: {n}");
+}
+
+/// Constant-memory smoke: a long streamed run at reduced per-second
+/// rate keeps the pending-arrival buffer pinned at the function count
+/// even over a 24-hour horizon (~4.3M draws through the thinning loop),
+/// where materializing would hold millions of events.
+#[test]
+fn streamed_synth_buffer_is_constant_over_a_day() {
+    let cfg = SynthConfig {
+        duration_us: 24 * 3_600_000_000, // 24 h
+        rate_per_sec: 15.0,
+        ..workload()
+    };
+    let mut source = SynthSource::new(&cfg);
+    let bound = cfg.n_small + cfg.n_large;
+    let mut peak = source.buffered_events();
+    let mut n = 0u64;
+    let mut last = 0u64;
+    while let Some(ev) = source.next_arrival() {
+        assert!(ev.t_us >= last, "stream went backwards at event {n}");
+        last = ev.t_us;
+        peak = peak.max(source.buffered_events());
+        n += 1;
+    }
+    assert!(peak <= bound, "peak buffer {peak} exceeded the function count {bound}");
+    assert!(n > 1_000_000, "the smoke must actually run long: {n}");
+}
+
+/// Seed-determinism property for the closed-loop source under a
+/// synthetic completion schedule: same seed + same completion times ⇒
+/// identical issue streams; a different seed diverges.
+#[test]
+fn closed_loop_source_is_deterministic_under_feedback() {
+    let run = |seed: u64| {
+        let cfg = SynthConfig { seed, ..workload() };
+        let mut src = ClosedLoopSource::new(&cfg, 16, 250_000);
+        let mut out = Vec::new();
+        while out.len() < 2_000 {
+            let Some(ev) = src.next_arrival() else { break };
+            // Complete every invocation 5 ms after issue, echoing the
+            // engine's feedback contract (finish-time order).
+            src.on_completion(ev.func, ev.t_us + 5_000);
+            out.push((ev.t_us, ev.func, ev.exec_us));
+        }
+        (out, src.issued())
+    };
+    let (a, issued_a) = run(7);
+    let (b, issued_b) = run(7);
+    assert_eq!(a, b, "same seed must replay exactly");
+    assert_eq!(issued_a, issued_b);
+    let (c, _) = run(8);
+    assert_ne!(a, c, "different seeds must diverge");
 }
 
 #[test]
