@@ -19,11 +19,17 @@ use crate::util::stats::percentile_sorted;
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name as passed to [`Bencher::new`].
     pub name: String,
+    /// Iterations executed in the measured phase.
     pub iters: u64,
+    /// Wall-clock duration of the measured phase.
     pub total: Duration,
+    /// Mean per-iteration latency (ns).
     pub mean_ns: f64,
+    /// Median per-iteration latency (ns).
     pub p50_ns: f64,
+    /// 99th-percentile per-iteration latency (ns).
     pub p99_ns: f64,
     /// Iterations per second.
     pub throughput: f64,
@@ -86,6 +92,8 @@ pub struct Bencher {
 }
 
 impl Bencher {
+    /// A bencher with the default warmup (200 ms), measurement target
+    /// (1 s), and iteration cap.
     pub fn new(name: &str) -> Self {
         Self {
             name: name.to_string(),
@@ -103,16 +111,19 @@ impl Bencher {
         self
     }
 
+    /// Override the warmup/calibration window.
     pub fn warmup(mut self, d: Duration) -> Self {
         self.warmup = d;
         self
     }
 
+    /// Override the target duration of the measured phase.
     pub fn target(mut self, d: Duration) -> Self {
         self.target = d;
         self
     }
 
+    /// Cap the calibrated iteration count.
     pub fn max_iters(mut self, n: u64) -> Self {
         self.max_iters = n;
         self

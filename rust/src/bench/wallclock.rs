@@ -4,28 +4,34 @@
 //! Unlike the micro-benchmarks under `benches/` (auto-calibrated,
 //! per-iteration latency sketches), this harness answers one blunt
 //! question per release: *how long does a whole simulation take on this
-//! machine right now?* It times N trials of the two end-to-end hot
-//! paths — the single-node engine (`run_trace`) and the heterogeneous
-//! cluster (`run_cluster`) — at fixed seeds, each in a materialized
-//! (pre-synthesized `Trace`) and a streamed (`SynthSource` pulled
-//! lazily) variant, and renders a schema-tagged JSON document
-//! (`BENCH_SCHEMA`) that `repro bench-json` writes to `BENCH_<pr>.json`
-//! at the repository root, continuing the before/after record the
-//! kernel refactors compare against. The materialized/streamed pairs
-//! drive bit-identical arrival sequences, so their delta is exactly the
-//! streaming front end's overhead (expected within noise). Virtual
-//! workloads are seed-deterministic; only the wall-clock readings vary
-//! by host.
+//! machine right now?* It times N trials of the end-to-end hot paths —
+//! the single-node engine (`run_trace`), the heterogeneous cluster
+//! (`run_cluster`), and the 100-node sustained fleet sequentially vs
+//! sharded (`run_cluster_sharded` at 4 workers) — at fixed seeds, and
+//! renders a schema-tagged JSON document (`BENCH_SCHEMA`) that `repro
+//! bench-json` writes to `BENCH_<pr>.json` at the repository root,
+//! continuing the before/after record the kernel refactors compare
+//! against. The materialized/streamed pairs drive bit-identical arrival
+//! sequences, so their delta is exactly the streaming front end's
+//! overhead (expected within noise); the sequential/sharded pair drives
+//! bit-identical *results*, so its delta is pure kernel speedup.
+//! Virtual workloads are seed-deterministic; only the wall-clock
+//! readings vary by host. Generated documents carry `"measured": true`
+//! — the marker CI's regression gate requires before it compares
+//! against a committed baseline (a hand-written provenance stub says
+//! `"measured": false` instead).
 
 use std::time::Instant;
 
 use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::Balancer;
-use crate::experiments::cluster::{cluster_workload, hetero_spec};
+use crate::experiments::cluster::{
+    cluster_workload, hetero_spec, sustained_bench_workload, sustained_sticky_spec,
+};
 use crate::experiments::paper_workload;
-use crate::sim::cluster::{run_cluster, run_cluster_source};
+use crate::sim::cluster::{run_cluster, run_cluster_sharded, run_cluster_source, ShardingConfig};
 use crate::sim::{run_source_with, run_trace_with, InitOccupancy};
-use crate::trace::source::SynthSource;
+use crate::trace::source::{ArrivalSource, SynthSource};
 use crate::trace::synth::{synthesize, SynthConfig};
 use crate::util::json::{obj, Json};
 
@@ -141,8 +147,44 @@ pub fn run(trials: usize, scale: f64) -> Json {
         trial_ms,
     });
 
+    // Cases 5 + 6: the 100-node sustained fleet behind the decomposable
+    // sticky/no-fallback spec, sequential vs sharded at 4 workers. Both
+    // stream the same source and produce bit-identical ClusterReports
+    // (locked in sim::cluster::shard's tests), so the wall-clock ratio
+    // is pure kernel speedup.
+    let sustained_synth = scaled(sustained_bench_workload(), scale);
+    let spec = sustained_sticky_spec();
+    let mut counter = SynthSource::new(&sustained_synth);
+    let mut sustained_events = 0usize;
+    while counter.next_arrival().is_some() {
+        sustained_events += 1;
+    }
+    let trial_ms = time_trials(trials, || {
+        let mut source = SynthSource::new(&sustained_synth);
+        std::hint::black_box(run_cluster_source(&mut source, &spec));
+    });
+    cases.push(BenchCase {
+        name: "run_cluster/sustained-sticky-100node".into(),
+        events: sustained_events,
+        trial_ms,
+    });
+
+    let sharding = ShardingConfig::with_shards(4);
+    let trial_ms = time_trials(trials, || {
+        let mut source = SynthSource::new(&sustained_synth);
+        std::hint::black_box(run_cluster_sharded(&mut source, &spec, &sharding));
+    });
+    cases.push(BenchCase {
+        name: "run_cluster/sustained-sticky-100node-shards4".into(),
+        events: sustained_events,
+        trial_ms,
+    });
+
     obj([
         ("schema", Json::Str(BENCH_SCHEMA.into())),
+        // Provenance: this document came from real timed runs on the
+        // writing host. Committed stubs awaiting a build host say false.
+        ("measured", Json::Bool(true)),
         (
             "params",
             obj([
@@ -163,8 +205,9 @@ mod tests {
         // Tiny scale: ~a dozen virtual seconds per case.
         let doc = run(1, 0.002);
         assert_eq!(doc.get("schema").and_then(Json::as_str), Some(BENCH_SCHEMA));
+        assert_eq!(doc.get("measured"), Some(&Json::Bool(true)));
         let cases = doc.get("cases").and_then(Json::as_arr).unwrap();
-        assert_eq!(cases.len(), 4);
+        assert_eq!(cases.len(), 6);
         for case in cases {
             let name = case.get("name").and_then(Json::as_str).unwrap();
             assert!(name.starts_with("run_trace/") || name.starts_with("run_cluster/"));

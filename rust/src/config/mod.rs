@@ -38,6 +38,10 @@
 //! cloud_rtt_ms = 80                   # 0 / absent = no cloud tier
 //! policies = ["kiss", "kiss", "baseline", "adaptive"]
 //!
+//! [cluster.sharding]                  # absent = sequential kernel
+//! shards = 4                          # worker threads (capped at nodes)
+//! window_us = 1000000                 # arrival-batch window width (µs)
+//!
 //! [cluster.migration]                 # absent = migration disabled
 //! enabled = true                      # optional kill switch
 //! cost_ms = 15                        # warm-container transfer cost
@@ -75,7 +79,7 @@ use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::{AdaptiveConfig, Balancer};
 use crate::sim::cluster::{
     ChurnConfig, CloudTier, ClusterSpec, ControllerConfig, MigrationPolicy, NodePolicy, NodeSpec,
-    RouterKind, Topology,
+    RouterKind, ShardingConfig, Topology,
 };
 use crate::trace::source::{ArrivalSource, ClosedLoopSource, ReplaySource, SynthSource};
 use crate::trace::synth::{BurstConfig, SynthConfig};
@@ -194,6 +198,10 @@ pub struct ClusterConfig {
     /// Node churn injection (`[cluster.churn]`); `None` = nodes never
     /// fail.
     pub churn: Option<ChurnConfig>,
+    /// Sharded parallel kernel (`[cluster.sharding]`); `None` = the
+    /// sequential kernel. See [`crate::sim::cluster::shard`] for which
+    /// configurations actually decompose.
+    pub sharding: Option<ShardingConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -209,6 +217,7 @@ impl Default for ClusterConfig {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            sharding: None,
         }
     }
 }
@@ -395,6 +404,14 @@ impl SimConfig {
         }
     }
 
+    /// The `[cluster.sharding]` selection, or the sequential default
+    /// (one shard) when the section is absent. CLI flags may override
+    /// the result; pass it to
+    /// [`run_cluster_sharded`](crate::sim::cluster::run_cluster_sharded).
+    pub fn sharding(&self) -> ShardingConfig {
+        self.cluster.as_ref().and_then(|c| c.sharding).unwrap_or_default()
+    }
+
     /// Build the streaming [`ArrivalSource`] the `[workload]` section
     /// describes: the incremental synthesizer over `[trace]` (default),
     /// a CSV replay stream, or a closed-loop client population. Boxed so
@@ -488,6 +505,14 @@ impl SimConfig {
                 }
                 if churn.mean_down_us == 0 {
                     bail!("cluster.churn.mean_down_s must be > 0");
+                }
+            }
+            if let Some(sh) = &c.sharding {
+                if sh.shards == 0 {
+                    bail!("cluster.sharding.shards must be > 0");
+                }
+                if sh.window_us == 0 {
+                    bail!("cluster.sharding.window_us must be > 0");
                 }
             }
         }
@@ -748,17 +773,39 @@ impl SimConfig {
             cfg.cluster = Some(cc);
         }
 
+        let sharding_section = doc.section("cluster.sharding");
         let migration_section = doc.section("cluster.migration");
         let controller_section = doc.section("cluster.controller");
         let topology_section = doc.section("cluster.topology");
         let churn_section = doc.section("cluster.churn");
         if cfg.cluster.is_none()
-            && (migration_section.is_some()
+            && (sharding_section.is_some()
+                || migration_section.is_some()
                 || controller_section.is_some()
                 || topology_section.is_some()
                 || churn_section.is_some())
         {
             bail!("[cluster.*] subsections require a [cluster] section");
+        }
+
+        if let Some(section) = sharding_section {
+            let mut sh = ShardingConfig::default();
+            for (key, v) in section {
+                match key.as_str() {
+                    "shards" => {
+                        sh.shards = v
+                            .as_u64()
+                            .ok_or_else(|| anyhow!("cluster.sharding.shards"))?
+                            as usize
+                    }
+                    "window_us" => {
+                        sh.window_us =
+                            v.as_u64().ok_or_else(|| anyhow!("cluster.sharding.window_us"))?
+                    }
+                    other => bail!("unknown cluster.sharding key: {other}"),
+                }
+            }
+            cfg.cluster.as_mut().expect("checked above").sharding = Some(sh);
         }
 
         if let Some(section) = migration_section {
@@ -984,6 +1031,11 @@ impl SimConfig {
                         churn.mean_up_us / 1_000_000,
                         churn.mean_down_us / 1_000_000
                     ));
+                }
+                if let Some(sh) = &c.sharding {
+                    if sh.shards > 1 {
+                        extras.push_str(&format!(" shards {}", sh.shards));
+                    }
                 }
                 format!(
                     "{base} | cluster {}x router {} fallbacks {} cloud {}{extras}",
@@ -1322,6 +1374,50 @@ mod tests {
             "[cluster]\nnodes = 2\n[cluster.churn]\nmean_up_s = 0",
             "[cluster]\nnodes = 2\n[cluster.churn]\nmean_down_s = -3",
             "[cluster]\nnodes = 2\n[cluster.churn]\nbogus = 1",
+        ] {
+            assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn sharding_toml_roundtrip() {
+        let cfg = SimConfig::from_toml_str(
+            r#"
+            [cluster]
+            nodes = 4
+            router = "sticky"
+            fallbacks = 0
+            [cluster.sharding]
+            shards = 4
+            window_us = 250000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.cluster.as_ref().unwrap().sharding,
+            Some(ShardingConfig { shards: 4, window_us: 250_000 })
+        );
+        assert_eq!(cfg.sharding(), ShardingConfig { shards: 4, window_us: 250_000 });
+        let d = cfg.describe();
+        assert!(d.contains("shards 4"), "{d}");
+
+        // Bare section keeps the defaults (sequential, 1 s window).
+        let cfg =
+            SimConfig::from_toml_str("[cluster]\nnodes = 2\n[cluster.sharding]").unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().sharding, Some(ShardingConfig::default()));
+
+        // Absent section is the sequential default.
+        assert_eq!(SimConfig::edge_default(8192).sharding(), ShardingConfig::default());
+    }
+
+    #[test]
+    fn rejects_bad_sharding_configs() {
+        // The subsection without [cluster] is a configuration mistake.
+        assert!(SimConfig::from_toml_str("[cluster.sharding]\nshards = 2").is_err());
+        for bad in [
+            "[cluster]\nnodes = 2\n[cluster.sharding]\nshards = 0",
+            "[cluster]\nnodes = 2\n[cluster.sharding]\nwindow_us = 0",
+            "[cluster]\nnodes = 2\n[cluster.sharding]\nbogus = 1",
         ] {
             assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
         }

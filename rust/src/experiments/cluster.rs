@@ -454,6 +454,32 @@ pub fn sustained_workload() -> SynthConfig {
     }
 }
 
+/// The sustained fleet behind a sticky router with no fallback retries —
+/// the decomposable twin of [`cluster_sustained`]'s spec (see
+/// [`crate::sim::cluster::shard`]): the same 100 × 2 GB KiSS fleet and
+/// cloud tier, but every placement decision is a pure function of the
+/// arrival, so [`crate::sim::cluster::run_cluster_sharded`] can split
+/// it across workers. The wall-clock bench times this spec sequentially
+/// and at 4 shards.
+pub fn sustained_sticky_spec() -> ClusterSpec {
+    ClusterSpec::homogeneous(
+        SUSTAINED_NODES,
+        SUSTAINED_NODE_MEM_MB,
+        NodePolicy::kiss_default(),
+    )
+    .with_router(RouterKind::Sticky)
+    .with_fallbacks(0)
+    .with_init_occupancy(InitOccupancy::HoldsMemory)
+    .with_cloud(CLOUD_RTT_US)
+}
+
+/// A 60 s slice of [`sustained_workload`] for wall-clock benchmarking:
+/// ~1.7 M invocations at full scale — long enough to dominate setup
+/// costs, short enough for repeated trials.
+pub fn sustained_bench_workload() -> SynthConfig {
+    SynthConfig { duration_us: 60_000_000, ..sustained_workload() }
+}
+
 /// The sustained-throughput capstone: stream `synth` through a
 /// homogeneous 100-node KiSS fleet (least-loaded router, cloud tier at
 /// [`CLOUD_RTT_US`]) without ever materializing the trace. At the
@@ -635,6 +661,21 @@ mod tests {
             "{:?}",
             t.preamble
         );
+    }
+
+    #[test]
+    fn sustained_sticky_spec_decomposes() {
+        use crate::sim::cluster::{plan_sharding, ShardingConfig};
+        let spec = sustained_sticky_spec();
+        assert_eq!(spec.nodes.len(), SUSTAINED_NODES);
+        assert_eq!(spec.max_fallbacks, 0);
+        let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(4));
+        assert!(plan.parallel, "{}", plan.reason);
+        assert_eq!(plan.shards, 4);
+        // The least-loaded capstone spec, by contrast, must serialize.
+        let synth = sustained_bench_workload();
+        assert_eq!(synth.duration_us, 60_000_000);
+        assert_eq!(synth.rate_per_sec, 28_000.0);
     }
 
     #[test]

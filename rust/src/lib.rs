@@ -105,13 +105,12 @@
 #![warn(missing_docs)]
 
 // Public-API documentation is enforced (`missing_docs`) module by
-// module; the modules below with an `allow` predate the lint and will be
-// brought into scope in follow-up documentation passes. `sim`, `config`,
-// `metrics`, `trace`, `experiments`, `runtime`, `serve`, `util`, and all
-// of `coordinator` are fully documented.
+// module; `analysis` below predates the lint and will be brought into
+// scope in a follow-up documentation pass. `bench`, `sim`, `config`,
+// `metrics`, `trace`, `experiments`, `runtime`, `serve`, `util`, and
+// all of `coordinator` are fully documented.
 #[allow(missing_docs)]
 pub mod analysis;
-#[allow(missing_docs)]
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,7 @@
 //!                [--churn-rate F] [--sweep]
 //!                [--source synth|replay|closed-loop] [--trace STEM]
 //!                [--clients N] [--think-ms N]
+//!                [--shards N] [--window-us N]
 //! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
@@ -33,7 +34,9 @@ use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::experiments::{self, run_single, ExpParams, Experiment, Group};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
-use kiss_faas::sim::cluster::{run_cluster_source, MigrationPolicy, RouterKind, Topology};
+use kiss_faas::sim::cluster::{
+    plan_sharding, run_cluster_sharded, MigrationPolicy, RouterKind, Topology,
+};
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
 use kiss_faas::util::json::Json;
@@ -78,7 +81,7 @@ fn print_usage() {
          USAGE:\n  repro experiment <id|group|all|list|index> [--format text|json|csv] [--out DIR]\n                \
          [--jobs N] [--seed N] [--scale F] [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
-         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N] [--shards N] [--window-us N]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -347,11 +350,12 @@ fn cmd_simulate(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// `repro bench-json` — wall-clock timing of the two end-to-end hot
-/// paths (`run_trace` + `run_cluster`) at fixed seeds, written as a
-/// schema-tagged JSON perf record. Defaults to `BENCH_6.json` in the
-/// working directory (run from the repository root to start the perf
-/// trajectory there); CI's perf-smoke step runs it at reduced scale.
+/// `repro bench-json` — wall-clock timing of the end-to-end hot paths
+/// (`run_trace` + `run_cluster`, sequential and sharded) at fixed
+/// seeds, written as a schema-tagged JSON perf record. Defaults to
+/// `BENCH_7.json` in the working directory (run from the repository
+/// root to continue the perf trajectory there); CI's perf-smoke step
+/// runs it at reduced scale.
 fn cmd_bench_json(flags: &Flags) -> Result<()> {
     let trials: usize = flags.get_parsed("trials")?.unwrap_or(3);
     if trials == 0 {
@@ -361,7 +365,7 @@ fn cmd_bench_json(flags: &Flags) -> Result<()> {
     if scale <= 0.0 || !scale.is_finite() {
         bail!("--scale must be a positive finite factor");
     }
-    let out = PathBuf::from(flags.get("out").unwrap_or("BENCH_6.json"));
+    let out = PathBuf::from(flags.get("out").unwrap_or("BENCH_7.json"));
     let doc = kiss_faas::bench::wallclock::run(trials, scale);
     if let Some(cases) = doc.get("cases").and_then(Json::as_arr) {
         for case in cases {
@@ -475,6 +479,22 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     if let Some(ms) = flags.get_parsed::<u64>("think-ms")? {
         cfg.workload.think_ms = ms;
     }
+    if let Some(s) = flags.get_parsed::<usize>("shards")? {
+        if s == 0 {
+            bail!("--shards must be >= 1");
+        }
+        let mut sh = cc.sharding.unwrap_or_default();
+        sh.shards = s;
+        cc.sharding = Some(sh);
+    }
+    if let Some(w) = flags.get_parsed::<u64>("window-us")? {
+        if w == 0 {
+            bail!("--window-us must be > 0");
+        }
+        let mut sh = cc.sharding.unwrap_or_default();
+        sh.window_us = w;
+        cc.sharding = Some(sh);
+    }
     cfg.cluster = Some(cc);
     cfg.validate()?;
     println!("# {}", cfg.describe());
@@ -483,7 +503,12 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     // build_cluster_spec already applies the experiment-harness
     // init-occupancy convention (HoldsMemory / KISS_INIT_LATENCY_ONLY).
     let spec = cfg.build_cluster_spec();
-    let r = run_cluster_source(source.as_mut(), &spec);
+    let sharding = cfg.sharding();
+    if sharding.shards > 1 {
+        let plan = plan_sharding(&spec, source.wants_feedback(), &sharding);
+        println!("# sharding: {}", plan.describe());
+    }
+    let r = run_cluster_sharded(source.as_mut(), &spec, &sharding);
 
     println!(
         "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12} {:>8} {:>10} {:>8}",

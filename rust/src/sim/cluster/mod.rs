@@ -58,12 +58,14 @@ pub mod migrate;
 pub mod offload;
 pub mod report;
 pub mod route;
+pub mod shard;
 pub mod spec;
 
 pub use churn::ChurnConfig;
 pub use controller::ControllerConfig;
 pub use migrate::MigrationPolicy;
 pub use report::ClusterReport;
+pub use shard::{plan_sharding, run_cluster_sharded, ShardPlan, ShardingConfig};
 pub use spec::{
     CloudTier, ClusterOutcome, ClusterSpec, NodePolicy, NodeSpec, RouterKind, Topology,
 };
@@ -117,6 +119,12 @@ pub struct Cluster {
     pub(super) events: EventQueue,
     pub(super) now_us: u64,
     pub(super) rr_next: usize,
+    /// Memoized home/ingress node per function id (`u32::MAX` = not yet
+    /// computed): every router consults the home gateway on every
+    /// arrival, and the hash is a pure function of `(function, fleet
+    /// size)` — caching it removes a per-arrival hash from the hot path
+    /// (see [`route`]).
+    pub(super) home_cache: Vec<u32>,
     /// Whether the driving [`ArrivalSource`] wants completion feedback
     /// (closed-loop). Gates [`Event::Departure`] scheduling so the
     /// open-loop event stream stays bit-for-bit unchanged.
@@ -185,7 +193,10 @@ impl Cluster {
             .map(|n| n.occupancy().iter().map(|&(_, c)| c).sum())
             .collect();
         let count = nodes.len();
-        let mut events = EventQueue::new();
+        // Pre-size the event queue to a steady-state in-flight
+        // population so scheduling never reallocates the heap mid-run
+        // (hot-path: the queue sees one push per dispatched invocation).
+        let mut events = EventQueue::with_capacity((64 * count).min(1 << 16));
         // Pre-schedule the event sources: the first controller epoch and
         // every node's first failure. From here on each fired event
         // schedules its own successor.
@@ -210,6 +221,7 @@ impl Cluster {
             events,
             now_us: 0,
             rr_next: 0,
+            home_cache: Vec::new(),
             feedback: false,
             in_flight: 0,
             report: Report::default(),
@@ -360,6 +372,38 @@ impl Cluster {
         self.fire_epoch_if_due(ev.t_us); // no-op unless an epoch popped
         self.note_class_arrival(trace.profile(ev.func).class);
         self.place(trace, ev)
+    }
+
+    /// [`Cluster::step`] with the routing decision made by the caller:
+    /// advance time exactly like `step`, then enter the placement
+    /// pipeline *after* the `route` stage, dispatching on `primary`.
+    ///
+    /// This is the shard-worker entry point ([`shard`]): the sharded
+    /// driver computes every arrival's primary with the same pure
+    /// assignment function the router would use and partitions arrivals
+    /// by owner, so each worker replays exactly the dispatches the
+    /// sequential run performs on its nodes — the remaining pipeline
+    /// stages (`try_edge` → `try_migrate` → `offload_or_drop`) are
+    /// shared code, not a reimplementation.
+    pub(super) fn step_assigned(
+        &mut self,
+        trace: &Trace,
+        ev: Invocation,
+        primary: usize,
+    ) -> ClusterOutcome {
+        debug_assert!(ev.t_us >= self.now_us, "arrivals must be time-sorted");
+        self.now_us = ev.t_us;
+        self.advance(trace, ev.t_us);
+        self.fire_epoch_if_due(ev.t_us);
+        let profile = trace.profile(ev.func);
+        self.note_class_arrival(profile.class);
+        if let Some(outcome) = self.try_edge(profile, ev, primary) {
+            return outcome;
+        }
+        if let Some(outcome) = self.try_migrate(profile, ev, Some(primary)) {
+            return outcome;
+        }
+        self.offload_or_drop(profile, ev)
     }
 
     /// Release everything still in flight (end-of-trace drain). Pending

@@ -7,7 +7,11 @@ use super::spec::RouterKind;
 use super::Cluster;
 
 /// Everything a cluster run produces.
-#[derive(Clone, Debug)]
+///
+/// Derives `PartialEq` so whole-run results compare bit-for-bit — the
+/// contract the sharded kernel ([`super::shard`]) and its differential
+/// test harness are locked against.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClusterReport {
     /// Cluster-wide metrics (includes offloads/drops/migrations, plus
     /// the per-invocation latency histograms via

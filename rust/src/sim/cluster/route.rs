@@ -43,6 +43,32 @@ impl Cluster {
         (h.finish() % self.nodes.len() as u64) as usize
     }
 
+    /// Densely-packed function ids (every trace the synthesizer or
+    /// loader produces) get their home gateway memoized; ids beyond this
+    /// bound fall back to hashing so a sparse id space cannot balloon
+    /// the cache.
+    const HOME_CACHE_MAX: usize = 1 << 20;
+
+    /// [`Cluster::arrival_node`] behind a per-function memo: the home
+    /// gateway is a pure function of `(function id, fleet size)`, both
+    /// fixed for the life of the cluster, so the router pays the hash
+    /// once per function instead of once per arrival. `u32::MAX` marks
+    /// an empty slot (a fleet index always fits: fleets are far smaller
+    /// than 2^32 nodes).
+    pub(super) fn home_node(&mut self, profile: &FunctionProfile) -> usize {
+        let idx = profile.id.0 as usize;
+        if idx >= Self::HOME_CACHE_MAX {
+            return self.arrival_node(profile);
+        }
+        if idx >= self.home_cache.len() {
+            self.home_cache.resize(idx + 1, u32::MAX);
+        }
+        if self.home_cache[idx] == u32::MAX {
+            self.home_cache[idx] = self.arrival_node(profile) as u32;
+        }
+        self.home_cache[idx] as usize
+    }
+
     /// Least-loaded *live* node in `[lo, hi)` by used/capacity fraction;
     /// deterministic. Strict load improvement wins; exact load ties go
     /// to the node closer (by topology latency) to `arrival`, then to
@@ -79,7 +105,7 @@ impl Cluster {
     /// (the caller then offloads or drops).
     pub(super) fn route(&mut self, profile: &FunctionProfile) -> Option<usize> {
         let n = self.nodes.len();
-        let arrival = self.arrival_node(profile);
+        let arrival = self.home_node(profile);
         match self.router {
             RouterKind::RoundRobin => {
                 for _ in 0..n {
@@ -144,6 +170,18 @@ mod tests {
         let mut h = FxHasher::default();
         h.write_u32(func_id);
         (h.finish() % n as u64) as usize
+    }
+
+    #[test]
+    fn home_node_memo_matches_the_hash() {
+        let spec = ClusterSpec::homogeneous(5, 1000, NodePolicy::kiss_default());
+        let mut cluster = Cluster::new(&spec);
+        for id in 0..50u32 {
+            let p = func(id, 40, 1_000, 500);
+            let want = home_node(id, 5);
+            assert_eq!(cluster.home_node(&p), want);
+            assert_eq!(cluster.home_node(&p), want, "second lookup hits the memo");
+        }
     }
 
     #[test]

@@ -1,0 +1,504 @@
+//! The sharded parallel cluster driver — same results, more cores.
+//!
+//! [`run_cluster_sharded`] partitions the fleet's nodes across `S`
+//! worker threads (node `i` belongs to shard `i mod S`), streams
+//! arrivals to their owning shard in windowed batches, and merges the
+//! per-shard [`ClusterReport`]s into one — **bit-for-bit identical** to
+//! [`run_cluster_source`] on the same source and spec. That equality is
+//! not aspirational: it is locked by this module's tests, the
+//! full-feature integration locks, and the seeded differential harness
+//! in `tests/differential_cluster.rs`.
+//!
+//! ## Why a *decomposed* design (and when it applies)
+//!
+//! Classic parallel discrete-event simulation buys concurrency with
+//! *lookahead*: shard A may run ahead of shard B by the minimum latency
+//! of any cross-shard interaction. This simulator has **zero
+//! lookahead** — every cross-node action is instantaneous in virtual
+//! time (a fallback retry, a migration, a rescue, and a load-reading
+//! router all observe other nodes' state *at the arrival's own
+//! microsecond*). A windowed optimistic exchange would therefore have
+//! to serialize at every arrival to stay exact, which is just the
+//! sequential kernel with extra steps.
+//!
+//! What *can* run in parallel exactly is the large class of configs
+//! whose placement decisions never read cross-node state:
+//!
+//! * the router is state-oblivious — [`RouterKind::Sticky`]
+//!   (`fxhash(function) % nodes`, a pure function) or
+//!   [`RouterKind::RoundRobin`] (arrival index mod fleet size, a pure
+//!   function while every node is live);
+//! * no fallback retries (`max_fallbacks == 0`), no migration, no
+//!   controller, no churn — the pipeline after routing touches only the
+//!   primary node (offload/drop is per-invocation and node-free);
+//! * the source is open-loop (a closed-loop source mints future
+//!   arrivals from completions, serializing the timeline).
+//!
+//! Under those conditions every event in a window **commutes across
+//! shards**: an arrival's outcome is a pure function of its own node's
+//! prior history, per-node history is exactly the arrival subsequence
+//! the assignment function sends there, and every cluster-level
+//! observable ([`Report`] counters, integer latency histogram bins,
+//! peaks) is a commutative monoid fold — so merging per-shard reports
+//! in canonical node order reproduces the sequential totals exactly.
+//! [`plan_sharding`] encodes this predicate; anything outside it runs
+//! the exact sequential kernel on the calling thread (and says so in
+//! its [`ShardPlan`]), so `run_cluster_sharded` is *always* safe to
+//! call and *always* bit-for-bit with the sequential driver, at any
+//! shard count.
+//!
+//! ## The windowed hand-off
+//!
+//! The coordinator (calling thread) pulls the source once, computes
+//! each arrival's primary with the same pure assignment function the
+//! router would use, and accumulates per-shard batches. A batch flushes
+//! when the next arrival falls outside the current `window_us` of
+//! virtual time (or on a size cap, so a dense window cannot balloon
+//! memory), over a bounded channel — constant memory end to end, with
+//! generation pipelined against simulation. Workers build their own
+//! full-fleet [`Cluster`] (the assignment hash is modulo the *full*
+//! fleet size; non-owned nodes simply stay idle) and drive it with
+//! [`Cluster::step_assigned`], which re-enters the shared placement
+//! pipeline after the routing stage — shard workers run the same code
+//! the sequential kernel runs, not a re-implementation.
+
+use std::hash::Hasher;
+use std::sync::mpsc;
+use std::thread;
+
+use crate::metrics::Report;
+use crate::trace::source::ArrivalSource;
+use crate::trace::{FunctionId, Invocation, Trace};
+use crate::util::fxhash::FxHasher;
+
+use super::{run_cluster_source, Cluster, ClusterReport, ClusterSpec, RouterKind};
+
+/// Default virtual-time width of one coordinator batch window (1 s).
+pub const DEFAULT_WINDOW_US: u64 = 1_000_000;
+
+/// Hard cap on buffered arrivals per window, so a dense window cannot
+/// grow coordinator memory without bound.
+const MAX_WINDOW_EVENTS: usize = 8_192;
+
+/// Bounded depth of each coordinator→worker channel (in batches): deep
+/// enough to pipeline generation against simulation, small enough to
+/// keep memory constant.
+const CHANNEL_DEPTH: usize = 2;
+
+/// `[cluster.sharding]` — how to parallelize a cluster run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardingConfig {
+    /// Worker-thread count the caller asks for. `1` (the default) runs
+    /// the sequential kernel; the effective count is additionally
+    /// capped at the fleet size.
+    pub shards: usize,
+    /// Virtual-time width (µs) of one coordinator batch window. Must be
+    /// > 0; purely a batching knob — results are identical at any
+    /// width.
+    pub window_us: u64,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        Self { shards: 1, window_us: DEFAULT_WINDOW_US }
+    }
+}
+
+impl ShardingConfig {
+    /// A config requesting `shards` workers at the default window.
+    pub fn with_shards(shards: usize) -> Self {
+        Self { shards, ..Self::default() }
+    }
+}
+
+/// What [`run_cluster_sharded`] decided to do with a `(spec, source,
+/// config)` triple, and why — surfaced by `repro cluster --shards` and
+/// asserted by the test suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Effective worker count (1 when running sequentially).
+    pub shards: usize,
+    /// Effective batch window (µs).
+    pub window_us: u64,
+    /// Whether the run decomposes across workers. `false` = the exact
+    /// sequential kernel runs on the calling thread.
+    pub parallel: bool,
+    /// Human-readable justification for the decision.
+    pub reason: &'static str,
+}
+
+impl ShardPlan {
+    /// One-line description for CLI output.
+    pub fn describe(&self) -> String {
+        if self.parallel {
+            format!(
+                "decomposed across {} shards, {} ms windows ({})",
+                self.shards,
+                self.window_us / 1_000,
+                self.reason
+            )
+        } else {
+            format!("sequential ({})", self.reason)
+        }
+    }
+}
+
+/// Decide whether a run decomposes across shard workers (see the module
+/// docs for the safety argument behind each predicate arm). `feedback`
+/// is the source's [`ArrivalSource::wants_feedback`].
+pub fn plan_sharding(spec: &ClusterSpec, feedback: bool, cfg: &ShardingConfig) -> ShardPlan {
+    let window_us = cfg.window_us.max(1);
+    let effective = cfg.shards.max(1).min(spec.nodes.len());
+    let sequential = |reason: &'static str| ShardPlan {
+        shards: 1,
+        window_us,
+        parallel: false,
+        reason,
+    };
+    if effective < 2 {
+        return sequential("a single shard (or a one-node fleet) has nothing to decompose");
+    }
+    if feedback {
+        return sequential("closed-loop source: completions mint future arrivals");
+    }
+    match spec.router {
+        RouterKind::Sticky | RouterKind::RoundRobin => {}
+        RouterKind::LeastLoaded | RouterKind::SizeAffinity { .. } => {
+            return sequential("router reads fleet load state at each arrival");
+        }
+    }
+    if spec.max_fallbacks > 0 {
+        return sequential("fallback retries read other nodes' state");
+    }
+    if spec.migration.is_some() {
+        return sequential("migration scans the whole fleet for warm state");
+    }
+    if spec.controller.is_some() {
+        return sequential("controller epochs act on fleet-wide observations");
+    }
+    if spec.churn.is_some() {
+        return sequential("churn changes liveness, making routing state-dependent");
+    }
+    ShardPlan {
+        shards: effective,
+        window_us,
+        parallel: true,
+        reason: "state-oblivious router, no cross-node coupling",
+    }
+}
+
+/// The sticky router's home gateway as a pure function — the same
+/// `fxhash(function id) % fleet size` the in-cluster router computes
+/// (`Cluster::arrival_node`), reproduced here so the coordinator can
+/// assign arrivals without a cluster.
+fn sticky_home(func: FunctionId, n: usize) -> usize {
+    let mut h = FxHasher::default();
+    h.write_u32(func.0);
+    (h.finish() % n as u64) as usize
+}
+
+/// Primary node for the `k`-th arrival under a state-oblivious router
+/// with an all-live fleet — exactly what `Cluster::route` returns in a
+/// decomposable config.
+fn assign_primary(router: RouterKind, func: FunctionId, k: u64, n: usize) -> usize {
+    match router {
+        RouterKind::Sticky => sticky_home(func, n),
+        RouterKind::RoundRobin => (k % n as u64) as usize,
+        RouterKind::LeastLoaded | RouterKind::SizeAffinity { .. } => {
+            unreachable!("plan_sharding only decomposes state-oblivious routers")
+        }
+    }
+}
+
+/// One batch of `(primary node, arrival)` pairs bound for a shard.
+type Batch = Vec<(usize, Invocation)>;
+
+/// Send every non-empty per-shard batch to its worker and reset the
+/// buffered-event count. Blocks when a worker's channel is full — the
+/// back-pressure that keeps coordinator memory constant.
+fn flush_batches(txs: &[mpsc::SyncSender<Batch>], batches: &mut [Batch], buffered: &mut usize) {
+    for (s, batch) in batches.iter_mut().enumerate() {
+        if !batch.is_empty() {
+            let full = std::mem::take(batch);
+            txs[s].send(full).expect("shard worker hung up early");
+        }
+    }
+    *buffered = 0;
+}
+
+/// Field-wise accumulate `other` into `into` (the [`Report`]-level
+/// companion of [`crate::metrics::Counters::merge`]).
+fn merge_report_into(into: &mut Report, other: &Report) {
+    into.overall.merge(&other.overall);
+    into.small.merge(&other.small);
+    into.large.merge(&other.large);
+    into.node_downs += other.node_downs;
+    into.node_ups += other.node_ups;
+}
+
+/// Merge per-shard reports in canonical node order: cluster-wide
+/// observables fold commutatively; per-node observables come from the
+/// node's owning shard (`node mod shards` — the only shard that ever
+/// dispatched to it).
+fn merge_parts(mut parts: Vec<ClusterReport>, shards: usize) -> ClusterReport {
+    debug_assert_eq!(parts.len(), shards);
+    let n = parts[0].per_node.len();
+    let mut report = Report::default();
+    let (mut rerouted, mut rescues) = (0u64, 0u64);
+    let (mut small_node_moves, mut resplits, mut churn_reroutes) = (0u64, 0u64, 0u64);
+    for p in &parts {
+        merge_report_into(&mut report, &p.report);
+        rerouted += p.rerouted;
+        rescues += p.rescues;
+        small_node_moves += p.small_node_moves;
+        resplits += p.resplits;
+        churn_reroutes += p.churn_reroutes;
+    }
+    ClusterReport {
+        report,
+        per_node: (0..n).map(|i| parts[i % shards].per_node[i].clone()).collect(),
+        peak_used_mb: (0..n).map(|i| parts[i % shards].peak_used_mb[i]).collect(),
+        rerouted,
+        rescues,
+        small_node_moves,
+        resplits,
+        churn_reroutes,
+        live: parts[0].live.clone(),
+        router: parts[0].router,
+        descriptions: (0..n)
+            .map(|i| std::mem::take(&mut parts[i % shards].descriptions[i]))
+            .collect(),
+    }
+}
+
+/// The decomposed parallel path: coordinator on the calling thread,
+/// one worker per shard, windowed batches over bounded channels.
+fn run_decomposed<S: ArrivalSource + ?Sized>(
+    source: &mut S,
+    spec: &ClusterSpec,
+    plan: ShardPlan,
+) -> ClusterReport {
+    let shards = plan.shards;
+    let n = spec.nodes.len();
+    let window_us = plan.window_us;
+    let view = Trace { functions: source.functions().to_vec(), events: Vec::new() };
+    thread::scope(|scope| {
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<Batch>(CHANNEL_DEPTH);
+            let view = &view;
+            handles.push(scope.spawn(move || {
+                // Each worker owns a full-fleet cluster: the assignment
+                // hash is modulo the full fleet size, and non-owned
+                // nodes never see traffic, so they cost nothing beyond
+                // construction.
+                let mut cluster = Cluster::new(spec);
+                for batch in rx {
+                    for (primary, ev) in batch {
+                        cluster.step_assigned(view, ev, primary);
+                    }
+                }
+                cluster.finish();
+                debug_assert!(cluster.check_invariants().is_ok());
+                cluster.into_report()
+            }));
+            txs.push(tx);
+        }
+
+        let mut batches: Vec<Batch> = (0..shards).map(|_| Batch::new()).collect();
+        let mut buffered = 0usize;
+        let mut window_end: Option<u64> = None;
+        let mut k = 0u64; // global arrival index (round-robin assignment)
+        while let Some(ev) = source.next_arrival() {
+            if window_end.is_some_and(|end| ev.t_us >= end) || buffered >= MAX_WINDOW_EVENTS {
+                flush_batches(&txs, &mut batches, &mut buffered);
+                window_end = None;
+            }
+            if window_end.is_none() {
+                window_end = Some(ev.t_us.saturating_add(window_us));
+            }
+            let primary = assign_primary(spec.router, ev.func, k, n);
+            k += 1;
+            batches[primary % shards].push((primary, ev));
+            buffered += 1;
+        }
+        flush_batches(&txs, &mut batches, &mut buffered);
+        drop(txs);
+
+        let parts: Vec<ClusterReport> = handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect();
+        merge_parts(parts, shards)
+    })
+}
+
+/// Run a cluster from a streaming source across `cfg.shards` worker
+/// threads, bit-for-bit identical to [`run_cluster_source`] at any
+/// shard count.
+///
+/// Decomposable configs (see [`plan_sharding`] and the module docs) run
+/// in parallel; everything else runs the exact sequential kernel on the
+/// calling thread. Query [`plan_sharding`] first to learn which path a
+/// config takes (the CLI prints it).
+pub fn run_cluster_sharded<S: ArrivalSource + ?Sized>(
+    source: &mut S,
+    spec: &ClusterSpec,
+    cfg: &ShardingConfig,
+) -> ClusterReport {
+    let plan = plan_sharding(spec, source.wants_feedback(), cfg);
+    if !plan.parallel {
+        return run_cluster_source(source, spec);
+    }
+    run_decomposed(source, spec, plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, ClusterSpec, NodePolicy, Topology};
+    use super::*;
+    use crate::sim::InitOccupancy;
+    use crate::trace::source::TraceSource;
+    use crate::trace::synth::{synthesize, SynthConfig};
+
+    fn small_synth(seed: u64) -> SynthConfig {
+        SynthConfig {
+            seed,
+            n_small: 30,
+            n_large: 8,
+            duration_us: 60_000_000, // 1 virtual minute
+            rate_per_sec: 40.0,
+            ..SynthConfig::default()
+        }
+    }
+
+    fn sticky_spec(n: usize) -> ClusterSpec {
+        ClusterSpec::homogeneous(n, 1024, NodePolicy::kiss_default())
+            .with_router(RouterKind::Sticky)
+            .with_fallbacks(0)
+            .with_cloud(80_000)
+    }
+
+    #[test]
+    fn plan_decomposes_state_oblivious_configs_and_caps_shards() {
+        let spec = sticky_spec(4);
+        let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(2));
+        assert!(plan.parallel, "{}", plan.reason);
+        assert_eq!(plan.shards, 2);
+        // Requesting more shards than nodes caps at the fleet size.
+        let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(16));
+        assert_eq!(plan.shards, 4);
+        assert!(plan.describe().contains("decomposed"));
+        // Round-robin decomposes too.
+        let rr = spec.clone().with_router(RouterKind::RoundRobin);
+        assert!(plan_sharding(&rr, false, &ShardingConfig::with_shards(2)).parallel);
+    }
+
+    #[test]
+    fn plan_serializes_every_coupled_config() {
+        let base = sticky_spec(4);
+        let cfg = ShardingConfig::with_shards(4);
+        let cases: Vec<(ClusterSpec, bool)> = vec![
+            (base.clone(), false),                                     // decomposable control
+            (base.clone().with_router(RouterKind::LeastLoaded), false),
+            (base.clone().with_router(RouterKind::SizeAffinity { small_nodes: 2 }), false),
+            (base.clone().with_fallbacks(1), false),
+            (base.clone().with_migration(15_000), false),
+            (base.clone().with_controller(Default::default()), false),
+            (base.clone().with_churn(Default::default()), false),
+            (base.clone(), true), // closed-loop
+        ];
+        let verdicts: Vec<bool> = cases
+            .iter()
+            .map(|(spec, feedback)| plan_sharding(spec, *feedback, &cfg).parallel)
+            .collect();
+        assert_eq!(verdicts, vec![true, false, false, false, false, false, false, false]);
+        // Single shard and single node both short-circuit.
+        assert!(!plan_sharding(&base, false, &ShardingConfig::default()).parallel);
+        assert!(!plan_sharding(&sticky_spec(1), false, &cfg).parallel);
+    }
+
+    #[test]
+    fn sticky_sharded_matches_sequential_bit_for_bit() {
+        let trace = synthesize(&small_synth(7));
+        let spec = sticky_spec(5);
+        let want = run_cluster(&trace, &spec);
+        for shards in [1, 2, 3, 4, 5, 8] {
+            let got = run_cluster_sharded(
+                &mut TraceSource::new(&trace),
+                &spec,
+                &ShardingConfig::with_shards(shards),
+            );
+            assert_eq!(got, want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn round_robin_sharded_matches_sequential_bit_for_bit() {
+        let trace = synthesize(&small_synth(11));
+        let spec = ClusterSpec::homogeneous(4, 768, NodePolicy::kiss_default())
+            .with_fallbacks(0)
+            .with_cloud(50_000)
+            .with_init_occupancy(InitOccupancy::HoldsMemory)
+            .with_topology(Topology::Ring { hop_us: 1_000 });
+        let want = run_cluster(&trace, &spec);
+        for shards in [2, 4] {
+            let got = run_cluster_sharded(
+                &mut TraceSource::new(&trace),
+                &spec,
+                &ShardingConfig::with_shards(shards),
+            );
+            assert_eq!(got, want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn window_width_is_a_batching_knob_not_a_semantic() {
+        let trace = synthesize(&small_synth(23));
+        let spec = sticky_spec(3);
+        let want = run_cluster(&trace, &spec);
+        for window_us in [1, 1_000, 10_000_000_000] {
+            let got = run_cluster_sharded(
+                &mut TraceSource::new(&trace),
+                &spec,
+                &ShardingConfig { shards: 3, window_us },
+            );
+            assert_eq!(got, want, "window_us={window_us}");
+        }
+    }
+
+    #[test]
+    fn coupled_configs_fall_back_to_the_exact_sequential_kernel() {
+        // Migration + fallbacks + least-loaded: the full stateful
+        // pipeline. The sharded entry point must refuse to decompose
+        // and reproduce the sequential result exactly.
+        let trace = synthesize(&small_synth(31));
+        let spec = ClusterSpec::homogeneous(4, 768, NodePolicy::kiss_default())
+            .with_router(RouterKind::LeastLoaded)
+            .with_migration(15_000)
+            .with_cloud(80_000);
+        let want = run_cluster(&trace, &spec);
+        let got = run_cluster_sharded(
+            &mut TraceSource::new(&trace),
+            &spec,
+            &ShardingConfig::with_shards(4),
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_source_yields_an_empty_merged_report() {
+        let trace = Trace { functions: vec![func(0, 40, 1_000, 500)], events: vec![] };
+        let spec = sticky_spec(4);
+        let want = run_cluster(&trace, &spec);
+        let got = run_cluster_sharded(
+            &mut TraceSource::new(&trace),
+            &spec,
+            &ShardingConfig::with_shards(4),
+        );
+        assert_eq!(got, want);
+        assert_eq!(got.report.overall.total_accesses(), 0);
+    }
+}

@@ -168,6 +168,20 @@ impl EventQueue {
         Self::default()
     }
 
+    /// An empty queue with room for `cap` entries before the backing
+    /// heap reallocates. The cluster drivers pre-size their queue to the
+    /// expected in-flight population so steady-state scheduling never
+    /// grows the heap — the pool-allocation half of the sharding PR's
+    /// single-thread hot-path work.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+
+    /// Reserve room for at least `additional` more entries.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
     /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
@@ -250,6 +264,17 @@ mod tests {
 
     fn arrival(t: u64) -> Event {
         Event::Arrival(Invocation { t_us: t, func: FunctionId(0), exec_us: 10 })
+    }
+
+    #[test]
+    fn with_capacity_and_reserve_do_not_change_semantics() {
+        let mut q = EventQueue::with_capacity(4);
+        assert!(q.is_empty());
+        q.schedule(30, completion(0));
+        q.reserve(16);
+        q.schedule(10, completion(1));
+        let times: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![10, 30]);
     }
 
     #[test]

@@ -14,8 +14,8 @@ use kiss_faas::coordinator::policy::PolicyKind;
 use kiss_faas::coordinator::Balancer;
 use kiss_faas::experiments::paper_workload;
 use kiss_faas::sim::cluster::{
-    run_cluster, run_cluster_source, ChurnConfig, ClusterSpec, ControllerConfig, NodePolicy,
-    NodeSpec, RouterKind, Topology,
+    run_cluster, run_cluster_sharded, run_cluster_source, ChurnConfig, ClusterSpec,
+    ControllerConfig, NodePolicy, NodeSpec, RouterKind, ShardingConfig, Topology,
 };
 use kiss_faas::sim::{run_trace_with, InitOccupancy};
 use kiss_faas::trace::source::{ClosedLoopSource, SynthSource};
@@ -818,6 +818,39 @@ fn closed_loop_cluster_conserves_the_client_population() {
     assert_eq!(a.report, b.report, "closed-loop runs must be seed-deterministic");
     assert_eq!(a.per_node, b.per_node);
     assert_eq!(source.issued(), source2.issued());
+}
+
+/// The sharded-kernel acceptance lock: [`run_cluster_sharded`] at
+/// shards ∈ {1, 2, 4} reproduces the sequential kernel bit-for-bit on
+/// the full-feature stressed-hetero config — migration + controller +
+/// ring topology + churn, driven by a closed-loop source. Every one of
+/// those features couples nodes, so the plan refuses to decompose and
+/// runs the exact sequential kernel on the calling thread; that refusal
+/// *is* the contract locked here (`run_cluster_sharded` must be safe to
+/// call on anything). The genuinely decomposed path is locked by
+/// `sim::cluster::shard`'s unit tests and the seeded differential
+/// harness in `tests/differential_cluster.rs`.
+#[test]
+fn sharded_full_feature_cluster_is_bit_for_bit_sequential() {
+    let synth = stressed_hetero_workload();
+    let mut spec = hetero_spec()
+        .with_migration(15_000)
+        .with_controller(ControllerConfig::default())
+        .with_topology(Topology::Ring { hop_us: 1_000 });
+    spec.churn = Some(ChurnConfig {
+        seed: 2025,
+        mean_up_us: 120_000_000,
+        mean_down_us: 30_000_000,
+    });
+
+    let mut source = ClosedLoopSource::new(&synth, 32, 500_000);
+    let want = run_cluster_source(&mut source, &spec);
+    assert!(want.report.overall.total_accesses() > 0);
+    for shards in [1, 2, 4] {
+        let mut source = ClosedLoopSource::new(&synth, 32, 500_000);
+        let got = run_cluster_sharded(&mut source, &spec, &ShardingConfig::with_shards(shards));
+        assert_eq!(got, want, "shards={shards}");
+    }
 }
 
 /// The cluster sweep experiments run end-to-end on a reduced workload

@@ -33,6 +33,47 @@ fn hour_scale_trace_is_well_formed() {
     }
 }
 
+/// Locks the same-microsecond tie-break contract of trace synthesis:
+/// the materializer concatenates per-function arrival runs in ascending
+/// function id and then *stable*-sorts by arrival time, so events that
+/// share a microsecond must appear in non-decreasing function-id order
+/// (and the streaming k-way merge reproduces exactly that order). The
+/// sharded cluster kernel's determinism proof leans on this ordering
+/// being fixed, so a regression here (e.g. switching back to
+/// `sort_unstable_by_key`) must fail loudly, not reshuffle results.
+///
+/// Chains are the one documented exception (children are appended after
+/// the per-function runs), so this lock uses a chainless config — the
+/// default.
+#[test]
+fn same_microsecond_ties_keep_ascending_function_order() {
+    // Short but dense: ~120k arrivals in 60 virtual seconds makes
+    // same-µs collisions plentiful, so the assertion is non-vacuous.
+    let t = synthesize(&SynthConfig {
+        duration_us: 60_000_000,
+        rate_per_sec: 2_000.0,
+        ..workload()
+    });
+    assert!(t.is_sorted());
+    let mut cross_func_ties = 0usize;
+    for pair in t.events.windows(2) {
+        if pair[0].t_us == pair[1].t_us {
+            assert!(
+                pair[0].func.0 <= pair[1].func.0,
+                "tie at t={} broke ascending function order: {} then {}",
+                pair[0].t_us,
+                pair[0].func.0,
+                pair[1].func.0
+            );
+            if pair[0].func.0 != pair[1].func.0 {
+                cross_func_ties += 1;
+            }
+        }
+    }
+    // The contract must actually have been exercised across functions.
+    assert!(cross_func_ties > 100, "only {cross_func_ties} cross-function ties");
+}
+
 #[test]
 fn csv_roundtrip_at_scale() {
     let t = synthesize(&SynthConfig {
