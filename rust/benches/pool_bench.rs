@@ -18,6 +18,7 @@ fn profile(id: u32, mem: u32) -> FunctionProfile {
         warm_start_us: 1_000,
         exec_us_mean: 100_000,
         class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+        slo_ms: None,
     }
 }
 

@@ -21,11 +21,15 @@ pub type Curve = Vec<(f64, f64)>;
 /// Fig. 2 output: application-level and function-level (Eq. 1) footprints.
 #[derive(Clone, Debug)]
 pub struct FootprintDist {
+    /// Application-level memory footprint percentiles (MB).
     pub app_mb: Curve,
+    /// Eq.-1-estimated per-function memory footprint percentiles (MB).
     pub func_mb: Curve,
     /// Share of functions at or below `small_cutoff_mb` (the paper reports
     /// ">98% of small functions below 225 MB" for the cloud trace).
     pub frac_below_cutoff: f64,
+    /// The small/large boundary (MB) `frac_below_cutoff` was computed
+    /// against.
     pub small_cutoff_mb: f64,
 }
 
@@ -76,8 +80,9 @@ pub fn footprint_percentiles(trace: &Trace, small_cutoff_mb: f64) -> FootprintDi
 /// Fig. 3 output: per-minute normalized invocation counts per class.
 #[derive(Clone, Debug)]
 pub struct InvocationTrends {
-    /// Minute index → normalized count (peak = 1.0) per class.
+    /// Minute index → normalized small-class count (peak = 1.0).
     pub small: Vec<f64>,
+    /// Minute index → normalized large-class count (peak = 1.0).
     pub large: Vec<f64>,
     /// Mean small:large ratio across minutes with traffic (paper: 4–6.5×).
     pub mean_ratio: f64,
@@ -117,10 +122,14 @@ pub fn invocation_trends(trace: &Trace) -> InvocationTrends {
 /// Fig. 4 output: IAT percentile curves per class (seconds).
 #[derive(Clone, Debug)]
 pub struct IatDist {
+    /// Small-class inter-arrival-time percentiles (seconds).
     pub small_s: Curve,
+    /// Large-class inter-arrival-time percentiles (seconds).
     pub large_s: Curve,
-    /// Windows analyzed / samples retained after the z-score filter.
+    /// Number of sliding windows analyzed.
     pub windows: usize,
+    /// IAT samples retained after the z-score outlier filter, pooled
+    /// across windows and classes.
     pub samples_kept: usize,
 }
 
@@ -185,7 +194,9 @@ pub fn iat_percentiles(
 /// Fig. 5 output: cold-start latency percentile curves per class (s).
 #[derive(Clone, Debug)]
 pub struct ColdStartDist {
+    /// Small-class cold-start latency percentiles (seconds).
     pub small_s: Curve,
+    /// Large-class cold-start latency percentiles (seconds).
     pub large_s: Curve,
 }
 

@@ -67,7 +67,22 @@
 //! seed = 1                            # churn schedule seed
 //! mean_up_s = 600                     # mean live dwell between failures
 //! mean_down_s = 30                    # mean outage duration
+//!
+//! [cluster.slo]                       # absent = SLO layer disabled
+//! enabled = true                      # optional kill switch
+//! admission = true                    # deadline-aware cloud admission
+//! default_slo_ms = 500                # SLO for functions with none declared
+//! fairshare_window_s = 10             # arms rate-based fair-share shedding
+//! fairshare_max_share = 0.5           # per-function arrival-share cap
+//! deflate_pressure = 0.9              # arms container deflation at this fill
+//! deflate_reinflate_frac = 0.25       # re-inflate cost as a cold-start frac
+//! deflate_ttl_s = 60                  # checkpoint lifetime
 //! ```
+//!
+//! The `[trace]` section additionally accepts `slo_small_ms`,
+//! `slo_large_ms`, and `slo_sigma` — any of them arms the synthesizer's
+//! per-function SLO draw (see
+//! [`SloSynthConfig`](crate::trace::synth::SloSynthConfig)).
 
 pub mod toml;
 
@@ -78,11 +93,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::{AdaptiveConfig, Balancer};
 use crate::sim::cluster::{
-    ChurnConfig, CloudTier, ClusterSpec, ControllerConfig, MigrationPolicy, NodePolicy, NodeSpec,
-    RouterKind, ShardingConfig, Topology,
+    ChurnConfig, CloudTier, ClusterSpec, ControllerConfig, DeflationConfig, FairShareConfig,
+    MigrationPolicy, NodePolicy, NodeSpec, RouterKind, ShardingConfig, SloConfig, Topology,
 };
 use crate::trace::source::{ArrivalSource, ClosedLoopSource, ReplaySource, SynthSource};
-use crate::trace::synth::{BurstConfig, SynthConfig};
+use crate::trace::synth::{BurstConfig, SloSynthConfig, SynthConfig};
 
 /// Partitioning mode under test.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -198,6 +213,9 @@ pub struct ClusterConfig {
     /// Node churn injection (`[cluster.churn]`); `None` = nodes never
     /// fail.
     pub churn: Option<ChurnConfig>,
+    /// Per-function latency-SLO layer (`[cluster.slo]`); `None` =
+    /// disabled, the best-effort cluster.
+    pub slo: Option<SloConfig>,
     /// Sharded parallel kernel (`[cluster.sharding]`); `None` = the
     /// sequential kernel. See [`crate::sim::cluster::shard`] for which
     /// configurations actually decompose.
@@ -217,6 +235,7 @@ impl Default for ClusterConfig {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            slo: None,
             sharding: None,
         }
     }
@@ -401,6 +420,7 @@ impl SimConfig {
             controller: cc.controller,
             topology: cc.topology.clone(),
             churn: cc.churn,
+            slo: cc.slo,
         }
     }
 
@@ -515,6 +535,36 @@ impl SimConfig {
                     bail!("cluster.sharding.window_us must be > 0");
                 }
             }
+            if let Some(slo) = &c.slo {
+                if let Some(fs) = &slo.fairshare {
+                    if fs.window_us == 0 {
+                        bail!("cluster.slo.fairshare_window_s must be > 0");
+                    }
+                    if !(fs.max_share > 0.0 && fs.max_share <= 1.0) {
+                        bail!(
+                            "cluster.slo.fairshare_max_share must be in (0, 1], got {}",
+                            fs.max_share
+                        );
+                    }
+                }
+                if let Some(d) = &slo.deflation {
+                    if !(d.pressure > 0.0 && d.pressure <= 1.0) {
+                        bail!(
+                            "cluster.slo.deflate_pressure must be in (0, 1], got {}",
+                            d.pressure
+                        );
+                    }
+                    if !(0.0..=1.0).contains(&d.reinflate_frac) {
+                        bail!(
+                            "cluster.slo.deflate_reinflate_frac must be in [0, 1], got {}",
+                            d.reinflate_frac
+                        );
+                    }
+                    if d.ttl_us == 0 {
+                        bail!("cluster.slo.deflate_ttl_s must be > 0");
+                    }
+                }
+            }
         }
         if let Mode::Kiss { small_frac, threshold_mb } = self.mode {
             if !(0.0..1.0).contains(&small_frac) || small_frac <= 0.0 {
@@ -581,6 +631,7 @@ impl SimConfig {
 
         if let Some(section) = doc.section("trace") {
             let s = &mut cfg.synth;
+            let mut slo_synth: Option<SloSynthConfig> = None;
             for (key, v) in section {
                 match key.as_str() {
                     "seed" => s.seed = v.as_u64().ok_or_else(|| anyhow!("trace.seed"))?,
@@ -606,8 +657,23 @@ impl SimConfig {
                             v.as_f64().ok_or_else(|| anyhow!("trace.diurnal_amplitude"))?
                     }
                     "zipf_s" => s.zipf_s = v.as_f64().ok_or_else(|| anyhow!("trace.zipf_s"))?,
+                    "slo_small_ms" => {
+                        slo_synth.get_or_insert_with(SloSynthConfig::default).small_mean_ms =
+                            v.as_u64().ok_or_else(|| anyhow!("trace.slo_small_ms"))?
+                    }
+                    "slo_large_ms" => {
+                        slo_synth.get_or_insert_with(SloSynthConfig::default).large_mean_ms =
+                            v.as_u64().ok_or_else(|| anyhow!("trace.slo_large_ms"))?
+                    }
+                    "slo_sigma" => {
+                        slo_synth.get_or_insert_with(SloSynthConfig::default).sigma =
+                            v.as_f64().ok_or_else(|| anyhow!("trace.slo_sigma"))?
+                    }
                     other => bail!("unknown trace key: {other}"),
                 }
+            }
+            if slo_synth.is_some() {
+                s.slo = slo_synth;
             }
         }
 
@@ -778,12 +844,14 @@ impl SimConfig {
         let controller_section = doc.section("cluster.controller");
         let topology_section = doc.section("cluster.topology");
         let churn_section = doc.section("cluster.churn");
+        let slo_section = doc.section("cluster.slo");
         if cfg.cluster.is_none()
             && (sharding_section.is_some()
                 || migration_section.is_some()
                 || controller_section.is_some()
                 || topology_section.is_some()
-                || churn_section.is_some())
+                || churn_section.is_some()
+                || slo_section.is_some())
         {
             bail!("[cluster.*] subsections require a [cluster] section");
         }
@@ -981,6 +1049,100 @@ impl SimConfig {
             }
         }
 
+        if let Some(section) = slo_section {
+            let mut enabled = true;
+            let mut slo = SloConfig::default();
+            let mut fs_window_us: Option<u64> = None;
+            let mut fs_max_share: Option<f64> = None;
+            let mut d_pressure: Option<f64> = None;
+            let mut d_reinflate_frac: Option<f64> = None;
+            let mut d_ttl_us: Option<u64> = None;
+            for (key, v) in section {
+                match key.as_str() {
+                    "enabled" => {
+                        enabled = v
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("cluster.slo.enabled: bad value"))?
+                    }
+                    "admission" => {
+                        slo.admission = v
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("cluster.slo.admission: bad value"))?
+                    }
+                    "default_slo_ms" => {
+                        slo.default_slo_ms = Some(
+                            v.as_u64().ok_or_else(|| anyhow!("cluster.slo.default_slo_ms"))?,
+                        )
+                    }
+                    "fairshare_window_s" => {
+                        let s = v
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("cluster.slo.fairshare_window_s"))?;
+                        if s <= 0.0 {
+                            bail!("cluster.slo.fairshare_window_s must be > 0");
+                        }
+                        fs_window_us = Some((s * 1e6).round() as u64);
+                    }
+                    "fairshare_max_share" => {
+                        fs_max_share = Some(
+                            v.as_f64()
+                                .ok_or_else(|| anyhow!("cluster.slo.fairshare_max_share"))?,
+                        )
+                    }
+                    "deflate_pressure" => {
+                        d_pressure = Some(
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.slo.deflate_pressure"))?,
+                        )
+                    }
+                    "deflate_reinflate_frac" => {
+                        d_reinflate_frac = Some(
+                            v.as_f64()
+                                .ok_or_else(|| anyhow!("cluster.slo.deflate_reinflate_frac"))?,
+                        )
+                    }
+                    "deflate_ttl_s" => {
+                        let s =
+                            v.as_f64().ok_or_else(|| anyhow!("cluster.slo.deflate_ttl_s"))?;
+                        if s <= 0.0 {
+                            bail!("cluster.slo.deflate_ttl_s must be > 0");
+                        }
+                        d_ttl_us = Some((s * 1e6).round() as u64);
+                    }
+                    other => bail!("unknown cluster.slo key: {other}"),
+                }
+            }
+            // The window arms fair-share; the pressure arms deflation.
+            // Tuning knobs without their arming key are configuration
+            // mistakes, not silent no-ops.
+            slo.fairshare = match (fs_window_us, fs_max_share) {
+                (None, None) => None,
+                (Some(window_us), max_share) => Some(FairShareConfig {
+                    window_us,
+                    max_share: max_share.unwrap_or(FairShareConfig::default().max_share),
+                }),
+                (None, Some(_)) => {
+                    bail!("cluster.slo.fairshare_max_share needs fairshare_window_s")
+                }
+            };
+            slo.deflation = match (d_pressure, d_reinflate_frac, d_ttl_us) {
+                (None, None, None) => None,
+                (Some(pressure), frac, ttl) => {
+                    let d = DeflationConfig::default();
+                    Some(DeflationConfig {
+                        pressure,
+                        reinflate_frac: frac.unwrap_or(d.reinflate_frac),
+                        ttl_us: ttl.unwrap_or(d.ttl_us),
+                    })
+                }
+                (None, _, _) => bail!(
+                    "cluster.slo.deflate_reinflate_frac/deflate_ttl_s need deflate_pressure"
+                ),
+            };
+            if enabled {
+                cfg.cluster.as_mut().expect("checked above").slo = Some(slo);
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -1031,6 +1193,21 @@ impl SimConfig {
                         churn.mean_up_us / 1_000_000,
                         churn.mean_down_us / 1_000_000
                     ));
+                }
+                if let Some(slo) = &c.slo {
+                    extras.push_str(" slo");
+                    if let Some(ms) = slo.default_slo_ms {
+                        extras.push_str(&format!(" {ms}ms"));
+                    }
+                    if !slo.admission {
+                        extras.push_str(" no-admit");
+                    }
+                    if slo.fairshare.is_some() {
+                        extras.push_str(" fair");
+                    }
+                    if slo.deflation.is_some() {
+                        extras.push_str(" deflate");
+                    }
                 }
                 if let Some(sh) = &c.sharding {
                     if sh.shards > 1 {
@@ -1287,6 +1464,98 @@ mod tests {
             "[cluster]\nnodes = 2\n[cluster.controller]\nstep = 1.5",
             "[cluster]\nnodes = 2\n[cluster.controller]\nmin_frac = 0.9\nmax_frac = 0.5",
             "[cluster]\nnodes = 2\n[cluster.controller]\nbogus = 1",
+        ] {
+            assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn slo_toml_roundtrip() {
+        let cfg = SimConfig::from_toml_str(
+            r#"
+            [trace]
+            slo_small_ms = 300
+            slo_sigma = 0.2
+            [cluster]
+            nodes = 4
+            cloud_rtt_ms = 80
+            [cluster.slo]
+            admission = true
+            default_slo_ms = 500
+            fairshare_window_s = 10
+            fairshare_max_share = 0.4
+            deflate_pressure = 0.85
+            deflate_reinflate_frac = 0.3
+            deflate_ttl_s = 45
+            "#,
+        )
+        .unwrap();
+        // [trace] slo knobs arm the synthesizer's SLO draw, keeping the
+        // class default for the unset key.
+        let sl = cfg.synth.slo.unwrap();
+        assert_eq!(sl.small_mean_ms, 300);
+        assert_eq!(sl.large_mean_ms, SloSynthConfig::default().large_mean_ms);
+        assert_eq!(sl.sigma, 0.2);
+        let cc = cfg.cluster.as_ref().unwrap();
+        let slo = cc.slo.unwrap();
+        assert!(slo.admission);
+        assert_eq!(slo.default_slo_ms, Some(500));
+        assert_eq!(
+            slo.fairshare,
+            Some(FairShareConfig { window_us: 10_000_000, max_share: 0.4 })
+        );
+        assert_eq!(
+            slo.deflation,
+            Some(DeflationConfig {
+                pressure: 0.85,
+                reinflate_frac: 0.3,
+                ttl_us: 45_000_000
+            })
+        );
+        let spec = cfg.build_cluster_spec();
+        assert_eq!(spec.slo, cc.slo);
+        let d = cfg.describe();
+        assert!(d.contains("slo 500ms fair deflate"), "{d}");
+    }
+
+    #[test]
+    fn slo_defaults_and_kill_switch() {
+        // A bare section arms admission with no default SLO and neither
+        // optional mechanism.
+        let cfg = SimConfig::from_toml_str("[cluster]\nnodes = 2\n[cluster.slo]").unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().slo, Some(SloConfig::default()));
+        // Arming keys pull in per-mechanism defaults for the rest.
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.slo]\nfairshare_window_s = 5\ndeflate_pressure = 0.9",
+        )
+        .unwrap();
+        let slo = cfg.cluster.as_ref().unwrap().slo.unwrap();
+        assert_eq!(
+            slo.fairshare,
+            Some(FairShareConfig { window_us: 5_000_000, ..FairShareConfig::default() })
+        );
+        assert_eq!(slo.deflation, Some(DeflationConfig::default()));
+        // enabled = false keeps the layer off even with knobs set.
+        let cfg = SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.slo]\nenabled = false\ndefault_slo_ms = 500",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.as_ref().unwrap().slo, None);
+        assert_eq!(cfg.build_cluster_spec().slo, None);
+    }
+
+    #[test]
+    fn rejects_bad_slo_configs() {
+        assert!(SimConfig::from_toml_str("[cluster.slo]\ndefault_slo_ms = 1").is_err());
+        for bad in [
+            "[cluster]\nnodes = 2\n[cluster.slo]\nbogus = 1",
+            "[cluster]\nnodes = 2\n[cluster.slo]\nfairshare_window_s = 0",
+            "[cluster]\nnodes = 2\n[cluster.slo]\nfairshare_max_share = 0.5",
+            "[cluster]\nnodes = 2\n[cluster.slo]\nfairshare_window_s = 5\nfairshare_max_share = 1.5",
+            "[cluster]\nnodes = 2\n[cluster.slo]\ndeflate_pressure = 0.0",
+            "[cluster]\nnodes = 2\n[cluster.slo]\ndeflate_ttl_s = 60",
+            "[cluster]\nnodes = 2\n[cluster.slo]\ndeflate_pressure = 0.9\ndeflate_reinflate_frac = 2.0",
+            "[cluster]\nnodes = 2\n[trace]\nslo_small_ms = true",
         ] {
             assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
         }

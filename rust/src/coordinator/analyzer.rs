@@ -149,6 +149,7 @@ mod tests {
             warm_start_us: 0,
             exec_us_mean: 0,
             class: SizeClass::Small,
+            slo_ms: None,
         }
     }
 

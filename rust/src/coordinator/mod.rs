@@ -207,6 +207,7 @@ mod tests {
             warm_start_us: 1_000,
             exec_us_mean: 10_000,
             class: SizeClass::Small,
+            slo_ms: None,
         }
     }
 

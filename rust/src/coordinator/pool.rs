@@ -350,6 +350,7 @@ mod tests {
             warm_start_us: 1_000,
             exec_us_mean: 10_000,
             class: if mem_mb >= 200 { SizeClass::Large } else { SizeClass::Small },
+            slo_ms: None,
         }
     }
 

@@ -31,6 +31,15 @@
 //!   placement-failure % with and without warm-container migration.
 //!   Migration + fallbacks absorb churn — warm copies on survivors
 //!   serve invocations the dead node strands.
+//! * **cluster-slo** — the hetero fleet vs the deadline: SLO-violation %
+//!   with and without deadline-aware admission (`[cluster.slo]`), plus
+//!   the pre-emptive cloud-offload fraction admission spends to get
+//!   there. With admission off the layer only *measures* violations —
+//!   the observation series tightens monotonically as the deadline does.
+//! * **cluster-fairshare** — a Zipf-skewed hot function vs the
+//!   per-function arrival-share cap: how much of the hot function's
+//!   surplus the rate-based fair-share layer sheds to the cloud under
+//!   node contention, and what that buys the rest of the population.
 //! * **cluster-sustained** — the streaming-API capstone: ~10^8
 //!   invocations pulled lazily from a [`SynthSource`] through a
 //!   100-node KiSS fleet, never materializing the trace. The table
@@ -40,8 +49,8 @@
 use super::artifact::{Cell, Column, Table};
 use super::common::{paper_workload, Series, Sweep};
 use crate::sim::cluster::{
-    run_cluster, run_cluster_source, ChurnConfig, ClusterSpec, ControllerConfig, NodePolicy,
-    NodeSpec, RouterKind, Topology,
+    run_cluster, run_cluster_source, ChurnConfig, ClusterSpec, ControllerConfig, FairShareConfig,
+    NodePolicy, NodeSpec, RouterKind, SloConfig, Topology,
 };
 use crate::sim::InitOccupancy;
 use crate::trace::source::SynthSource;
@@ -192,6 +201,7 @@ pub fn cluster_hetero(synth: &SynthConfig) -> Sweep {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            slo: None,
         };
         if rtt_ms > 0 {
             spec = spec.with_cloud(rtt_ms * 1000);
@@ -236,6 +246,7 @@ pub fn hetero_spec() -> ClusterSpec {
         controller: None,
         topology: Topology::Flat,
         churn: None,
+        slo: None,
     }
     .with_cloud(CLOUD_RTT_US)
 }
@@ -429,6 +440,97 @@ pub fn cluster_churn(synth: &SynthConfig) -> Sweep {
             Series { label: "static".into(), values: without },
             Series { label: "migrate".into(), values: with },
             Series { label: "migrated%".into(), values: migrated },
+        ],
+    }
+}
+
+/// Deadlines (ms) the SLO sweep walks: from tighter than the small
+/// class's typical execution (almost everything violates) out past the
+/// large class's (almost nothing does).
+pub const SLO_GRID_MS: [u64; 4] = [5_000, 20_000, 60_000, 300_000];
+
+/// The hetero fleet with the SLO layer armed at `default_slo_ms` —
+/// admission on or off, no fair-share, no deflation (public so the
+/// integration suite exercises the *same* spec the experiment reports).
+pub fn slo_spec(default_slo_ms: u64, admission: bool) -> ClusterSpec {
+    hetero_spec().with_slo(SloConfig {
+        admission,
+        default_slo_ms: Some(default_slo_ms),
+        fairshare: None,
+        deflation: None,
+    })
+}
+
+/// SLO-violation % vs the deadline, with and without deadline-aware
+/// admission, plus the pre-emptive cloud-offload % the admission gate
+/// spends. The `measured` series (admission off) is pure observation —
+/// the placement stream is identical at every grid point, so it is
+/// monotone in the deadline by construction.
+pub fn cluster_slo(synth: &SynthConfig) -> Sweep {
+    let trace = synthesize(synth);
+    let mut measured = Vec::new();
+    let mut admitted = Vec::new();
+    let mut slo_offl = Vec::new();
+    for &slo_ms in &SLO_GRID_MS {
+        let off = run_cluster(&trace, &slo_spec(slo_ms, false)).report.overall;
+        measured.push(off.slo_violation_pct());
+        let on = run_cluster(&trace, &slo_spec(slo_ms, true)).report.overall;
+        admitted.push(on.slo_violation_pct());
+        slo_offl.push(on.slo_offload_pct());
+    }
+    Sweep {
+        title: "Cluster SLO: violation % vs deadline \
+                (hetero fleet, least-loaded, cloud RTT 80 ms)"
+            .into(),
+        x_label: "slo_ms".into(),
+        y_label: "%".into(),
+        xs: SLO_GRID_MS.iter().map(|&s| s as f64).collect(),
+        series: vec![
+            Series { label: "measured".into(), values: measured },
+            Series { label: "admission".into(), values: admitted },
+            Series { label: "slo-offload%".into(), values: slo_offl },
+        ],
+    }
+}
+
+/// Per-function arrival-share caps the fair-share sweep walks; 1.0 is
+/// the no-shedding control (a share can never exceed the whole).
+pub const FAIRSHARE_GRID: [f64; 4] = [0.2, 0.4, 0.6, 1.0];
+
+/// Shed % and cold-start % of a Zipf-skewed workload (one dominant hot
+/// function) vs the per-function arrival-share cap. Only the fair-share
+/// mechanism is armed — no admission deadline, no deflation — so every
+/// effect on the curve is rate-based shedding under node contention.
+pub fn cluster_fairshare(synth: &SynthConfig) -> Sweep {
+    // Steepen the function-popularity skew so one function dominates
+    // arrivals — the workload fair-share exists for.
+    let trace = synthesize(&SynthConfig { zipf_s: 1.5, ..synth.clone() });
+    let mut shed = Vec::new();
+    let mut cold = Vec::new();
+    let mut fail = Vec::new();
+    for &max_share in &FAIRSHARE_GRID {
+        let spec = hetero_spec().with_slo(SloConfig {
+            admission: false,
+            default_slo_ms: None,
+            fairshare: Some(FairShareConfig { window_us: 10_000_000, max_share }),
+            deflation: None,
+        });
+        let r = run_cluster(&trace, &spec).report.overall;
+        shed.push(r.slo_offload_pct());
+        cold.push(r.cold_start_pct());
+        fail.push(r.failure_pct());
+    }
+    Sweep {
+        title: "Cluster fair-share: shed % vs per-function share cap \
+                (hetero fleet, zipf 1.5 hot function, cloud RTT 80 ms)"
+            .into(),
+        x_label: "max_share".into(),
+        y_label: "%".into(),
+        xs: FAIRSHARE_GRID.to_vec(),
+        series: vec![
+            Series { label: "shed%".into(), values: shed },
+            Series { label: "coldstart%".into(), values: cold },
+            Series { label: "drop+offload%".into(), values: fail },
         ],
     }
 }
@@ -642,6 +744,42 @@ mod tests {
             // beyond it.
             assert!(*m <= st + 2.0, "migration must not add failures: {m} vs {st}");
         }
+    }
+
+    #[test]
+    fn slo_sweep_measured_series_is_monotone() {
+        let s = cluster_slo(&tiny());
+        assert_eq!(s.xs.len(), SLO_GRID_MS.len());
+        assert_eq!(s.series.len(), 3);
+        for series in &s.series {
+            assert_eq!(series.values.len(), SLO_GRID_MS.len());
+            assert!(series.values.iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        // Admission off only observes: the same run at a looser deadline
+        // can never violate more.
+        let measured = s.series_named("measured").unwrap();
+        assert!(
+            measured.values.windows(2).all(|w| w[0] >= w[1]),
+            "looser deadlines must not add violations: {measured:?}"
+        );
+        // The tightest deadline is under the small class's typical
+        // execution time — violations must actually register.
+        assert!(measured.values[0] > 0.0, "{measured:?}");
+    }
+
+    #[test]
+    fn fairshare_sweep_sheds_only_below_full_share() {
+        let s = cluster_fairshare(&tiny());
+        assert_eq!(s.xs.len(), FAIRSHARE_GRID.len());
+        assert_eq!(s.series.len(), 3);
+        for series in &s.series {
+            assert_eq!(series.values.len(), FAIRSHARE_GRID.len());
+            assert!(series.values.iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        // max_share = 1.0 is the control: an arrival share can never
+        // exceed the whole, so nothing is shed.
+        let shed = s.series_named("shed%").unwrap();
+        assert_eq!(*shed.values.last().unwrap(), 0.0, "{shed:?}");
     }
 
     #[test]

@@ -187,7 +187,7 @@ impl Experiment {
 pub const ARTIFACT_SCHEMA: &str = "kiss-faas/experiment-artifact/v2";
 
 /// Number of registered experiments.
-pub const N_EXPERIMENTS: usize = 23;
+pub const N_EXPERIMENTS: usize = 25;
 
 /// Knob set of every duration-scaled experiment.
 const DURATION_KNOBS: &[&str] = &["seed", "scale:duration"];
@@ -392,6 +392,22 @@ const REGISTRY_INIT: [Experiment; N_EXPERIMENTS] = [
         Group::Cluster,
         DURATION_KNOBS,
         |p| Artifact::Sweep(cluster::cluster_churn(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-slo",
+        "SLO-violation % vs deadline, with/without admission",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_slo(&cluster_wl(p))),
+    ),
+    exp(
+        "cluster-fairshare",
+        "Shed % vs per-function arrival-share cap",
+        "beyond the paper",
+        Group::Cluster,
+        DURATION_KNOBS,
+        |p| Artifact::Sweep(cluster::cluster_fairshare(&cluster_wl(p))),
     ),
     exp(
         "cluster-sustained",

@@ -68,16 +68,27 @@
 //! retried through the same fallback/migration/offload path
 //! ([`metrics::RecordKind::NodeDown`] / [`metrics::RecordKind::NodeUp`]).
 //!
+//! Per-function **latency SLOs** are a first-class scheduling signal
+//! ([`sim::cluster::SloConfig`]): traces may declare per-function
+//! `slo_ms` deadlines (synthesized or replayed), violations are
+//! measured at every retirement ([`metrics::Counters::slo_violations`]),
+//! and the `[cluster.slo]` layer adds deadline-aware admission
+//! (pre-emptive cloud offload, [`metrics::RecordKind::SloOffload`]),
+//! rate-based fair-share shedding under contention
+//! ([`sim::cluster::FairShareConfig`]), and container deflation with
+//! partial-cost re-inflation ([`sim::cluster::DeflationConfig`]).
+//!
 //! A one-node cluster reproduces [`sim::run_trace`] bit-for-bit, and
-//! disabling migration + controller + churn on a flat topology
+//! disabling migration + controller + churn + SLO on a flat topology
 //! reproduces the static cluster bit-for-bit. Configure via the
 //! `[cluster]` TOML section (`nodes`, `mem_mb`, `router`, `small_nodes`,
 //! `fallbacks`, `cloud_rtt_ms`, `policies`) and its `[cluster.migration]`
-//! / `[cluster.controller]` / `[cluster.topology]` / `[cluster.churn]`
-//! subsections, or `repro cluster` CLI flags; sweep via the
-//! `cluster-scale` / `cluster-offload` / `cluster-hetero` /
+//! / `[cluster.controller]` / `[cluster.topology]` / `[cluster.churn]` /
+//! `[cluster.slo]` subsections, or `repro cluster` CLI flags; sweep via
+//! the `cluster-scale` / `cluster-offload` / `cluster-hetero` /
 //! `cluster-migration` / `cluster-controller` / `cluster-topology` /
-//! `cluster-churn` experiments and `benches/cluster_bench.rs`. See
+//! `cluster-churn` / `cluster-slo` / `cluster-fairshare` experiments and
+//! `benches/cluster_bench.rs`. See
 //! `docs/ARCHITECTURE.md` for the full event flow and schema, and
 //! `docs/EXPERIMENTS.md` for the experiment catalog.
 //!
@@ -104,12 +115,6 @@
 
 #![warn(missing_docs)]
 
-// Public-API documentation is enforced (`missing_docs`) module by
-// module; `analysis` below predates the lint and will be brought into
-// scope in a follow-up documentation pass. `bench`, `sim`, `config`,
-// `metrics`, `trace`, `experiments`, `runtime`, `serve`, `util`, and
-// all of `coordinator` are fully documented.
-#[allow(missing_docs)]
 pub mod analysis;
 pub mod bench;
 pub mod config;

@@ -10,6 +10,7 @@
 //!                [--migration-cost-ms F] [--controller-epoch-s N]
 //!                [--topology flat|star|ring] [--hop-ms F]
 //!                [--churn-rate F] [--sweep]
+//!                [--slo-ms N] [--slo-fairshare-window-s F] [--slo-deflate-pressure F]
 //!                [--source synth|replay|closed-loop] [--trace STEM]
 //!                [--clients N] [--think-ms N]
 //!                [--shards N] [--window-us N]
@@ -81,7 +82,7 @@ fn print_usage() {
          USAGE:\n  repro experiment <id|group|all|list|index> [--format text|json|csv] [--out DIR]\n                \
          [--jobs N] [--seed N] [--scale F] [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
-         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N] [--shards N] [--window-us N]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--slo-ms N] [--slo-fairshare-window-s F] [--slo-deflate-pressure F]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N] [--shards N] [--window-us N]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -396,6 +397,8 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         println!("{}", experiments::cluster::cluster_controller(&synth).render());
         println!("{}", experiments::cluster::cluster_topology(&synth).render());
         println!("{}", experiments::cluster::cluster_churn(&synth).render());
+        println!("{}", experiments::cluster::cluster_slo(&synth).render());
+        println!("{}", experiments::cluster::cluster_fairshare(&synth).render());
         return Ok(());
     }
 
@@ -459,6 +462,34 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
             cc.churn = Some(churn);
         }
     }
+    if let Some(ms) = flags.get_parsed::<u64>("slo-ms")? {
+        if ms == 0 {
+            bail!("--slo-ms must be > 0");
+        }
+        let mut slo = cc.slo.unwrap_or_default();
+        slo.default_slo_ms = Some(ms);
+        cc.slo = Some(slo);
+    }
+    if let Some(s) = flags.get_parsed::<f64>("slo-fairshare-window-s")? {
+        if s <= 0.0 {
+            bail!("--slo-fairshare-window-s must be > 0");
+        }
+        let mut slo = cc.slo.unwrap_or_default();
+        let mut fs = slo.fairshare.unwrap_or_default();
+        fs.window_us = (s * 1e6).round() as u64;
+        slo.fairshare = Some(fs);
+        cc.slo = Some(slo);
+    }
+    if let Some(p) = flags.get_parsed::<f64>("slo-deflate-pressure")? {
+        if !(p > 0.0 && p <= 1.0) {
+            bail!("--slo-deflate-pressure must be in (0, 1]");
+        }
+        let mut slo = cc.slo.unwrap_or_default();
+        let mut d = slo.deflation.unwrap_or_default();
+        d.pressure = p;
+        slo.deflation = Some(d);
+        cc.slo = Some(slo);
+    }
     if let Some(stem) = flags.get("trace") {
         cfg.workload.source = WorkloadSourceKind::Replay { trace: stem.to_string() };
     }
@@ -511,15 +542,15 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     let r = run_cluster_sharded(source.as_mut(), &spec, &sharding);
 
     println!(
-        "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12} {:>8} {:>10} {:>8}",
+        "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12} {:>8} {:>10} {:>8} {:>9} {:>8}",
         "slice", "hits", "misses", "drops", "offloads", "migr", "coldstart%", "drop%",
-        "offload%", "migr%"
+        "offload%", "migr%", "sloOff%", "sloViol%"
     );
     for (name, c) in
         [("overall", &r.report.overall), ("small", &r.report.small), ("large", &r.report.large)]
     {
         println!(
-            "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12.2} {:>8.2} {:>10.2} {:>8.2}",
+            "{:>10} {:>10} {:>10} {:>8} {:>9} {:>8} {:>12.2} {:>8.2} {:>10.2} {:>8.2} {:>9.2} {:>8.2}",
             name,
             c.hits,
             c.misses,
@@ -529,7 +560,9 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
             c.cold_start_pct(),
             c.drop_pct(),
             c.offload_pct(),
-            c.migration_pct()
+            c.migration_pct(),
+            c.slo_offload_pct(),
+            c.slo_violation_pct()
         );
     }
     println!("\nlatency ms (p50/p95/p99): {}", r.report.latency().summary_ms());
@@ -569,6 +602,16 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
             r.live.len(),
             r.report.overall.churn_evictions,
             r.churn_reroutes
+        );
+    }
+    if cfg.cluster.as_ref().is_some_and(|c| c.slo.is_some()) {
+        println!(
+            "\nslo: {:.2}% violations, {} pre-emptive cloud offloads, \
+             {} containers deflated / {} reinflated",
+            r.report.overall.slo_violation_pct(),
+            r.report.overall.slo_offloads,
+            r.deflations,
+            r.reinflations
         );
     }
     Ok(())
@@ -683,5 +726,6 @@ fn live_profile(mem_mb: u32, class: SizeClass) -> FunctionProfile {
         warm_start_us: 0,
         exec_us_mean: 0,
         class,
+        slo_ms: None,
     }
 }

@@ -26,6 +26,16 @@
 //! retries on top of the trace's arrivals. With churn disabled every one
 //! of these stays zero and all prior metrics are bit-for-bit unchanged.
 //!
+//! The SLO extension (LaSS-style deadline compliance) adds
+//! [`Counters::slo_offloads`] — invocations the deadline-aware admission
+//! layer sent to the cloud *before* the edge could fail them
+//! ([`RecordKind::SloOffload`], distinct from capacity offloads) — and
+//! [`Counters::slo_violations`] — served or dropped invocations whose
+//! end-to-end latency missed their declared SLO (an observation recorded
+//! on top of the normal outcome). With `[cluster.slo]` disabled and no
+//! declared SLOs both stay zero and every prior metric is bit-for-bit
+//! unchanged.
+//!
 //! Beyond the counters, every slice carries [`Counters::latency`]: three
 //! deterministic log-scale histograms ([`latency::LatencyStats`]) of the
 //! cold-start wait, the warm-serve wait, and the end-to-end response
@@ -62,6 +72,18 @@ pub struct Counters {
     /// reason a recovering workload pays fresh cold starts. Zero whenever
     /// churn is disabled.
     pub churn_evictions: u64,
+    /// Invocations the deadline-aware admission layer sent to the cloud
+    /// *before* attempting edge placement, because the local completion
+    /// estimate could not meet the function's SLO (SLO extension,
+    /// [`RecordKind::SloOffload`]). Distinct from `offloads` (capacity
+    /// offloads after placement failed). Zero whenever `[cluster.slo]`
+    /// is disabled.
+    pub slo_offloads: u64,
+    /// Served or dropped invocations whose end-to-end latency exceeded
+    /// the function's declared SLO (observation, not an outcome: the
+    /// invocation is also counted under its actual record kind). Zero
+    /// whenever no function declares an SLO.
+    pub slo_violations: u64,
     /// Cumulative execution time (µs) of serviced invocations, excluding
     /// startup.
     pub exec_us: u64,
@@ -78,6 +100,7 @@ impl Counters {
     /// Every invocation this slice observed, however it ended.
     pub fn total_accesses(&self) -> u64 {
         self.hits + self.misses + self.drops + self.offloads + self.migrations
+            + self.slo_offloads
     }
 
     /// Invocations served *on the edge*: hits, misses, and migrations.
@@ -121,6 +144,21 @@ impl Counters {
         pct(self.hits, self.total_accesses())
     }
 
+    /// SLO-offload percentage over total accesses (SLO extension): how
+    /// much traffic the deadline-aware admission layer proactively sent
+    /// to the cloud. Deliberate placements, so not part of
+    /// [`Counters::failure_pct`].
+    pub fn slo_offload_pct(&self) -> f64 {
+        pct(self.slo_offloads, self.total_accesses())
+    }
+
+    /// SLO-violation percentage over total accesses (SLO extension) —
+    /// the LaSS-style deadline-compliance metric reported next to cold%
+    /// and drop%.
+    pub fn slo_violation_pct(&self) -> f64 {
+        pct(self.slo_violations, self.total_accesses())
+    }
+
     /// Field-wise accumulate `other` into `self`.
     pub fn merge(&mut self, other: &Counters) {
         self.hits += other.hits;
@@ -129,6 +167,8 @@ impl Counters {
         self.offloads += other.offloads;
         self.migrations += other.migrations;
         self.churn_evictions += other.churn_evictions;
+        self.slo_offloads += other.slo_offloads;
+        self.slo_violations += other.slo_violations;
         self.exec_us += other.exec_us;
         self.startup_us += other.startup_us;
         self.latency.merge(&other.latency);
@@ -209,6 +249,7 @@ impl Report {
                 }
                 RecordKind::Drop => c.drops += 1,
                 RecordKind::Offload => c.offloads += 1,
+                RecordKind::SloOffload => c.slo_offloads += 1,
                 RecordKind::Migrate { .. } => {
                     c.migrations += 1;
                     c.latency.warm.record(startup_us);
@@ -246,6 +287,17 @@ impl Report {
         }
     }
 
+    /// Record one missed deadline (SLO extension): an invocation whose
+    /// end-to-end latency exceeded its declared SLO. An observation on
+    /// top of the invocation's normal record, not an outcome of its own.
+    pub fn record_slo_violation(&mut self, class: SizeClass) {
+        self.overall.slo_violations += 1;
+        match class {
+            SizeClass::Small => self.small.slo_violations += 1,
+            SizeClass::Large => self.large.slo_violations += 1,
+        }
+    }
+
     /// Consistency invariant: overall must equal small + large, field by
     /// field. Checked by the property suite after every simulation.
     pub fn is_consistent(&self) -> bool {
@@ -267,6 +319,14 @@ pub enum RecordKind {
     /// Served by the modeled cloud tier after local placement failed
     /// (cluster extension). `startup_us` carries the cloud RTT.
     Offload,
+    /// Served by the modeled cloud tier because the deadline-aware
+    /// admission estimate said no edge node could meet the function's
+    /// SLO (SLO extension — the "predictive offload" path, taken
+    /// *before* edge placement is attempted). `startup_us` carries the
+    /// cloud RTT, like [`RecordKind::Offload`], but the counter is
+    /// distinct so deliberate deadline routing is not mistaken for
+    /// capacity failure.
+    SloOffload,
     /// Served warm on `recipient` after pulling an idle container of the
     /// same function from `donor` (cross-node warm-container migration,
     /// cluster extension). `startup_us` carries the warm dispatch plus
@@ -426,6 +486,40 @@ mod tests {
         assert_eq!(r.small.latency.cold.count(), 1);
         assert_eq!(r.large.latency.cold.count(), 0);
         assert_eq!(r.large.latency.e2e.count(), 2);
+    }
+
+    #[test]
+    fn slo_offloads_count_as_accesses_not_failures() {
+        let mut r = Report::default();
+        r.record(SizeClass::Small, RecordKind::SloOffload, 2_000, 80_000);
+        r.record(SizeClass::Small, RecordKind::Hit, 300, 7);
+        assert!(r.is_consistent());
+        assert_eq!(r.overall.slo_offloads, 1);
+        assert_eq!(r.overall.offloads, 0, "distinct from capacity offloads");
+        assert_eq!(r.overall.total_accesses(), 2);
+        assert_eq!(r.overall.serviceable(), 1, "served off-edge");
+        // Deliberate deadline routing is not a placement failure.
+        assert_eq!(r.overall.failure_pct(), 0.0);
+        assert!((r.overall.slo_offload_pct() - 50.0).abs() < 1e-12);
+        // Pays the cloud RTT as startup and still executes (e2e sample).
+        assert_eq!(r.small.startup_us, 80_007);
+        assert_eq!(r.small.exec_us, 2_300);
+        assert_eq!(r.latency().e2e.count(), 2);
+        assert_eq!(r.latency().warm.count(), 1, "no warm/cold sample for the offload");
+    }
+
+    #[test]
+    fn slo_violations_are_observations_not_accesses() {
+        let mut r = Report::default();
+        r.record(SizeClass::Small, RecordKind::Miss, 100_000, 1_500_000);
+        r.record_slo_violation(SizeClass::Small);
+        r.record(SizeClass::Large, RecordKind::Hit, 100, 10);
+        assert!(r.is_consistent());
+        assert_eq!(r.overall.slo_violations, 1);
+        assert_eq!(r.small.slo_violations, 1);
+        assert_eq!(r.large.slo_violations, 0);
+        assert_eq!(r.overall.total_accesses(), 2, "violations ride along");
+        assert!((r.overall.slo_violation_pct() - 50.0).abs() < 1e-12);
     }
 
     #[test]

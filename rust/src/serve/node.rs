@@ -251,6 +251,7 @@ mod tests {
             warm_start_us: 0,
             exec_us_mean: 0,
             class: if mem_mb >= 200 { SizeClass::Large } else { SizeClass::Small },
+            slo_ms: None,
         }
     }
 

@@ -121,6 +121,8 @@ impl Cluster {
         }
         self.live[node] = false;
         self.report.record_node_event(RecordKind::NodeDown { node });
+        // Deflated checkpoints die with the node's memory.
+        self.slo_state.forget_node(node);
 
         // 1. The warm pool dies with the node; the loss is accounted
         //    both cluster-wide and on the node that suffered it.

@@ -133,6 +133,7 @@ impl Cluster {
             ev.exec_us,
             profile.warm_start_us + cost_us,
         );
+        self.note_slo_outcome(profile, profile.warm_start_us + cost_us + ev.exec_us, false);
         ClusterOutcome::Migrated { donor, recipient }
     }
 

@@ -38,6 +38,9 @@
 //! * [`controller`] — the online epoch controller: pre-scheduled
 //!   [`Event::ControllerEpoch`] events, the observation window, and the
 //!   boundary/resplit decision logic.
+//! * [`slo`] — the per-function latency-SLO layer: deadline-aware
+//!   admission (predictive offload before a deadline miss), rate-based
+//!   fair-share shedding, and container deflation under pressure.
 //! * [`report`] — [`ClusterReport`] and the cross-slice invariants.
 //!
 //! An invocation flows through a pipeline of small functions:
@@ -59,12 +62,14 @@ pub mod offload;
 pub mod report;
 pub mod route;
 pub mod shard;
+pub mod slo;
 pub mod spec;
 
 pub use churn::ChurnConfig;
 pub use controller::ControllerConfig;
 pub use migrate::MigrationPolicy;
 pub use report::ClusterReport;
+pub use slo::{DeflationConfig, FairShareConfig, SloConfig};
 pub use shard::{plan_sharding, run_cluster_sharded, ShardPlan, ShardingConfig};
 pub use spec::{
     CloudTier, ClusterOutcome, ClusterSpec, NodePolicy, NodeSpec, RouterKind, Topology,
@@ -79,6 +84,7 @@ use crate::trace::{Invocation, SizeClass, Trace};
 use super::InitOccupancy;
 use churn::ChurnScheduler;
 use controller::ControllerWindow;
+use slo::SloState;
 
 /// Index of a size class into the controller's per-class windows
 /// (0 = small, 1 = large).
@@ -107,6 +113,10 @@ pub struct Cluster {
     /// Generates the next churn toggle whenever one fires; `None`
     /// without `[cluster.churn]`.
     pub(super) churn: Option<ChurnScheduler>,
+    /// The SLO layer's configuration; `None` without `[cluster.slo]`.
+    pub(super) slo: Option<SloConfig>,
+    /// Fair-share rate window + deflated-checkpoint table (see [`slo`]).
+    pub(super) slo_state: SloState,
     /// Per-node liveness; always all-true without churn/injection.
     pub(super) live: Vec<bool>,
     pub(super) window: ControllerWindow,
@@ -154,6 +164,12 @@ pub struct Cluster {
     /// In-flight invocations killed by a node failure and retried
     /// through the placement path (churn extension).
     pub churn_reroutes: u64,
+    /// Idle warm containers reclaimed by the SLO layer's deflation
+    /// mechanism (pressure-triggered shrink instead of binary eviction).
+    pub deflations: u64,
+    /// Deflated checkpoints restored at partial cold cost on a later
+    /// arrival.
+    pub reinflations: u64,
 }
 
 impl Cluster {
@@ -172,6 +188,29 @@ impl Cluster {
                 churn.mean_up_us > 0 && churn.mean_down_us > 0,
                 "churn dwell means must be > 0"
             );
+        }
+        if let Some(slo) = &spec.slo {
+            if let Some(fs) = slo.fairshare {
+                assert!(fs.window_us > 0, "fair-share window must be > 0");
+                assert!(
+                    fs.max_share > 0.0 && fs.max_share <= 1.0,
+                    "fair-share max_share must be in (0, 1], got {}",
+                    fs.max_share
+                );
+            }
+            if let Some(d) = slo.deflation {
+                assert!(
+                    d.pressure > 0.0 && d.pressure <= 1.0,
+                    "deflation pressure must be in (0, 1], got {}",
+                    d.pressure
+                );
+                assert!(
+                    (0.0..=1.0).contains(&d.reinflate_frac),
+                    "deflation reinflate_frac must be in [0, 1], got {}",
+                    d.reinflate_frac
+                );
+                assert!(d.ttl_us > 0, "deflation ttl must be > 0");
+            }
         }
         if let Some(ctl) = &spec.controller {
             assert!(ctl.epoch_us > 0, "controller epoch must be > 0");
@@ -215,6 +254,8 @@ impl Cluster {
             controller: spec.controller,
             topology: spec.topology.clone(),
             churn,
+            slo: spec.slo,
+            slo_state: SloState::new(spec.slo.as_ref()),
             live: vec![true; count],
             window: ControllerWindow::new(count),
             epoch_due: false,
@@ -232,6 +273,8 @@ impl Cluster {
             small_node_moves: 0,
             resplits: 0,
             churn_reroutes: 0,
+            deflations: 0,
+            reinflations: 0,
         }
     }
 
@@ -277,6 +320,7 @@ impl Cluster {
                 Event::Completion(c) => {
                     self.in_flight = self.in_flight.saturating_sub(1);
                     self.nodes[c.node].release(c.pool, c.container, time);
+                    self.maybe_deflate(trace, c.node, c.func, time);
                 }
                 Event::Departure { .. } => {
                     // Closed-loop retirement marker. The streaming pump
@@ -348,6 +392,12 @@ impl Cluster {
         let profile = trace.profile(ev.func);
         let primary = self.route(profile);
         if let Some(primary) = primary {
+            // The SLO gate sits between routing and edge dispatch:
+            // deadline-aware admission and fair-share shedding may send
+            // the invocation to the cloud before the edge can fail it.
+            if let Some(outcome) = self.slo_gate(profile, ev, primary) {
+                return outcome;
+            }
             if let Some(outcome) = self.try_edge(profile, ev, primary) {
                 return outcome;
             }
@@ -397,6 +447,11 @@ impl Cluster {
         self.fire_epoch_if_due(ev.t_us);
         let profile = trace.profile(ev.func);
         self.note_class_arrival(profile.class);
+        // Kept for parity with `place` — unreachable in practice, since
+        // the sharding planner serializes every `[cluster.slo]` config.
+        if let Some(outcome) = self.slo_gate(profile, ev, primary) {
+            return outcome;
+        }
         if let Some(outcome) = self.try_edge(profile, ev, primary) {
             return outcome;
         }
@@ -498,6 +553,7 @@ pub fn run_cluster_source<S: ArrivalSource + ?Sized>(
                 Event::Completion(c) => {
                     cluster.in_flight = cluster.in_flight.saturating_sub(1);
                     cluster.nodes[c.node].release(c.pool, c.container, time);
+                    cluster.maybe_deflate(&view, c.node, c.func, time);
                     if cluster.feedback {
                         source.on_completion(c.func, time);
                     }
@@ -549,6 +605,7 @@ pub(super) mod testutil {
             warm_start_us: 100,
             exec_us_mean: exec_us,
             class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+            slo_ms: None,
         }
     }
 
@@ -577,6 +634,7 @@ pub(super) mod testutil {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            slo: None,
         }
     }
 }

@@ -46,12 +46,16 @@ impl Cluster {
                     ev.exec_us,
                     profile.warm_start_us + lat_us,
                 );
+                self.note_slo_outcome(profile, profile.warm_start_us + lat_us + ev.exec_us, false);
                 Some(ClusterOutcome::Placed { node, cold: false })
             }
             Outcome::Cold { pool, container } => {
+                // A deflated checkpoint re-inflates at a fraction of the
+                // full cold start; otherwise this is the nominal cold cost.
+                let init_us = self.reinflate_cost_us(node, profile, ev.t_us);
                 let busy = match self.init_occupancy {
                     InitOccupancy::LatencyOnly => ev.exec_us,
-                    InitOccupancy::HoldsMemory => profile.cold_start_us + ev.exec_us,
+                    InitOccupancy::HoldsMemory => init_us + ev.exec_us,
                 };
                 self.push_completion(ev.t_us + held_lat + busy, node, pool, container, ev);
                 self.record_served(
@@ -59,8 +63,9 @@ impl Cluster {
                     profile.class,
                     RecordKind::Miss,
                     ev.exec_us,
-                    profile.cold_start_us + lat_us,
+                    init_us + lat_us,
                 );
+                self.note_slo_outcome(profile, init_us + lat_us + ev.exec_us, false);
                 Some(ClusterOutcome::Placed { node, cold: true })
             }
             Outcome::Drop => {
@@ -127,6 +132,7 @@ impl Cluster {
             Some(cloud) => {
                 self.report
                     .record(profile.class, RecordKind::Offload, ev.exec_us, cloud.rtt_us);
+                self.note_slo_outcome(profile, cloud.rtt_us + ev.exec_us, false);
                 if self.feedback {
                     self.in_flight += 1;
                     self.events.schedule(
@@ -138,6 +144,7 @@ impl Cluster {
             }
             None => {
                 self.report.record(profile.class, RecordKind::Drop, 0, 0);
+                self.note_slo_outcome(profile, 0, true);
                 if self.feedback {
                     self.in_flight += 1;
                     self.events.schedule(ev.t_us, Event::Departure { func: ev.func });

@@ -34,6 +34,12 @@ pub struct ClusterReport {
     /// through the placement path (churn extension; also see
     /// [`crate::metrics::Report::node_downs`] on `report`).
     pub churn_reroutes: u64,
+    /// Idle warm containers checkpointed to reclaim memory under
+    /// pressure (`[cluster.slo]` deflation).
+    pub deflations: u64,
+    /// Deflated checkpoints restored at partial cold cost on their next
+    /// use within the TTL.
+    pub reinflations: u64,
     /// Per-node liveness at end of run (all-true without churn).
     pub live: Vec<bool>,
     /// The router at end of run — the controller may have moved the
@@ -59,8 +65,10 @@ impl Cluster {
             if !r.is_consistent() {
                 return Err("per-node report inconsistent".into());
             }
-            if r.overall.drops != 0 || r.overall.offloads != 0 {
-                return Err("per-node reports must not carry drops/offloads".into());
+            if r.overall.drops != 0 || r.overall.offloads != 0 || r.overall.slo_offloads != 0 {
+                return Err(
+                    "per-node reports must not carry drops/offloads/slo_offloads".into()
+                );
             }
         }
         if served.overall.hits != self.report.overall.hits
@@ -105,6 +113,8 @@ impl Cluster {
             small_node_moves: self.small_node_moves,
             resplits: self.resplits,
             churn_reroutes: self.churn_reroutes,
+            deflations: self.deflations,
+            reinflations: self.reinflations,
             live: self.live,
         }
     }

@@ -179,6 +179,9 @@ pub fn plan_sharding(spec: &ClusterSpec, feedback: bool, cfg: &ShardingConfig) -
     if spec.churn.is_some() {
         return sequential("churn changes liveness, making routing state-dependent");
     }
+    if spec.slo.is_some() {
+        return sequential("SLO admission reads cross-node latency and share state");
+    }
     ShardPlan {
         shards: effective,
         window_us,
@@ -246,6 +249,7 @@ fn merge_parts(mut parts: Vec<ClusterReport>, shards: usize) -> ClusterReport {
     let mut report = Report::default();
     let (mut rerouted, mut rescues) = (0u64, 0u64);
     let (mut small_node_moves, mut resplits, mut churn_reroutes) = (0u64, 0u64, 0u64);
+    let (mut deflations, mut reinflations) = (0u64, 0u64);
     for p in &parts {
         merge_report_into(&mut report, &p.report);
         rerouted += p.rerouted;
@@ -253,6 +257,8 @@ fn merge_parts(mut parts: Vec<ClusterReport>, shards: usize) -> ClusterReport {
         small_node_moves += p.small_node_moves;
         resplits += p.resplits;
         churn_reroutes += p.churn_reroutes;
+        deflations += p.deflations;
+        reinflations += p.reinflations;
     }
     ClusterReport {
         report,
@@ -263,6 +269,8 @@ fn merge_parts(mut parts: Vec<ClusterReport>, shards: usize) -> ClusterReport {
         small_node_moves,
         resplits,
         churn_reroutes,
+        deflations,
+        reinflations,
         live: parts[0].live.clone(),
         router: parts[0].router,
         descriptions: (0..n)
@@ -408,13 +416,17 @@ mod tests {
             (base.clone().with_migration(15_000), false),
             (base.clone().with_controller(Default::default()), false),
             (base.clone().with_churn(Default::default()), false),
+            (base.clone().with_slo(super::super::SloConfig::default()), false),
             (base.clone(), true), // closed-loop
         ];
         let verdicts: Vec<bool> = cases
             .iter()
             .map(|(spec, feedback)| plan_sharding(spec, *feedback, &cfg).parallel)
             .collect();
-        assert_eq!(verdicts, vec![true, false, false, false, false, false, false, false]);
+        assert_eq!(
+            verdicts,
+            vec![true, false, false, false, false, false, false, false, false]
+        );
         // Single shard and single node both short-circuit.
         assert!(!plan_sharding(&base, false, &ShardingConfig::default()).parallel);
         assert!(!plan_sharding(&sticky_spec(1), false, &cfg).parallel);

@@ -1,0 +1,639 @@
+//! Per-function latency SLOs as a first-class scheduling signal —
+//! deadline-aware admission, rate-based fair share, and container
+//! deflation (`[cluster.slo]`).
+//!
+//! The paper's policy layer (and the PR-1..7 cluster on top of it)
+//! treats every invocation as best-effort: the only failure modes are
+//! capacity drops and capacity offloads. Real serverless platforms at
+//! the edge schedule against *deadlines* (LaSS models per-request
+//! response-time targets and provisions to meet them), so this module
+//! adds three cooperating mechanisms, all deterministic and all
+//! disabled-by-default:
+//!
+//! 1. **Deadline-aware admission** ([`Cluster::slo_gate`]): at placement
+//!    time the cluster estimates the local completion latency on the
+//!    routed primary — warm dispatch if the node holds an idle container
+//!    of the function, otherwise the node's *observed* cold-start p95
+//!    (its per-node cold [`LatencyHistogram`]
+//!    (crate::metrics::LatencyHistogram), falling back to the profile's
+//!    nominal `cold_start_us` before any observation exists) — plus the
+//!    invocation's execution time. When the estimate cannot meet the
+//!    function's SLO and a cloud tier exists, the invocation is sent
+//!    there *before* the edge can fail it, recorded as
+//!    [`RecordKind::SloOffload`] — deliberate deadline routing, distinct
+//!    from capacity offloads.
+//! 2. **Rate-based fair share** ([`FairShareConfig`]): per-function
+//!    arrival rates over a two-bucket sliding window become admission
+//!    weights under contention — when the routed primary is ≥ 90% full
+//!    and one function exceeds `max_share` of the recent arrival stream,
+//!    its surplus traffic is shed to the cloud so a single hot function
+//!    cannot starve the rest of the fleet.
+//! 3. **Container deflation** ([`DeflationConfig`]): under memory
+//!    pressure (node ≥ `pressure` full at a completion instant) the
+//!    just-idled warm container is *shrunk and reclaimed* instead of
+//!    waiting for binary eviction; the next invocation of that function
+//!    on that node within `ttl_us` pays a configurable *partial* cold
+//!    start (`reinflate_frac · cold_start_us`) to re-inflate, modeling
+//!    checkpoint-to-disk / lazy page restore rather than a full image
+//!    pull and boot.
+//!
+//! **SLO violations** are an *observation*, not an outcome: whenever an
+//! invocation with an effective SLO (its profile's `slo_ms`, or the
+//! config's `default_slo_ms`) retires, its end-to-end latency is
+//! compared against the deadline and
+//! [`Report::record_slo_violation`](crate::metrics::Report) fires on a
+//! miss (a drop with an SLO always violates). Violation counting is pure
+//! measurement — it never changes placement — and works even without a
+//! `[cluster.slo]` section when the trace itself declares SLOs.
+//!
+//! With `spec.slo = None` and no declared SLOs every mechanism here is
+//! unreachable and all prior results are bit-for-bit unchanged (locked
+//! by `tests/integration_cluster.rs`). The sharding planner classifies
+//! any `[cluster.slo]` config as coupled (Mode B — the admission
+//! estimate reads cross-node latency state) and runs the exact
+//! sequential kernel.
+
+use std::collections::HashMap;
+
+use crate::metrics::RecordKind;
+use crate::sim::event::Event;
+use crate::trace::{FunctionId, FunctionProfile, Invocation, Trace};
+
+use super::spec::ClusterOutcome;
+use super::Cluster;
+
+/// Node-load threshold (permille) above which fair-share shedding
+/// engages: contention means the routed primary is ≥ 90% full.
+const CONTENTION_PERMILLE: u64 = 900;
+
+/// Minimum arrivals in the fair-share window before shares are
+/// meaningful — below this the window is noise and nothing is shed.
+const FAIRSHARE_MIN_SAMPLES: u64 = 16;
+
+/// Rate-based fair-share admission: per-function arrival shares over a
+/// sliding window, enforced only under node contention.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FairShareConfig {
+    /// Width (µs) of one arrival-rate bucket; shares are computed over
+    /// the current plus the previous bucket (a two-bucket sliding
+    /// window). Must be > 0.
+    pub window_us: u64,
+    /// Maximum fraction of the windowed arrival stream one function may
+    /// claim before its surplus is shed to the cloud. In (0, 1].
+    pub max_share: f64,
+}
+
+impl Default for FairShareConfig {
+    /// 10 s rate buckets, no function above half the stream.
+    fn default() -> Self {
+        Self { window_us: 10_000_000, max_share: 0.5 }
+    }
+}
+
+/// Container deflation: shrink idle warm containers under memory
+/// pressure instead of binary eviction, re-inflating on next use at a
+/// partial cold cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeflationConfig {
+    /// Node-fullness fraction (used/capacity) at or above which a
+    /// completion's just-idled container is deflated. In (0, 1].
+    pub pressure: f64,
+    /// Fraction of the full `cold_start_us` a re-inflation costs
+    /// (checkpoint restore vs. image pull + boot). In [0, 1].
+    pub reinflate_frac: f64,
+    /// How long (µs) a deflated checkpoint stays restorable; past this
+    /// the next start pays the full cold cost. Must be > 0.
+    pub ttl_us: u64,
+}
+
+impl Default for DeflationConfig {
+    /// Deflate at 90% node fullness; restores cost a quarter of a cold
+    /// start and checkpoints live for one virtual minute.
+    fn default() -> Self {
+        Self { pressure: 0.9, reinflate_frac: 0.25, ttl_us: 60_000_000 }
+    }
+}
+
+/// The `[cluster.slo]` section: which of the three SLO mechanisms are
+/// armed. `ClusterSpec::slo = None` (the default) disables the whole
+/// layer bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloConfig {
+    /// Deadline-aware admission: estimate local completion latency at
+    /// placement time and offload to the cloud *before* the edge can
+    /// miss the deadline. Inert without a cloud tier.
+    pub admission: bool,
+    /// Fleet-wide default SLO (ms) for functions whose profile declares
+    /// none. `None` = only per-function `slo_ms` values apply.
+    pub default_slo_ms: Option<u64>,
+    /// Rate-based fair-share admission; `None` = disabled.
+    pub fairshare: Option<FairShareConfig>,
+    /// Container deflation; `None` = disabled.
+    pub deflation: Option<DeflationConfig>,
+}
+
+impl Default for SloConfig {
+    /// Admission on (it is the reason to write the section at all),
+    /// no default SLO, fair share and deflation off.
+    fn default() -> Self {
+        Self { admission: true, default_slo_ms: None, fairshare: None, deflation: None }
+    }
+}
+
+/// Mutable run state of the SLO layer: the fair-share rate window and
+/// the deflated-checkpoint table. Zero-cost when the layer is disabled
+/// (nothing is ever inserted or rotated).
+#[derive(Debug, Default)]
+pub(super) struct SloState {
+    /// Start (µs) of the current fair-share bucket.
+    fs_window_start: u64,
+    /// Arrivals per function id in the current bucket.
+    fs_cur: Vec<u64>,
+    /// Arrivals per function id in the previous bucket.
+    fs_prev: Vec<u64>,
+    fs_cur_total: u64,
+    fs_prev_total: u64,
+    /// `max_share` in permille — integer so the share compare is exact.
+    max_share_permille: u64,
+    /// `pressure` in permille — integer so the fullness compare is exact.
+    pressure_permille: u64,
+    /// Deflated checkpoints: `(node, function id)` → deflation instant.
+    deflated: HashMap<(usize, u32), u64>,
+}
+
+impl SloState {
+    pub(super) fn new(cfg: Option<&SloConfig>) -> Self {
+        let mut s = Self::default();
+        if let Some(cfg) = cfg {
+            if let Some(fs) = cfg.fairshare {
+                s.max_share_permille = (fs.max_share * 1000.0) as u64;
+            }
+            if let Some(d) = cfg.deflation {
+                s.pressure_permille = (d.pressure * 1000.0) as u64;
+            }
+        }
+        s
+    }
+
+    /// Count one arrival of `func` at `now` and return whether the
+    /// function now exceeds its fair share of the two-bucket window
+    /// (always `false` while the window holds too few samples).
+    fn note_arrival(&mut self, func: FunctionId, now: u64, window_us: u64) -> bool {
+        if now >= self.fs_window_start + window_us {
+            if now - self.fs_window_start >= 2 * window_us {
+                // Both buckets are stale: restart the window at `now`.
+                self.fs_cur.iter_mut().for_each(|c| *c = 0);
+                self.fs_prev.iter_mut().for_each(|c| *c = 0);
+                self.fs_cur_total = 0;
+                self.fs_prev_total = 0;
+                self.fs_window_start = now;
+            } else {
+                std::mem::swap(&mut self.fs_prev, &mut self.fs_cur);
+                self.fs_cur.iter_mut().for_each(|c| *c = 0);
+                self.fs_prev_total = self.fs_cur_total;
+                self.fs_cur_total = 0;
+                self.fs_window_start += window_us;
+            }
+        }
+        let i = func.0 as usize;
+        if i >= self.fs_cur.len() {
+            self.fs_cur.resize(i + 1, 0);
+            self.fs_prev.resize(i + 1, 0);
+        }
+        self.fs_cur[i] += 1;
+        self.fs_cur_total += 1;
+        let cnt = self.fs_cur[i] + self.fs_prev[i];
+        let total = self.fs_cur_total + self.fs_prev_total;
+        total >= FAIRSHARE_MIN_SAMPLES && cnt * 1000 > total * self.max_share_permille
+    }
+
+    /// Drop every deflated checkpoint on `node` (its containers are
+    /// gone anyway — a churn failure wipes the node).
+    pub(super) fn forget_node(&mut self, node: usize) {
+        self.deflated.retain(|&(n, _), _| n != node);
+    }
+}
+
+impl Cluster {
+    /// The effective SLO (µs) of `profile`: its declared `slo_ms`, else
+    /// the config's `default_slo_ms`, else none (best-effort).
+    pub(super) fn effective_slo_us(&self, profile: &FunctionProfile) -> Option<u64> {
+        profile
+            .slo_ms
+            .or_else(|| self.slo.and_then(|c| c.default_slo_ms))
+            .map(|ms| ms.saturating_mul(1_000))
+    }
+
+    /// Compare a retired invocation's end-to-end latency against its
+    /// effective SLO and record a violation on a miss. `dropped`
+    /// invocations with an SLO always violate. Pure observation — no
+    /// placement decision reads it.
+    pub(super) fn note_slo_outcome(
+        &mut self,
+        profile: &FunctionProfile,
+        e2e_us: u64,
+        dropped: bool,
+    ) {
+        let Some(slo_us) = self.effective_slo_us(profile) else { return };
+        if dropped || e2e_us > slo_us {
+            self.report.record_slo_violation(profile.class);
+        }
+    }
+
+    /// The SLO admission gate, run after routing and *before* any edge
+    /// dispatch is attempted. Returns the terminal outcome when the
+    /// invocation is proactively sent to the cloud (deadline miss
+    /// predicted, or fair-share surplus under contention); `None` lets
+    /// the normal pipeline proceed. A no-op without `[cluster.slo]`.
+    pub(super) fn slo_gate(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        primary: usize,
+    ) -> Option<ClusterOutcome> {
+        let cfg = self.slo?;
+        // Rate-window bookkeeping counts every arrival — including the
+        // ones admission subsequently diverts — so shares reflect
+        // demand, not just admitted traffic.
+        let over_share = match cfg.fairshare {
+            Some(fs) => self.slo_state.note_arrival(ev.func, ev.t_us, fs.window_us),
+            None => false,
+        };
+
+        // 1. Deadline-aware admission: offload before the edge can miss.
+        if cfg.admission {
+            if let (Some(slo_us), Some(cloud)) = (self.effective_slo_us(profile), self.cloud) {
+                let boot_us = if self.nodes[primary].has_idle(profile) {
+                    profile.warm_start_us
+                } else {
+                    let cold = &self.per_node[primary].class(profile.class).latency.cold;
+                    if cold.is_empty() {
+                        profile.cold_start_us
+                    } else {
+                        cold.p95_us() as u64
+                    }
+                };
+                if boot_us.saturating_add(ev.exec_us) > slo_us {
+                    return Some(self.slo_offload_to_cloud(profile, ev, cloud.rtt_us));
+                }
+            }
+        }
+
+        // 2. Fair-share shedding, only under contention on the primary
+        //    and only when the cloud can absorb the surplus.
+        if over_share
+            && self.nodes[primary].used_mb() * 1000 >= self.caps[primary] * CONTENTION_PERMILLE
+        {
+            if let Some(cloud) = self.cloud {
+                return Some(self.slo_offload_to_cloud(profile, ev, cloud.rtt_us));
+            }
+        }
+        None
+    }
+
+    /// Execute a predictive offload: record [`RecordKind::SloOffload`]
+    /// (cluster-level only — per-node reports never carry them), note
+    /// the SLO outcome of the cloud serve, and on the closed-loop path
+    /// schedule the client's departure after RTT + execution. Unlike
+    /// [`Cluster::offload_or_drop`] this is *not* a placement failure,
+    /// so the controller window is not notified.
+    fn slo_offload_to_cloud(
+        &mut self,
+        profile: &FunctionProfile,
+        ev: Invocation,
+        rtt_us: u64,
+    ) -> ClusterOutcome {
+        self.report
+            .record(profile.class, RecordKind::SloOffload, ev.exec_us, rtt_us);
+        self.note_slo_outcome(profile, rtt_us + ev.exec_us, false);
+        if self.feedback {
+            self.in_flight += 1;
+            self.events
+                .schedule(ev.t_us + rtt_us + ev.exec_us, Event::Departure { func: ev.func });
+        }
+        ClusterOutcome::SloOffloaded
+    }
+
+    /// Deflation hook, run at every completion release: when the node
+    /// is at or above the pressure threshold, reclaim the just-idled
+    /// warm container of `func` and remember the checkpoint. A no-op
+    /// unless `[cluster.slo]` arms deflation.
+    pub(super) fn maybe_deflate(
+        &mut self,
+        trace: &Trace,
+        node: usize,
+        func: FunctionId,
+        now_us: u64,
+    ) {
+        if self.slo.and_then(|c| c.deflation).is_none() {
+            return;
+        }
+        let used = self.nodes[node].used_mb();
+        if used * 1000 < self.caps[node] * self.slo_state.pressure_permille {
+            return;
+        }
+        let profile = trace.profile(func);
+        if self.nodes[node].take_idle(profile) {
+            self.deflations += 1;
+            // A newer checkpoint supersedes an older one of the same
+            // function on the same node.
+            self.slo_state.deflated.insert((node, func.0), now_us);
+        }
+    }
+
+    /// Initialization cost (µs) of a cold start of `profile` on `node`:
+    /// the partial re-inflation cost when a live deflated checkpoint
+    /// exists (consuming it), the full `cold_start_us` otherwise.
+    pub(super) fn reinflate_cost_us(
+        &mut self,
+        node: usize,
+        profile: &FunctionProfile,
+        now_us: u64,
+    ) -> u64 {
+        let full = profile.cold_start_us;
+        let Some(d) = self.slo.and_then(|c| c.deflation) else { return full };
+        match self.slo_state.deflated.remove(&(node, profile.id.0)) {
+            Some(stamp) if now_us <= stamp.saturating_add(d.ttl_us) => {
+                self.reinflations += 1;
+                (full as f64 * d.reinflate_frac) as u64
+            }
+            _ => full, // no checkpoint, or it expired — pay in full
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{run_cluster, Cluster, ClusterOutcome, ClusterSpec, NodePolicy};
+    use super::*;
+    use crate::trace::Trace;
+
+    fn admission_only() -> SloConfig {
+        SloConfig::default()
+    }
+
+    #[test]
+    fn admission_offloads_before_the_edge_can_miss() {
+        // Cold estimate 1_000_000 + 10_000 µs against a 500 ms SLO:
+        // the gate must divert to the cloud without touching the edge.
+        let mut f0 = func(0, 40, 1_000_000, 10_000);
+        f0.slo_ms = Some(500);
+        let t = Trace { functions: vec![f0], events: vec![inv(0, 0, 10_000)] };
+        let spec = static_spec(vec![kiss_node(1000)], 0)
+            .with_cloud(80_000)
+            .with_slo(admission_only());
+        let mut cluster = Cluster::new(&spec);
+        assert_eq!(cluster.step(&t, t.events[0]), ClusterOutcome::SloOffloaded);
+        cluster.finish();
+        cluster.check_invariants().unwrap();
+        assert_eq!(cluster.report.overall.slo_offloads, 1);
+        assert_eq!(cluster.report.overall.offloads, 0, "not a capacity offload");
+        assert_eq!(cluster.report.overall.misses, 0, "edge untouched");
+        assert_eq!(cluster.report.overall.drops, 0);
+        // The cloud serve (80 ms + 10 ms) meets the 500 ms SLO.
+        assert_eq!(cluster.report.overall.slo_violations, 0);
+        assert_eq!(cluster.report.overall.startup_us, 80_000, "cloud RTT as startup");
+    }
+
+    #[test]
+    fn admission_estimates_warm_when_idle_state_exists() {
+        // A 1.1 s SLO admits the 1.01 s cold estimate; the second
+        // arrival sees idle warm state and the warm estimate passes too.
+        let mut f0 = func(0, 40, 1_000_000, 10_000);
+        f0.slo_ms = Some(1_100);
+        let t = Trace {
+            functions: vec![f0],
+            events: vec![inv(0, 0, 10_000), inv(2_000_000, 0, 10_000)],
+        };
+        let spec = static_spec(vec![kiss_node(1000)], 0)
+            .with_cloud(80_000)
+            .with_slo(admission_only());
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.misses, 1);
+        assert_eq!(r.report.overall.hits, 1);
+        assert_eq!(r.report.overall.slo_offloads, 0);
+        // Both serves met the 1.1 s deadline.
+        assert_eq!(r.report.overall.slo_violations, 0);
+    }
+
+    #[test]
+    fn violations_are_measured_even_without_a_cloud_or_config() {
+        // A declared 100 ms SLO against a 1 s cold start. Without a
+        // cloud the admission gate is inert (it must never create
+        // drops), so the invocation cold-starts on the edge and misses
+        // its deadline — one violation, same outcome as ever.
+        let mut f0 = func(0, 40, 1_000_000, 10_000);
+        f0.slo_ms = Some(100);
+        let t = Trace { functions: vec![f0], events: vec![inv(0, 0, 10_000)] };
+        let with_cfg = static_spec(vec![kiss_node(1000)], 0).with_slo(admission_only());
+        let r = run_cluster(&t, &with_cfg);
+        assert_eq!(r.report.overall.misses, 1);
+        assert_eq!(r.report.overall.slo_offloads, 0);
+        assert_eq!(r.report.overall.drops, 0);
+        assert_eq!(r.report.overall.slo_violations, 1);
+        assert_eq!(r.report.small.slo_violations, 1, "violations keep class slices");
+        // Violation counting is pure measurement: it works with no
+        // [cluster.slo] section at all when the trace declares SLOs.
+        let no_cfg = static_spec(vec![kiss_node(1000)], 0);
+        let r2 = run_cluster(&t, &no_cfg);
+        assert_eq!(r2.report.overall.slo_violations, 1);
+        assert_eq!(r2.report.overall.misses, r.report.overall.misses);
+    }
+
+    #[test]
+    fn dropped_invocations_with_an_slo_always_violate() {
+        let mut f0 = func(0, 300, 1_000, 500);
+        f0.slo_ms = Some(10_000); // generous, but a drop still violates
+        let t = Trace { functions: vec![f0], events: vec![inv(0, 0, 500)] };
+        let spec = static_spec(vec![baseline_node(100)], 0);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.drops, 1);
+        assert_eq!(r.report.overall.slo_violations, 1);
+    }
+
+    #[test]
+    fn fair_share_sheds_the_hot_function_under_contention() {
+        // One 100 MB node; f1 and f0 (45 MB each) fill it to 90% once
+        // both are resident. f0 then dominates the arrival stream: once
+        // the window holds FAIRSHARE_MIN_SAMPLES arrivals and f0's share
+        // crosses max_share = 0.5, its surplus sheds to the cloud.
+        let t = Trace {
+            functions: vec![func(0, 45, 1_000, 5), func(1, 45, 1_000, 5)],
+            events: std::iter::once(inv(0, 1, 5))
+                .chain((1..=30u64).map(|k| inv(k * 1_000, 0, 5)))
+                .collect(),
+        };
+        let cfg = SloConfig {
+            admission: false,
+            default_slo_ms: None,
+            fairshare: Some(FairShareConfig { window_us: 100_000, max_share: 0.5 }),
+            deflation: None,
+        };
+        let spec = static_spec(vec![baseline_node(100)], 0)
+            .with_cloud(80_000)
+            .with_slo(cfg);
+        let r = run_cluster(&t, &spec);
+        // Arrival k of f0 sees cnt = k, total = k + 1: the first shed is
+        // k = 15 (total 16), and every later f0 arrival stays over-share.
+        assert_eq!(r.report.overall.slo_offloads, 16, "{:?}", r.report.overall);
+        assert_eq!(r.report.overall.misses, 2, "both functions cold-start once");
+        assert_eq!(r.report.overall.hits, 13, "admitted f0 arrivals serve warm");
+        assert_eq!(r.report.overall.drops, 0);
+        assert_eq!(r.report.overall.offloads, 0, "no capacity failures");
+        // Without the fair-share knob the hot function keeps the node.
+        let plain = static_spec(vec![baseline_node(100)], 0).with_cloud(80_000);
+        let p = run_cluster(&t, &plain);
+        assert_eq!(p.report.overall.slo_offloads, 0);
+        assert_eq!(p.report.overall.hits, 29);
+    }
+
+    #[test]
+    fn deflation_reclaims_idle_state_and_reinflates_at_partial_cost() {
+        // A 350 MB function on a 400 MB node: every release leaves the
+        // node 87.5% full, above the 0.8 pressure threshold, so the
+        // idle container deflates; the next arrival re-inflates at a
+        // quarter of the cold cost.
+        let t = Trace {
+            functions: vec![func(0, 350, 1_000_000, 10_000)],
+            events: vec![inv(0, 0, 10_000), inv(20_000, 0, 10_000)],
+        };
+        let cfg = SloConfig {
+            admission: false,
+            default_slo_ms: None,
+            fairshare: None,
+            deflation: Some(DeflationConfig {
+                pressure: 0.8,
+                reinflate_frac: 0.25,
+                ttl_us: 60_000_000,
+            }),
+        };
+        let spec = static_spec(vec![baseline_node(400)], 0).with_slo(cfg);
+        let r = run_cluster(&t, &spec);
+        // The mid-run release deflates; the end-of-run drain does not
+        // (the run is over — there is nothing left to make room for).
+        assert_eq!(r.deflations, 1);
+        assert_eq!(r.reinflations, 1, "the second arrival restores the checkpoint");
+        assert_eq!(r.report.overall.misses, 2, "a re-inflation is still a cold start");
+        assert_eq!(r.report.overall.hits, 0);
+        // Full cold 1_000_000 + partial re-inflation 250_000.
+        assert_eq!(r.report.overall.startup_us, 1_250_000);
+
+        // Without deflation the idle copy survives and the second
+        // arrival is a plain warm hit.
+        let plain = static_spec(vec![baseline_node(400)], 0);
+        let p = run_cluster(&t, &plain);
+        assert_eq!(p.deflations, 0);
+        assert_eq!(p.report.overall.hits, 1);
+        assert_eq!(p.report.overall.startup_us, 1_000_000 + 100);
+    }
+
+    #[test]
+    fn expired_checkpoints_pay_the_full_cold_cost() {
+        let t = Trace {
+            functions: vec![func(0, 350, 1_000_000, 10_000)],
+            events: vec![inv(0, 0, 10_000), inv(20_000, 0, 10_000)],
+        };
+        let cfg = SloConfig {
+            admission: false,
+            default_slo_ms: None,
+            fairshare: None,
+            // Completion releases at t = 10_000; the second arrival at
+            // t = 20_000 is past the 5 ms TTL.
+            deflation: Some(DeflationConfig {
+                pressure: 0.8,
+                reinflate_frac: 0.25,
+                ttl_us: 5_000,
+            }),
+        };
+        let spec = static_spec(vec![baseline_node(400)], 0).with_slo(cfg);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.deflations, 1);
+        assert_eq!(r.reinflations, 0, "the checkpoint expired");
+        assert_eq!(r.report.overall.startup_us, 2_000_000, "two full colds");
+    }
+
+    #[test]
+    fn below_pressure_nothing_deflates() {
+        // Same function on a 4 GB node: 350/4096 is nowhere near the
+        // threshold, so deflation never fires and the warm hit survives.
+        let t = Trace {
+            functions: vec![func(0, 350, 1_000_000, 10_000)],
+            events: vec![inv(0, 0, 10_000), inv(20_000, 0, 10_000)],
+        };
+        let cfg = SloConfig {
+            admission: false,
+            default_slo_ms: None,
+            fairshare: None,
+            deflation: Some(DeflationConfig::default()),
+        };
+        let spec = static_spec(vec![baseline_node(4096)], 0).with_slo(cfg);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.deflations, 0);
+        assert_eq!(r.report.overall.hits, 1);
+    }
+
+    #[test]
+    fn default_slo_applies_to_undeclared_functions() {
+        // No per-function SLO anywhere; default_slo_ms supplies one and
+        // the tight deadline diverts the cold start to the cloud.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000_000, 10_000)],
+            events: vec![inv(0, 0, 10_000)],
+        };
+        let cfg = SloConfig { default_slo_ms: Some(500), ..SloConfig::default() };
+        let spec = static_spec(vec![kiss_node(1000)], 0)
+            .with_cloud(80_000)
+            .with_slo(cfg);
+        let r = run_cluster(&t, &spec);
+        assert_eq!(r.report.overall.slo_offloads, 1);
+        // A declared slo_ms wins over the default.
+        let mut loose = func(0, 40, 1_000_000, 10_000);
+        loose.slo_ms = Some(5_000);
+        let t2 = Trace { functions: vec![loose], events: vec![inv(0, 0, 10_000)] };
+        let r2 = run_cluster(&t2, &spec);
+        assert_eq!(r2.report.overall.slo_offloads, 0, "per-function SLO overrides");
+        assert_eq!(r2.report.overall.misses, 1);
+    }
+
+    #[test]
+    fn fair_share_window_rotates_and_forgets_stale_buckets() {
+        let mut s = SloState::new(Some(&SloConfig {
+            admission: false,
+            default_slo_ms: None,
+            fairshare: Some(FairShareConfig { window_us: 1_000, max_share: 0.5 }),
+            deflation: None,
+        }));
+        let f = crate::trace::FunctionId(0);
+        for k in 0..FAIRSHARE_MIN_SAMPLES {
+            let over = s.note_arrival(f, k, 1_000);
+            assert_eq!(over, k + 1 >= FAIRSHARE_MIN_SAMPLES, "k={k}");
+        }
+        // A two-window gap clears both buckets: shares restart.
+        assert!(!s.note_arrival(f, 10_000, 1_000), "stale window forgotten");
+        // A one-window step keeps the previous bucket in the share.
+        let mut s2 = SloState::new(None);
+        s2.max_share_permille = 500;
+        for k in 0..FAIRSHARE_MIN_SAMPLES {
+            s2.note_arrival(f, k, 1_000);
+        }
+        assert!(s2.note_arrival(f, 1_500, 1_000), "previous bucket still counts");
+    }
+
+    #[test]
+    fn slo_layer_off_is_bit_for_bit_inert() {
+        // An armed-but-unreachable config (no SLOs declared, admission
+        // on, no fair share, no deflation) must replay the plain cluster
+        // exactly — the inertness contract the integration lock scales
+        // up.
+        let t = Trace {
+            functions: vec![func(0, 40, 1_000, 500), func(1, 300, 9_000, 2_000)],
+            events: vec![inv(0, 0, 500), inv(10, 1, 2_000), inv(20_000, 0, 500)],
+        };
+        let plain = ClusterSpec::homogeneous(2, 1000, NodePolicy::kiss_default());
+        let armed = plain.clone().with_slo(SloConfig::default());
+        let a = run_cluster(&t, &plain);
+        let b = run_cluster(&t, &armed);
+        assert_eq!(a, b);
+    }
+}

@@ -10,6 +10,7 @@ use crate::sim::InitOccupancy;
 use super::churn::ChurnConfig;
 use super::controller::ControllerConfig;
 use super::migrate::MigrationPolicy;
+use super::slo::SloConfig;
 
 /// Memory-management policy of one node (what [`NodeSpec::build`] turns
 /// into a [`Dispatcher`]).
@@ -334,6 +335,9 @@ pub struct ClusterSpec {
     pub topology: Topology,
     /// Node churn injection; `None` = nodes never fail.
     pub churn: Option<ChurnConfig>,
+    /// The SLO layer (deadline-aware admission, fair share, deflation);
+    /// `None` = disabled (the best-effort cluster).
+    pub slo: Option<SloConfig>,
 }
 
 impl ClusterSpec {
@@ -350,6 +354,7 @@ impl ClusterSpec {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            slo: None,
         }
     }
 
@@ -401,6 +406,13 @@ impl ClusterSpec {
         self
     }
 
+    /// Enable the SLO layer (deadline-aware admission, fair share,
+    /// container deflation — see [`SloConfig`]).
+    pub fn with_slo(mut self, cfg: SloConfig) -> Self {
+        self.slo = Some(cfg);
+        self
+    }
+
     /// Total fleet memory (MB).
     pub fn total_mem_mb(&self) -> u64 {
         self.nodes.iter().map(|n| n.mem_mb).sum()
@@ -427,6 +439,10 @@ pub enum ClusterOutcome {
     },
     /// Served by the cloud tier after the edge declined.
     Offloaded,
+    /// Sent to the cloud tier by the SLO layer *before* edge placement
+    /// was attempted — the deadline-aware admission estimate predicted a
+    /// miss, or fair-share shedding diverted a hot function's surplus.
+    SloOffloaded,
     /// No edge capacity and no cloud tier: lost.
     Dropped,
 }
@@ -481,11 +497,18 @@ mod tests {
         assert_eq!(spec.controller.unwrap().epoch_us, 60_000_000);
         assert_eq!(spec.topology, Topology::Flat, "flat is the default");
         assert_eq!(spec.churn, None, "churn is off by default");
+        assert_eq!(spec.slo, None, "the SLO layer is off by default");
         let spec = spec
             .with_topology(Topology::Ring { hop_us: 2_000 })
-            .with_churn(ChurnConfig::default());
+            .with_churn(ChurnConfig::default())
+            .with_slo(SloConfig::default());
         assert_eq!(spec.topology, Topology::Ring { hop_us: 2_000 });
         assert_eq!(spec.churn.unwrap().mean_down_us, 30_000_000);
+        let slo = spec.slo.unwrap();
+        assert!(slo.admission, "admission is the section's reason to exist");
+        assert_eq!(slo.default_slo_ms, None);
+        assert_eq!(slo.fairshare, None);
+        assert_eq!(slo.deflation, None);
         assert_eq!(RouterKind::parse("ll", 0), Some(RouterKind::LeastLoaded));
         assert_eq!(
             RouterKind::parse("affinity", 2),

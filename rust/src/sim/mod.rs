@@ -286,6 +286,7 @@ mod tests {
             warm_start_us: 100,
             exec_us_mean: exec_us,
             class: if mem >= 200 { SizeClass::Large } else { SizeClass::Small },
+            slo_ms: None,
         }
     }
 

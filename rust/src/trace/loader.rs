@@ -2,7 +2,9 @@
 //! release style (one row per invocation, plus a function-profile table).
 //!
 //! Two files:
-//! * `<stem>.functions.csv` — `func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class`
+//! * `<stem>.functions.csv` — `func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class,slo_ms`
+//!   (the trailing `slo_ms` column is optional on read — empty or absent
+//!   means no SLO, so pre-SLO 8-column traces load unchanged)
 //! * `<stem>.events.csv`    — `t_us,func_id,exec_us`
 //!
 //! Users with the real Azure dataset can convert it to this schema and run
@@ -22,12 +24,12 @@ pub fn save(trace: &Trace, stem: &Path) -> Result<()> {
     let mut w = BufWriter::new(fs::File::create(&fpath)?);
     writeln!(
         w,
-        "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class"
+        "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class,slo_ms"
     )?;
     for f in &trace.functions {
         writeln!(
             w,
-            "{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{}",
             f.id.0,
             f.app_id,
             f.mem_mb,
@@ -35,7 +37,8 @@ pub fn save(trace: &Trace, stem: &Path) -> Result<()> {
             f.cold_start_us,
             f.warm_start_us,
             f.exec_us_mean,
-            f.class.label()
+            f.class.label(),
+            f.slo_ms.map(|v| v.to_string()).unwrap_or_default()
         )?;
     }
     w.flush()?;
@@ -62,13 +65,26 @@ pub(crate) fn load_functions(fpath: &Path) -> Result<Vec<FunctionProfile>> {
             continue;
         }
         let cols: Vec<&str> = line.split(',').collect();
-        if cols.len() != 8 {
-            bail!("{}:{}: expected 8 columns, got {}", fpath.display(), lineno + 1, cols.len());
+        // 8 columns is the pre-SLO schema; 9 adds the optional `slo_ms`
+        // tail (empty = no SLO).
+        if cols.len() != 8 && cols.len() != 9 {
+            bail!(
+                "{}:{}: expected 8 or 9 columns, got {}",
+                fpath.display(),
+                lineno + 1,
+                cols.len()
+            );
         }
         let class = match cols[7].trim() {
             "small" => SizeClass::Small,
             "large" => SizeClass::Large,
             other => bail!("{}:{}: bad class {other:?}", fpath.display(), lineno + 1),
+        };
+        let slo_ms = match cols.get(8).map(|s| s.trim()) {
+            None | Some("") => None,
+            Some(v) => Some(v.parse().with_context(|| {
+                format!("{}:{}: bad slo_ms", fpath.display(), lineno + 1)
+            })?),
         };
         functions.push(FunctionProfile {
             id: FunctionId(cols[0].trim().parse()?),
@@ -79,6 +95,7 @@ pub(crate) fn load_functions(fpath: &Path) -> Result<Vec<FunctionProfile>> {
             warm_start_us: cols[5].trim().parse()?,
             exec_us_mean: cols[6].trim().parse()?,
             class,
+            slo_ms,
         });
     }
     // Profiles must be dense and in id order (they are indexed by id).
@@ -167,10 +184,79 @@ mod tests {
             assert_eq!(a.cold_start_us, b.cold_start_us);
             assert_eq!(a.class, b.class);
             assert_eq!(a.app_mem_mb, b.app_mem_mb);
+            assert_eq!(a.slo_ms, b.slo_ms);
         }
         for (a, b) in t.events.iter().zip(&t2.events) {
             assert_eq!((a.t_us, a.func, a.exec_us), (b.t_us, b.func, b.exec_us));
         }
+    }
+
+    #[test]
+    fn roundtrip_preserves_slo_column() {
+        let cfg = SynthConfig {
+            n_small: 8,
+            n_large: 2,
+            duration_us: 60_000_000,
+            rate_per_sec: 10.0,
+            slo: Some(crate::trace::synth::SloSynthConfig::default()),
+            ..SynthConfig::default()
+        };
+        let t = synthesize(&cfg);
+        assert!(t.functions.iter().all(|f| f.slo_ms.is_some()));
+        let stem = tmpdir().join("roundtrip-slo");
+        save(&t, &stem).unwrap();
+        let t2 = load(&stem).unwrap();
+        for (a, b) in t.functions.iter().zip(&t2.functions) {
+            assert_eq!(a.slo_ms, b.slo_ms);
+        }
+    }
+
+    #[test]
+    fn loads_legacy_8_column_functions_csv() {
+        // Pre-SLO traces on disk have no slo_ms column; they must load
+        // unchanged with slo_ms = None.
+        let d = tmpdir();
+        let stem = d.join("legacy8");
+        fs::write(
+            stem.with_extension("functions.csv"),
+            "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class\n\
+             0,0,40,40,1000,10,5000,small\n\
+             1,1,350,350,9000,20,80000,large\n",
+        )
+        .unwrap();
+        fs::write(
+            stem.with_extension("events.csv"),
+            "t_us,func_id,exec_us\n0,0,1000\n10,1,2000\n",
+        )
+        .unwrap();
+        let t = load(&stem).unwrap();
+        assert_eq!(t.functions.len(), 2);
+        assert!(t.functions.iter().all(|f| f.slo_ms.is_none()));
+
+        // A 9-column row with an explicit value and one left empty.
+        let stem = d.join("mixed9");
+        fs::write(
+            stem.with_extension("functions.csv"),
+            "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class,slo_ms\n\
+             0,0,40,40,1000,10,5000,small,250\n\
+             1,1,350,350,9000,20,80000,large,\n",
+        )
+        .unwrap();
+        fs::write(stem.with_extension("events.csv"), "t_us,func_id,exec_us\n").unwrap();
+        let t = load(&stem).unwrap();
+        assert_eq!(t.functions[0].slo_ms, Some(250));
+        assert_eq!(t.functions[1].slo_ms, None);
+
+        // Garbage in the slo column is rejected.
+        let stem = d.join("badslo");
+        fs::write(
+            stem.with_extension("functions.csv"),
+            "func_id,app_id,mem_mb,app_mem_mb,cold_start_us,warm_start_us,exec_us_mean,class,slo_ms\n\
+             0,0,40,40,1000,10,5000,small,soon\n",
+        )
+        .unwrap();
+        fs::write(stem.with_extension("events.csv"), "t_us,func_id,exec_us\n").unwrap();
+        assert!(load(&stem).is_err());
     }
 
     #[test]

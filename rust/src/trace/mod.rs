@@ -69,6 +69,11 @@ pub struct FunctionProfile {
     pub exec_us_mean: u64,
     /// Ground-truth class used for fairness metrics.
     pub class: SizeClass,
+    /// End-to-end latency SLO (ms), when the function declares one.
+    /// `None` = best-effort (the historical model). Consumed by the
+    /// cluster's deadline-aware scheduling layer
+    /// (`sim::cluster::SloConfig`); ignored everywhere else.
+    pub slo_ms: Option<u64>,
 }
 
 /// One invocation arrival.
@@ -139,6 +144,7 @@ mod tests {
                 warm_start_us: 1_000,
                 exec_us_mean: 50_000,
                 class: SizeClass::Small,
+                slo_ms: None,
             },
             FunctionProfile {
                 id: FunctionId(1),
@@ -149,6 +155,7 @@ mod tests {
                 warm_start_us: 5_000,
                 exec_us_mean: 2_000_000,
                 class: SizeClass::Large,
+                slo_ms: None,
             },
         ];
         let events = vec![

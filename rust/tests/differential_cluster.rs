@@ -2,7 +2,8 @@
 //!
 //! A seeded generator produces `SimConfig`s spanning the whole cluster
 //! feature space — routers × topologies × churn × migration ×
-//! controller × open/closed-loop sources — and every generated config
+//! controller × SLO layer × open/closed-loop sources — and every
+//! generated config
 //! is run through the sequential kernel once and through
 //! [`run_cluster_sharded`] at several shard counts. The resulting
 //! [`ClusterReport`]s (report structs, per-node slices, latency
@@ -23,7 +24,8 @@ use kiss_faas::config::{
 };
 use kiss_faas::sim::cluster::{
     plan_sharding, run_cluster_sharded, run_cluster_source, ChurnConfig, ControllerConfig,
-    MigrationPolicy, RouterKind, ShardingConfig, Topology,
+    DeflationConfig, FairShareConfig, MigrationPolicy, RouterKind, ShardingConfig, SloConfig,
+    Topology,
 };
 use kiss_faas::trace::source::ArrivalSource;
 use kiss_faas::util::rng::Pcg64;
@@ -95,6 +97,29 @@ fn gen_config(rng: &mut Pcg64, i: u64) -> SimConfig {
             mean_down_us: rng.range_u64(2, 10) * 1_000_000,
         });
     }
+    // SLO layer (~30% of configs): every [cluster.slo] config
+    // serializes (Mode B), but serialized runs still walk the sharded
+    // entry point and must stay bit-for-bit at every shard count.
+    if rng.bernoulli(0.3) {
+        let mut slo = SloConfig { admission: rng.bernoulli(0.8), ..SloConfig::default() };
+        if rng.bernoulli(0.7) {
+            slo.default_slo_ms = Some(rng.range_u64(1, 120) * 1_000);
+        }
+        if rng.bernoulli(0.5) {
+            slo.fairshare = Some(FairShareConfig {
+                window_us: rng.range_u64(1, 20) * 1_000_000,
+                max_share: [0.2, 0.4, 0.6][rng.below(3) as usize],
+            });
+        }
+        if rng.bernoulli(0.5) {
+            slo.deflation = Some(DeflationConfig {
+                pressure: [0.5, 0.8, 0.95][rng.below(3) as usize],
+                reinflate_frac: [0.0, 0.25, 0.5][rng.below(3) as usize],
+                ttl_us: rng.range_u64(5, 120) * 1_000_000,
+            });
+        }
+        cc.slo = Some(slo);
+    }
     cfg.cluster = Some(cc);
     if rng.bernoulli(0.25) {
         cfg.workload = WorkloadConfig {
@@ -157,6 +182,7 @@ fn decomposable_subspace_is_exercised_in_parallel() {
         cc.migration = None;
         cc.controller = None;
         cc.churn = None;
+        cc.slo = None; // the SLO layer always serializes — keep Mode A pure
         cfg.workload = WorkloadConfig::default();
         cfg.validate().expect("restricted config must stay valid");
 
@@ -174,6 +200,42 @@ fn decomposable_subspace_is_exercised_in_parallel() {
 }
 
 #[test]
+fn slo_configs_always_serialize_with_the_slo_reason() {
+    // The planner's Mode-B contract for the SLO layer: a config whose
+    // *only* coupling is `[cluster.slo]` — router, fallbacks,
+    // migration, controller, churn and the source all kept in the
+    // decomposable subspace — still refuses to decompose, names the
+    // SLO coupling in its printed reason, and the serialized fallback
+    // stays bit-for-bit at every shard count.
+    let counts = shard_counts();
+    let mut rng = Pcg64::new(0x510F);
+    for i in 0..8u64 {
+        let mut cfg = gen_config(&mut rng, 700 + i);
+        let cc = cfg.cluster.as_mut().expect("generator always sets a cluster");
+        cc.router = if rng.bernoulli(0.5) { RouterKind::Sticky } else { RouterKind::RoundRobin };
+        cc.fallbacks = 0;
+        cc.migration = None;
+        cc.controller = None;
+        cc.churn = None;
+        if cc.slo.is_none() {
+            cc.slo = Some(SloConfig { default_slo_ms: Some(30_000), ..SloConfig::default() });
+        }
+        cfg.workload = WorkloadConfig::default();
+        cfg.validate().expect("slo config must stay valid");
+
+        let spec = cfg.build_cluster_spec();
+        let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(4));
+        assert!(!plan.parallel, "slo config {i} must serialize");
+        assert!(
+            plan.reason.contains("SLO"),
+            "the reason must name the SLO coupling, got: {}",
+            plan.reason
+        );
+        assert_differential(&cfg, &format!("slo {i}"), &counts);
+    }
+}
+
+#[test]
 fn window_width_never_changes_results() {
     // One decomposable config, swept across window widths from one
     // microsecond (a flush per arrival) to wider than the whole run.
@@ -185,6 +247,7 @@ fn window_width_never_changes_results() {
     cc.migration = None;
     cc.controller = None;
     cc.churn = None;
+    cc.slo = None;
     cfg.workload = WorkloadConfig::default();
     cfg.validate().unwrap();
 

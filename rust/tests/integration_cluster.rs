@@ -7,7 +7,9 @@
 //! no-churn == the prior cluster bit-for-bit; churn schedules are
 //! seed-deterministic; migration + fallbacks absorb churn), and the
 //! event-kernel equivalence locks (pre-scheduled churn toggles and
-//! controller epochs reproduce the legacy per-arrival-scan behaviour).
+//! controller epochs reproduce the legacy per-arrival-scan behaviour),
+//! and the SLO-layer lock (disabled — or armed but deadline-free —
+//! reproduces the prior cluster bit-for-bit).
 
 use kiss_faas::config::SimConfig;
 use kiss_faas::coordinator::policy::PolicyKind;
@@ -15,7 +17,7 @@ use kiss_faas::coordinator::Balancer;
 use kiss_faas::experiments::paper_workload;
 use kiss_faas::sim::cluster::{
     run_cluster, run_cluster_sharded, run_cluster_source, ChurnConfig, ClusterSpec,
-    ControllerConfig, NodePolicy, NodeSpec, RouterKind, ShardingConfig, Topology,
+    ControllerConfig, NodePolicy, NodeSpec, RouterKind, ShardingConfig, SloConfig, Topology,
 };
 use kiss_faas::sim::{run_trace_with, InitOccupancy};
 use kiss_faas::trace::source::{ClosedLoopSource, SynthSource};
@@ -71,6 +73,7 @@ fn one_node_cluster_is_bit_identical_to_run_trace() {
                 controller: None,
                 topology: Topology::Flat,
                 churn: None,
+                slo: None,
             };
             let got = run_cluster(&trace, &spec);
             assert_eq!(
@@ -115,6 +118,7 @@ fn cluster_runs_are_deterministic() {
         controller: None,
         topology: Topology::Flat,
         churn: None,
+        slo: None,
     }
     .with_cloud(80_000);
     let a = run_cluster(&trace, &spec);
@@ -143,6 +147,7 @@ fn offload_accounting_is_class_consistent() {
         controller: None,
         topology: Topology::Flat,
         churn: None,
+        slo: None,
     };
     let dropped = run_cluster(&trace, &base);
     assert!(
@@ -247,6 +252,7 @@ fn fallbacks_reduce_placement_failures() {
         controller: None,
         topology: Topology::Flat,
         churn: None,
+        slo: None,
     };
     let without = run_cluster(&trace, &tight);
     assert_eq!(without.rerouted, 0, "no fallbacks, no reroutes");
@@ -305,6 +311,7 @@ fn prop_migration_runs_are_seed_deterministic() {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            slo: None,
         }
         .with_cloud(80_000)
         .with_migration(15_000)
@@ -526,6 +533,7 @@ fn prop_churn_schedules_are_seed_deterministic() {
             controller: None,
             topology: Topology::Flat,
             churn: None,
+            slo: None,
         }
         .with_cloud(80_000)
         .with_migration(15_000)
@@ -762,6 +770,7 @@ fn streamed_cluster_matches_materialized_bit_for_bit() {
         controller: None,
         topology: Topology::Flat,
         churn: None,
+        slo: None,
     }
     .with_cloud(80_000)
     .with_migration(15_000)
@@ -851,6 +860,176 @@ fn sharded_full_feature_cluster_is_bit_for_bit_sequential() {
         let got = run_cluster_sharded(&mut source, &spec, &ShardingConfig::with_shards(shards));
         assert_eq!(got, want, "shards={shards}");
     }
+}
+
+/// The SLO-layer compatibility lock: with `[cluster.slo]` disabled —
+/// whether by omitting the section or by the `enabled = false` kill
+/// switch (tuning knobs present and parsed) — the cluster reproduces
+/// the PR-7 report bit-for-bit on the stressed hetero workload, and no
+/// SLO counter moves. An armed-but-deadline-free config on a trace
+/// that declares no SLOs is equally inert.
+#[test]
+fn slo_disabled_matches_prior_cluster_bit_for_bit() {
+    let trace = synthesize(&stressed_hetero_workload());
+
+    let base_toml = "
+        [node]
+        mem_mb = 1024
+        [cluster]
+        nodes = 4
+        mem_mb = [8192, 4096, 2048, 2048]
+        router = \"least-loaded\"
+        fallbacks = 2
+        cloud_rtt_ms = 80
+        [cluster.migration]
+        cost_ms = 15
+    ";
+    let absent = SimConfig::from_toml_str(base_toml).unwrap();
+    let disabled = SimConfig::from_toml_str(&format!(
+        "{base_toml}\n[cluster.slo]\nenabled = false\ndefault_slo_ms = 500\n\
+         fairshare_window_s = 10\ndeflate_pressure = 0.9"
+    ))
+    .unwrap();
+
+    let mut spec_absent = absent.build_cluster_spec();
+    spec_absent.init_occupancy = InitOccupancy::HoldsMemory;
+    let mut spec_disabled = disabled.build_cluster_spec();
+    spec_disabled.init_occupancy = InitOccupancy::HoldsMemory;
+    assert!(spec_absent.slo.is_none() && spec_disabled.slo.is_none());
+
+    let a = run_cluster(&trace, &spec_absent);
+    let b = run_cluster(&trace, &spec_disabled);
+    assert_eq!(a, b, "disabled-in-TOML must equal absent-in-TOML");
+    assert_eq!(a.report.overall.slo_offloads, 0);
+    assert_eq!(a.report.overall.slo_violations, 0);
+    assert_eq!(a.deflations, 0);
+    assert_eq!(a.reinflations, 0);
+
+    // Armed but deadline-free: admission with no default deadline on a
+    // trace that declares none never fires, and fair share / deflation
+    // stay unarmed — the gate observes nothing and changes nothing.
+    let mut spec_idle = spec_absent.clone();
+    spec_idle.slo = Some(SloConfig::default());
+    let c = run_cluster(&trace, &spec_idle);
+    assert_eq!(a, c, "an idle SLO gate must not perturb results");
+}
+
+/// Monotonicity (property): tightening every declared SLO never
+/// decreases the violation count. Measurement-only — no `[cluster.slo]`
+/// section — so placement is identical at both deadlines and the
+/// per-invocation violation indicator is pointwise monotone in the
+/// deadline.
+#[test]
+fn prop_tightening_slos_never_decreases_violations() {
+    forall("slo tightening monotonicity", 8, |rng| {
+        let synth = SynthConfig {
+            seed: rng.below(1 << 20),
+            n_small: 40,
+            n_large: 10,
+            duration_us: 120_000_000, // 2 min
+            rate_per_sec: 40.0,
+            ..paper_workload()
+        };
+        let base_ms = 1_000 + rng.below(120_000);
+        let mut loose_trace = synthesize(&synth);
+        for f in &mut loose_trace.functions {
+            f.slo_ms = Some(base_ms);
+        }
+        let mut tight_trace = loose_trace.clone();
+        for f in &mut tight_trace.functions {
+            f.slo_ms = Some((base_ms / 2).max(1));
+        }
+        let spec = ClusterSpec {
+            nodes: vec![kiss_node(1024), kiss_node(768), kiss_node(512)],
+            router: RouterKind::LeastLoaded,
+            max_fallbacks: 1,
+            cloud: None,
+            init_occupancy: InitOccupancy::HoldsMemory,
+            migration: None,
+            controller: None,
+            topology: Topology::Flat,
+            churn: None,
+            slo: None,
+        }
+        .with_cloud(80_000);
+        let loose = run_cluster(&loose_trace, &spec);
+        let tight = run_cluster(&tight_trace, &spec);
+        // Declared SLOs are observation-only without a config section.
+        let placement = |c: &kiss_faas::metrics::Counters| {
+            (c.hits, c.misses, c.drops, c.offloads, c.startup_us, c.exec_us)
+        };
+        if placement(&loose.report.overall) != placement(&tight.report.overall) {
+            return Err("slo_ms must not perturb placement without [cluster.slo]".into());
+        }
+        if loose.report.overall.slo_offloads != 0 || tight.report.overall.slo_offloads != 0 {
+            return Err("no admission gate, no SLO offloads".into());
+        }
+        let (lv, tv) =
+            (loose.report.overall.slo_violations, tight.report.overall.slo_violations);
+        if tv < lv {
+            return Err(format!("halving every SLO lost violations: {tv} < {lv}"));
+        }
+        if tv > tight.report.overall.total_accesses() {
+            return Err("violations exceed invocations".into());
+        }
+        Ok(())
+    });
+}
+
+/// Admission is purely protective: it may divert traffic to the cloud,
+/// never manufacture drops. With a cloud tier the pre-emptive offloads
+/// fire under a tight fleet-wide default; without one the gate is inert
+/// and placement replays the SLO-free cluster exactly.
+#[test]
+fn admission_never_increases_drops() {
+    let trace = synthesize(&stressed_hetero_workload());
+    let slo = SloConfig { default_slo_ms: Some(20_000), ..SloConfig::default() };
+
+    // With a cloud tier (hetero_spec has one): the gate fires, and
+    // drops stay no worse.
+    let without = run_cluster(&trace, &hetero_spec());
+    let with_gate = run_cluster(&trace, &hetero_spec().with_slo(slo));
+    assert!(
+        with_gate.report.overall.slo_offloads > 0,
+        "a 20 s deadline against seconds-scale executions must divert traffic: {:?}",
+        with_gate.report.overall
+    );
+    assert!(
+        with_gate.report.overall.drops <= without.report.overall.drops,
+        "admission must not create drops: {} vs {}",
+        with_gate.report.overall.drops,
+        without.report.overall.drops
+    );
+    assert_eq!(
+        with_gate.report.overall.total_accesses(),
+        without.report.overall.total_accesses(),
+        "every invocation is still accounted for exactly once"
+    );
+    assert!(with_gate.report.is_consistent());
+
+    // Cloudless: nowhere to divert, so the gate must not move a single
+    // placement counter — only the violation observation differs.
+    let cloudless = {
+        let mut s = hetero_spec();
+        s.cloud = None;
+        s
+    };
+    let plain = run_cluster(&trace, &cloudless);
+    let gated = run_cluster(&trace, &cloudless.clone().with_slo(slo));
+    assert_eq!(gated.report.overall.slo_offloads, 0);
+    let placement = |c: &kiss_faas::metrics::Counters| {
+        (c.hits, c.misses, c.drops, c.offloads, c.startup_us, c.exec_us)
+    };
+    assert_eq!(
+        placement(&gated.report.overall),
+        placement(&plain.report.overall),
+        "a cloudless admission gate must be placement-inert"
+    );
+    assert_eq!(gated.per_node.len(), plain.per_node.len());
+    assert!(
+        gated.report.overall.slo_violations > 0,
+        "the tight default must still be measured against edge serves"
+    );
 }
 
 /// The cluster sweep experiments run end-to-end on a reduced workload

@@ -35,6 +35,7 @@ fn profile(mem_mb: u32, class: SizeClass) -> FunctionProfile {
         warm_start_us: 0,
         exec_us_mean: 0,
         class,
+        slo_ms: None,
     }
 }
 

@@ -28,6 +28,7 @@ fn rand_profile(rng: &mut Pcg64, id: u32) -> FunctionProfile {
         warm_start_us: rng.range_u64(100, 10_000),
         exec_us_mean: rng.range_u64(10_000, 500_000),
         class: if large { SizeClass::Large } else { SizeClass::Small },
+        slo_ms: None,
     }
 }
 
@@ -225,6 +226,7 @@ fn prop_policy_victim_order_is_deterministic() {
                     warm_start_us: 1,
                     exec_us_mean: 1,
                     class: SizeClass::Large,
+                    slo_ms: None,
                 };
                 let evictions_before = pool.evictions;
                 let _ = pool.try_acquire(&huge, t + 1);
