@@ -5,6 +5,10 @@
 //! `std::thread` (the embarrassingly-parallel shape the experiment
 //! harness uses for seed replication).
 
+// Determinism-contract exemption (see rust/clippy.toml): benchmarks
+// measure wall-clock time by definition.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 use kiss_faas::bench::{group, Bencher};

@@ -10,6 +10,12 @@
 //! * [`coldstart_percentiles`] — Fig. 5: percentile distribution of
 //!   cold-start latency for small vs large functions.
 
+// Determinism-contract exemption (see rust/clippy.toml): the maps here
+// are pure aggregation scratch — every sample they collect is drained
+// through `percentile_curve`, which sorts, so iteration order never
+// reaches the figures.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 
 use crate::trace::{SizeClass, Trace};

@@ -9,6 +9,11 @@
 //! println!("{r}");
 //! ```
 
+// Determinism-contract exemption (see rust/clippy.toml): measuring
+// wall-clock time is this harness's entire purpose; nothing here feeds
+// simulation state.
+#![allow(clippy::disallowed_methods)]
+
 pub mod wallclock;
 
 use std::fmt;

@@ -21,6 +21,10 @@
 //! against a committed baseline (a hand-written provenance stub says
 //! `"measured": false` instead).
 
+// Determinism-contract exemption (see rust/clippy.toml): wall-clock
+// readings are the measurement itself; workloads stay seed-determined.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use crate::coordinator::policy::PolicyKind;

@@ -113,7 +113,8 @@
 //! harness ([`bench`]), and a randomized property-test driver
 //! ([`util::prop`]).
 
-#![warn(missing_docs)]
+#![deny(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod analysis;
 pub mod bench;

@@ -24,6 +24,10 @@
 //! Argument parsing is hand-rolled (no clap offline — see crate docs);
 //! unknown flags are hard errors, not silent ignores.
 
+// Determinism-contract exemption (see rust/clippy.toml): CLI flag
+// parsing is lookup-only — no iteration order ever reaches output.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;

@@ -21,6 +21,12 @@
 //! whose constructors return a descriptive error — the simulator,
 //! cluster, and experiment paths never notice.
 
+// Determinism-contract exemption (see rust/clippy.toml): this module
+// times real PJRT payload execution and keys payloads by opaque names —
+// wall clocks and hash maps are its job, and nothing here feeds
+// simulation state.
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};

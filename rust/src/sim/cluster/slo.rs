@@ -53,7 +53,7 @@
 //! estimate reads cross-node latency state) and runs the exact
 //! sequential kernel.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::metrics::RecordKind;
 use crate::sim::event::Event;
@@ -158,7 +158,13 @@ pub(super) struct SloState {
     /// `pressure` in permille — integer so the fullness compare is exact.
     pressure_permille: u64,
     /// Deflated checkpoints: `(node, function id)` → deflation instant.
-    deflated: HashMap<(usize, u32), u64>,
+    ///
+    /// A `BTreeMap` (simlint D01): the map only sees keyed
+    /// insert/remove/retain, so iteration order was never observable —
+    /// the swap from `HashMap` is bit-for-bit neutral — but the ordered
+    /// structure keeps any future iteration (debug dumps, report
+    /// extensions) deterministic by construction.
+    deflated: BTreeMap<(usize, u32), u64>,
 }
 
 impl SloState {

@@ -237,6 +237,9 @@ impl EventQueue {
             }
         }
         self.heap = BinaryHeap::from(alive);
+        // Entry's order is (time_us, rank, seq) and seq is unique per
+        // event, so no two entries compare equal and unstable is safe.
+        // simlint: allow(D02) — unique seq key: no equal elements to reorder
         dead.sort_unstable();
         dead.iter()
             .map(|e| match e.event {

@@ -4,6 +4,11 @@
 //! SipHash's per-lookup cost shows up directly in events/second.
 //! EXPERIMENTS.md §Perf records the before/after.
 
+// This module *defines* the sanctioned alternative to the raw std hash
+// containers (determinism contract D01): the aliases below pin a fixed,
+// seedless hasher, so the disallowed-types backstop does not apply here.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::{HashMap, HashSet};
 use std::hash::{BuildHasherDefault, Hasher};
 

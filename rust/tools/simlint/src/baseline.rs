@@ -1,0 +1,148 @@
+//! The committed baseline: grandfathered diagnostics that do not fail
+//! the build (yet).
+//!
+//! Format — one entry per line, tab-separated:
+//!
+//! ```text
+//! RULE<TAB>path/relative/to/scan-root.rs<TAB>trimmed source line
+//! ```
+//!
+//! `#` comments and blank lines are ignored. Matching is on
+//! `(rule, path, trimmed-line-content)` — *not* on line numbers — so
+//! unrelated edits above a grandfathered site do not invalidate it,
+//! while any edit to the offending line itself un-grandfathers it.
+//! Entries that matched nothing are reported as stale so the file can
+//! only shrink.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::diag::Diagnostic;
+
+/// One baseline entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    /// Rule id the entry grandfathers.
+    pub rule: String,
+    /// Scan-root-relative path, forward slashes.
+    pub path: String,
+    /// Trimmed source line of the grandfathered site.
+    pub snippet: String,
+}
+
+/// A parsed baseline file.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    /// Entries in file order.
+    pub entries: Vec<Entry>,
+}
+
+impl Baseline {
+    /// Parse baseline text. Lines that are neither comments, blank,
+    /// nor three tab-separated fields are returned as errors.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, '\t');
+            match (parts.next(), parts.next(), parts.next()) {
+                (Some(rule), Some(path), Some(snippet)) if !rule.is_empty() => {
+                    entries.push(Entry {
+                        rule: rule.to_string(),
+                        path: path.to_string(),
+                        snippet: snippet.to_string(),
+                    });
+                }
+                _ => {
+                    return Err(format!(
+                        "baseline line {}: expected `RULE\\tpath\\tsnippet`, got `{}`",
+                        i + 1,
+                        line
+                    ))
+                }
+            }
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Load a baseline from `path`.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read baseline {}: {}", path.display(), e))?;
+        Self::parse(&text)
+    }
+
+    /// Whether `d` is grandfathered by some entry.
+    pub fn covers(&self, d: &Diagnostic) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.rule == d.rule && e.path == d.path && e.snippet == d.snippet)
+    }
+
+    /// Entries that cover none of `diags` (stale — candidates for
+    /// deletion; the baseline should only ever shrink).
+    pub fn unused<'a>(&'a self, diags: &[Diagnostic]) -> Vec<&'a Entry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                !diags
+                    .iter()
+                    .any(|d| e.rule == d.rule && e.path == d.path && e.snippet == d.snippet)
+            })
+            .collect()
+    }
+}
+
+/// Render `diags` as baseline text (`--write-baseline`).
+pub fn render(diags: &[Diagnostic]) -> String {
+    let mut s = String::from(
+        "# simlint baseline — grandfathered diagnostics (see rust/tools/simlint).\n\
+         # Format: RULE<TAB>path<TAB>trimmed source line. Keep this file shrinking:\n\
+         # fix the site or carry an inline `// simlint: allow(Dxx) — reason` instead.\n",
+    );
+    for d in diags {
+        let _ = writeln!(s, "{}\t{}\t{}", d.rule, d.path, d.snippet);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(rule: &'static str, path: &str, snippet: &str) -> Diagnostic {
+        Diagnostic {
+            rule,
+            path: path.into(),
+            line: 1,
+            message: String::new(),
+            snippet: snippet.into(),
+        }
+    }
+
+    #[test]
+    fn parse_cover_unused_roundtrip() {
+        let text = "# header\nD01\tsim/a.rs\tuse std::collections::HashMap;\n\
+                    D02\tsim/b.rs\tv.sort_unstable();\n";
+        let b = Baseline::parse(text).unwrap();
+        assert_eq!(b.entries.len(), 2);
+        let hit = diag("D01", "sim/a.rs", "use std::collections::HashMap;");
+        let miss = diag("D01", "sim/a.rs", "use std::collections::HashSet;");
+        assert!(b.covers(&hit));
+        assert!(!b.covers(&miss));
+        let unused = b.unused(std::slice::from_ref(&hit));
+        assert_eq!(unused.len(), 1);
+        assert_eq!(unused[0].rule, "D02");
+        // render -> parse keeps the entries.
+        let again = Baseline::parse(&render(&[hit.clone()])).unwrap();
+        assert!(again.covers(&hit));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Baseline::parse("D01 only-two-fields\n").is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Diagnostics: the unit of simlint output, with human `file:line`
+//! text rendering and a machine-readable JSON rendering.
+
+use std::fmt::Write as _;
+
+/// One finding: a rule tripped at a source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule id (`"D01"`).
+    pub rule: &'static str,
+    /// Path of the offending file, relative to the scan root, with
+    /// forward slashes (stable across platforms — baselines match on
+    /// it).
+    pub path: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// What went wrong and what to do instead.
+    pub message: String,
+    /// The trimmed source line (baseline entries match on it, so a
+    /// grandfathered site stops matching the moment it is edited).
+    pub snippet: String,
+}
+
+impl Diagnostic {
+    /// `path:line: RULE: message` — the human, grep-able form.
+    pub fn render_text(&self) -> String {
+        format!("{}:{}: {}: {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Render diagnostics as a JSON document:
+/// `{"schema": "...", "count": N, "diagnostics": [...]}`.
+///
+/// Hand-rolled like the root crate's `util::json` — simlint carries
+/// zero dependencies so the offline container can always build it.
+pub fn render_json(diags: &[Diagnostic]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"kiss-faas/simlint/v1\",\n");
+    let _ = writeln!(s, "  \"count\": {},", diags.len());
+    s.push_str("  \"diagnostics\": [");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {");
+        let _ = write!(s, "\"rule\": {}, ", json_str(d.rule));
+        let _ = write!(s, "\"path\": {}, ", json_str(&d.path));
+        let _ = write!(s, "\"line\": {}, ", d.line);
+        let _ = write!(s, "\"message\": {}, ", json_str(&d.message));
+        let _ = write!(s, "\"snippet\": {}", json_str(&d.snippet));
+        s.push('}');
+    }
+    if !diags.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+/// Escape `v` as a JSON string literal.
+fn json_str(v: &str) -> String {
+    let mut s = String::with_capacity(v.len() + 2);
+    s.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\r' => s.push_str("\\r"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(s, "\\u{:04x}", c as u32);
+            }
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let d = Diagnostic {
+            rule: "D01",
+            path: "sim/x.rs".into(),
+            line: 7,
+            message: "say \"no\"".into(),
+            snippet: "let m: HashMap<u32, u32>;".into(),
+        };
+        let j = render_json(std::slice::from_ref(&d));
+        assert!(j.contains("\"count\": 1"));
+        assert!(j.contains("\\\"no\\\""));
+        assert!(j.contains("\"kiss-faas/simlint/v1\""));
+        assert!(render_json(&[]).contains("\"count\": 0"));
+    }
+}

@@ -1,0 +1,361 @@
+//! A minimal Rust lexer: just enough token structure for the D-rule
+//! catalog, none of the grammar.
+//!
+//! The scanner produces whole identifiers, numeric literals (with a
+//! float flag), single-character punctuation, and opaque string/char
+//! tokens, each tagged with its 1-based source line. Comments and
+//! string contents are stripped from the token stream — a `HashMap`
+//! mentioned in rustdoc prose must never trip D01 — but `//` line
+//! comments are collected separately so the `// simlint: allow(...)`
+//! escape hatch can be parsed from them. Block comments cannot carry
+//! directives.
+//!
+//! Deliberately *not* handled: macro expansion (rules see macro input
+//! tokens as written, which is what a reviewer sees too) and exotic
+//! literal suffixes beyond the usual `1_000u64` / `1.5f64` shapes.
+
+/// Kind of one lexed token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// An identifier or keyword (`HashMap`, `fn`, `sort_unstable_by`).
+    Ident,
+    /// A numeric literal; `float` is true for `1.5`, `2e9`, `3f64`.
+    Num {
+        /// Whether the literal is floating-point.
+        float: bool,
+    },
+    /// One punctuation character (`::` arrives as two adjacent `:`).
+    Punct,
+    /// A string, raw-string, byte-string, or char literal (content
+    /// discarded — only position matters).
+    Str,
+    /// A lifetime (`'a`); kept distinct so it is never a char literal.
+    Lifetime,
+}
+
+/// One token with its source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// What kind of token this is.
+    pub kind: TokKind,
+    /// The token text (empty for `Str` — contents are opaque).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+impl Tok {
+    /// Whether this token is the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Whether this token is the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// A `//` line comment (directive candidates), with its source line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Full comment text including the leading slashes.
+    pub text: String,
+    /// 1-based line the comment starts on.
+    pub line: u32,
+}
+
+/// The lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Tokens in source order.
+    pub toks: Vec<Tok>,
+    /// `//` comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens + line comments. Never fails: unrecognized
+/// bytes become single `Punct` tokens, unterminated literals run to
+/// end-of-file.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (collected for directive parsing).
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.comments
+                .push(Comment { text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // Block comment, nested per Rust's rules.
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (byte) string: r"..", r#".."#, br#".."# with any # count.
+        if let Some((len, newlines)) = raw_string_len(&b[i..]) {
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            line += newlines;
+            i += len;
+            continue;
+        }
+        // Plain or byte string literal.
+        if c == '"' || (c == 'b' && b.get(i + 1) == Some(&'"')) {
+            if c == 'b' {
+                i += 1;
+            }
+            let start_line = line;
+            i += 1; // opening quote
+            while i < n {
+                match b[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            out.toks
+                .push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+            continue;
+        }
+        // Lifetime vs char literal.
+        if c == '\'' {
+            let is_lifetime = matches!(b.get(i + 1), Some(x) if x.is_alphabetic() || *x == '_')
+                && b.get(i + 2) != Some(&'\'');
+            if is_lifetime {
+                let start = i + 1;
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            } else {
+                i += 1; // opening quote
+                while i < n {
+                    match b[i] {
+                        '\\' => i += 2,
+                        '\'' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            }
+            continue;
+        }
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut float = false;
+            while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                i += 1;
+            }
+            // Fractional part — but never eat `..` (range syntax).
+            if i < n
+                && b[i] == '.'
+                && matches!(b.get(i + 1), Some(d) if d.is_ascii_digit())
+            {
+                float = true;
+                i += 1;
+                while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            // Exponent (`2e9`, `1.5e-3`).
+            if i < n && (b[i] == 'e' || b[i] == 'E') {
+                let sign = usize::from(matches!(b.get(i + 1), Some('+') | Some('-')));
+                if matches!(b.get(i + 1 + sign), Some(d) if d.is_ascii_digit()) {
+                    float = true;
+                    i += 1 + sign;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                        i += 1;
+                    }
+                }
+            }
+            // Suffix (`u64`, `f32`); a float suffix makes it a float.
+            let suffix_start = i;
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            let suffix: String = b[suffix_start..i].iter().collect();
+            if suffix == "f32" || suffix == "f64" || text.ends_with("f32") || text.ends_with("f64")
+            {
+                float = true;
+            }
+            out.toks.push(Tok { kind: TokKind::Num { float }, text, line });
+            continue;
+        }
+        // Identifier or keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Anything else: one punctuation char.
+        out.toks
+            .push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// If `rest` starts a raw (byte) string literal, return its total
+/// length in chars and the number of newlines it spans.
+fn raw_string_len(rest: &[char]) -> Option<(usize, u32)> {
+    let mut j = 0usize;
+    if rest.first() == Some(&'b') {
+        j += 1;
+    }
+    if rest.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while rest.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if rest.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    let mut newlines = 0u32;
+    while j < rest.len() {
+        if rest[j] == '\n' {
+            newlines += 1;
+            j += 1;
+            continue;
+        }
+        if rest[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && rest.get(j + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return Some((j + 1 + hashes, newlines));
+            }
+        }
+        j += 1;
+    }
+    Some((rest.len(), newlines)) // unterminated: runs to EOF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_identifiers() {
+        let src = r##"
+// HashMap in a line comment
+/* HashMap in /* a nested */ block */
+let s = "HashMap in a string";
+let r = r#"HashMap raw "quoted" text"#;
+let c = 'h';
+"##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t == "HashMap"), "{ids:?}");
+        assert!(ids.iter().any(|t| t == "let"));
+    }
+
+    #[test]
+    fn line_comments_are_collected_with_lines() {
+        let lexed = lex("let a = 1;\n// simlint: allow(D01) — why\nlet b = 2;\n");
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].line, 2);
+        assert!(lexed.comments[0].text.contains("allow(D01)"));
+        assert_eq!(lexed.toks.last().unwrap().line, 3);
+    }
+
+    #[test]
+    fn float_literals_are_flagged_ranges_are_not() {
+        let lexed = lex("a[0..10]; x = 1.5; y = 2e9; z = 3f64; n = 1_000u64;");
+        let nums: Vec<(String, bool)> = lexed
+            .toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Num { float } => Some((t.text, float)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            nums,
+            vec![
+                ("0".into(), false),
+                ("10".into(), false),
+                ("1.5".into(), true),
+                ("2e9".into(), true),
+                ("3f64".into(), true),
+                ("1_000u64".into(), false),
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetimes_do_not_swallow_code() {
+        let ids = idents("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(ids.iter().any(|t| t == "str"));
+        assert!(ids.iter().any(|t| t == "fn"));
+    }
+}

@@ -1,0 +1,141 @@
+//! # simlint — the determinism-contract static-analysis pass
+//!
+//! Every guarantee the `kiss-faas` crate sells — KiSS-vs-baseline
+//! comparisons, the bit-for-bit equivalence locks, the Mode-A sharded
+//! kernel — rests on a determinism contract that used to be folklore.
+//! This tool makes it an artifact: a typed rule catalog
+//! ([`rules::RULES`], D01–D05) enforced over the determinism-critical
+//! module set, with an inline escape hatch
+//! (`// simlint: allow(Dxx) — reason`) and a committed [`baseline`]
+//! for grandfathered sites.
+//!
+//! Run it from the `rust/` workspace as
+//! `cargo run -p simlint -- check src`, or from the repository root as
+//! `cargo run --manifest-path rust/Cargo.toml -p simlint -- check rust/src`.
+//!
+//! ## Why not `syn`?
+//!
+//! The build container is offline — the root crate vendors every
+//! substrate it needs (its "Offline-environment note"), and this pass
+//! follows suit: a ~300-line lexer ([`lexer`]) produces exactly the
+//! token structure the rules need (whole identifiers, float-flagged
+//! literals, comment/string stripping, `#[cfg(test)]` spans). The
+//! trade-off is deliberate: rules match tokens and small token
+//! patterns, not resolved paths, so `use std::collections::HashMap as
+//! Map` could smuggle a name past D01 — but that rename would itself
+//! never survive review, and the cheap lexical layer is backstopped by
+//! `clippy.toml` `disallowed-types`/`disallowed-methods` (which *does*
+//! resolve paths) plus the Miri/TSan CI job for the dynamic side.
+
+pub mod baseline;
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use baseline::Baseline;
+pub use diag::Diagnostic;
+pub use rules::SourceFile;
+
+/// Result of checking a source tree.
+#[derive(Debug, Default)]
+pub struct CheckOutcome {
+    /// Findings that survived allow + baseline suppression, sorted by
+    /// `(path, line, rule)`.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings suppressed by a reasoned `// simlint: allow(...)`.
+    pub suppressed_allows: usize,
+    /// Findings suppressed by the baseline.
+    pub suppressed_baseline: usize,
+    /// Baseline entries that covered nothing (stale).
+    pub unused_baseline: Vec<baseline::Entry>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl CheckOutcome {
+    /// Whether the tree is clean (exit code 0).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by relative
+/// path for deterministic output.
+fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Forward-slash path of `path` relative to `root`.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Check every `.rs` file under `root` against the rule catalog,
+/// applying `baseline` (if any) after inline allows.
+pub fn check_root(root: &Path, baseline: Option<&Baseline>) -> io::Result<CheckOutcome> {
+    let mut files = Vec::new();
+    for path in collect_rs_files(root)? {
+        let src = std::fs::read_to_string(&path)?;
+        files.push(SourceFile::parse(&rel_path(root, &path), &src));
+    }
+
+    let mut outcome = CheckOutcome { files_scanned: files.len(), ..Default::default() };
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    for f in &files {
+        let findings = rules::check_file(f);
+        outcome.suppressed_allows += findings.suppressed_allows;
+        raw.extend(findings.diags);
+    }
+    raw.extend(rules::check_crate(&files));
+
+    if let Some(b) = baseline {
+        outcome.unused_baseline = b.unused(&raw).into_iter().cloned().collect();
+        for d in raw {
+            if b.covers(&d) {
+                outcome.suppressed_baseline += 1;
+            } else {
+                outcome.diagnostics.push(d);
+            }
+        }
+    } else {
+        outcome.diagnostics = raw;
+    }
+    outcome
+        .diagnostics
+        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_are_unique_and_complete() {
+        let ids: Vec<&str> = rules::RULES.iter().map(|r| r.id).collect();
+        assert_eq!(ids, ["D00", "D01", "D02", "D03", "D04", "D05"]);
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids, dedup);
+    }
+}

@@ -1,0 +1,197 @@
+//! CLI for the determinism-contract pass.
+//!
+//! ```text
+//! simlint check <root> [--format text|json] [--baseline FILE | --no-baseline]
+//!                      [--write-baseline FILE] [--quiet]
+//! simlint rules
+//! ```
+//!
+//! Exit codes: 0 clean, 1 diagnostics found, 2 usage or I/O error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use simlint::{baseline, check_root, diag, rules, Baseline};
+
+const USAGE: &str = "\
+simlint — determinism-contract static analysis for kiss-faas
+
+USAGE:
+    simlint check <root> [OPTIONS]    lint every .rs file under <root>
+    simlint rules                     print the rule catalog
+
+OPTIONS (check):
+    --format <text|json>      output format (default: text)
+    --baseline <FILE>         baseline file (default: <root>/../tools/simlint/baseline.txt
+                              when it exists)
+    --no-baseline             ignore any baseline
+    --write-baseline <FILE>   write surviving diagnostics as a new baseline and exit 0
+    --quiet                   suppress the summary line on success
+
+Diagnostics are suppressed by `// simlint: allow(Dxx) — reason` on the
+offending line or the line above (reason mandatory), or by a baseline
+entry; see `simlint rules` for the catalog.";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("rules") => {
+            for r in rules::RULES {
+                println!("{}  {}\n     {}", r.id, r.title, r.rationale);
+            }
+            ExitCode::SUCCESS
+        }
+        Some("check") => run_check(&args[1..]),
+        _ => {
+            eprintln!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+struct Opts {
+    root: PathBuf,
+    format: String,
+    baseline: Option<PathBuf>,
+    no_baseline: bool,
+    write_baseline: Option<PathBuf>,
+    quiet: bool,
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: PathBuf::new(),
+        format: "text".to_string(),
+        baseline: None,
+        no_baseline: false,
+        write_baseline: None,
+        quiet: false,
+    };
+    let mut root = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut value = |flag: &str| {
+            it.next()
+                .cloned()
+                .ok_or_else(|| format!("{flag} needs a value"))
+        };
+        match a.as_str() {
+            "--format" => opts.format = value("--format")?,
+            "--baseline" => opts.baseline = Some(PathBuf::from(value("--baseline")?)),
+            "--no-baseline" => opts.no_baseline = true,
+            "--write-baseline" => {
+                opts.write_baseline = Some(PathBuf::from(value("--write-baseline")?))
+            }
+            "--quiet" => opts.quiet = true,
+            flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}")),
+            path if root.is_none() => root = Some(PathBuf::from(path)),
+            extra => return Err(format!("unexpected argument {extra}")),
+        }
+    }
+    if !matches!(opts.format.as_str(), "text" | "json") {
+        return Err(format!("--format must be text or json, got {}", opts.format));
+    }
+    opts.root = root.ok_or("check needs a <root> directory")?;
+    Ok(opts)
+}
+
+/// The default committed baseline location: `tools/simlint/baseline.txt`
+/// next to the scanned source tree (so `check src` from `rust/` and
+/// `check rust/src` from the repo root both find it).
+fn default_baseline(root: &Path) -> Option<PathBuf> {
+    let p = root.parent()?.join("tools/simlint/baseline.txt");
+    p.exists().then_some(p)
+}
+
+fn run_check(args: &[String]) -> ExitCode {
+    let opts = match parse_opts(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    if !opts.root.is_dir() {
+        eprintln!("error: {} is not a directory", opts.root.display());
+        return ExitCode::from(2);
+    }
+
+    let baseline = if opts.no_baseline {
+        None
+    } else {
+        let path = opts.baseline.clone().or_else(|| default_baseline(&opts.root));
+        match path {
+            None => None,
+            Some(p) => match Baseline::load(&p) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return ExitCode::from(2);
+                }
+            },
+        }
+    };
+
+    let outcome = match check_root(&opts.root, baseline.as_ref()) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(out) = opts.write_baseline {
+        let text = baseline::render(&outcome.diagnostics);
+        if let Err(e) = std::fs::write(&out, text) {
+            eprintln!("error: cannot write {}: {e}", out.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "wrote {} baseline entr{} to {}",
+            outcome.diagnostics.len(),
+            if outcome.diagnostics.len() == 1 { "y" } else { "ies" },
+            out.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    if opts.format == "json" {
+        print!("{}", diag::render_json(&outcome.diagnostics));
+    } else {
+        for d in &outcome.diagnostics {
+            println!("{}", d.render_text());
+        }
+        for e in &outcome.unused_baseline {
+            eprintln!(
+                "note: stale baseline entry ({} {} `{}`) matched nothing — delete it",
+                e.rule, e.path, e.snippet
+            );
+        }
+        if !outcome.is_clean() {
+            eprintln!(
+                "simlint: {} diagnostic{} in {} file{} ({} allowed inline, {} baselined)",
+                outcome.diagnostics.len(),
+                if outcome.diagnostics.len() == 1 { "" } else { "s" },
+                outcome.files_scanned,
+                if outcome.files_scanned == 1 { "" } else { "s" },
+                outcome.suppressed_allows,
+                outcome.suppressed_baseline,
+            );
+        } else if !opts.quiet {
+            println!(
+                "simlint: clean — {} files, {} allowed inline, {} baselined, {} stale \
+                 baseline entr{}",
+                outcome.files_scanned,
+                outcome.suppressed_allows,
+                outcome.suppressed_baseline,
+                outcome.unused_baseline.len(),
+                if outcome.unused_baseline.len() == 1 { "y" } else { "ies" },
+            );
+        }
+    }
+    if outcome.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,662 @@
+//! The determinism-contract rule catalog (D01–D05) and its engine.
+//!
+//! Scope model: rules bind *non-test* code (`#[cfg(test)]` items are
+//! skipped — the contract protects simulation results, and test-local
+//! scaffolding cannot change them). D01/D02/D04 apply to the
+//! determinism-critical module set (`sim/`, `trace/`, `metrics/`,
+//! `coordinator/`, `config/`); D03 applies everywhere *except* the
+//! wall-clock-legitimate surfaces (`bench/`, `serve/`, `runtime/`,
+//! `main.rs`); D05 is a crate-wide structural check.
+//!
+//! Escape hatch: `// simlint: allow(Dxx) — reason` on the offending
+//! line or the line directly above suppresses that rule there. The
+//! reason is mandatory — a reasonless directive is itself a finding
+//! (D00) and suppresses nothing. D05 findings anchor to declarations,
+//! not use sites, and are baseline-only by design.
+
+use crate::diag::Diagnostic;
+use crate::lexer::{Comment, Lexed, TokKind};
+
+/// One catalog entry: what a rule means and why it exists.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    /// Stable id (`"D01"`); allow directives and baselines name it.
+    pub id: &'static str,
+    /// One-line summary.
+    pub title: &'static str,
+    /// Why the rule exists / what to use instead.
+    pub rationale: &'static str,
+}
+
+/// The rule catalog, in id order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D00",
+        title: "malformed simlint directive",
+        rationale: "an allow needs a known rule id and a written reason; a reasonless \
+                    allow suppresses nothing",
+    },
+    RuleInfo {
+        id: "D01",
+        title: "unordered std hash containers on determinism-critical paths",
+        rationale: "std::collections::{HashMap,HashSet} iterate in unspecified order; \
+                    use BTreeMap/BTreeSet or the fxhash-indexed patterns (util::fxhash)",
+    },
+    RuleInfo {
+        id: "D02",
+        title: "unstable sorts on arrival/event/record streams",
+        rationale: "sort_unstable* may reorder equal elements — the PR-6 same-microsecond \
+                    tie-order incident; use the stable sort* family",
+    },
+    RuleInfo {
+        id: "D03",
+        title: "wall clock or OS entropy on simulation paths",
+        rationale: "simulation time is virtual and randomness is seeded (util::rng::Pcg64); \
+                    real clocks/entropy belong only in bench/, serve/, runtime/, main.rs",
+    },
+    RuleInfo {
+        id: "D04",
+        title: "float keys or float comparisons inside ordering comparators",
+        rationale: "float comparators (partial_cmp, f32/f64 keys) are partial and \
+                    platform-sensitive; order by integers (cross-multiplied if needed)",
+    },
+    RuleInfo {
+        id: "D05",
+        title: "RecordKind/Counters coverage drift across files",
+        rationale: "every RecordKind variant must be dispatched in metrics and produced in \
+                    sim/, and every Counters field must be merged — else reports silently \
+                    drop data",
+    },
+];
+
+/// Whether `id` names a catalog rule.
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Module prefixes (relative to the scan root) bound by D01/D02/D04.
+pub const CRITICAL_PREFIXES: &[&str] = &["sim/", "trace/", "metrics/", "coordinator/", "config/"];
+
+/// Module prefixes exempt from D03 (real time is their job: harness
+/// timing, live serving, PJRT payload execution) plus the CLI entry.
+pub const CLOCK_EXEMPT_PREFIXES: &[&str] = &["bench/", "serve/", "runtime/"];
+
+fn in_critical_set(rel: &str) -> bool {
+    CRITICAL_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+fn clock_exempt(rel: &str) -> bool {
+    CLOCK_EXEMPT_PREFIXES.iter().any(|p| rel.starts_with(p)) || rel == "main.rs"
+}
+
+const D01_TYPES: &[&str] = &["HashMap", "HashSet"];
+const D03_IDENTS: &[&str] = &[
+    "Instant",
+    "SystemTime",
+    "RandomState",
+    "OsRng",
+    "ThreadRng",
+    "thread_rng",
+    "getrandom",
+    "from_entropy",
+];
+const D04_COMPARATORS: &[&str] = &[
+    "sort_by",
+    "sort_by_key",
+    "sort_unstable_by",
+    "sort_unstable_by_key",
+    "min_by",
+    "min_by_key",
+    "max_by",
+    "max_by_key",
+    "binary_search_by",
+    "binary_search_by_key",
+];
+
+/// One parsed source file, ready for rule passes.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, forward slashes.
+    pub rel: String,
+    /// Raw source lines (diag snippets, baseline matching).
+    pub lines: Vec<String>,
+    /// Lexed tokens + line comments.
+    pub lexed: Lexed,
+    /// Token-index ranges (end-exclusive) covered by `#[cfg(test)]` /
+    /// `#[test]` items.
+    test_spans: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    /// Lex `src` and precompute its test-item spans.
+    pub fn parse(rel: &str, src: &str) -> SourceFile {
+        let lexed = crate::lexer::lex(src);
+        let test_spans = test_spans(&lexed);
+        SourceFile {
+            rel: rel.to_string(),
+            lines: src.lines().map(str::to_string).collect(),
+            lexed,
+            test_spans,
+        }
+    }
+
+    fn in_test(&self, idx: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| idx >= a && idx < b)
+    }
+
+    fn snippet(&self, line: u32) -> String {
+        self.lines
+            .get(line.saturating_sub(1) as usize)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    }
+
+    fn diag(&self, rule: &'static str, line: u32, message: String) -> Diagnostic {
+        Diagnostic { rule, path: self.rel.clone(), line, message, snippet: self.snippet(line) }
+    }
+}
+
+/// Find the token index of the matching closer for the opener at
+/// `open` (`{`/`}`, `(`/`)`, `[`/`]`). Returns the index *of* the
+/// closer, or the last token when unbalanced.
+fn match_delim(lexed: &Lexed, open: usize, oc: char, cc: char) -> usize {
+    let mut depth = 0i64;
+    for (i, t) in lexed.toks.iter().enumerate().skip(open) {
+        if t.is_punct(oc) {
+            depth += 1;
+        } else if t.is_punct(cc) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+    }
+    lexed.toks.len().saturating_sub(1)
+}
+
+/// Token-index spans of items annotated `#[cfg(test)]` (or `#[test]`,
+/// `#[cfg(all(test, ...))]` — any attribute mentioning `test` without
+/// `not`). The span runs from the attribute to the end of the item
+/// body (`{...}`) or its terminating `;`.
+fn test_spans(lexed: &Lexed) -> Vec<(usize, usize)> {
+    let toks = &lexed.toks;
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_punct('#') && toks[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let close = match_delim(lexed, i + 1, '[', ']');
+        let attr = &toks[i + 2..close];
+        let mentions = |s: &str| attr.iter().any(|t| t.is_ident(s));
+        if !(mentions("test") && !mentions("not")) {
+            i = close + 1;
+            continue;
+        }
+        // Skip any further attributes between the marker and the item.
+        let mut j = close + 1;
+        while j + 1 < toks.len() && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+            j = match_delim(lexed, j + 1, '[', ']') + 1;
+        }
+        // Find the item body `{...}` (or a `;` declaration) at nesting
+        // depth zero of parens/brackets.
+        let mut pdepth = 0i64;
+        let mut end = toks.len().saturating_sub(1);
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                pdepth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                pdepth -= 1;
+            } else if t.is_punct('{') {
+                end = match_delim(lexed, j, '{', '}');
+                break;
+            } else if t.is_punct(';') && pdepth == 0 {
+                end = j;
+                break;
+            }
+            j += 1;
+        }
+        spans.push((i, end + 1));
+        i = end + 1;
+    }
+    spans
+}
+
+/// A parsed `// simlint: allow(Dxx) — reason` directive.
+#[derive(Clone, Debug)]
+struct Directive {
+    line: u32,
+    rule: String,
+}
+
+/// Parse directives out of a file's line comments. Returns the valid
+/// directives and a D00 diagnostic for each malformed one.
+fn parse_directives(
+    file: &SourceFile,
+    comments: &[Comment],
+) -> (Vec<Directive>, Vec<Diagnostic>) {
+    let mut dirs = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        let body = c.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("simlint:") else { continue };
+        let rest = rest.trim();
+        let parsed = rest.strip_prefix("allow(").and_then(|r| {
+            let (id, tail) = r.split_once(')')?;
+            let id = id.trim();
+            if !is_known_rule(id) {
+                return None;
+            }
+            let reason = tail
+                .trim_start_matches(|ch: char| {
+                    ch.is_whitespace() || matches!(ch, '—' | '–' | '-' | ':' | ',')
+                })
+                .trim();
+            if reason.is_empty() {
+                return None;
+            }
+            Some(id.to_string())
+        });
+        match parsed {
+            Some(rule) => dirs.push(Directive { line: c.line, rule }),
+            None => bad.push(file.diag(
+                "D00",
+                c.line,
+                format!(
+                    "malformed simlint directive `{}` — expected \
+                     `simlint: allow(Dxx) — reason` with a known rule id and a \
+                     non-empty reason (a reasonless allow suppresses nothing)",
+                    body
+                ),
+            )),
+        }
+    }
+    (dirs, bad)
+}
+
+/// Result of the per-file passes.
+#[derive(Debug, Default)]
+pub struct FileFindings {
+    /// Diagnostics that survived allow-directive suppression.
+    pub diags: Vec<Diagnostic>,
+    /// How many diagnostics a reasoned allow suppressed.
+    pub suppressed_allows: usize,
+}
+
+/// Run the single-file rules (D00–D04) over `file` and apply the
+/// allow escape hatch.
+pub fn check_file(file: &SourceFile) -> FileFindings {
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    let toks = &file.lexed.toks;
+
+    if in_critical_set(&file.rel) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || file.in_test(i) {
+                continue;
+            }
+            if D01_TYPES.contains(&t.text.as_str()) {
+                raw.push(file.diag(
+                    "D01",
+                    t.line,
+                    format!(
+                        "`{}` iterates in unspecified order on a determinism-critical \
+                         path — use BTreeMap/BTreeSet or util::fxhash::Fx{}",
+                        t.text, t.text
+                    ),
+                ));
+            }
+            if t.text.starts_with("sort_unstable") {
+                raw.push(file.diag(
+                    "D02",
+                    t.line,
+                    format!(
+                        "`{}` may reorder equal elements (the PR-6 same-microsecond \
+                         tie-order incident) — use the stable sort* family",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        raw.extend(d04_float_comparators(file));
+    }
+
+    if !clock_exempt(&file.rel) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == TokKind::Ident
+                && !file.in_test(i)
+                && D03_IDENTS.contains(&t.text.as_str())
+            {
+                raw.push(file.diag(
+                    "D03",
+                    t.line,
+                    format!(
+                        "wall-clock/OS-entropy source `{}` outside bench/, serve/, \
+                         runtime/, main.rs — simulation time is virtual and randomness \
+                         is seeded (util::rng::Pcg64)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+
+    let (dirs, bad_dirs) = parse_directives(file, &file.lexed.comments);
+    let allowed = |d: &Diagnostic| {
+        dirs.iter()
+            .any(|a| a.rule == d.rule && (a.line == d.line || a.line + 1 == d.line))
+    };
+    let mut out = FileFindings::default();
+    for d in raw {
+        if allowed(&d) {
+            out.suppressed_allows += 1;
+        } else {
+            out.diags.push(d);
+        }
+    }
+    out.diags.extend(bad_dirs);
+    out
+}
+
+/// D04: flag `f32`/`f64`/`partial_cmp`/float literals inside the
+/// argument list of an ordering-comparator call (`.sort_by(...)`,
+/// `.min_by_key(...)`, ...).
+fn d04_float_comparators(file: &SourceFile) -> Vec<Diagnostic> {
+    let toks = &file.lexed.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        let call = toks[i].is_punct('.')
+            && toks[i + 1].kind == TokKind::Ident
+            && D04_COMPARATORS.contains(&toks[i + 1].text.as_str())
+            && toks[i + 2].is_punct('(');
+        if !call || file.in_test(i) {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let close = match_delim(&file.lexed, i + 2, '(', ')');
+        for t in &toks[i + 3..close] {
+            let offending = match t.kind {
+                TokKind::Ident => matches!(t.text.as_str(), "f32" | "f64" | "partial_cmp"),
+                TokKind::Num { float } => float,
+                _ => false,
+            };
+            if offending {
+                out.push(file.diag(
+                    "D04",
+                    t.line,
+                    format!(
+                        "float ordering inside `.{}(...)` (`{}`): comparators on sim \
+                         paths must order by integers — floats are partial and \
+                         platform-sensitive",
+                        name,
+                        if t.text.is_empty() { "float" } else { &t.text }
+                    ),
+                ));
+                break; // one finding per comparator call
+            }
+        }
+        i = close + 1;
+    }
+    out
+}
+
+/// Run the crate-wide structural rule (D05) over all files.
+///
+/// D05a: every `RecordKind` variant must be referenced
+/// (`RecordKind::Variant`) in `metrics/mod.rs` outside the enum
+/// definition (the dispatch/merge side) *and* somewhere under `sim/`
+/// (the producer side).
+/// D05b: every named field of `struct Counters` must appear inside
+/// `Counters::merge` — a field missing from the merge silently breaks
+/// sharded report merging and the `overall = small + large` invariant.
+///
+/// Vacuously passes when the scanned tree has no
+/// `metrics/mod.rs` with a `RecordKind` enum (the rule is specific to
+/// this crate's report pipeline).
+pub fn check_crate(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(metrics) = files
+        .iter()
+        .find(|f| f.rel == "metrics/mod.rs" || f.rel.ends_with("/metrics/mod.rs"))
+    else {
+        return out;
+    };
+
+    if let Some((variants, def_span)) = parse_enum_variants(metrics, "RecordKind") {
+        for (name, line) in &variants {
+            let in_metrics = has_variant_usage(metrics, name, Some(def_span));
+            let in_sim = files
+                .iter()
+                .filter(|f| f.rel.starts_with("sim/") || f.rel.contains("/sim/"))
+                .any(|f| has_variant_usage(f, name, None));
+            if !in_metrics {
+                out.push(metrics.diag(
+                    "D05",
+                    *line,
+                    format!(
+                        "RecordKind::{name} is never dispatched in metrics/mod.rs \
+                         outside its definition — wire it through Report::record (and \
+                         the counter it feeds) before shipping the variant"
+                    ),
+                ));
+            }
+            if !in_sim {
+                out.push(metrics.diag(
+                    "D05",
+                    *line,
+                    format!(
+                        "RecordKind::{name} is never produced under sim/ — dead \
+                         variant, or its recording site is missing"
+                    ),
+                ));
+            }
+        }
+    }
+
+    if let Some((fields, struct_line)) = parse_struct_fields(metrics, "Counters") {
+        match fn_body_span(metrics, "merge") {
+            Some((a, b)) => {
+                for (name, line) in &fields {
+                    let merged = metrics.lexed.toks[a..b]
+                        .iter()
+                        .any(|t| t.is_ident(name));
+                    if !merged {
+                        out.push(metrics.diag(
+                            "D05",
+                            *line,
+                            format!(
+                                "Counters::{name} is missing from Counters::merge — \
+                                 sharded report merging and the overall = small + large \
+                                 consistency check would silently drop it"
+                            ),
+                        ));
+                    }
+                }
+            }
+            None => out.push(metrics.diag(
+                "D05",
+                struct_line,
+                "struct Counters has no merge fn — report merging cannot cover its \
+                 fields"
+                    .to_string(),
+            )),
+        }
+    }
+    out
+}
+
+/// Parse the variant list of `enum <name> { ... }` in `file`,
+/// returning `(variants, (body_open_idx, body_close_idx))`.
+fn parse_enum_variants(
+    file: &SourceFile,
+    name: &str,
+) -> Option<(Vec<(String, u32)>, (usize, usize))> {
+    let toks = &file.lexed.toks;
+    let at = (0..toks.len().saturating_sub(2)).find(|&i| {
+        toks[i].is_ident("enum") && toks[i + 1].is_ident(name) && !file.in_test(i)
+    })?;
+    let open = (at + 2..toks.len()).find(|&i| toks[i].is_punct('{'))?;
+    let close = match_delim(&file.lexed, open, '{', '}');
+    let mut variants = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        let t = &toks[i];
+        // Skip attributes on variants.
+        if t.is_punct('#') && toks.get(i + 1).is_some_and(|n| n.is_punct('[')) {
+            i = match_delim(&file.lexed, i + 1, '[', ']') + 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text.chars().next().is_some_and(char::is_uppercase) {
+            variants.push((t.text.clone(), t.line));
+            // Skip the payload / discriminant to the next separator.
+            i += 1;
+            while i < close {
+                if toks[i].is_punct('{') {
+                    i = match_delim(&file.lexed, i, '{', '}') + 1;
+                } else if toks[i].is_punct('(') {
+                    i = match_delim(&file.lexed, i, '(', ')') + 1;
+                } else if toks[i].is_punct(',') {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        i += 1;
+    }
+    Some((variants, (open, close)))
+}
+
+/// Whether `file` references `RecordKind::<variant>` in non-test code,
+/// outside `exclude` (the enum's own definition span).
+fn has_variant_usage(file: &SourceFile, variant: &str, exclude: Option<(usize, usize)>) -> bool {
+    let toks = &file.lexed.toks;
+    (0..toks.len().saturating_sub(3)).any(|i| {
+        toks[i].is_ident("RecordKind")
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].is_ident(variant)
+            && !file.in_test(i)
+            && match exclude {
+                Some((a, b)) => i < a || i > b,
+                None => true,
+            }
+    })
+}
+
+/// Parse the named-field list of `struct <name> { ... }`, returning
+/// `(fields, struct_line)`.
+fn parse_struct_fields(file: &SourceFile, name: &str) -> Option<(Vec<(String, u32)>, u32)> {
+    let toks = &file.lexed.toks;
+    let at = (0..toks.len().saturating_sub(2)).find(|&i| {
+        toks[i].is_ident("struct") && toks[i + 1].is_ident(name) && !file.in_test(i)
+    })?;
+    let open = (at + 2..toks.len()).find(|&i| toks[i].is_punct('{'))?;
+    let close = match_delim(&file.lexed, open, '{', '}');
+    let mut fields = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        let t = &toks[i];
+        if t.is_punct('#') && toks.get(i + 1).is_some_and(|n| n.is_punct('[')) {
+            i = match_delim(&file.lexed, i + 1, '[', ']') + 1;
+            continue;
+        }
+        if t.is_ident("pub") {
+            // Skip `pub` and a possible `(crate)` restriction.
+            i += 1;
+            if i < close && toks[i].is_punct('(') {
+                i = match_delim(&file.lexed, i, '(', ')') + 1;
+            }
+            continue;
+        }
+        if t.kind == TokKind::Ident && toks.get(i + 1).is_some_and(|n| n.is_punct(':')) {
+            fields.push((t.text.clone(), t.line));
+            // Skip the type to the next top-level comma.
+            let mut depth = 0i64;
+            i += 2;
+            while i < close {
+                let x = &toks[i];
+                if x.is_punct('<') || x.is_punct('(') || x.is_punct('[') {
+                    depth += 1;
+                } else if x.is_punct('>') || x.is_punct(')') || x.is_punct(']') {
+                    depth -= 1;
+                } else if x.is_punct(',') && depth <= 0 {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+    Some((fields, toks[at].line))
+}
+
+/// Token span `(start, end)` of the body of the first non-test
+/// `fn <name>` in `file`.
+fn fn_body_span(file: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    let toks = &file.lexed.toks;
+    let at = (0..toks.len().saturating_sub(1)).find(|&i| {
+        toks[i].is_ident("fn") && toks[i + 1].is_ident(name) && !file.in_test(i)
+    })?;
+    let open = (at + 2..toks.len()).find(|&i| toks[i].is_punct('{'))?;
+    Some((open, match_delim(&file.lexed, open, '{', '}')))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_spans_cover_cfg_test_modules_but_not_cfg_not_test() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n\
+                   #[cfg(not(test))]\nfn also_live() {}\n";
+        let f = SourceFile::parse("sim/x.rs", src);
+        let helper = f
+            .lexed
+            .toks
+            .iter()
+            .position(|t| t.is_ident("helper"))
+            .unwrap();
+        let live = f
+            .lexed
+            .toks
+            .iter()
+            .position(|t| t.is_ident("also_live"))
+            .unwrap();
+        assert!(f.in_test(helper));
+        assert!(!f.in_test(live));
+    }
+
+    #[test]
+    fn enum_and_struct_parsers_handle_payloads_and_attrs() {
+        let src = "pub enum RecordKind {\n    Hit,\n    #[allow(dead_code)]\n    \
+                   Migrate { donor: usize, recipient: usize },\n    Off(u64),\n}\n\
+                   pub struct Counters {\n    pub hits: u64,\n    pub latency: Vec<(u64, u64)>,\n}\n";
+        let f = SourceFile::parse("metrics/mod.rs", src);
+        let (variants, _) = parse_enum_variants(&f, "RecordKind").unwrap();
+        let names: Vec<&str> = variants.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["Hit", "Migrate", "Off"]);
+        let (fields, _) = parse_struct_fields(&f, "Counters").unwrap();
+        let fnames: Vec<&str> = fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(fnames, ["hits", "latency"]);
+    }
+
+    #[test]
+    fn directives_require_reasons_and_known_rules() {
+        let src = "// simlint: allow(D02) — integer keys, ties indistinguishable\n\
+                   // simlint: allow(D02)\n// simlint: allow(D99) — nope\n// plain comment\n";
+        let f = SourceFile::parse("sim/x.rs", src);
+        let (dirs, bad) = parse_directives(&f, &f.lexed.comments);
+        assert_eq!(dirs.len(), 1);
+        assert_eq!(dirs[0].rule, "D02");
+        assert_eq!(bad.len(), 2, "{bad:?}");
+        assert!(bad.iter().all(|d| d.rule == "D00"));
+    }
+}

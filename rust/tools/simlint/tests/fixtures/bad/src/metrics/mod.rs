@@ -1,0 +1,23 @@
+//! D05 fixture: `Ghost` is declared but never dispatched here nor
+//! produced under sim/, and `misses` is missing from the merge.
+pub enum RecordKind {
+    Hit,
+    Ghost,
+}
+
+pub struct Counters {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Counters {
+    pub fn merge(&mut self, other: &Counters) {
+        self.hits += other.hits;
+    }
+}
+
+pub fn record(kind: RecordKind, c: &mut Counters) {
+    if let RecordKind::Hit = kind {
+        c.hits += 1;
+    }
+}

@@ -1,0 +1,5 @@
+//! D00 fixture: a reasonless allow is itself a finding and suppresses
+//! nothing — the HashSet it decorates must still trip D01.
+use std::collections::HashSet; // simlint: allow(D01)
+
+pub type Funcs = HashSet<u32>;

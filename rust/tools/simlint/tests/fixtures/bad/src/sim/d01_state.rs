@@ -1,0 +1,6 @@
+//! D01 fixture: unspecified-iteration-order containers on a sim path.
+use std::collections::HashMap;
+
+pub struct ShareState {
+    pub deflated: HashMap<(usize, u32), u64>,
+}

@@ -1,0 +1,5 @@
+//! D02 fixture: unstable sort on an arrival stream.
+pub fn order(mut events: Vec<(u64, u32)>) -> Vec<(u64, u32)> {
+    events.sort_unstable_by_key(|e| e.0);
+    events
+}

@@ -1,0 +1,6 @@
+//! D04 fixture: a float comparator on a sim path. The `f64` in the
+//! signature must NOT trip the rule — only the comparator argument does.
+pub fn rank(mut xs: Vec<(u64, f64)>) -> Vec<(u64, f64)> {
+    xs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    xs
+}

@@ -1,0 +1,6 @@
+//! D03 fixture: wall clock on a determinism-critical path.
+use std::time::Instant;
+
+pub fn stamp() -> u128 {
+    Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,21 @@
+//! D05 fixture (passing): the only variant is dispatched here and
+//! produced under sim/, and every Counters field is merged.
+pub enum RecordKind {
+    Hit,
+}
+
+pub struct Counters {
+    pub hits: u64,
+}
+
+impl Counters {
+    pub fn merge(&mut self, other: &Counters) {
+        self.hits += other.hits;
+    }
+}
+
+pub fn record(kind: RecordKind, c: &mut Counters) {
+    match kind {
+        RecordKind::Hit => c.hits += 1,
+    }
+}

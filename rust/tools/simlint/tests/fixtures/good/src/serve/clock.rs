@@ -1,0 +1,6 @@
+//! Wall-clock time is the serving path's job — D03 exempts serve/.
+use std::time::Instant;
+
+pub fn ms_since(t0: Instant) -> u128 {
+    t0.elapsed().as_millis()
+}

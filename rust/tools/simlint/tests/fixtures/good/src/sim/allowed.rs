@@ -1,0 +1,8 @@
+//! The escape hatch: a reasoned allow on the line above (or the same
+//! line) suppresses exactly that rule at that site.
+pub fn dedup(mut xs: Vec<u64>) -> Vec<u64> {
+    // simlint: allow(D02) — integer keys: equal elements are indistinguishable
+    xs.sort_unstable();
+    xs.dedup();
+    xs
+}

@@ -1,0 +1,7 @@
+//! The sim side produces every RecordKind variant (D05's cross-file
+//! producer leg).
+use crate::metrics::{record, Counters, RecordKind};
+
+pub fn serve(c: &mut Counters) {
+    record(RecordKind::Hit, c);
+}

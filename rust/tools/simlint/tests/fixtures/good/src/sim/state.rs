@@ -1,0 +1,13 @@
+//! Deterministic containers and stable sorts pass the catalog; the
+//! fxhash-indexed pattern (`FxHashMap`) is explicitly allowed by D01.
+use std::collections::BTreeMap;
+
+pub struct ShareState {
+    pub deflated: BTreeMap<(usize, u32), u64>,
+    pub homes: crate::util::fxhash::FxHashMap<u32, usize>,
+}
+
+pub fn order(mut events: Vec<(u64, u32)>) -> Vec<(u64, u32)> {
+    events.sort_by_key(|e| e.0);
+    events
+}

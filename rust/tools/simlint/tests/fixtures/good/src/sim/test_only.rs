@@ -1,0 +1,22 @@
+//! Test modules are outside the contract: every rule skips
+//! `#[cfg(test)]` spans (test scaffolding cannot change sim results).
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn hash_maps_are_fine_in_tests() {
+        let mut m = HashMap::new();
+        m.insert(1u32, 2u64);
+        m.retain(|_, v| {
+            let mut keys: Vec<u32> = vec![*v as u32];
+            keys.sort_unstable();
+            !keys.is_empty()
+        });
+        assert_eq!(super::double(2), 4);
+    }
+}
