@@ -40,7 +40,8 @@
 //!
 //! [cluster.sharding]                  # absent = sequential kernel
 //! shards = 4                          # worker threads (capped at nodes)
-//! window_us = 1000000                 # arrival-batch window width (µs)
+//! window_us = 1000000                 # arrival-batch window width (µs; 0 = barrier per arrival)
+//! mode = "exact"                      # "approx" opts into the versioned Mode C kernel
 //!
 //! [cluster.migration]                 # absent = migration disabled
 //! enabled = true                      # optional kill switch
@@ -94,7 +95,8 @@ use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::{AdaptiveConfig, Balancer};
 use crate::sim::cluster::{
     ChurnConfig, CloudTier, ClusterSpec, ControllerConfig, DeflationConfig, FairShareConfig,
-    MigrationPolicy, NodePolicy, NodeSpec, RouterKind, ShardingConfig, SloConfig, Topology,
+    MigrationPolicy, NodePolicy, NodeSpec, RouterKind, ShardMode, ShardingConfig, SloConfig,
+    Topology,
 };
 use crate::trace::source::{ArrivalSource, ClosedLoopSource, ReplaySource, SynthSource};
 use crate::trace::synth::{BurstConfig, SloSynthConfig, SynthConfig};
@@ -531,9 +533,9 @@ impl SimConfig {
                 if sh.shards == 0 {
                     bail!("cluster.sharding.shards must be > 0");
                 }
-                if sh.window_us == 0 {
-                    bail!("cluster.sharding.window_us must be > 0");
-                }
+                // window_us = 0 is legal: a flush per arrival under the
+                // exact kernel, a barrier per arrival (the bit-for-bit
+                // degenerate case) under mode = "approx".
             }
             if let Some(slo) = &c.slo {
                 if let Some(fs) = &slo.fairshare {
@@ -869,6 +871,14 @@ impl SimConfig {
                     "window_us" => {
                         sh.window_us =
                             v.as_u64().ok_or_else(|| anyhow!("cluster.sharding.window_us"))?
+                    }
+                    "mode" => {
+                        sh.mode = v
+                            .as_str()
+                            .and_then(ShardMode::parse)
+                            .ok_or_else(|| {
+                                anyhow!("cluster.sharding.mode must be \"exact\" or \"approx\"")
+                            })?
                     }
                     other => bail!("unknown cluster.sharding key: {other}"),
                 }
@@ -1212,6 +1222,9 @@ impl SimConfig {
                 if let Some(sh) = &c.sharding {
                     if sh.shards > 1 {
                         extras.push_str(&format!(" shards {}", sh.shards));
+                    }
+                    if sh.mode == ShardMode::Approx {
+                        extras.push_str(" approx");
                     }
                 }
                 format!(
@@ -1662,21 +1675,43 @@ mod tests {
             "#,
         )
         .unwrap();
-        assert_eq!(
-            cfg.cluster.as_ref().unwrap().sharding,
-            Some(ShardingConfig { shards: 4, window_us: 250_000 })
-        );
-        assert_eq!(cfg.sharding(), ShardingConfig { shards: 4, window_us: 250_000 });
+        let want = ShardingConfig { shards: 4, window_us: 250_000, mode: ShardMode::Exact };
+        assert_eq!(cfg.cluster.as_ref().unwrap().sharding, Some(want));
+        assert_eq!(cfg.sharding(), want);
         let d = cfg.describe();
         assert!(d.contains("shards 4"), "{d}");
+        assert!(!d.contains("approx"), "exact mode must not be tagged approx: {d}");
 
-        // Bare section keeps the defaults (sequential, 1 s window).
+        // Bare section keeps the defaults (sequential, 1 s window,
+        // exact mode).
         let cfg =
             SimConfig::from_toml_str("[cluster]\nnodes = 2\n[cluster.sharding]").unwrap();
         assert_eq!(cfg.cluster.as_ref().unwrap().sharding, Some(ShardingConfig::default()));
 
         // Absent section is the sequential default.
         assert_eq!(SimConfig::edge_default(8192).sharding(), ShardingConfig::default());
+
+        // The Mode C opt-in parses, describes, and allows the window-0
+        // degenerate case (a barrier per arrival).
+        let cfg = SimConfig::from_toml_str(
+            r#"
+            [cluster]
+            nodes = 4
+            router = "least-loaded"
+            fallbacks = 0
+            [cluster.sharding]
+            shards = 4
+            window_us = 0
+            mode = "approx"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.sharding(),
+            ShardingConfig { shards: 4, window_us: 0, mode: ShardMode::Approx }
+        );
+        let d = cfg.describe();
+        assert!(d.contains("approx"), "{d}");
     }
 
     #[test]
@@ -1685,11 +1720,19 @@ mod tests {
         assert!(SimConfig::from_toml_str("[cluster.sharding]\nshards = 2").is_err());
         for bad in [
             "[cluster]\nnodes = 2\n[cluster.sharding]\nshards = 0",
-            "[cluster]\nnodes = 2\n[cluster.sharding]\nwindow_us = 0",
+            "[cluster]\nnodes = 2\n[cluster.sharding]\nmode = \"fuzzy\"",
+            "[cluster]\nnodes = 2\n[cluster.sharding]\nmode = 3",
             "[cluster]\nnodes = 2\n[cluster.sharding]\nbogus = 1",
         ] {
             assert!(SimConfig::from_toml_str(bad).is_err(), "{bad}");
         }
+        // window_us = 0 is no longer rejected: it is the degenerate
+        // exact case of the approximate kernel (and a plain batching
+        // width for the exact one).
+        assert!(SimConfig::from_toml_str(
+            "[cluster]\nnodes = 2\n[cluster.sharding]\nwindow_us = 0"
+        )
+        .is_ok());
     }
 
     #[test]

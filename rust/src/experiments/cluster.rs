@@ -575,6 +575,27 @@ pub fn sustained_sticky_spec() -> ClusterSpec {
     .with_cloud(CLOUD_RTT_US)
 }
 
+/// The sustained fleet behind the least-loaded router with no fallback
+/// retries — the weakly coupled twin of [`sustained_sticky_spec`] and
+/// the acceptance fleet of the approximate-parallel kernel
+/// ([`crate::sim::cluster::shard`] Mode C): load-aware placement makes
+/// it refuse exact decomposition, but under `--shard-mode approx` the
+/// windowed occupancy exchange splits it across workers. The wall-clock
+/// bench times this spec sequentially and at 4 approx shards (cases
+/// 7/8), and the speedup between them is the payoff the mode exists
+/// for.
+pub fn sustained_ll_spec() -> ClusterSpec {
+    ClusterSpec::homogeneous(
+        SUSTAINED_NODES,
+        SUSTAINED_NODE_MEM_MB,
+        NodePolicy::kiss_default(),
+    )
+    .with_router(RouterKind::LeastLoaded)
+    .with_fallbacks(0)
+    .with_init_occupancy(InitOccupancy::HoldsMemory)
+    .with_cloud(CLOUD_RTT_US)
+}
+
 /// A 60 s slice of [`sustained_workload`] for wall-clock benchmarking:
 /// ~1.7 M invocations at full scale — long enough to dominate setup
 /// costs, short enough for repeated trials.
@@ -803,14 +824,21 @@ mod tests {
 
     #[test]
     fn sustained_sticky_spec_decomposes() {
-        use crate::sim::cluster::{plan_sharding, ShardingConfig};
+        use crate::sim::cluster::{plan_sharding, PlanKind, ShardingConfig};
         let spec = sustained_sticky_spec();
         assert_eq!(spec.nodes.len(), SUSTAINED_NODES);
         assert_eq!(spec.max_fallbacks, 0);
         let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(4));
-        assert!(plan.parallel, "{}", plan.reason);
+        assert!(plan.parallel(), "{}", plan.reason);
         assert_eq!(plan.shards, 4);
-        // The least-loaded capstone spec, by contrast, must serialize.
+        // The least-loaded bench twin refuses exact decomposition but
+        // admits the approximate kernel when (and only when) asked.
+        let ll = sustained_ll_spec();
+        assert_eq!(ll.max_fallbacks, 0);
+        let exact = plan_sharding(&ll, false, &ShardingConfig::with_shards(4));
+        assert!(!exact.parallel(), "{}", exact.reason);
+        let approx = plan_sharding(&ll, false, &ShardingConfig::approx(4));
+        assert_eq!(approx.kind, PlanKind::ApproxParallel, "{}", approx.reason);
         let synth = sustained_bench_workload();
         assert_eq!(synth.duration_us, 60_000_000);
         assert_eq!(synth.rate_per_sec, 28_000.0);

@@ -13,7 +13,7 @@
 //!                [--slo-ms N] [--slo-fairshare-window-s F] [--slo-deflate-pressure F]
 //!                [--source synth|replay|closed-loop] [--trace STEM]
 //!                [--clients N] [--think-ms N]
-//!                [--shards N] [--window-us N]
+//!                [--shards N] [--window-us N] [--shard-mode exact|approx]
 //! repro analyze  [--seed N] [--duration-s N]      # Figs 2–5 on a fresh trace
 //! repro trace    --out STEM [--seed N] [--duration-s N] [--rate F]
 //! repro serve    [--port P] [--mem-gb N] [--artifacts DIR]
@@ -40,7 +40,7 @@ use kiss_faas::experiments::{self, run_single, ExpParams, Experiment, Group};
 use kiss_faas::serve::node::EdgeNode;
 use kiss_faas::serve::server::Server;
 use kiss_faas::sim::cluster::{
-    plan_sharding, run_cluster_sharded, MigrationPolicy, RouterKind, Topology,
+    plan_sharding, run_cluster_sharded, MigrationPolicy, RouterKind, ShardMode, Topology,
 };
 use kiss_faas::trace::synth::{synthesize, SynthConfig};
 use kiss_faas::trace::{loader, FunctionId, FunctionProfile, SizeClass};
@@ -86,7 +86,7 @@ fn print_usage() {
          USAGE:\n  repro experiment <id|group|all|list|index> [--format text|json|csv] [--out DIR]\n                \
          [--jobs N] [--seed N] [--scale F] [--stress-scale F]\n  \
          repro simulate [--config FILE] [--mem-gb N] [--baseline] [--split F] [--policy P] [--seed N]\n  \
-         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--slo-ms N] [--slo-fairshare-window-s F] [--slo-deflate-pressure F]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N] [--shards N] [--window-us N]\n  \
+         repro cluster [--config FILE] [--nodes N] [--router R] [--small-nodes N] [--fallbacks N] [--cloud-rtt-ms F]\n                [--migration-cost-ms F] [--controller-epoch-s N] [--topology T] [--hop-ms F] [--churn-rate F] [--sweep]\n                [--slo-ms N] [--slo-fairshare-window-s F] [--slo-deflate-pressure F]\n                [--source synth|replay|closed-loop] [--trace STEM] [--clients N] [--think-ms N] [--shards N] [--window-us N] [--shard-mode exact|approx]\n  \
          repro analyze [--seed N] [--duration-s N]\n  \
          repro trace --out STEM [--seed N] [--duration-s N] [--rate F]\n  \
          repro serve [--port P] [--mem-gb N] [--artifacts DIR]\n  \
@@ -523,11 +523,17 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         cc.sharding = Some(sh);
     }
     if let Some(w) = flags.get_parsed::<u64>("window-us")? {
-        if w == 0 {
-            bail!("--window-us must be > 0");
-        }
+        // 0 is legal: a flush per arrival (exact) / a barrier per
+        // arrival, which is bit-for-bit sequential (approx).
         let mut sh = cc.sharding.unwrap_or_default();
         sh.window_us = w;
+        cc.sharding = Some(sh);
+    }
+    if let Some(m) = flags.get("shard-mode") {
+        let mode = ShardMode::parse(m)
+            .ok_or_else(|| anyhow!("bad --shard-mode {m:?} (exact|approx)"))?;
+        let mut sh = cc.sharding.unwrap_or_default();
+        sh.mode = mode;
         cc.sharding = Some(sh);
     }
     cfg.cluster = Some(cc);
@@ -539,7 +545,7 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     // init-occupancy convention (HoldsMemory / KISS_INIT_LATENCY_ONLY).
     let spec = cfg.build_cluster_spec();
     let sharding = cfg.sharding();
-    if sharding.shards > 1 {
+    if sharding.shards > 1 || sharding.mode == ShardMode::Approx {
         let plan = plan_sharding(&spec, source.wants_feedback(), &sharding);
         println!("# sharding: {}", plan.describe());
     }

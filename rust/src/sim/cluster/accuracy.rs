@@ -1,0 +1,298 @@
+//! The Mode C accuracy harness: how far does the approximate-parallel
+//! kernel drift from the sequential one, and is that drift bounded?
+//!
+//! The windowed occupancy exchange ([`super::shard`]) relaxes exactly
+//! one thing — routing-snapshot freshness within a window — so its
+//! divergence from the sequential kernel is a property of the config,
+//! the workload, and the window width, not of thread scheduling.
+//! That makes it *measurable*: this module runs a seeded generator over
+//! the approx-eligible config subspace, executes every case both ways,
+//! and reduces each pair of [`ClusterReport`]s to a [`Divergence`] —
+//! absolute percentage-point deltas on the rate counters (cold-start %,
+//! drop %, offload %) and relative deltas on the e2e tail percentiles
+//! (p95, p99).
+//!
+//! [`COMMITTED_BOUNDS`] is the committed tolerance envelope:
+//! `tests/approx_accuracy.rs` fails the build when any seeded case
+//! breaches it, and CI runs the same harness at reduced scale (the
+//! `KISS_ACCURACY_CASES` env knob). The bounds are versioned alongside
+//! [`APPROX_VERSION`](super::APPROX_VERSION): tightening them is a
+//! ratchet (safe any time measurements allow); loosening them or
+//! changing what they measure means the approximation changed and the
+//! version must bump.
+//!
+//! The harness quantifies *approximation error only*. The degenerate
+//! exactness locks (window width 0 and a single shard reproduce the
+//! sequential kernel bit-for-bit) live in the shard and differential
+//! tests — here the window widths are deliberately real (50 ms – 1 s of
+//! virtual time) so the measured drift is the drift users of
+//! `--shard-mode approx` will see.
+
+use crate::sim::InitOccupancy;
+use crate::trace::source::SynthSource;
+use crate::trace::synth::SynthConfig;
+use crate::util::rng::Pcg64;
+
+use super::{
+    plan_sharding, run_cluster_sharded, run_cluster_source, ClusterReport, ClusterSpec,
+    NodePolicy, PlanKind, RouterKind, ShardingConfig, Topology,
+};
+
+/// Tolerance envelope the approximate kernel must stay inside on every
+/// generated case, or the build fails.
+///
+/// The committed values ([`COMMITTED_BOUNDS`]) are a deliberately
+/// conservative initial envelope chosen by analysis of the mechanism
+/// (a frozen snapshot can misroute arrivals for at most one window, so
+/// rate counters move by at most the per-window arrival share; tails
+/// move when a misroute turns a warm hit into a cold start): tighten
+/// them as measured fleets accumulate, never loosen without bumping
+/// [`APPROX_VERSION`](super::APPROX_VERSION).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccuracyBounds {
+    /// Max |Δ cold-start %| in percentage points.
+    pub max_cold_pp: f64,
+    /// Max |Δ drop %| in percentage points.
+    pub max_drop_pp: f64,
+    /// Max |Δ offload %| in percentage points.
+    pub max_offload_pp: f64,
+    /// Max relative |Δ p95 e2e| (fraction of the sequential p95).
+    pub max_p95_rel: f64,
+    /// Max relative |Δ p99 e2e| (fraction of the sequential p99).
+    pub max_p99_rel: f64,
+}
+
+/// The committed envelope for `APPROX_VERSION = 1` (see
+/// [`AccuracyBounds`] for the ratchet policy).
+pub const COMMITTED_BOUNDS: AccuracyBounds = AccuracyBounds {
+    max_cold_pp: 7.5,
+    max_drop_pp: 7.5,
+    max_offload_pp: 7.5,
+    max_p95_rel: 0.35,
+    max_p99_rel: 0.50,
+};
+
+/// Denominator floor (µs) for the relative tail deltas: below ~1 ms the
+/// sequential percentile sits in the histogram's finest bins, where a
+/// one-bin shift is a huge *relative* move but a microscopic absolute
+/// one. Flooring the denominator keeps the relative bound meaningful
+/// without a separate absolute bound.
+pub const TAIL_FLOOR_US: f64 = 1_000.0;
+
+/// One case's measured divergence between the sequential and
+/// approximate kernels.
+#[derive(Clone, Debug)]
+pub struct Divergence {
+    /// Human-readable case description (router, fleet, window, seed).
+    pub label: String,
+    /// |Δ cold-start %| (percentage points).
+    pub cold_pp: f64,
+    /// |Δ drop %| (percentage points).
+    pub drop_pp: f64,
+    /// |Δ offload %| (percentage points).
+    pub offload_pp: f64,
+    /// |Δ p95 e2e| / max(sequential p95, [`TAIL_FLOOR_US`]).
+    pub p95_rel: f64,
+    /// |Δ p99 e2e| / max(sequential p99, [`TAIL_FLOOR_US`]).
+    pub p99_rel: f64,
+}
+
+impl Divergence {
+    /// `Ok` when every metric is inside `bounds`; otherwise the first
+    /// breach, formatted for a test failure message.
+    pub fn within(&self, bounds: &AccuracyBounds) -> Result<(), String> {
+        let checks = [
+            ("cold pp", self.cold_pp, bounds.max_cold_pp),
+            ("drop pp", self.drop_pp, bounds.max_drop_pp),
+            ("offload pp", self.offload_pp, bounds.max_offload_pp),
+            ("p95 rel", self.p95_rel, bounds.max_p95_rel),
+            ("p99 rel", self.p99_rel, bounds.max_p99_rel),
+        ];
+        for (name, got, max) in checks {
+            if got > max {
+                return Err(format!("{}: {name} {got:.4} exceeds bound {max:.4}", self.label));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Percentile delta with NaN hygiene: an empty histogram reports NaN,
+/// which here means "no observations on either side" (both kernels see
+/// the identical arrival stream) and scores zero drift.
+fn tail_rel(approx_us: f64, seq_us: f64) -> f64 {
+    let a = if approx_us.is_nan() { 0.0 } else { approx_us };
+    let s = if seq_us.is_nan() { 0.0 } else { seq_us };
+    (a - s).abs() / s.max(TAIL_FLOOR_US)
+}
+
+/// Reduce a sequential/approx report pair to its [`Divergence`].
+pub fn divergence(label: String, seq: &ClusterReport, approx: &ClusterReport) -> Divergence {
+    let sl = seq.report.latency();
+    let al = approx.report.latency();
+    Divergence {
+        label,
+        cold_pp: (approx.report.overall.cold_start_pct() - seq.report.overall.cold_start_pct())
+            .abs(),
+        drop_pp: (approx.report.overall.drop_pct() - seq.report.overall.drop_pct()).abs(),
+        offload_pp: (approx.report.overall.offload_pct() - seq.report.overall.offload_pct())
+            .abs(),
+        p95_rel: tail_rel(al.e2e.p95_us(), sl.e2e.p95_us()),
+        p99_rel: tail_rel(al.e2e.p99_us(), sl.e2e.p99_us()),
+    }
+}
+
+/// One generated case: a spec in the approx-eligible subspace, its
+/// workload, and the sharding request.
+struct Case {
+    label: String,
+    spec: ClusterSpec,
+    synth: SynthConfig,
+    sharding: ShardingConfig,
+}
+
+/// Draw one case from the approx-eligible subspace: a load-aware
+/// router, no fallbacks/migration/controller/churn/SLO, open loop —
+/// exactly the configs [`plan_sharding`] admits to Mode C. Fleet
+/// shapes, cloud tiers, topologies, windows, and workload intensities
+/// all vary so the committed bounds are exercised across the regime,
+/// not at one friendly operating point.
+fn gen_case(rng: &mut Pcg64, i: u64) -> Case {
+    let mut r = rng.fork(i);
+    let nodes = 2 + r.below(7) as usize; // 2..=8
+    let mem_mb = 512 + 256 * r.below(4); // 512..=1280
+    let router = if r.bernoulli(0.5) {
+        RouterKind::LeastLoaded
+    } else {
+        RouterKind::SizeAffinity { small_nodes: 1 + r.below(nodes as u64) as usize }
+    };
+    let cloud = [0u64, 20_000, 80_000][r.below(3) as usize];
+    let topology = match r.below(3) {
+        0 => Topology::Flat,
+        1 => Topology::Star { hop_us: 1_000 },
+        _ => Topology::Ring { hop_us: 1_000 },
+    };
+    let occupancy =
+        if r.bernoulli(0.5) { InitOccupancy::Empty } else { InitOccupancy::HoldsMemory };
+    let mut spec = ClusterSpec::homogeneous(nodes, mem_mb, NodePolicy::kiss_default())
+        .with_router(router)
+        .with_fallbacks(0)
+        .with_init_occupancy(occupancy)
+        .with_topology(topology);
+    if cloud > 0 {
+        spec = spec.with_cloud(cloud);
+    }
+    let shards = 2 + r.below(3) as usize; // 2..=4
+    let window_us = [50_000u64, 250_000, 1_000_000][r.below(3) as usize];
+    let sharding = ShardingConfig { shards, window_us, mode: super::ShardMode::Approx };
+    let synth = SynthConfig {
+        seed: 9_000 + i,
+        n_small: 20 + r.below(30) as usize,
+        n_large: 4 + r.below(8) as usize,
+        duration_us: (20 + r.below(40)) * 1_000_000, // 20–60 virtual s
+        rate_per_sec: 20.0 + r.below(60) as f64,
+        ..SynthConfig::default()
+    };
+    let label = format!(
+        "case {i}: {router:?} nodes={nodes} mem={mem_mb}MB cloud={cloud}us \
+         shards={shards} window={window_us}us seed={}",
+        synth.seed
+    );
+    Case { label, spec, synth, sharding }
+}
+
+/// Run `cases` generated configs through both kernels and return their
+/// divergences. Deterministic in `(cases, seed)`. Panics if a generated
+/// case fails to plan approx-parallel — that would mean the harness is
+/// no longer measuring the approximation.
+pub fn run_harness(cases: u64, seed: u64) -> Vec<Divergence> {
+    let mut rng = Pcg64::new(seed);
+    (0..cases)
+        .map(|i| {
+            let case = gen_case(&mut rng, i);
+            let plan = plan_sharding(&case.spec, false, &case.sharding);
+            assert_eq!(
+                plan.kind,
+                PlanKind::ApproxParallel,
+                "harness case left the approx subspace: {}",
+                plan.reason
+            );
+            let seq = run_cluster_source(&mut SynthSource::new(&case.synth), &case.spec);
+            let approx =
+                run_cluster_sharded(&mut SynthSource::new(&case.synth), &case.spec, &case.sharding);
+            assert_eq!(
+                approx.report.overall.total_accesses(),
+                seq.report.overall.total_accesses(),
+                "{}: the approximation must account for every arrival exactly once",
+                case.label
+            );
+            divergence(case.label, &seq, &approx)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Report;
+
+    #[test]
+    fn identical_reports_score_zero_divergence() {
+        let case = gen_case(&mut Pcg64::new(1), 0);
+        let r = run_cluster_source(&mut SynthSource::new(&case.synth), &case.spec);
+        let d = divergence("self".into(), &r, &r);
+        assert_eq!(d.cold_pp, 0.0);
+        assert_eq!(d.drop_pp, 0.0);
+        assert_eq!(d.offload_pp, 0.0);
+        assert_eq!(d.p95_rel, 0.0);
+        assert_eq!(d.p99_rel, 0.0);
+        d.within(&COMMITTED_BOUNDS).unwrap();
+    }
+
+    #[test]
+    fn empty_tails_score_zero_not_nan() {
+        let seq = ClusterReport {
+            report: Report::default(),
+            per_node: vec![],
+            peak_used_mb: vec![],
+            rerouted: 0,
+            rescues: 0,
+            small_node_moves: 0,
+            resplits: 0,
+            churn_reroutes: 0,
+            deflations: 0,
+            reinflations: 0,
+            live: vec![],
+            router: RouterKind::LeastLoaded,
+            descriptions: vec![],
+        };
+        let d = divergence("empty".into(), &seq, &seq.clone());
+        assert_eq!(d.p95_rel, 0.0, "NaN percentiles must not poison the bound check");
+        d.within(&COMMITTED_BOUNDS).unwrap();
+    }
+
+    #[test]
+    fn bound_breaches_name_the_metric() {
+        let d = Divergence {
+            label: "synthetic".into(),
+            cold_pp: 99.0,
+            drop_pp: 0.0,
+            offload_pp: 0.0,
+            p95_rel: 0.0,
+            p99_rel: 0.0,
+        };
+        let err = d.within(&COMMITTED_BOUNDS).unwrap_err();
+        assert!(err.contains("cold pp"), "{err}");
+    }
+
+    /// A small harness slice stays inside the committed envelope — the
+    /// full sweep (and the CI reduced-scale sweep) lives in
+    /// `tests/approx_accuracy.rs`.
+    #[test]
+    fn harness_smoke_stays_within_bounds() {
+        for d in run_harness(3, 0x0ACC) {
+            d.within(&COMMITTED_BOUNDS)
+                .unwrap_or_else(|e| panic!("accuracy bound breach: {e}"));
+        }
+    }
+}

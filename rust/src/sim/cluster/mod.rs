@@ -55,6 +55,7 @@
 //! `tests/integration_cluster.rs`), and a one-node cluster reduces
 //! bit-for-bit to [`super::run_trace_with`].
 
+pub mod accuracy;
 pub mod churn;
 pub mod controller;
 pub mod migrate;
@@ -70,7 +71,10 @@ pub use controller::ControllerConfig;
 pub use migrate::MigrationPolicy;
 pub use report::ClusterReport;
 pub use slo::{DeflationConfig, FairShareConfig, SloConfig};
-pub use shard::{plan_sharding, run_cluster_sharded, ShardPlan, ShardingConfig};
+pub use shard::{
+    plan_sharding, run_cluster_sharded, OccupancySnapshot, PlanKind, ShardMode, ShardPlan,
+    ShardingConfig, APPROX_VERSION,
+};
 pub use spec::{
     CloudTier, ClusterOutcome, ClusterSpec, NodePolicy, NodeSpec, RouterKind, Topology,
 };

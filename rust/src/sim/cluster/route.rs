@@ -11,6 +11,7 @@ use std::hash::Hasher;
 use crate::trace::{FunctionProfile, SizeClass};
 use crate::util::fxhash::FxHasher;
 
+use super::shard::OccupancySnapshot;
 use super::spec::RouterKind;
 use super::Cluster;
 
@@ -69,21 +70,30 @@ impl Cluster {
         self.home_cache[idx] as usize
     }
 
-    /// Least-loaded *live* node in `[lo, hi)` by used/capacity fraction;
-    /// deterministic. Strict load improvement wins; exact load ties go
-    /// to the node closer (by topology latency) to `arrival`, then to
-    /// the lowest index. Under a flat topology every distance is 0, so
-    /// the selection reduces to the historical lowest-index tie-break.
-    /// Allocation-free: uses [`crate::coordinator::Dispatcher::used_mb`].
-    /// Returns `None` when no node in the range is live.
-    pub(super) fn least_loaded_live(&self, lo: usize, hi: usize, arrival: usize) -> Option<usize> {
+    /// The least-loaded selection rule over an arbitrary occupancy
+    /// view: least used/capacity fraction among live nodes in
+    /// `[lo, hi)`; strict load improvement wins; exact load ties go to
+    /// the node closer (by topology latency) to `arrival`, then to the
+    /// lowest index. Shared verbatim by the live router (reading node
+    /// state) and Mode C's snapshot router (reading a frozen
+    /// [`OccupancySnapshot`]) — one rule, two occupancy sources, so the
+    /// approximate kernel cannot drift from the sequential contract.
+    /// `used_of` is monomorphized per call site; no dispatch cost.
+    fn least_loaded_core(
+        &self,
+        lo: usize,
+        hi: usize,
+        arrival: usize,
+        live: &[bool],
+        used_of: impl Fn(usize) -> u64,
+    ) -> Option<usize> {
         let n = self.nodes.len();
         let mut best: Option<(usize, u64)> = None;
         for i in lo..hi {
-            if !self.live[i] {
+            if !live[i] {
                 continue;
             }
-            let used = self.nodes[i].used_mb();
+            let used = used_of(i);
             let better = match best {
                 None => true,
                 Some((b, b_used)) => {
@@ -98,6 +108,30 @@ impl Cluster {
             }
         }
         best.map(|(i, _)| i)
+    }
+
+    /// Least-loaded *live* node in `[lo, hi)` by used/capacity fraction;
+    /// deterministic. Under a flat topology every distance is 0, so the
+    /// selection reduces to the historical lowest-index tie-break.
+    /// Allocation-free: uses [`crate::coordinator::Dispatcher::used_mb`].
+    /// Returns `None` when no node in the range is live.
+    pub(super) fn least_loaded_live(&self, lo: usize, hi: usize, arrival: usize) -> Option<usize> {
+        self.least_loaded_core(lo, hi, arrival, &self.live, |i| self.nodes[i].used_mb())
+    }
+
+    /// [`Cluster::least_loaded_live`] against a frozen
+    /// [`OccupancySnapshot`] instead of live node state — the Mode C
+    /// routing primitive. Pure in `(self.caps, self.topology, snap)`:
+    /// every shard worker holding the same snapshot computes the same
+    /// answer.
+    pub(super) fn least_loaded_snap(
+        &self,
+        snap: &OccupancySnapshot,
+        lo: usize,
+        hi: usize,
+        arrival: usize,
+    ) -> Option<usize> {
+        self.least_loaded_core(lo, hi, arrival, &snap.live, |i| snap.used_mb[i])
     }
 
     /// Primary node for `profile` under the configured router,
@@ -155,6 +189,43 @@ impl Cluster {
             }
         }
     }
+
+    /// Primary node for `profile` under the configured load-aware
+    /// router, reading the frozen `snap` instead of live fleet state —
+    /// the Mode C twin of [`Cluster::route`], with the class-window
+    /// arithmetic and dead-class fallback mirrored line for line. At a
+    /// barrier-per-arrival window (`window_us = 0`) the snapshot equals
+    /// live state and this returns exactly what [`Cluster::route`]
+    /// would (locked by the shard tests and the route tests below).
+    /// State-oblivious routers never reach here: they take the exact
+    /// decomposed path instead.
+    pub(super) fn route_snapshot(
+        &mut self,
+        profile: &FunctionProfile,
+        snap: &OccupancySnapshot,
+    ) -> Option<usize> {
+        let n = self.nodes.len();
+        let arrival = self.home_node(profile);
+        match self.router {
+            RouterKind::LeastLoaded => self.least_loaded_snap(snap, 0, n, arrival),
+            RouterKind::SizeAffinity { small_nodes } => {
+                let k = small_nodes.min(n);
+                let (lo, hi) = match profile.class {
+                    SizeClass::Small if k > 0 => (0, k),
+                    SizeClass::Large if k < n => (k, n),
+                    // Degenerate split: the set would be empty, use all.
+                    _ => (0, n),
+                };
+                // A class set that is entirely down falls back to any
+                // live node (better a far placement than a failure).
+                self.least_loaded_snap(snap, lo, hi, arrival)
+                    .or_else(|| self.least_loaded_snap(snap, 0, n, arrival))
+            }
+            RouterKind::Sticky | RouterKind::RoundRobin => {
+                unreachable!("snapshot routing only serves load-aware routers")
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +234,7 @@ mod tests {
     use super::super::{run_cluster, Cluster, ClusterOutcome, ClusterSpec, NodePolicy, Topology};
     use super::*;
     use crate::trace::Trace;
+    use crate::util::rng::Pcg64;
 
     /// The test-side copy of [`Cluster::arrival_node`]'s hash, so tests
     /// can predict a function's home gateway.
@@ -302,5 +374,141 @@ mod tests {
         let r = run_cluster(&t, &spec);
         let home = home_node(0, n);
         assert_eq!(r.per_node[home].overall.misses, 1, "tie resolves to the home gateway");
+    }
+
+    /// Property lock for the least-loaded tie-break contract: the
+    /// hop-distance rule is *covariant under node renumbering*.
+    /// Permuting the fleet (nodes, occupancies, and latency matrix
+    /// together) permutes the winner the same way —
+    /// `winner(σ(fleet)) == σ(winner(fleet))` whenever the tied nodes'
+    /// distances from the arrival gateway are distinct. Nothing in the
+    /// rule secretly depends on absolute node indices except the
+    /// documented final lowest-index tie-break (covered below). This is
+    /// the contract Mode C's snapshot routing must reproduce at window
+    /// width 0.
+    #[test]
+    fn least_loaded_tie_break_is_invariant_under_node_renumbering() {
+        let n = 6;
+        let mut rng = Pcg64::new(0x51AB_71E5);
+        for case in 0..32u64 {
+            let mut case_rng = rng.fork(case);
+            // Unique positive entries → distinct distances everywhere
+            // (so the distance tie-break is always decisive).
+            let mut vals: Vec<u64> = (1..=(n * n) as u64).map(|v| v * 1_000).collect();
+            case_rng.shuffle(&mut vals);
+            let mut lat = vec![vec![0u64; n]; n];
+            let mut next = 0;
+            for a in 0..n {
+                for b in 0..n {
+                    if a != b {
+                        lat[a][b] = vals[next];
+                        next += 1;
+                    }
+                }
+            }
+            // A busy arrival gateway, an equally-loaded low set (the
+            // tie the distance rule must break), a busier rest.
+            let arrival = case_rng.below(n as u64) as usize;
+            let mut used = vec![500u64; n];
+            used[arrival] = 900;
+            let mut tied: Vec<usize> = (0..n).filter(|&i| i != arrival).collect();
+            case_rng.shuffle(&mut tied);
+            tied.truncate(3);
+            for &i in &tied {
+                used[i] = 100;
+            }
+            // A random renumbering σ, applied to everything at once.
+            let mut sigma: Vec<usize> = (0..n).collect();
+            case_rng.shuffle(&mut sigma);
+            let mut lat2 = vec![vec![0u64; n]; n];
+            let mut used2 = vec![0u64; n];
+            for a in 0..n {
+                used2[sigma[a]] = used[a];
+                for b in 0..n {
+                    lat2[sigma[a]][sigma[b]] = lat[a][b];
+                }
+            }
+            let cluster_for = |m: Vec<Vec<u64>>| {
+                Cluster::new(
+                    &ClusterSpec::homogeneous(n, 1000, NodePolicy::kiss_default())
+                        .with_router(RouterKind::LeastLoaded)
+                        .with_topology(Topology::Matrix { lat_us: m }),
+                )
+            };
+            let snap =
+                |u: Vec<u64>| OccupancySnapshot { at_us: 0, used_mb: u, live: vec![true; n] };
+            let base = cluster_for(lat);
+            let renum = cluster_for(lat2);
+            let w = base.least_loaded_snap(&snap(used), 0, n, arrival).unwrap();
+            let w2 = renum.least_loaded_snap(&snap(used2), 0, n, sigma[arrival]).unwrap();
+            assert!(tied.contains(&w), "case={case}: winner {w} must come from the tied set");
+            assert_eq!(w2, sigma[w], "case={case}: renumbering must renumber the winner");
+        }
+    }
+
+    /// The final tie-break (equal load *and* equal distance) goes to
+    /// the lowest index — in whatever numbering the fleet currently
+    /// has. Flat topology makes every distance 0, isolating the rule.
+    #[test]
+    fn equidistant_load_ties_go_to_the_lowest_index_in_any_numbering() {
+        let n = 5;
+        let cluster = Cluster::new(
+            &ClusterSpec::homogeneous(n, 1000, NodePolicy::kiss_default())
+                .with_router(RouterKind::LeastLoaded),
+        );
+        let snap = OccupancySnapshot {
+            at_us: 0,
+            used_mb: vec![400, 100, 300, 100, 100],
+            live: vec![true; n],
+        };
+        assert_eq!(cluster.least_loaded_snap(&snap, 0, n, 0), Some(1));
+        // Renumber so the tied set {1, 3, 4} becomes {0, 2, 4}: the
+        // winner follows the numbering.
+        let snap = OccupancySnapshot {
+            at_us: 0,
+            used_mb: vec![100, 400, 100, 300, 100],
+            live: vec![true; n],
+        };
+        assert_eq!(cluster.least_loaded_snap(&snap, 0, n, 1), Some(0));
+    }
+
+    /// Freeze a mid-run fleet's occupancy into a snapshot: the snapshot
+    /// router must agree with the live router for both load-aware
+    /// routers. This freshness mirror is the window-0 contract the
+    /// approximate kernel's bit-for-bit degenerate case rests on.
+    #[test]
+    fn snapshot_routing_mirrors_the_live_router_when_fresh() {
+        let t = Trace {
+            functions: vec![
+                func(0, 120, 1_000, 900_000),
+                func(1, 80, 1_000, 900_000),
+                func(2, 300, 9_000, 900_000),
+                func(3, 40, 1_000, 900_000),
+            ],
+            events: vec![inv(0, 0, 900_000), inv(10, 1, 900_000), inv(20, 2, 900_000)],
+        };
+        for router in [RouterKind::LeastLoaded, RouterKind::SizeAffinity { small_nodes: 2 }] {
+            let spec = ClusterSpec::homogeneous(4, 1000, NodePolicy::kiss_default())
+                .with_router(router)
+                .with_fallbacks(0)
+                .with_topology(Topology::Ring { hop_us: 1_000 });
+            let mut cluster = Cluster::new(&spec);
+            for &ev in &t.events {
+                cluster.step(&t, ev);
+            }
+            let snap = OccupancySnapshot {
+                at_us: cluster.now_us,
+                used_mb: (0..4).map(|i| cluster.nodes[i].used_mb()).collect(),
+                live: cluster.live.clone(),
+            };
+            for f in &t.functions {
+                assert_eq!(
+                    cluster.route_snapshot(f, &snap),
+                    cluster.route(f),
+                    "router={router:?} func={:?}",
+                    f.id
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,52 @@
+//! Build-failing accuracy gate for the approximate-parallel kernel
+//! (Mode C): a seeded generator sweeps the approx-eligible config
+//! subspace, runs every case through the sequential and approximate
+//! kernels, and fails on any breach of the committed tolerance bounds
+//! (`sim::cluster::accuracy::COMMITTED_BOUNDS`).
+//!
+//! `KISS_ACCURACY_CASES` shrinks or grows the sweep (CI runs a reduced
+//! scale; the default suits a developer machine). The degenerate
+//! bit-for-bit locks (window 0, single shard) live in the shard unit
+//! tests and `tests/differential_cluster.rs` — this suite measures the
+//! *real* windows users of `--shard-mode approx` run with.
+
+use kiss_faas::sim::cluster::accuracy::{run_harness, COMMITTED_BOUNDS};
+
+fn case_count() -> u64 {
+    std::env::var("KISS_ACCURACY_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24)
+}
+
+#[test]
+fn seeded_approx_subspace_stays_within_committed_bounds() {
+    let divergences = run_harness(case_count(), 0xACC0_57A7);
+    let mut breaches = Vec::new();
+    for d in &divergences {
+        if let Err(e) = d.within(&COMMITTED_BOUNDS) {
+            breaches.push(e);
+        }
+    }
+    assert!(
+        breaches.is_empty(),
+        "{} of {} cases breached the committed accuracy bounds:\n{}",
+        breaches.len(),
+        divergences.len(),
+        breaches.join("\n")
+    );
+}
+
+#[test]
+fn harness_is_deterministic() {
+    let a = run_harness(3, 7);
+    let b = run_harness(3, 7);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.cold_pp, y.cold_pp);
+        assert_eq!(x.drop_pp, y.drop_pp);
+        assert_eq!(x.offload_pp, y.offload_pp);
+        assert_eq!(x.p95_rel, y.p95_rel);
+        assert_eq!(x.p99_rel, y.p99_rel);
+    }
+}

@@ -16,6 +16,13 @@
 //! comparison, so CI's test matrix can steer the suite through a
 //! specific worker count on every push.
 //!
+//! The approximate-parallel kernel (Mode C) gets its own differential
+//! leg with a different contract: *not* equality with the sequential
+//! kernel (that drift is measured and bounded by
+//! `sim::cluster::accuracy`), but seed determinism across repeated
+//! runs, shard-count invariance for every count ≥ 2, and bit-for-bit
+//! sequential equality in the window-0 degenerate case.
+//!
 //! [`run_cluster_sharded`]: kiss_faas::sim::cluster::run_cluster_sharded
 //! [`ClusterReport`]: kiss_faas::sim::cluster::ClusterReport
 
@@ -24,8 +31,8 @@ use kiss_faas::config::{
 };
 use kiss_faas::sim::cluster::{
     plan_sharding, run_cluster_sharded, run_cluster_source, ChurnConfig, ControllerConfig,
-    DeflationConfig, FairShareConfig, MigrationPolicy, RouterKind, ShardingConfig, SloConfig,
-    Topology,
+    DeflationConfig, FairShareConfig, MigrationPolicy, PlanKind, RouterKind, ShardMode,
+    ShardingConfig, SloConfig, Topology,
 };
 use kiss_faas::trace::source::ArrivalSource;
 use kiss_faas::util::rng::Pcg64;
@@ -143,7 +150,7 @@ fn assert_differential(cfg: &SimConfig, label: &str, counts: &[usize]) -> usize 
         let sharding = ShardingConfig::with_shards(shards);
         // A fresh source per run: streaming sources are consumed.
         let mut src = cfg.build_arrival_source().expect("source");
-        if plan_sharding(&spec, src.wants_feedback(), &sharding).parallel {
+        if plan_sharding(&spec, src.wants_feedback(), &sharding).parallel() {
             decomposed += 1;
         }
         let got = run_cluster_sharded(src.as_mut(), &spec, &sharding);
@@ -188,7 +195,7 @@ fn decomposable_subspace_is_exercised_in_parallel() {
 
         let spec = cfg.build_cluster_spec();
         let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(4));
-        assert!(plan.parallel, "restricted config {i} must decompose: {}", plan.reason);
+        assert!(plan.parallel(), "restricted config {i} must decompose: {}", plan.reason);
         let decomposed = assert_differential(&cfg, &format!("restricted {i}"), &counts);
         // Every shard count > 1 (capped at the fleet size) decomposes.
         let expect = counts
@@ -225,7 +232,7 @@ fn slo_configs_always_serialize_with_the_slo_reason() {
 
         let spec = cfg.build_cluster_spec();
         let plan = plan_sharding(&spec, false, &ShardingConfig::with_shards(4));
-        assert!(!plan.parallel, "slo config {i} must serialize");
+        assert!(!plan.parallel(), "slo config {i} must serialize");
         assert!(
             plan.reason.contains("SLO"),
             "the reason must name the SLO coupling, got: {}",
@@ -259,8 +266,80 @@ fn window_width_never_changes_results() {
         let got = run_cluster_sharded(
             src.as_mut(),
             &spec,
-            &ShardingConfig { shards: 3, window_us },
+            &ShardingConfig { shards: 3, window_us, mode: ShardMode::Exact },
         );
         assert_eq!(got, want, "window_us={window_us}");
+    }
+}
+
+#[test]
+fn approx_leg_is_deterministic_shard_invariant_and_exact_at_window_zero() {
+    // A third generator restricted to the approx-eligible subspace
+    // (load-aware router, no fallbacks/migration/controller/churn/SLO,
+    // open loop), walked through the Mode C determinism contract at the
+    // full shard-count matrix, including the CI `KISS_TEST_SHARDS` leg.
+    let counts: Vec<usize> = shard_counts().into_iter().filter(|&s| s >= 2).collect();
+    let mut rng = Pcg64::new(0xA990_0C57);
+    for i in 0..8u64 {
+        let mut cfg = gen_config(&mut rng, 800 + i);
+        let cc = cfg.cluster.as_mut().expect("generator always sets a cluster");
+        cc.router = if rng.bernoulli(0.5) {
+            RouterKind::LeastLoaded
+        } else {
+            RouterKind::SizeAffinity { small_nodes: 1 + rng.below(cc.nodes as u64) as usize }
+        };
+        cc.fallbacks = 0;
+        cc.migration = None;
+        cc.controller = None;
+        cc.churn = None;
+        cc.slo = None;
+        cfg.workload = WorkloadConfig::default();
+        cfg.validate().expect("approx config must stay valid");
+
+        let spec = cfg.build_cluster_spec();
+        let plan = plan_sharding(&spec, false, &ShardingConfig::approx(4));
+        assert_eq!(plan.kind, PlanKind::ApproxParallel, "approx {i}: {}", plan.reason);
+        // Never selected unless requested: the same spec under the
+        // default (exact) mode serializes instead.
+        assert!(!plan_sharding(&spec, false, &ShardingConfig::with_shards(4)).parallel());
+
+        let mut seq = cfg.build_arrival_source().expect("source");
+        let want = run_cluster_source(seq.as_mut(), &spec);
+
+        // Window 0: a barrier per arrival — bit-for-bit sequential at
+        // every shard count.
+        for &shards in &counts {
+            let sharding = ShardingConfig { shards, window_us: 0, mode: ShardMode::Approx };
+            let mut src = cfg.build_arrival_source().expect("source");
+            let got = run_cluster_sharded(src.as_mut(), &spec, &sharding);
+            assert_eq!(got, want, "approx {i} window=0 shards={shards}: {}", cfg.describe());
+        }
+
+        // A real window: results identical across every shard count ≥ 2
+        // and across repeated runs — and accounting for every arrival
+        // exactly once even when routing diverges from sequential.
+        let window_us = 250_000;
+        let mut runs = Vec::new();
+        for &shards in &counts {
+            let sharding = ShardingConfig { shards, window_us, mode: ShardMode::Approx };
+            let mut src = cfg.build_arrival_source().expect("source");
+            runs.push(run_cluster_sharded(src.as_mut(), &spec, &sharding));
+        }
+        for (k, r) in runs.iter().enumerate().skip(1) {
+            assert_eq!(
+                *r, runs[0],
+                "approx {i}: shards={} vs shards={} diverged",
+                counts[k], counts[0]
+            );
+        }
+        let sharding = ShardingConfig { shards: counts[0], window_us, mode: ShardMode::Approx };
+        let mut src = cfg.build_arrival_source().expect("source");
+        let again = run_cluster_sharded(src.as_mut(), &spec, &sharding);
+        assert_eq!(again, runs[0], "approx {i}: repeated run diverged");
+        assert_eq!(
+            runs[0].report.overall.total_accesses(),
+            want.report.overall.total_accesses(),
+            "approx {i}: arrivals lost or double-counted"
+        );
     }
 }
